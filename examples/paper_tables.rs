@@ -1,0 +1,176 @@
+//! Regenerate every table and figure of the paper's evaluation (§8) in
+//! one run — the reviewer's one-stop driver. Each section prints the
+//! paper's reported values next to ours so the *shape* comparison
+//! (ordering, rough factors, crossovers) is immediate.
+//!
+//! Run: `cargo run --release --example paper_tables`
+
+use flexmarl::baselines::{evaluate, sweep, Framework};
+use flexmarl::config::{ClusterConfig, ExperimentConfig, ModelScale, WorkloadConfig};
+use flexmarl::metrics::table_rows;
+use flexmarl::orchestrator::{simulate, SimOptions};
+use flexmarl::training::{swap_in_cost, swap_out_cost};
+
+const STEPS: usize = 3;
+
+fn opts() -> SimOptions {
+    SimOptions {
+        track_agents: vec![0, 1, 2],
+        ..SimOptions::default()
+    }
+}
+
+fn cfg(wl: WorkloadConfig, fw: Framework) -> ExperimentConfig {
+    let mut c = ExperimentConfig::new(wl, fw);
+    c.steps = STEPS;
+    c
+}
+
+fn main() {
+    table2();
+    fig7();
+    fig1_and_89();
+    fig10();
+    fig11();
+    table3();
+    table4();
+    println!("\nall paper artifacts regenerated — see EXPERIMENTS.md for the recorded comparison");
+}
+
+fn table2() {
+    println!("== Table 2: overall training performance ==");
+    let paper: &[(&str, &[(f64, f64, f64)])] = &[
+        ("MA", &[(914.4, 1.0, 119.0), (293.8, 3.1, 401.0), (174.1, 5.3, 642.8), (126.1, 7.3, 910.2)]),
+        ("CA", &[(438.6, 1.0, 265.5), (130.0, 3.4, 571.6), (112.8, 3.9, 655.9), (78.8, 5.6, 821.4)]),
+    ];
+    for (wl_name, paper_rows) in paper {
+        let wl = if *wl_name == "MA" { WorkloadConfig::ma() } else { WorkloadConfig::ca() };
+        let reports = sweep(&cfg(wl, Framework::flexmarl()), &opts());
+        let rows = table_rows(&reports);
+        println!("  {wl_name}:  {:<10} {:>22} {:>26}", "framework", "paper (e2e/x/tps)", "ours (e2e/x/tps)");
+        for (r, p) in rows.iter().zip(*paper_rows) {
+            println!(
+                "       {:<10} {:>8.1}s {:>4.1}x {:>7.1}tps   {:>8.1}s {:>4.1}x {:>7.1}tps",
+                r.framework, p.0, p.1, p.2, r.e2e_s, r.speedup, r.throughput_tps
+            );
+        }
+    }
+}
+
+fn fig7() {
+    println!("\n== Fig 7: E2E time breakdown (rollout / training / other) ==");
+    for wl_name in ["MA", "CA"] {
+        let wl = if wl_name == "MA" { WorkloadConfig::ma() } else { WorkloadConfig::ca() };
+        println!("  {wl_name}:");
+        for r in sweep(&cfg(wl, Framework::flexmarl()), &opts()) {
+            println!(
+                "    {:<10} rollout {:>6.1}s  train {:>6.1}s  other {:>5.1}s",
+                r.framework, r.rollout_s, r.train_s, r.other_s
+            );
+        }
+    }
+    println!("  paper anchor: DistRL MA training 155.9s vs FlexMARL 10.2s (tail only)");
+}
+
+fn fig1_and_89() {
+    println!("\n== Fig 1(a): interaction-latency long tail (DistRL profiling setup) ==");
+    let out = simulate(&cfg(WorkloadConfig::ma(), Framework::dist_rl()), &opts());
+    let mut lats = out.reports[0].trajectory_latencies.clone();
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    for q in [0.5, 0.9, 0.99, 1.0] {
+        let idx = ((lats.len() - 1) as f64 * q) as usize;
+        println!("    p{:<3} {:>7.1}s", (q * 100.0) as u32, lats[idx]);
+    }
+    println!("    paper: max ≈ 170s (long-tail dominates collection)");
+
+    println!("\n== Fig 1(b) + Figs 8/9: per-agent queue + processed load ==");
+    for fw in [Framework::dist_rl(), Framework::marti(), Framework::flexmarl()] {
+        let out = simulate(&cfg(WorkloadConfig::ma(), fw), &opts());
+        let r = &out.reports[0];
+        print!("    {:<10}", fw.name);
+        for (a, series) in &r.processed_series {
+            let total = series.last().map(|&(_, c)| c).unwrap_or(0);
+            let t_done = series
+                .iter()
+                .find(|&&(_, c)| c == total && total > 0)
+                .map(|&(t, _)| t)
+                .unwrap_or(0.0);
+            let peak_q = r.queued_series[a].iter().map(|&(_, q)| q).max().unwrap_or(0);
+            print!("  a{a}: {total} req/{t_done:.0}s (peakQ {peak_q})");
+        }
+        println!();
+    }
+    println!("    paper: FlexMARL drains agent B in ~90s vs DistRL ~244s, MARTI ~159s");
+}
+
+fn fig10() {
+    println!("\n== Fig 10: hardware utilization ==");
+    println!("    paper CA: MAS-RL 3.6%  DistRL 10.2%  MARTI 12.3%  FlexMARL 19.8%");
+    for wl_name in ["MA", "CA"] {
+        let wl = if wl_name == "MA" { WorkloadConfig::ma() } else { WorkloadConfig::ca() };
+        print!("    ours {wl_name}: ");
+        for r in sweep(&cfg(wl, Framework::flexmarl()), &opts()) {
+            print!(" {} {:.1}% ", r.framework, r.utilization() * 100.0);
+        }
+        println!();
+    }
+}
+
+fn fig11() {
+    println!("\n== Fig 11: training-state swap overhead ==");
+    println!("    paper: offload 0.5s (3B) → 3.8s (32B); suspend/resume ~constant; total ≤ 11s");
+    let c = ClusterConfig::default();
+    for m in [ModelScale::B3, ModelScale::B7, ModelScale::B14, ModelScale::B32] {
+        let o = swap_out_cost(m, &c);
+        let i = swap_in_cost(m, &c, true);
+        println!(
+            "    {:>3}B  suspend {:.2}s offload {:.2}s | resume {:.2}s onload {:.2}s | total {:.1}s",
+            m.params_b as u32,
+            o.control_s,
+            o.transfer_s,
+            i.control_s,
+            i.transfer_s,
+            o.total() + i.total()
+        );
+    }
+}
+
+fn table3() {
+    println!("\n== Table 3: ablations ==");
+    println!("    paper MA: w/o balancing 152.2s (6.0x)  w/o async 256.2s (3.6x)  full 126.1s (7.3x)");
+    for wl_name in ["MA", "CA"] {
+        let wl = if wl_name == "MA" { WorkloadConfig::ma() } else { WorkloadConfig::ca() };
+        let mas = evaluate(&cfg(wl.clone(), Framework::mas_rl()), &opts());
+        print!("    ours {wl_name}:");
+        for fw in [
+            Framework::flexmarl_no_balancing(),
+            Framework::flexmarl_no_async(),
+            Framework::flexmarl(),
+        ] {
+            let r = evaluate(&cfg(wl.clone(), fw), &opts());
+            print!("  {} {:.1}s ({:.1}x)", fw.name, r.e2e_s, mas.e2e_s / r.e2e_s);
+        }
+        println!();
+    }
+}
+
+fn table4() {
+    println!("\n== Table 4: heterogeneous scalability (FlexMARL) ==");
+    println!("    paper: 5x32B 160.3s/265.9tps | 3x32B+7x14B 132.5s/334.8tps | 15x14B 41.9s/754.2tps");
+    for spec in [
+        vec![(5usize, ModelScale::B32)],
+        vec![(3, ModelScale::B32), (7, ModelScale::B14)],
+        vec![(15, ModelScale::B14)],
+    ] {
+        let wl = WorkloadConfig::scale_config(&spec);
+        let name = wl.name.clone();
+        let r = evaluate(&cfg(wl, Framework::flexmarl()), &opts());
+        println!(
+            "    ours {name}: rollout {:.1}s train {:.1}s e2e {:.1}s {:.1}tps",
+            r.rollout_s,
+            r.train_s,
+            r.e2e_s,
+            r.throughput_tps()
+        );
+    }
+}

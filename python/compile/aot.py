@@ -1,0 +1,247 @@
+"""AOT compile path: lower every L2 entry point to HLO text + manifest.
+
+Run once by ``make artifacts`` (no-op if inputs unchanged); the Rust
+runtime (``rust/src/runtime``) loads the HLO text via
+``HloModuleProto::from_text_file`` and compiles it on the PJRT CPU
+client. Python is never on the request path.
+
+HLO **text** (not ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out ../artifacts [--preset small]
+        [--b-roll 4] [--prompt-len 32] [--b-grad 8]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+from typing import Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def spec(shape: Sequence[int], dtype=F32) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_json(name: str, s: jax.ShapeDtypeStruct) -> dict:
+    return {"name": name, "shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+class Builder:
+    """Lower flat-arg functions, write HLO files, collect the manifest."""
+
+    def __init__(self, cfg: M.ModelConfig, out_dir: str):
+        self.cfg = cfg
+        self.out_dir = out_dir
+        self.artifacts: dict = {}
+
+    def add(
+        self,
+        name: str,
+        fn: Callable,
+        inputs: List[Tuple[str, jax.ShapeDtypeStruct]],
+    ) -> None:
+        in_specs = [s for _, s in inputs]
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *in_specs)
+        if not isinstance(outs, (tuple, list)):
+            outs = (outs,)
+        self.artifacts[name] = {
+            "file": fname,
+            "inputs": [_spec_json(n, s) for n, s in inputs],
+            "outputs": [{"shape": list(o.shape), "dtype": str(o.dtype)} for o in outs],
+        }
+        print(f"  {name:>8}: {len(text) / 1024:.0f} KiB HLO, "
+              f"{len(inputs)} in / {len(outs)} out")
+
+
+def param_inputs(cfg: M.ModelConfig, prefix: str = "") -> List[Tuple[str, jax.ShapeDtypeStruct]]:
+    return [(prefix + n, spec(s)) for n, s in M.param_spec(cfg)]
+
+
+def build(cfg: M.ModelConfig, out_dir: str, b_roll: int, t_prompt: int, b_grad: int, decode_block: int = 16) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    b = Builder(cfg, out_dir)
+    t = cfg.max_seq
+    l, h, dh, v = cfg.n_layers, cfg.n_heads, cfg.d_head, cfg.vocab
+    np_ = len(M.PARAM_NAMES)
+
+    cache = spec((l, b_roll, h, t, dh))
+    batch = [
+        ("tokens", spec((b_grad, t), I32)),
+        ("targets", spec((b_grad, t), I32)),
+        ("adv", spec((b_grad, t))),
+        ("old_logp", spec((b_grad, t))),
+        ("ref_logp", spec((b_grad, t))),
+        ("mask", spec((b_grad, t))),
+    ]
+
+    # --- init ---------------------------------------------------------
+    def init_fn(seed):
+        return tuple(M.params_to_list(M.init_params(cfg, seed)))
+
+    b.add("init", init_fn, [("seed", spec((), I32))])
+
+    # --- rollout path ---------------------------------------------------
+    def prefill_fn(*args):
+        params = M.list_to_params(args[:np_])
+        return M.prefill(cfg, params, args[np_])
+
+    b.add("prefill", prefill_fn,
+          param_inputs(cfg) + [("tokens", spec((b_roll, t_prompt), I32))])
+
+    def decode_fn(*args):
+        params = M.list_to_params(args[:np_])
+        kc, vc, token, pos = args[np_:]
+        return M.decode_step(cfg, params, kc, vc, token, pos)
+
+    b.add("decode", decode_fn,
+          param_inputs(cfg) + [("k_cache", cache), ("v_cache", cache),
+                               ("token", spec((b_roll,), I32)), ("pos", spec((), I32))])
+
+    def decode_blk_fn(*args):
+        params = M.list_to_params(args[:np_])
+        kc, vc, token, pos, seed, temp = args[np_:]
+        return M.decode_block(cfg, params, kc, vc, token, pos, seed, temp, decode_block)
+
+    b.add("decode_blk", decode_blk_fn,
+          param_inputs(cfg) + [("k_cache", cache), ("v_cache", cache),
+                               ("token", spec((b_roll,), I32)), ("pos", spec((), I32)),
+                               ("seed", spec((), I32)), ("temperature", spec(()))])
+
+    # --- eval path (old/ref logprobs over whole sequences) --------------
+    def logprob_fn(*args):
+        params = M.list_to_params(args[:np_])
+        tokens, targets = args[np_:]
+        return (M.token_logprobs(cfg, params, tokens, targets),)
+
+    b.add("logprob", logprob_fn,
+          param_inputs(cfg) + [("tokens", spec((b_grad, t), I32)),
+                               ("targets", spec((b_grad, t), I32))])
+
+    # --- training path ---------------------------------------------------
+    def grad_fn(*args):
+        params = M.list_to_params(args[:np_])
+        grads, loss, kl, ratio, ent, gnorm = M.grad_step(cfg, params, *args[np_:])
+        return tuple(M.params_to_list(grads)) + (loss, kl, ratio, ent, gnorm)
+
+    b.add("grad", grad_fn, param_inputs(cfg) + batch)
+
+    def accum_fn(*args):
+        acc = M.list_to_params(args[:np_])
+        grads = M.list_to_params(args[np_:])
+        return tuple(M.params_to_list(M.accum_grads(acc, grads)))
+
+    b.add("accum", accum_fn,
+          param_inputs(cfg, "acc_") + param_inputs(cfg, "g_"))
+
+    def apply_fn(*args):
+        p = M.list_to_params(args[:np_])
+        m = M.list_to_params(args[np_:2 * np_])
+        vv = M.list_to_params(args[2 * np_:3 * np_])
+        count = args[3 * np_]
+        acc = M.list_to_params(args[3 * np_ + 1:4 * np_ + 1])
+        scale, lr = args[4 * np_ + 1:]
+        new_p, new_m, new_v, count = M.apply_grads(cfg, p, m, vv, count, acc, scale, lr)
+        return (tuple(M.params_to_list(new_p)) + tuple(M.params_to_list(new_m))
+                + tuple(M.params_to_list(new_v)) + (count,))
+
+    b.add("apply", apply_fn,
+          param_inputs(cfg, "p_") + param_inputs(cfg, "m_") + param_inputs(cfg, "v_")
+          + [("count", spec((), I32))] + param_inputs(cfg, "acc_")
+          + [("scale", spec(())), ("lr", spec(()))])
+
+    def train_fn(*args):
+        p = M.list_to_params(args[:np_])
+        m = M.list_to_params(args[np_:2 * np_])
+        vv = M.list_to_params(args[2 * np_:3 * np_])
+        count = args[3 * np_]
+        rest = args[3 * np_ + 1:]
+        new_p, new_m, new_v, count, loss, kl, ratio, ent, gnorm = M.train_step(
+            cfg, p, m, vv, count, *rest
+        )
+        return (tuple(M.params_to_list(new_p)) + tuple(M.params_to_list(new_m))
+                + tuple(M.params_to_list(new_v)) + (count, loss, kl, ratio, ent, gnorm))
+
+    b.add("train", train_fn,
+          param_inputs(cfg, "p_") + param_inputs(cfg, "m_") + param_inputs(cfg, "v_")
+          + [("count", spec((), I32))] + batch + [("lr", spec(()))])
+
+    manifest = {
+        "model": {
+            "vocab": cfg.vocab, "d_model": cfg.d_model, "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads, "d_ff": cfg.d_ff, "max_seq": cfg.max_seq,
+            "d_head": cfg.d_head, "num_params": cfg.num_params(),
+            "clip_eps": cfg.clip_eps, "kl_beta": cfg.kl_beta,
+        },
+        "shapes": {"b_roll": b_roll, "t_prompt": t_prompt, "b_grad": b_grad,
+                   "t_train": t, "decode_block": decode_block},
+        "param_spec": [{"name": n, "shape": list(s)} for n, s in M.param_spec(cfg)],
+        "artifacts": b.artifacts,
+    }
+    return manifest
+
+
+def input_fingerprint() -> str:
+    """Hash of the compile-path sources, for Makefile-style staleness."""
+    here = os.path.dirname(__file__)
+    hasher = hashlib.sha256()
+    for root, _, files in sorted(os.walk(here)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    hasher.update(fh.read())
+    return hasher.hexdigest()[:16]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--preset", default="small", choices=sorted(M.PRESETS))
+    ap.add_argument("--b-roll", type=int, default=4,
+                    help="rollout batch = GRPO group size per prefill/decode")
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--b-grad", type=int, default=8,
+                    help="rows per grad_step execution")
+    ap.add_argument("--decode-block", type=int, default=16,
+                    help="tokens generated per decode_blk execution")
+    args = ap.parse_args()
+
+    cfg = M.PRESETS[args.preset]
+    print(f"AOT: preset={args.preset} params={cfg.num_params() / 1e6:.1f}M -> {args.out}")
+    manifest = build(cfg, args.out, args.b_roll, args.prompt_len, args.b_grad, args.decode_block)
+    manifest["preset"] = args.preset
+    manifest["fingerprint"] = input_fingerprint()
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,186 @@
+"""Tiled causal flash-attention Pallas kernel (L1 hot-spot).
+
+TPU adaptation of the paper's NPU inference hot path (§3 "Hardware
+Adaptation" in DESIGN.md): instead of the vendor SDK's fused attention
+op, we express the HBM↔VMEM schedule with ``BlockSpec``s — the grid
+iterates over (batch·head, q-block); each grid step streams the K/V rows
+for that head through VMEM in ``block_k``-sized chunks with an online
+(streaming) softmax, so the full [T, T] score matrix never materializes.
+Matmul tiles are kept MXU-shaped (the q-block × d_head and block_k ×
+d_head operands feed the 128×128 systolic array; fp32 here, bf16-ready).
+
+``interpret=True`` is mandatory on this image: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute. Numerics are
+validated against ``ref.attention_ref`` in python/tests/.
+
+Autodiff: ``pallas_call`` has no automatic VJP, so the public entry point
+``flash_attention`` wraps the kernel in ``jax.custom_vjp``. The backward
+pass recomputes attention probabilities flash-style from the saved
+log-sum-exp row statistics in pure jnp (see ``ref.py`` note) — the
+forward hot path is the Pallas kernel, the backward is the analytic
+recompute.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. 128 matches the MXU systolic-array edge; for the
+# small e2e model (T=128..192, Dh=64) the VMEM footprint per grid step is
+#   q-block:  block_q * dh * 4B
+#   k/v:      2 * T * dh * 4B   (streamed in block_k chunks by the inner loop)
+#   out+acc:  block_q * (dh + 2) * 4B
+# ≈ 2·T·dh·4 dominated; at T=8192, dh=128 that is 8 MiB — inside the
+# 16 MiB VMEM budget, recorded in DESIGN.md §Perf.
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, block_k: int, causal: bool, q_offset: int):
+    """One grid step: one (batch·head, q-block) tile.
+
+    q_ref: [block_q, dh] VMEM tile of queries
+    k_ref/v_ref: [t_k, dh] — full key/value rows for this head; the loop
+      below realizes the block_k-chunked VMEM schedule.
+    o_ref: [block_q, dh] output tile; lse_ref: [block_q] row log-sum-exp
+      (saved as residual for the custom_vjp backward).
+    """
+    block_q, dh = q_ref.shape
+    t_k = k_ref.shape[0]
+    qi = pl.program_id(1)
+
+    q = q_ref[...].astype(jnp.float32) * (1.0 / math.sqrt(dh))
+    # Absolute query positions for the causal mask.
+    q_pos = qi * block_q + jax.lax.iota(jnp.int32, block_q) + q_offset
+
+    num_kb = pl.cdiv(t_k, block_k)
+
+    def body(kb, carry):
+        acc, m_i, l_i = carry
+        k_start = kb * block_k
+        # dynamic_slice clamps the start so the tail block overlaps the
+        # previous one; mask to the *logical* [k_start, k_start+block_k)
+        # range so overlapped rows are not double-counted.
+        start_eff = jnp.minimum(k_start, max(t_k - block_k, 0))
+        k_blk = jax.lax.dynamic_slice_in_dim(k_ref[...], start_eff, block_k, axis=0)
+        v_blk = jax.lax.dynamic_slice_in_dim(v_ref[...], start_eff, block_k, axis=0)
+        s = q @ k_blk.T.astype(jnp.float32)  # [block_q, block_k] on the MXU
+        k_pos = start_eff + jax.lax.iota(jnp.int32, block_k)
+        valid = (k_pos[None, :] >= k_start) & (k_pos[None, :] < t_k)
+        if causal:
+            valid = valid & (k_pos[None, :] <= q_pos[:, None])
+        s = jnp.where(valid, s, _NEG_INF)
+        # Online softmax update.
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_i - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_i * alpha + jnp.sum(p, axis=1)
+        acc = acc * alpha[:, None] + p @ v_blk.astype(jnp.float32)
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((block_q, dh), jnp.float32)
+    m0 = jnp.full((block_q,), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc, m_i, l_i = jax.lax.fori_loop(0, num_kb, body, (acc0, m0, l0))
+
+    l_safe = jnp.where(l_i > 0.0, l_i, 1.0)
+    o_ref[...] = (acc / l_safe[:, None]).astype(o_ref.dtype)
+    lse_ref[...] = (m_i + jnp.log(l_safe)).astype(lse_ref.dtype)
+
+
+def _flash_fwd_raw(q, k, v, *, causal, block_q, block_k):
+    """Run the Pallas kernel. q,k,v: [B, H, Tq, Dh] / [B, H, Tk, Dh]."""
+    b, h, t_q, dh = q.shape
+    t_k = k.shape[2]
+    bq = min(block_q, t_q)
+    bk = min(block_k, t_k)
+    grid = (b * h, pl.cdiv(t_q, bq))
+    # Cross-attention offset so causality refers to absolute positions when
+    # t_q != t_k (decode-time use: queries are the last t_q positions).
+    q_offset = t_k - t_q if causal else 0
+
+    qr = q.reshape(b * h, t_q, dh)
+    kr = k.reshape(b * h, t_k, dh)
+    vr = v.reshape(b * h, t_k, dh)
+
+    kernel = functools.partial(
+        _flash_kernel, block_k=bk, causal=causal, q_offset=q_offset
+    )
+    out, lse = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, bq, dh), lambda bh, qi: (bh, qi, 0)),
+            pl.BlockSpec((None, t_k, dh), lambda bh, qi: (bh, 0, 0)),
+            pl.BlockSpec((None, t_k, dh), lambda bh, qi: (bh, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, bq, dh), lambda bh, qi: (bh, qi, 0)),
+            pl.BlockSpec((None, bq), lambda bh, qi: (bh, qi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * h, t_q, dh), q.dtype),
+            jax.ShapeDtypeStruct((b * h, t_q), jnp.float32),
+        ],
+        interpret=True,
+    )(qr, kr, vr)
+    return out.reshape(b, h, t_q, dh), lse.reshape(b, h, t_q)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+) -> jax.Array:
+    """Causal flash attention. q,k,v: [B, H, T, Dh] → [B, H, Tq, Dh]."""
+    out, _ = _flash_fwd_raw(q, k, v, causal=causal, block_q=block_q, block_k=block_k)
+    return out
+
+
+def _fwd(q, k, v, causal, block_q, block_k):
+    out, lse = _flash_fwd_raw(q, k, v, causal=causal, block_q=block_q, block_k=block_k)
+    return out, (q, k, v, out, lse)
+
+
+def _bwd(causal, block_q, block_k, res, g):
+    """Flash-style backward: recompute P from the saved LSE (pure jnp).
+
+    Standard flash-attention gradient identities:
+      P   = exp(QKᵀ/√d − lse)
+      dV  = Pᵀ dO
+      dP  = dO Vᵀ
+      dS  = P ∘ (dP − rowsum(dO ∘ O))
+      dQ  = dS K/√d ;  dK = dSᵀ Q/√d
+    """
+    q, k, v, out, lse = res
+    dh = q.shape[-1]
+    scale = 1.0 / math.sqrt(dh)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    t_q, t_k = q.shape[2], k.shape[2]
+    if causal:
+        qpos = jnp.arange(t_q) + (t_k - t_q)
+        mask = qpos[:, None] >= jnp.arange(t_k)[None, :]
+        s = jnp.where(mask, s, _NEG_INF)
+    p = jnp.exp(s - lse[..., None])
+    g32 = g.astype(jnp.float32)
+    dv = jnp.einsum("bhqk,bhqd->bhkd", p, g32)
+    dp = jnp.einsum("bhqd,bhkd->bhqk", g32, v.astype(jnp.float32))
+    delta = jnp.sum(g32 * out.astype(jnp.float32), axis=-1, keepdims=True)
+    ds = p * (dp - delta)
+    dq = jnp.einsum("bhqk,bhkd->bhqd", ds, k.astype(jnp.float32)) * scale
+    dk = jnp.einsum("bhqk,bhqd->bhkd", ds, q.astype(jnp.float32)) * scale
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention.defvjp(_fwd, _bwd)

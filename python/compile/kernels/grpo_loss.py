@@ -1,0 +1,115 @@
+"""Fused GRPO token-loss Pallas kernel (L1).
+
+The policy-gradient loss hot-spot: for every (sequence, token) position
+compute the PPO-clip surrogate with the k3 KL estimator in a single VMEM
+pass — ratio/exp, clip, min, KL and masking are fused so the [B·T] loss
+tile is produced without materializing the five intermediates that the
+naive jnp version creates. The grid tiles the flattened token stream in
+``BLOCK``-sized chunks (vector-lane shaped, 8·128 = 1024).
+
+Both forward and backward are Pallas kernels (the gradient is analytic
+and elementwise):
+
+  d loss_t / d logp = -(surr' - beta * kl') * mask, where
+    surr' = ratio * A        if the unclipped branch is active, else 0
+    kl'   = 1 - exp(ref - logp)      (d/d logp of k3)
+
+Validated against ``ref.grpo_token_loss_ref`` (value) and
+``jax.grad`` of the reference (gradient) in python/tests/.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 1024
+
+
+def _fwd_kernel(logp_ref, old_ref, refp_ref, adv_ref, mask_ref, out_ref, *, clip_eps, kl_beta):
+    logp = logp_ref[...]
+    ratio = jnp.exp(logp - old_ref[...])
+    adv = adv_ref[...]
+    clipped = jnp.clip(ratio, 1.0 - clip_eps, 1.0 + clip_eps)
+    surr = jnp.minimum(ratio * adv, clipped * adv)
+    log_r = refp_ref[...] - logp
+    kl = jnp.exp(log_r) - log_r - 1.0
+    out_ref[...] = -(surr - kl_beta * kl) * mask_ref[...]
+
+
+def _bwd_kernel(logp_ref, old_ref, refp_ref, adv_ref, mask_ref, g_ref, dlogp_ref, *, clip_eps, kl_beta):
+    logp = logp_ref[...]
+    ratio = jnp.exp(logp - old_ref[...])
+    adv = adv_ref[...]
+    clipped = jnp.clip(ratio, 1.0 - clip_eps, 1.0 + clip_eps)
+    unclipped_active = (ratio * adv) <= (clipped * adv)
+    # d surr / d logp: ratio*adv on the unclipped branch, 0 when the min
+    # picks the clipped branch (clip has zero grad outside the band; on
+    # ties jnp.minimum takes the first arg, matching <=).
+    dsurr = jnp.where(unclipped_active, ratio * adv, 0.0)
+    dkl = 1.0 - jnp.exp(refp_ref[...] - logp)
+    dlogp_ref[...] = -(dsurr - kl_beta * dkl) * mask_ref[...] * g_ref[...]
+
+
+def _pad_flat(x, n_pad):
+    flat = x.reshape(-1)
+    return jnp.pad(flat, (0, n_pad)) if n_pad else flat
+
+
+def _run_elementwise(kernel, args, n, dtype):
+    """Tile a flat elementwise kernel over ceil(n/BLOCK) grid steps."""
+    block = min(BLOCK, max(n, 1))
+    n_blocks = pl.cdiv(n, block)
+    n_pad = n_blocks * block - n
+    padded = [_pad_flat(a, n_pad) for a in args]
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,)) for _ in padded],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_blocks * block,), dtype),
+        interpret=True,
+    )(*padded)
+    return out[:n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def grpo_token_loss(logp, old_logp, ref_logp, adv, mask, clip_eps=0.2, kl_beta=0.02):
+    """Per-token GRPO loss; all inputs share one shape, output matches."""
+    shape = logp.shape
+    n = logp.size
+    kern = functools.partial(_fwd_kernel, clip_eps=clip_eps, kl_beta=kl_beta)
+    out = _run_elementwise(kern, [logp, old_logp, ref_logp, adv, mask], n, logp.dtype)
+    return out.reshape(shape)
+
+
+def _loss_fwd(logp, old_logp, ref_logp, adv, mask, clip_eps, kl_beta):
+    out = grpo_token_loss(logp, old_logp, ref_logp, adv, mask, clip_eps, kl_beta)
+    return out, (logp, old_logp, ref_logp, adv, mask)
+
+
+def _loss_bwd(clip_eps, kl_beta, res, g):
+    logp, old_logp, ref_logp, adv, mask = res
+    shape = logp.shape
+    n = logp.size
+    kern = functools.partial(_bwd_kernel, clip_eps=clip_eps, kl_beta=kl_beta)
+    dlogp = _run_elementwise(
+        kern, [logp, old_logp, ref_logp, adv, mask, g], n, logp.dtype
+    ).reshape(shape)
+    zeros = jnp.zeros_like(logp)
+    # old_logp / ref_logp / adv / mask are treated as constants (stop-grad
+    # semantics of the RL objective).
+    return dlogp, zeros, zeros, zeros, zeros
+
+
+grpo_token_loss.defvjp(_loss_fwd, _loss_bwd)
+
+
+def grpo_loss(logp, old_logp, ref_logp, adv, mask, clip_eps=0.2, kl_beta=0.02):
+    """Masked-mean GRPO loss over the token stream (scalar)."""
+    per_tok = grpo_token_loss(logp, old_logp, ref_logp, adv, mask, clip_eps, kl_beta)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(per_tok) / denom

@@ -1,0 +1,74 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the ground truth for pytest/hypothesis correctness checks
+(``python/tests/``) and are also used as the backward implementations in
+the kernels' ``custom_vjp`` rules where an analytic jnp gradient is
+simpler than a hand-written backward kernel (documented per-kernel).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True) -> jax.Array:
+    """Reference scaled-dot-product attention.
+
+    Shapes: q, k, v are [B, H, T, Dh]; returns [B, H, T, Dh].
+    """
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, dtype=q.dtype))
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    if causal:
+        t_q, t_k = q.shape[2], k.shape[2]
+        mask = jnp.tril(jnp.ones((t_q, t_k), dtype=bool), k=t_k - t_q)
+        scores = jnp.where(mask, scores, jnp.finfo(scores.dtype).min)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def grpo_token_loss_ref(
+    logp: jax.Array,
+    old_logp: jax.Array,
+    ref_logp: jax.Array,
+    adv: jax.Array,
+    mask: jax.Array,
+    *,
+    clip_eps: float = 0.2,
+    kl_beta: float = 0.02,
+) -> jax.Array:
+    """Per-token GRPO objective (to be *minimized*).
+
+    PPO-style clipped surrogate with the k3 KL estimator against the
+    reference policy (DeepSeekMath / GRPO, Shao et al. 2024):
+
+      ratio   = exp(logp - old_logp)
+      surr    = min(ratio * A, clip(ratio, 1-eps, 1+eps) * A)
+      kl_k3   = exp(ref_logp - logp) - (ref_logp - logp) - 1
+      loss_t  = -(surr - beta * kl_k3) * mask
+
+    All inputs share one shape; returns per-token loss, same shape. The
+    caller reduces (masked mean).
+    """
+    ratio = jnp.exp(logp - old_logp)
+    clipped = jnp.clip(ratio, 1.0 - clip_eps, 1.0 + clip_eps)
+    surr = jnp.minimum(ratio * adv, clipped * adv)
+    log_r = ref_logp - logp
+    kl = jnp.exp(log_r) - log_r - 1.0
+    return -(surr - kl_beta * kl) * mask
+
+
+def grpo_loss_ref(logp, old_logp, ref_logp, adv, mask, *, clip_eps=0.2, kl_beta=0.02):
+    """Masked-mean reduction of :func:`grpo_token_loss_ref`."""
+    per_tok = grpo_token_loss_ref(
+        logp, old_logp, ref_logp, adv, mask, clip_eps=clip_eps, kl_beta=kl_beta
+    )
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(per_tok) / denom
+
+
+def rmsnorm_ref(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Reference RMSNorm over the last axis."""
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w

@@ -1,0 +1,443 @@
+"""L2: decoder-only transformer policy + GRPO training step (JAX).
+
+This is the compute graph of one FlexMARL *agent policy*: a small
+GPT-style decoder (RMSNorm, RoPE, tied embeddings, scan-over-layers) with
+
+  * ``prefill`` / ``decode_step``  — the rollout-engine inference path
+    (KV-cache incremental decoding),
+  * ``grad_step`` / ``accum_grads`` / ``apply_grads`` — the training-engine
+    path, deliberately split so the L3 orchestrator can realize the
+    paper's §4.3 micro-batch pipeline: gradients are *computed* per micro
+    batch and *cached/accumulated*, and parameters are updated once per
+    global batch (gradient accumulation ≡ full-batch update),
+  * ``train_step`` — the fused synchronous step used by the baselines.
+
+Everything here is build-time Python: ``aot.py`` lowers each entry point
+to HLO text; the Rust runtime loads and executes the artifacts. The L1
+Pallas kernels (``kernels/attention.py``, ``kernels/grpo_loss.py``) are
+called from the forward pass so they lower into the same HLO.
+
+Functions use *flat* parameter lists (see ``PARAM_NAMES``) because HLO
+entry computations take positional array arguments; ``params_to_list`` /
+``list_to_params`` convert. The ordering is part of the artifact ABI and
+is recorded in ``artifacts/manifest.json``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import flash_attention
+from .kernels.grpo_loss import grpo_loss
+
+Params = Dict[str, jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyperparameters for one agent policy."""
+
+    vocab: int = 512
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 1024
+    max_seq: int = 128  # Tmax: KV-cache capacity == training context
+    rope_theta: float = 10000.0
+    clip_eps: float = 0.2
+    kl_beta: float = 0.02
+    adam_b1: float = 0.9
+    adam_b2: float = 0.95
+    adam_eps: float = 1e-8
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def num_params(self) -> int:
+        return sum(int(math.prod(s)) for _, s in param_spec(self))
+
+
+PRESETS: Dict[str, ModelConfig] = {
+    # Unit-test sized.
+    "tiny": ModelConfig(vocab=64, d_model=32, n_layers=2, n_heads=2, d_ff=64, max_seq=32),
+    # e2e default on this single-core container (~3.4M params).
+    "small": ModelConfig(),
+    # ~25M — mid preset for bigger hosts.
+    "base": ModelConfig(vocab=4096, d_model=512, n_layers=6, n_heads=8, d_ff=2048, max_seq=256),
+    # ~100M (GPT-2-small class) — the system-prompt reference scale.
+    "m100": ModelConfig(vocab=8192, d_model=768, n_layers=12, n_heads=12, d_ff=3072, max_seq=512),
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameter pytree <-> flat list ABI
+# ---------------------------------------------------------------------------
+
+PARAM_NAMES: Tuple[str, ...] = (
+    "tok_emb",  # [V, D] (tied LM head)
+    "ln1",      # [L, D]
+    "wq",       # [L, D, D]
+    "wk",       # [L, D, D]
+    "wv",       # [L, D, D]
+    "wo",       # [L, D, D]
+    "ln2",      # [L, D]
+    "w1",       # [L, D, F]
+    "w2",       # [L, F, D]
+    "ln_f",     # [D]
+)
+
+
+def param_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    v, d, l, f = cfg.vocab, cfg.d_model, cfg.n_layers, cfg.d_ff
+    return [
+        ("tok_emb", (v, d)),
+        ("ln1", (l, d)),
+        ("wq", (l, d, d)),
+        ("wk", (l, d, d)),
+        ("wv", (l, d, d)),
+        ("wo", (l, d, d)),
+        ("ln2", (l, d)),
+        ("w1", (l, d, f)),
+        ("w2", (l, f, d)),
+        ("ln_f", (d,)),
+    ]
+
+
+def params_to_list(params: Params) -> List[jax.Array]:
+    return [params[n] for n in PARAM_NAMES]
+
+
+def list_to_params(flat) -> Params:
+    flat = list(flat)
+    assert len(flat) == len(PARAM_NAMES), (len(flat), len(PARAM_NAMES))
+    return dict(zip(PARAM_NAMES, flat))
+
+
+def init_params(cfg: ModelConfig, seed: jax.Array) -> Params:
+    """GPT-2-style init: N(0, 0.02), residual-out layers scaled by 1/√(2L)."""
+    key = jax.random.PRNGKey(seed)
+    keys = jax.random.split(key, len(PARAM_NAMES))
+    out_scale = 0.02 / math.sqrt(2.0 * cfg.n_layers)
+    params: Params = {}
+    for i, (name, shape) in enumerate(param_spec(cfg)):
+        if name.startswith("ln"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            scale = out_scale if name in ("wo", "w2") else 0.02
+            params[name] = (jax.random.normal(keys[i], shape) * scale).astype(jnp.float32)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward pieces
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def _rope_freqs(cfg: ModelConfig, positions: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """cos/sin tables for RoPE. positions: [T] int32 → ([T, Dh/2], ...)."""
+    dh = cfg.d_head
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+    ang = positions.astype(jnp.float32)[:, None] * inv[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def _apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: [B, H, T, Dh]; cos/sin: [T, Dh/2]."""
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x1 * sin + x2 * cos
+    return jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+
+
+def _split_heads(x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    b, t, _ = x.shape
+    return x.reshape(b, t, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x: jax.Array) -> jax.Array:
+    b, h, t, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, t, h * dh)
+
+
+def forward(cfg: ModelConfig, params: Params, tokens: jax.Array) -> jax.Array:
+    """Full-context training forward. tokens: [B, T] int32 → logits [B, T, V].
+
+    Attention runs through the L1 Pallas flash kernel. Layers are folded
+    with ``lax.scan`` over the stacked weights (compile-time/HLO-size win;
+    ablation vs unroll in EXPERIMENTS.md §Perf).
+    """
+    b, t = tokens.shape
+    x = params["tok_emb"][tokens]  # [B, T, D]
+    cos, sin = _rope_freqs(cfg, jnp.arange(t, dtype=jnp.int32))
+
+    def block(x, layer):
+        ln1, wq, wk, wv, wo, ln2, w1, w2 = layer
+        h = rmsnorm(x, ln1)
+        q = _apply_rope(_split_heads(h @ wq, cfg), cos, sin)
+        k = _apply_rope(_split_heads(h @ wk, cfg), cos, sin)
+        v = _split_heads(h @ wv, cfg)
+        att = flash_attention(q, k, v, True)
+        x = x + _merge_heads(att) @ wo
+        h2 = rmsnorm(x, ln2)
+        x = x + (jax.nn.gelu(h2 @ w1) @ w2)
+        return x, None
+
+    layers = (
+        params["ln1"], params["wq"], params["wk"], params["wv"],
+        params["wo"], params["ln2"], params["w1"], params["w2"],
+    )
+    x, _ = jax.lax.scan(block, x, layers)
+    x = rmsnorm(x, params["ln_f"])
+    return x @ params["tok_emb"].T  # tied head
+
+
+def token_logprobs(cfg: ModelConfig, params: Params, tokens: jax.Array, targets: jax.Array) -> jax.Array:
+    """log p(target_t | tokens_{<=t}) for every position. [B, T]."""
+    logits = forward(cfg, params, tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+
+
+# ---------------------------------------------------------------------------
+# Rollout path: prefill + incremental decode with KV cache
+# ---------------------------------------------------------------------------
+
+
+def prefill(
+    cfg: ModelConfig, params: Params, tokens: jax.Array
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Process the prompt, build Tmax-padded KV caches.
+
+    tokens: [B, Tp] → (logits_last [B, V], k_cache, v_cache [L, B, H, Tmax, Dh]).
+    """
+    b, tp = tokens.shape
+    tmax = cfg.max_seq
+    x = params["tok_emb"][tokens]
+    cos, sin = _rope_freqs(cfg, jnp.arange(tp, dtype=jnp.int32))
+
+    def block(x, layer):
+        ln1, wq, wk, wv, wo, ln2, w1, w2 = layer
+        h = rmsnorm(x, ln1)
+        q = _apply_rope(_split_heads(h @ wq, cfg), cos, sin)
+        k = _apply_rope(_split_heads(h @ wk, cfg), cos, sin)
+        v = _split_heads(h @ wv, cfg)
+        att = flash_attention(q, k, v, True)
+        x = x + _merge_heads(att) @ wo
+        h2 = rmsnorm(x, ln2)
+        x = x + (jax.nn.gelu(h2 @ w1) @ w2)
+        kc = jnp.zeros((b, cfg.n_heads, tmax, cfg.d_head), jnp.float32)
+        vc = jnp.zeros_like(kc)
+        kc = jax.lax.dynamic_update_slice(kc, k, (0, 0, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v, (0, 0, 0, 0))
+        return x, (kc, vc)
+
+    layers = (
+        params["ln1"], params["wq"], params["wk"], params["wv"],
+        params["wo"], params["ln2"], params["w1"], params["w2"],
+    )
+    x, (k_cache, v_cache) = jax.lax.scan(block, x, layers)
+    x = rmsnorm(x[:, -1, :], params["ln_f"])  # last position only
+    logits = x @ params["tok_emb"].T
+    return logits, k_cache, v_cache
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: Params,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    token: jax.Array,
+    pos: jax.Array,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One autoregressive step at position ``pos`` (scalar int32).
+
+    token: [B] int32. Caches are functionally updated; the Rust runtime
+    keeps them device-resident across steps so the update stays on-device.
+
+    Decode attention over the cache is a single-query (memory-bound)
+    matvec; the Pallas kernel targets the MXU-bound multi-query shapes, so
+    here plain jnp is used on purpose (see DESIGN.md §Perf/L2).
+    """
+    tmax = cfg.max_seq
+    x = params["tok_emb"][token][:, None, :]  # [B, 1, D]
+    cos, sin = _rope_freqs(cfg, pos[None].astype(jnp.int32))
+    # Mask: positions 0..pos valid.
+    valid = (jnp.arange(tmax) <= pos)[None, None, None, :]  # [1,1,1,Tmax]
+
+    def block(x, layer):
+        ln1, wq, wk, wv, wo, ln2, w1, w2, kc, vc = layer
+        h = rmsnorm(x, ln1)
+        q = _apply_rope(_split_heads(h @ wq, cfg), cos, sin)  # [B,H,1,Dh]
+        k = _apply_rope(_split_heads(h @ wk, cfg), cos, sin)
+        v = _split_heads(h @ wv, cfg)
+        kc = jax.lax.dynamic_update_slice(kc, k, (0, 0, pos, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v, (0, 0, pos, 0))
+        scores = jnp.einsum("bhqd,bhkd->bhqk", q, kc) / math.sqrt(cfg.d_head)
+        scores = jnp.where(valid, scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        att = jnp.einsum("bhqk,bhkd->bhqd", probs, vc)
+        x = x + _merge_heads(att) @ wo
+        h2 = rmsnorm(x, ln2)
+        x = x + (jax.nn.gelu(h2 @ w1) @ w2)
+        return x, (kc, vc)
+
+    layers = (
+        params["ln1"], params["wq"], params["wk"], params["wv"],
+        params["wo"], params["ln2"], params["w1"], params["w2"],
+        k_cache, v_cache,
+    )
+    x, (k_cache, v_cache) = jax.lax.scan(block, x, layers)
+    x = rmsnorm(x[:, 0, :], params["ln_f"])
+    logits = x @ params["tok_emb"].T
+    return logits, k_cache, v_cache
+
+
+def decode_block(
+    cfg: ModelConfig,
+    params: Params,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    token: jax.Array,
+    pos: jax.Array,
+    seed: jax.Array,
+    temperature: jax.Array,
+    n_steps: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Generate ``n_steps`` tokens inside ONE executable (§Perf/L2+L3).
+
+    The token-by-token path pays a full host↔device literal round-trip of
+    params + KV caches per generated token; folding the sample loop into
+    the HLO via ``lax.scan`` (with temperature sampling on-graph, seeded
+    by the coordinator) amortizes that cost over the block. Given the
+    last accepted token at ``pos``, emits tokens for positions
+    pos+1 … pos+n_steps.
+
+    Returns (tokens [n, B], behaviour logps [n, B], k_cache, v_cache).
+    """
+    key = jax.random.PRNGKey(seed)
+
+    def step(carry, _):
+        kc, vc, tok, p, key = carry
+        logits, kc, vc = decode_step(cfg, params, kc, vc, tok, p)
+        key, sub = jax.random.split(key)
+        nxt = jax.random.categorical(sub, logits / jnp.maximum(temperature, 1e-4), axis=-1)
+        nxt = nxt.astype(jnp.int32)
+        logp_all = jax.nn.log_softmax(logits, axis=-1)
+        logp = jnp.take_along_axis(logp_all, nxt[:, None], axis=-1)[:, 0]
+        return (kc, vc, nxt, p + 1, key), (nxt, logp)
+
+    (k_cache, v_cache, _, _, _), (toks, logps) = jax.lax.scan(
+        step, (k_cache, v_cache, token, pos, key), None, length=n_steps
+    )
+    return toks, logps, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# Training path: GRPO gradients, accumulation, Adam
+# ---------------------------------------------------------------------------
+
+
+def grpo_objective(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jax.Array,
+    targets: jax.Array,
+    adv: jax.Array,
+    old_logp: jax.Array,
+    ref_logp: jax.Array,
+    mask: jax.Array,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array, jax.Array]]:
+    """Scalar GRPO loss + (kl, ratio_mean, entropy) diagnostics."""
+    logits = forward(cfg, params, tokens)
+    logp_all = jax.nn.log_softmax(logits, axis=-1)
+    logp = jnp.take_along_axis(logp_all, targets[..., None], axis=-1)[..., 0]
+    loss = grpo_loss(logp, old_logp, ref_logp, adv, mask, cfg.clip_eps, cfg.kl_beta)
+
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    log_r = ref_logp - logp
+    kl = jnp.sum((jnp.exp(log_r) - log_r - 1.0) * mask) / denom
+    ratio = jnp.sum(jnp.exp(logp - old_logp) * mask) / denom
+    probs = jnp.exp(logp_all)
+    ent = jnp.sum(-jnp.sum(probs * logp_all, axis=-1) * mask) / denom
+    return loss, (kl, ratio, ent)
+
+
+def grad_step(cfg: ModelConfig, params: Params, tokens, targets, adv, old_logp, ref_logp, mask):
+    """Gradient *computation only* (§4.3: decoupled from parameter update).
+
+    Returns (grads, loss, kl, ratio, entropy, grad_norm).
+    """
+    (loss, (kl, ratio, ent)), grads = jax.value_and_grad(
+        lambda p: grpo_objective(cfg, p, tokens, targets, adv, old_logp, ref_logp, mask),
+        has_aux=True,
+    )(params)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in grads.values()))
+    return grads, loss, kl, ratio, ent, gnorm
+
+
+def zeros_like_params(cfg: ModelConfig) -> Params:
+    return {n: jnp.zeros(s, jnp.float32) for n, s in param_spec(cfg)}
+
+
+def accum_grads(acc: Params, grads: Params) -> Params:
+    """Gradient-cache accumulation (one micro batch into the agent's cache)."""
+    return {n: acc[n] + grads[n] for n in PARAM_NAMES}
+
+
+def apply_grads(
+    cfg: ModelConfig,
+    params: Params,
+    m: Params,
+    v: Params,
+    count: jax.Array,
+    acc: Params,
+    scale: jax.Array,
+    lr: jax.Array,
+    max_grad_norm: float = 1.0,
+) -> Tuple[Params, Params, Params, jax.Array]:
+    """Unified parameter update (policy_version += 1 on the L3 side).
+
+    Adam with bias correction + global-norm clipping. ``scale`` is
+    1/num_micro_batches so the cached sum equals the full-batch mean —
+    the mathematical-equivalence property the paper's pipeline rests on
+    (tested in python/tests/test_model.py::test_ga_equivalence).
+    """
+    g = {n: acc[n] * scale for n in PARAM_NAMES}
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(x)) for x in g.values()))
+    clip = jnp.minimum(1.0, max_grad_norm / (gnorm + 1e-12))
+    g = {n: x * clip for n, x in g.items()}
+
+    count = count + 1
+    b1, b2, eps = cfg.adam_b1, cfg.adam_b2, cfg.adam_eps
+    bc1 = 1.0 - b1 ** count.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** count.astype(jnp.float32)
+    new_p, new_m, new_v = {}, {}, {}
+    for n in PARAM_NAMES:
+        new_m[n] = b1 * m[n] + (1.0 - b1) * g[n]
+        new_v[n] = b2 * v[n] + (1.0 - b2) * jnp.square(g[n])
+        m_hat = new_m[n] / bc1
+        v_hat = new_v[n] / bc2
+        new_p[n] = params[n] - lr * m_hat / (jnp.sqrt(v_hat) + eps)
+    return new_p, new_m, new_v, count
+
+
+def train_step(cfg: ModelConfig, params, m, v, count, tokens, targets, adv, old_logp, ref_logp, mask, lr):
+    """Fused synchronous step (baselines / tests): grad + Adam in one HLO."""
+    grads, loss, kl, ratio, ent, gnorm = grad_step(
+        cfg, params, tokens, targets, adv, old_logp, ref_logp, mask
+    )
+    one = jnp.asarray(1.0, jnp.float32)
+    new_p, new_m, new_v, count = apply_grads(cfg, params, m, v, count, grads, one, lr)
+    return new_p, new_m, new_v, count, loss, kl, ratio, ent, gnorm

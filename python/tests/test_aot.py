@@ -1,0 +1,106 @@
+"""AOT interchange contract: the manifest + HLO text the Rust runtime
+consumes. Builds the tiny preset into a tmpdir once and checks the ABI."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+from compile import model as M
+
+CFG = M.PRESETS["tiny"]
+B_ROLL, T_PROMPT, B_GRAD = 2, 8, 2
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    manifest = aot.build(CFG, out, B_ROLL, T_PROMPT, B_GRAD, decode_block=4)
+    return out, manifest
+
+
+EXPECTED = {
+    "init", "prefill", "decode", "decode_blk", "logprob", "grad", "accum",
+    "apply", "train",
+}
+
+
+def test_all_artifacts_present(built):
+    out, manifest = built
+    assert set(manifest["artifacts"]) == EXPECTED
+    for art in manifest["artifacts"].values():
+        path = os.path.join(out, art["file"])
+        assert os.path.exists(path)
+        text = open(path).read()
+        # Parseable HLO text with an entry computation; no 64-bit-id proto.
+        assert "ENTRY" in text and "HloModule" in text
+
+
+def test_manifest_json_serializable(built):
+    _, manifest = built
+    json.dumps(manifest)  # no numpy leftovers
+
+
+def test_param_abi(built):
+    _, manifest = built
+    spec = manifest["param_spec"]
+    assert [s["name"] for s in spec] == list(M.PARAM_NAMES)
+    assert [tuple(s["shape"]) for s in spec] == [s for _, s in M.param_spec(CFG)]
+
+
+def test_init_signature(built):
+    _, manifest = built
+    art = manifest["artifacts"]["init"]
+    assert len(art["inputs"]) == 1 and art["inputs"][0]["dtype"] == "int32"
+    assert len(art["outputs"]) == len(M.PARAM_NAMES)
+    for o, (_, shape) in zip(art["outputs"], M.param_spec(CFG)):
+        assert tuple(o["shape"]) == shape
+
+
+def test_rollout_signatures(built):
+    _, manifest = built
+    pre = manifest["artifacts"]["prefill"]
+    assert tuple(pre["inputs"][-1]["shape"]) == (B_ROLL, T_PROMPT)
+    logits, kc, vc = pre["outputs"]
+    assert tuple(logits["shape"]) == (B_ROLL, CFG.vocab)
+    cache = (CFG.n_layers, B_ROLL, CFG.n_heads, CFG.max_seq, CFG.d_head)
+    assert tuple(kc["shape"]) == cache and tuple(vc["shape"]) == cache
+
+    dec = manifest["artifacts"]["decode"]
+    names = [i["name"] for i in dec["inputs"]]
+    assert names[-4:] == ["k_cache", "v_cache", "token", "pos"]
+    assert tuple(dec["outputs"][0]["shape"]) == (B_ROLL, CFG.vocab)
+
+    blk = manifest["artifacts"]["decode_blk"]
+    names = [i["name"] for i in blk["inputs"]]
+    assert names[-2:] == ["seed", "temperature"]
+    # tokens [n, B] + logps [n, B] + two caches
+    assert tuple(blk["outputs"][0]["shape"]) == (4, B_ROLL)
+    assert blk["outputs"][0]["dtype"] == "int32"
+    assert tuple(blk["outputs"][1]["shape"]) == (4, B_ROLL)
+
+
+def test_training_signatures(built):
+    _, manifest = built
+    grad = manifest["artifacts"]["grad"]
+    n = len(M.PARAM_NAMES)
+    assert len(grad["inputs"]) == n + 6
+    assert len(grad["outputs"]) == n + 5  # grads + loss/kl/ratio/ent/gnorm
+    for o in grad["outputs"][n:]:
+        assert tuple(o["shape"]) == ()
+
+    apply_ = manifest["artifacts"]["apply"]
+    assert len(apply_["inputs"]) == 4 * n + 3
+    assert len(apply_["outputs"]) == 3 * n + 1
+
+    accum = manifest["artifacts"]["accum"]
+    assert len(accum["inputs"]) == 2 * n and len(accum["outputs"]) == n
+
+    train = manifest["artifacts"]["train"]
+    assert len(train["inputs"]) == 3 * n + 1 + 6 + 1
+    assert len(train["outputs"]) == 3 * n + 1 + 5
+
+
+def test_fingerprint_stable():
+    assert aot.input_fingerprint() == aot.input_fingerprint()

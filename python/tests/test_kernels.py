@@ -1,0 +1,191 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes; assert_allclose against ref.py — the
+core correctness signal for the compile path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import flash_attention
+from compile.kernels.grpo_loss import grpo_loss, grpo_token_loss
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(jax.random.PRNGKey(key), shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(1, 4),
+    t=st.integers(1, 70),
+    dh=st.sampled_from([4, 8, 16, 64]),
+    causal=st.booleans(),
+)
+def test_attention_matches_ref(b, h, t, dh, causal):
+    q = rand(1, (b, h, t, dh))
+    k = rand(2, (b, h, t, dh))
+    v = rand(3, (b, h, t, dh))
+    out = flash_attention(q, k, v, causal)
+    expect = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(out, expect, atol=2e-5, rtol=2e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    t=st.integers(2, 48),
+    bq=st.sampled_from([1, 4, 16, 128]),
+    bk=st.sampled_from([1, 4, 16, 128]),
+)
+def test_attention_block_shape_invariance(t, bq, bk):
+    """Tiling is an implementation detail: any block shape, same numbers."""
+    q = rand(4, (1, 2, t, 8))
+    k = rand(5, (1, 2, t, 8))
+    v = rand(6, (1, 2, t, 8))
+    base = flash_attention(q, k, v, True)
+    out = flash_attention(q, k, v, True, bq, bk)
+    np.testing.assert_allclose(out, base, atol=2e-5, rtol=2e-5)
+
+
+def test_attention_cross_shapes_decode_window():
+    """t_q < t_k: causality is over absolute positions (decode-time use)."""
+    t_q, t_k = 4, 20
+    q = rand(7, (1, 2, t_q, 8))
+    k = rand(8, (1, 2, t_k, 8))
+    v = rand(9, (1, 2, t_k, 8))
+    out = flash_attention(q, k, v, True)
+    expect = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(out, expect, atol=2e-5, rtol=2e-5)
+
+
+def test_attention_grad_matches_ref():
+    q = rand(10, (2, 2, 24, 8))
+    k = rand(11, (2, 2, 24, 8))
+    v = rand(12, (2, 2, 24, 8))
+
+    def loss_kernel(q, k, v):
+        return jnp.sum(flash_attention(q, k, v, True) ** 2)
+
+    def loss_ref(q, k, v):
+        return jnp.sum(ref.attention_ref(q, k, v, causal=True) ** 2)
+
+    g1 = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, atol=5e-5, rtol=5e-5)
+
+
+def test_attention_softmax_rows_sum_to_one_property():
+    """With v = identity basis, output rows are convex combinations."""
+    t, dh = 16, 16
+    q = rand(13, (1, 1, t, dh))
+    k = rand(14, (1, 1, t, dh))
+    v = jnp.eye(t, dh)[None, None]
+    out = flash_attention(q, k, v, True)
+    np.testing.assert_allclose(np.sum(np.array(out), axis=-1), np.ones((1, 1, t)), atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_attention_dtypes(dtype):
+    q = rand(15, (1, 2, 16, 8), dtype)
+    k = rand(16, (1, 2, 16, 8), dtype)
+    v = rand(17, (1, 2, 16, 8), dtype)
+    out = flash_attention(q, k, v, True)
+    assert out.dtype == dtype
+    expect = ref.attention_ref(q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32))
+    tol = 5e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(out.astype(jnp.float32), expect, atol=tol, rtol=tol)
+
+
+# ---------------------------------------------------------------------------
+# GRPO loss
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 4),
+    t=st.integers(1, 300),
+    clip=st.sampled_from([0.1, 0.2, 0.3]),
+    beta=st.sampled_from([0.0, 0.02, 0.1]),
+)
+def test_grpo_token_loss_matches_ref(b, t, clip, beta):
+    logp = rand(20, (b, t), scale=0.5)
+    old = rand(21, (b, t), scale=0.5)
+    refp = rand(22, (b, t), scale=0.5)
+    adv = rand(23, (b, t))
+    mask = (rand(24, (b, t)) > 0).astype(jnp.float32)
+    out = grpo_token_loss(logp, old, refp, adv, mask, clip, beta)
+    expect = ref.grpo_token_loss_ref(logp, old, refp, adv, mask, clip_eps=clip, kl_beta=beta)
+    np.testing.assert_allclose(out, expect, atol=1e-6, rtol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(b=st.integers(1, 3), t=st.integers(1, 130))
+def test_grpo_grad_matches_ref(b, t):
+    logp = rand(30, (b, t), scale=0.3)
+    old = rand(31, (b, t), scale=0.3)
+    refp = rand(32, (b, t), scale=0.3)
+    adv = rand(33, (b, t))
+    mask = (rand(34, (b, t)) > -0.5).astype(jnp.float32)
+    g1 = jax.grad(lambda x: grpo_loss(x, old, refp, adv, mask))(logp)
+    g2 = jax.grad(lambda x: ref.grpo_loss_ref(x, old, refp, adv, mask))(logp)
+    np.testing.assert_allclose(g1, g2, atol=1e-6, rtol=1e-5)
+
+
+def test_grpo_masked_tokens_contribute_nothing():
+    logp = rand(40, (2, 9))
+    old = rand(41, (2, 9))
+    refp = rand(42, (2, 9))
+    adv = rand(43, (2, 9))
+    mask = jnp.zeros((2, 9))
+    out = grpo_token_loss(logp, old, refp, adv, mask)
+    np.testing.assert_allclose(out, np.zeros((2, 9)), atol=0)
+
+
+def test_grpo_onpolicy_no_kl_equals_negative_adv():
+    """On-policy (logp == old == ref): ratio=1, kl=0 → loss_t = -adv."""
+    logp = rand(44, (2, 9), scale=0.5)
+    adv = rand(45, (2, 9))
+    mask = jnp.ones((2, 9))
+    out = grpo_token_loss(logp, logp, logp, adv, mask, 0.2, 0.5)
+    np.testing.assert_allclose(out, -adv, atol=1e-6, rtol=1e-6)
+
+
+def test_grpo_clip_caps_positive_update():
+    """ratio far above 1+eps with A>0: surrogate is capped at (1+eps)·A."""
+    old = jnp.zeros((1, 4))
+    logp = jnp.full((1, 4), 2.0)  # ratio = e^2 >> 1.2
+    adv = jnp.ones((1, 4))
+    mask = jnp.ones((1, 4))
+    out = grpo_token_loss(logp, old, old, adv, mask, 0.2, 0.0)
+    np.testing.assert_allclose(out, -1.2 * np.ones((1, 4)), atol=1e-6)
+    # and the gradient wrt logp is zero there (clipped branch active)
+    g = jax.grad(lambda x: grpo_loss(x, old, old, adv, mask, 0.2, 0.0))(logp)
+    np.testing.assert_allclose(g, np.zeros((1, 4)), atol=1e-7)
+
+
+def test_grpo_kl_penalty_nonnegative():
+    """k3 estimator is ≥ 0 pointwise, so beta>0 only increases the loss."""
+    logp = rand(46, (3, 17), scale=0.7)
+    old = rand(47, (3, 17), scale=0.7)
+    refp = rand(48, (3, 17), scale=0.7)
+    adv = rand(49, (3, 17))
+    mask = jnp.ones((3, 17))
+    l0 = grpo_token_loss(logp, old, refp, adv, mask, 0.2, 0.0)
+    l1 = grpo_token_loss(logp, old, refp, adv, mask, 0.2, 0.3)
+    assert np.all(np.array(l1) >= np.array(l0) - 1e-7)

@@ -1,0 +1,193 @@
+//! Hot-path micro-benches (deliverable (e) §Perf/L3): the coordinator
+//! components on the request path, plus — when `artifacts/` exists — the
+//! PJRT executable latencies that bound the real end-to-end run.
+//!
+//! `harness = false` bench on `flexmarl::util::bench` (criterion is not
+//! vendored). Before/after numbers are recorded in EXPERIMENTS.md §Perf.
+
+use flexmarl::baselines::Framework;
+use flexmarl::config::{ExperimentConfig, WorkloadConfig};
+use flexmarl::orchestrator::{simulate, SimOptions};
+use flexmarl::rollout::{heap::IndexedMinHeap, RolloutManager};
+use flexmarl::sim::EventQueue;
+use flexmarl::store::{grpo_schema, Blob, ExperienceStore, SampleId, Value};
+use flexmarl::util::bench::{bench, black_box};
+use flexmarl::util::rng::Pcg64;
+use std::time::Duration;
+
+const T: Duration = Duration::from_millis(300);
+
+fn main() {
+    println!("════════ hot-path micro-benches ════════");
+    bench_event_queue();
+    bench_heap();
+    bench_manager();
+    bench_store();
+    bench_json();
+    bench_sim_engine();
+    bench_pjrt();
+}
+
+fn bench_event_queue() {
+    let r = bench("sim::EventQueue push+pop (1k events)", T, || {
+        let mut q = EventQueue::new();
+        let mut rng = Pcg64::new(1);
+        for i in 0..1000u64 {
+            q.push_at(rng.f64() * 100.0, i);
+        }
+        while let Some(e) = q.pop() {
+            black_box(e);
+        }
+    });
+    println!("{}", r.report());
+}
+
+fn bench_heap() {
+    let r = bench("rollout::IndexedMinHeap 10k mixed ops", T, || {
+        let mut h = IndexedMinHeap::new();
+        let mut rng = Pcg64::new(2);
+        for i in 0..64 {
+            h.insert(i, rng.below(100));
+        }
+        for _ in 0..10_000 {
+            let id = rng.below(64) as usize;
+            h.update(id, rng.below(100));
+            black_box(h.peek_min());
+        }
+    });
+    println!("{}", r.report());
+}
+
+fn bench_manager() {
+    let r = bench("rollout::Manager submit+complete (1k reqs, 8 agents)", T, || {
+        let mut m = RolloutManager::new(8);
+        for a in 0..8 {
+            m.add_instance(a, 4);
+            m.add_instance(a, 4);
+        }
+        let mut rng = Pcg64::new(3);
+        let mut active = Vec::new();
+        for rid in 0..1000u64 {
+            let a = rng.below(8) as usize;
+            if let flexmarl::rollout::Dispatch::Started(_) = m.submit(rid, a) {
+                active.push(rid);
+            }
+            if active.len() > 40 {
+                let rid = active.swap_remove(rng.below(active.len() as u64) as usize);
+                if let Some(p) = m.complete(rid) {
+                    active.push(p);
+                }
+            }
+        }
+        while let Some(rid) = active.pop() {
+            if let Some(p) = m.complete(rid) {
+                active.push(p);
+            }
+        }
+        black_box(m.completed_per_agent.clone());
+    });
+    println!("{}", r.report());
+}
+
+fn bench_store() {
+    let r = bench("store::ExperienceStore insert+fill (256 samples)", T, || {
+        let s = ExperienceStore::new();
+        s.create_table("a", &grpo_schema());
+        for i in 0..256 {
+            let id = SampleId::new(i, 1, 0);
+            s.insert("a", 1, id).unwrap();
+            s.set_blob("a", 1, id, "prompt", Blob::Tokens(vec![1; 32])).unwrap();
+            s.set_blob("a", 1, id, "response", Blob::Tokens(vec![2; 32])).unwrap();
+            s.set_blob("a", 1, id, "old_logp", Blob::Floats(vec![-0.5; 32])).unwrap();
+            s.set_value("a", 1, id, "reward", Value::Float(0.5)).unwrap();
+            s.set_value("a", 1, id, "advantage", Value::Float(0.1)).unwrap();
+        }
+        black_box(s.count_ready("a", Some(1)));
+    });
+    println!("{}", r.report());
+
+    let s = ExperienceStore::new();
+    s.create_table("a", &grpo_schema());
+    let mut i = 0u64;
+    let r = bench("store::fetch_ready micro-batch 16 (hot loop)", T, || {
+        for _ in 0..16 {
+            let id = SampleId::new(i, 1, 0);
+            i += 1;
+            s.insert("a", 1, id).unwrap();
+            s.set_blob("a", 1, id, "prompt", Blob::Tokens(vec![1; 8])).unwrap();
+            s.set_blob("a", 1, id, "response", Blob::Tokens(vec![2; 8])).unwrap();
+            s.set_blob("a", 1, id, "old_logp", Blob::Floats(vec![-0.5; 8])).unwrap();
+            s.set_value("a", 1, id, "reward", Value::Float(0.5)).unwrap();
+            s.set_value("a", 1, id, "advantage", Value::Float(0.1)).unwrap();
+        }
+        let f = s.fetch_ready("a", Some(1), 16);
+        let keys: Vec<_> = f.iter().map(|x| x.key).collect();
+        s.complete("a", &keys).unwrap();
+        black_box(keys);
+    });
+    println!("{}", r.report());
+}
+
+fn bench_json() {
+    if let Ok(text) = std::fs::read_to_string("artifacts/manifest.json") {
+        let r = bench("util::json parse manifest.json", T, || {
+            black_box(flexmarl::util::json::parse(&text).unwrap());
+        });
+        println!("{}", r.report());
+    }
+}
+
+fn bench_sim_engine() {
+    let cfg = {
+        let mut c = ExperimentConfig::new(WorkloadConfig::ma(), Framework::flexmarl());
+        c.steps = 1;
+        c
+    };
+    let opts = SimOptions::default();
+    let r = bench("orchestrator::simulate 1 MA step (FlexMARL)", T, || {
+        black_box(simulate(&cfg, &opts).total_s);
+    });
+    println!("{}", r.report());
+}
+
+fn bench_pjrt() {
+    let Ok(rt) = flexmarl::runtime::ModelRuntime::load("artifacts") else {
+        println!("(PJRT benches skipped: run `make artifacts` first)");
+        return;
+    };
+    let sh = rt.manifest.shapes.clone();
+    let mut policy = flexmarl::runtime::policy::AgentPolicy::new(&rt, 0, 1).unwrap();
+    let corpus =
+        flexmarl::workload::corpus::CorpusConfig::new(rt.manifest.model.vocab, sh.t_prompt);
+    let mut rng = Pcg64::new(9);
+    let prompt = corpus.make_prompt(&mut rng, 0);
+    let prompts: Vec<Vec<i32>> = (0..sh.b_roll).map(|_| prompt.clone()).collect();
+
+    let r = bench("pjrt: prefill+16-token generate, per-token path", Duration::from_secs(3), || {
+        black_box(policy.generate(&rt, &prompts, 16, 1.0).unwrap());
+    });
+    println!("{}", r.report());
+
+    let r = bench("pjrt: prefill+16-token generate, decode_blk path", Duration::from_secs(3), || {
+        black_box(policy.generate_block(&rt, &prompts, 16, 1.0).unwrap());
+    });
+    println!("{}", r.report());
+
+    let rollouts = policy.generate(&rt, &prompts, 16, 1.0).unwrap();
+    let rows: Vec<_> = rollouts
+        .iter()
+        .map(|ro| flexmarl::grpo::make_row(&prompt, &ro.response, &ro.logp, 0.5, sh.t_train))
+        .collect();
+    let r = bench("pjrt: grad micro-batch (b_grad rows padded)", Duration::from_secs(3), || {
+        black_box(policy.grad_on_rows(&rt, &rows).unwrap());
+    });
+    println!("{}", r.report());
+    policy.apply(&rt, 1e-4).unwrap();
+
+    let r = bench("pjrt: apply (Adam update, full param set)", Duration::from_secs(2), || {
+        // Re-seed the cache each iteration so apply has work.
+        policy.grad_on_rows(&rt, &rows[..1.min(rows.len())].to_vec()).unwrap();
+        policy.apply(&rt, 1e-4).unwrap();
+    });
+    println!("{}", r.report());
+}

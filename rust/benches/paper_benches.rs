@@ -1,0 +1,310 @@
+//! `cargo bench` target regenerating every table AND figure of the
+//! paper's evaluation (§8), plus the ablation benches DESIGN.md §6 calls
+//! out (micro-batch size, Δ threshold, suspend-to-destroy vs retain,
+//! contiguous vs per-parameter weight sync, PACK vs STRICT_PACK).
+//!
+//! criterion is not vendored in this image; this is a `harness = false`
+//! bench built on `flexmarl::util::bench`. Each section prints the
+//! paper's reported values next to the regenerated ones.
+
+use flexmarl::baselines::{evaluate, Framework};
+use flexmarl::cluster::{DevicePool, PlacementStrategy};
+use flexmarl::config::{ClusterConfig, ExperimentConfig, ModelScale, WorkloadConfig};
+use flexmarl::memstore::{Location, TransferModel};
+use flexmarl::orchestrator::{simulate, SimOptions};
+use flexmarl::training::{swap_in_cost, swap_out_cost};
+use flexmarl::util::bench::time_once;
+
+fn opts() -> SimOptions {
+    SimOptions {
+        track_agents: vec![0, 1, 2],
+        ..SimOptions::default()
+    }
+}
+
+fn cfg(wl: WorkloadConfig, fw: Framework, steps: usize) -> ExperimentConfig {
+    let mut c = ExperimentConfig::new(wl, fw);
+    c.steps = steps;
+    c
+}
+
+fn wl(name: &str) -> WorkloadConfig {
+    if name == "MA" {
+        WorkloadConfig::ma()
+    } else {
+        WorkloadConfig::ca()
+    }
+}
+
+fn main() {
+    println!("════════ FlexMARL paper benches (virtual-time cluster simulator) ════════");
+    bench_table2();
+    bench_fig7();
+    bench_fig1();
+    bench_fig89();
+    bench_fig10();
+    bench_fig11();
+    bench_table3();
+    bench_table4();
+    bench_ablation_micro_batch();
+    bench_ablation_delta();
+    bench_ablation_swap_policy();
+    bench_weight_sync();
+    bench_placement();
+}
+
+fn bench_table2() {
+    println!("\n── Table 2: overall performance (paper → ours) ──");
+    let paper = [
+        ("MA", [914.4, 293.8, 174.1, 126.1]),
+        ("CA", [438.6, 130.0, 112.8, 78.8]),
+    ];
+    for (w, p) in paper {
+        let (rows, dt) = time_once(|| {
+            Framework::all_baselines()
+                .into_iter()
+                .map(|fw| evaluate(&cfg(wl(w), fw, 3), &opts()))
+                .collect::<Vec<_>>()
+        });
+        let base = rows[0].e2e_s;
+        println!("  {w} (regenerated in {:.2?}):", dt);
+        for (r, pe) in rows.iter().zip(p) {
+            println!(
+                "    {:<10} paper {:>6.1}s ({:>3.1}x)   ours {:>6.1}s ({:>3.1}x)  {:>7.1}tps",
+                r.framework,
+                pe,
+                p[0] / pe,
+                r.e2e_s,
+                base / r.e2e_s,
+                r.throughput_tps()
+            );
+        }
+    }
+}
+
+fn bench_fig7() {
+    println!("\n── Fig 7: E2E breakdown ── (paper anchor: DistRL MA train 155.9s, FlexMARL 10.2s)");
+    for w in ["MA", "CA"] {
+        for fw in Framework::all_baselines() {
+            let r = evaluate(&cfg(wl(w), fw, 3), &opts());
+            println!(
+                "    {w} {:<10} rollout {:>6.1}s | train {:>6.1}s | other {:>5.1}s",
+                r.framework, r.rollout_s, r.train_s, r.other_s
+            );
+        }
+    }
+}
+
+fn bench_fig1() {
+    println!("\n── Fig 1(a): interaction-latency CDF (paper: long tail to ≈170s) ──");
+    let out = simulate(&cfg(wl("MA"), Framework::dist_rl(), 1), &opts());
+    let mut lats = out.reports[0].trajectory_latencies.clone();
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    for q in [0.5, 0.75, 0.9, 0.99, 1.0] {
+        let idx = ((lats.len() - 1) as f64 * q) as usize;
+        println!("    p{:<3} {:>7.1}s", (q * 100.0) as u32, lats[idx]);
+    }
+    println!("\n── Fig 1(b): queued requests over time (3 agents, DistRL) ──");
+    for (a, s) in &out.reports[0].queued_series {
+        let peak = s.iter().map(|&(_, q)| q).max().unwrap_or(0);
+        let t_peak = s.iter().max_by_key(|&&(_, q)| q).map(|&(t, _)| t).unwrap_or(0.0);
+        println!("    agent {a}: peak queue {peak} @ {t_peak:.0}s");
+    }
+}
+
+fn bench_fig89() {
+    println!("\n── Figs 8/9: processed rollout load (paper: FlexMARL drains agent B ~2.7x faster than DistRL) ──");
+    for w in ["MA", "CA"] {
+        for fw in [Framework::mas_rl(), Framework::dist_rl(), Framework::marti(), Framework::flexmarl()] {
+            let out = simulate(&cfg(wl(w), fw, 1), &opts());
+            let r = &out.reports[0];
+            print!("    {w} {:<10}", fw.name);
+            for (a, series) in &r.processed_series {
+                let total = series.last().map(|&(_, c)| c).unwrap_or(0);
+                let t_done = series
+                    .iter()
+                    .find(|&&(_, c)| c == total && total > 0)
+                    .map(|&(t, _)| t)
+                    .unwrap_or(0.0);
+                print!("  a{a}:{total}req/{t_done:.0}s");
+            }
+            println!();
+        }
+    }
+}
+
+fn bench_fig10() {
+    println!("\n── Fig 10: utilization (paper CA: 3.6 / 10.2 / 12.3 / 19.8 %) ──");
+    for w in ["MA", "CA"] {
+        print!("    {w}: ");
+        for fw in Framework::all_baselines() {
+            let r = evaluate(&cfg(wl(w), fw, 3), &opts());
+            print!("{} {:.1}%  ", r.framework, r.utilization() * 100.0);
+        }
+        println!();
+    }
+}
+
+fn bench_fig11() {
+    println!("\n── Fig 11: swap overhead (paper: offload 0.5s@3B → 3.8s@32B, total ≤11s) ──");
+    let c = ClusterConfig::default();
+    for m in [ModelScale::B3, ModelScale::B7, ModelScale::B14, ModelScale::B32] {
+        let o = swap_out_cost(m, &c);
+        let i = swap_in_cost(m, &c, true);
+        println!(
+            "    {:>2}B: suspend {:.2}s + offload {:.2}s | resume {:.2}s + onload {:.2}s | total {:.1}s",
+            m.params_b as u32, o.control_s, o.transfer_s, i.control_s, i.transfer_s,
+            o.total() + i.total()
+        );
+    }
+}
+
+fn bench_table3() {
+    println!("\n── Table 3: ablations (paper MA: w/o LB 152.2s, w/o async 256.2s, full 126.1s) ──");
+    for w in ["MA", "CA"] {
+        let mas = evaluate(&cfg(wl(w), Framework::mas_rl(), 3), &opts());
+        for fw in [
+            Framework::flexmarl_no_balancing(),
+            Framework::flexmarl_no_async(),
+            Framework::flexmarl(),
+        ] {
+            let r = evaluate(&cfg(wl(w), fw, 3), &opts());
+            println!(
+                "    {w} {:<24} {:>7.1}s  speedup {:>4.1}x  {:>7.1}tps",
+                fw.name,
+                r.e2e_s,
+                mas.e2e_s / r.e2e_s,
+                r.throughput_tps()
+            );
+        }
+    }
+}
+
+fn bench_table4() {
+    println!("\n── Table 4: heterogeneous scalability (paper: 160.3 / 132.5 / 41.9 s) ──");
+    for spec in [
+        vec![(5usize, ModelScale::B32)],
+        vec![(3, ModelScale::B32), (7, ModelScale::B14)],
+        vec![(15, ModelScale::B14)],
+    ] {
+        let w = WorkloadConfig::scale_config(&spec);
+        let name = w.name.clone();
+        let r = evaluate(&cfg(w, Framework::flexmarl(), 2), &opts());
+        println!(
+            "    {:<14} rollout {:>6.1}s  train {:>5.1}s  e2e {:>6.1}s  {:>7.1}tps",
+            name, r.rollout_s, r.train_s, r.e2e_s, r.throughput_tps()
+        );
+    }
+}
+
+fn bench_ablation_micro_batch() {
+    println!("\n── Ablation: micro-batch size (pipeline overlap factor) ──");
+    for micro in [8, 16, 32, 64] {
+        let mut c = cfg(wl("MA"), Framework::flexmarl(), 2);
+        c.pipeline.micro_batch = micro;
+        let r = evaluate(&c, &opts());
+        println!(
+            "    micro {:>2}: e2e {:>6.1}s  train-tail {:>5.1}s",
+            micro, r.e2e_s, r.train_s
+        );
+    }
+}
+
+fn bench_ablation_delta() {
+    println!("\n── Ablation: Δ threshold (responsiveness vs oscillation) ──");
+    for delta in [2, 5, 10, 20] {
+        let mut c = cfg(wl("MA"), Framework::flexmarl(), 2);
+        c.pipeline.delta_threshold = delta;
+        let r = evaluate(&c, &opts());
+        println!(
+            "    Δ={:<2}: e2e {:>6.1}s  rollout {:>6.1}s  scale_ops {}",
+            delta, r.e2e_s, r.rollout_s, r.scale_ops
+        );
+    }
+}
+
+fn bench_ablation_swap_policy() {
+    println!("\n── Ablation: suspend-to-destroy vs retain-in-HBM ──");
+    // Retain-in-HBM = static allocation (devices never released): compare
+    // agent-centric vs static variants on an oversubscribed ensemble.
+    let spec = vec![(15usize, ModelScale::B14)];
+    let w = WorkloadConfig::scale_config(&spec);
+    let flex = evaluate(&cfg(w.clone(), Framework::flexmarl(), 2), &opts());
+    let mut c_static = cfg(w, Framework::flexmarl(), 2);
+    c_static.framework.agent_centric = false;
+    c_static.framework.name = "FlexMARL (retain/static)";
+    let stat = evaluate(&c_static, &opts());
+    println!(
+        "    suspend-to-destroy: e2e {:>6.1}s  util {:>4.1}%  (swap cost {:.1}s hidden)",
+        flex.e2e_s,
+        flex.utilization() * 100.0,
+        flex.swap_s
+    );
+    println!(
+        "    retain-in-HBM:      e2e {:>6.1}s  util {:>4.1}%  (needs Σ groups resident → OOM risk at scale)",
+        stat.e2e_s,
+        stat.utilization() * 100.0
+    );
+}
+
+fn bench_weight_sync() {
+    println!("\n── §9 lesson: parameter sync, contiguous vs per-parameter (paper: 200x) ──");
+    let t = TransferModel::new(ClusterConfig::default());
+    for m in [ModelScale::B14, ModelScale::B32] {
+        let contiguous = t.plan(Location::Device(0), Location::Device(1), m.weight_bytes());
+        let per_tensor = t.plan_per_param(
+            Location::Device(0),
+            Location::Device(1),
+            m.weight_bytes(),
+            (m.params() / 2000.0) as u64, // ~2k params/tensor
+        );
+        println!(
+            "    {:>2}B: contiguous {:>7.3}s   per-tensor {:>8.1}s   speedup {:>5.0}x  (control-plane {:.1}% of naive)",
+            m.params_b as u32,
+            contiguous.seconds,
+            per_tensor.seconds,
+            per_tensor.seconds / contiguous.seconds,
+            100.0 * (per_tensor.seconds - m.weight_bytes() / t.cfg.d2d_bw) / per_tensor.seconds,
+        );
+    }
+}
+
+fn bench_placement() {
+    println!("\n── §9 lesson: PACK vs STRICT_PACK placement (cross-node bundles) ──");
+    let ccfg = ClusterConfig {
+        nodes: 8,
+        devices_per_node: 16,
+        ..ClusterConfig::default()
+    };
+    for strat in [PlacementStrategy::Pack, PlacementStrategy::StrictPack] {
+        let mut pool = DevicePool::whole_cluster(ccfg);
+        let mut split = 0;
+        let mut total = 0;
+        let mut failed = 0;
+        // Mixed agent ensemble repeatedly allocating/releasing groups.
+        let sizes = [8usize, 16, 8, 4, 8, 16, 4, 8];
+        let mut live: Vec<_> = Vec::new();
+        for round in 0..64 {
+            let n = sizes[round % sizes.len()];
+            match pool.allocate(n, strat, None) {
+                Some(p) => {
+                    total += 1;
+                    if p.crosses_nodes(&ccfg) && n <= ccfg.devices_per_node {
+                        split += 1;
+                    }
+                    live.push(p);
+                }
+                None => failed += 1,
+            }
+            if live.len() > 6 {
+                let p = live.remove(round % live.len());
+                pool.release(&p);
+            }
+        }
+        println!(
+            "    {:?}: {}/{} bundles split across nodes ({} alloc failures)",
+            strat, split, total, failed
+        );
+    }
+    println!("    (split bundles → cross-node traffic + instability; STRICT_PACK eliminates them)");
+}

@@ -1,0 +1,67 @@
+//! Baseline frameworks of §8.1, expressed as capability configurations
+//! over the same engine ([`crate::orchestrator::simloop`]):
+//!
+//! * **MAS-RL** — the single-agent RL stack naively ported to MARL:
+//!   colocated resource pool, serial query processing with turn barriers,
+//!   synchronous full-batch training, onload/offload at every phase
+//!   switch.
+//! * **DistRL** — disaggregated pools and parallel sampling, but
+//!   synchronous training and static per-agent partitions (no balancing,
+//!   no agent-centric binding).
+//! * **MARTI-like** — colocated with one-step-asynchronous rollouts
+//!   (step *s+1* generates with stale parameters while step *s* trains)
+//!   and static allocation; the strongest published MARL baseline.
+//!
+//! The ablations of Table 3 (`w/o balancing`, `w/o async`) are FlexMARL
+//! with a single capability cleared — see [`crate::config::Framework`].
+
+pub use crate::config::{framework_by_name, Framework};
+
+use crate::config::ExperimentConfig;
+use crate::metrics::{aggregate, StepReport};
+use crate::orchestrator::{simulate, SimOptions};
+
+/// Run one framework on a config and aggregate its per-step reports
+/// (the per-sample averages the paper tables quote).
+pub fn evaluate(cfg: &ExperimentConfig, opts: &SimOptions) -> StepReport {
+    let out = simulate(cfg, opts);
+    let mut rep = aggregate(&out.reports);
+    if cfg.framework.one_step_async_rollout {
+        // Overlapped steps: amortized E2E is already per-step.
+        rep.e2e_s = out.total_s / cfg.steps as f64;
+    }
+    rep
+}
+
+/// Table-2 style sweep: all four frameworks on one workload.
+pub fn sweep(base: &ExperimentConfig, opts: &SimOptions) -> Vec<StepReport> {
+    Framework::all_baselines()
+        .into_iter()
+        .map(|fw| {
+            let mut cfg = base.clone();
+            cfg.framework = fw;
+            evaluate(&cfg, opts)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadConfig;
+
+    #[test]
+    fn sweep_produces_all_rows() {
+        let mut cfg = ExperimentConfig::new(WorkloadConfig::ma(), Framework::flexmarl());
+        cfg.workload.queries_per_step = 2;
+        cfg.workload.group_size = 4;
+        cfg.steps = 1;
+        let rows = sweep(&cfg, &SimOptions::default());
+        assert_eq!(rows.len(), 4);
+        assert_eq!(rows[0].framework, "MAS-RL");
+        assert_eq!(rows[3].framework, "FlexMARL");
+        for r in &rows {
+            assert!(r.e2e_s > 0.0 && r.tokens > 0.0);
+        }
+    }
+}

@@ -1,0 +1,347 @@
+//! Cluster substrate: nodes, devices, HBM accounting, and placement
+//! groups (the §9 "Cross-Node Agent Deployment" lesson).
+//!
+//! The paper found that a single cluster-wide placement group with Ray's
+//! "PACK" strategy scatters one agent's processes across nodes (logical
+//! bundle order ≠ physical device ids), causing cross-node traffic and
+//! instability; FlexMARL instantiates per-node groups with "STRICT_PACK"
+//! and a deterministic bundle→device mapping. We reproduce both
+//! strategies so the ablation bench can quantify the difference.
+
+use crate::config::ClusterConfig;
+
+pub type NodeId = usize;
+pub type DeviceId = usize; // global id = node * devices_per_node + local
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementStrategy {
+    /// Cluster-level group, bundles packed by logical order — may split
+    /// one allocation across nodes (the failure mode).
+    Pack,
+    /// Per-node groups, one-to-one logical→physical mapping — an
+    /// allocation never spans nodes unless larger than a node.
+    StrictPack,
+}
+
+/// A granted placement: the device set backing one inference instance or
+/// one training process group.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Placement {
+    pub devices: Vec<DeviceId>,
+}
+
+impl Placement {
+    pub fn nodes(&self, cfg: &ClusterConfig) -> Vec<NodeId> {
+        let mut nodes: Vec<NodeId> = self
+            .devices
+            .iter()
+            .map(|d| d / cfg.devices_per_node)
+            .collect();
+        nodes.sort_unstable();
+        nodes.dedup();
+        nodes
+    }
+
+    pub fn crosses_nodes(&self, cfg: &ClusterConfig) -> bool {
+        self.nodes(cfg).len() > 1
+    }
+
+    pub fn primary_node(&self, cfg: &ClusterConfig) -> NodeId {
+        self.devices[0] / cfg.devices_per_node
+    }
+}
+
+/// Device pool with free-list allocation per node.
+#[derive(Debug, Clone)]
+pub struct DevicePool {
+    cfg: ClusterConfig,
+    /// Device ids in this pool (a pool is a *subset* of the cluster —
+    /// disaggregation gives rollout and training disjoint pools).
+    free: Vec<Vec<DeviceId>>, // per node, sorted descending for O(1) pop
+    total: usize,
+    in_use: usize,
+}
+
+impl DevicePool {
+    /// Pool over node range [node_lo, node_hi).
+    pub fn new(cfg: ClusterConfig, node_lo: NodeId, node_hi: NodeId) -> Self {
+        assert!(node_hi <= cfg.nodes && node_lo < node_hi);
+        let mut free = vec![Vec::new(); cfg.nodes];
+        let mut total = 0;
+        for node in node_lo..node_hi {
+            let base = node * cfg.devices_per_node;
+            // Descending so pop() hands out low ids first.
+            free[node] = (0..cfg.devices_per_node).rev().map(|i| base + i).collect();
+            total += cfg.devices_per_node;
+        }
+        DevicePool {
+            cfg,
+            free,
+            total,
+            in_use: 0,
+        }
+    }
+
+    pub fn whole_cluster(cfg: ClusterConfig) -> Self {
+        Self::new(cfg, 0, cfg.nodes)
+    }
+
+    pub fn total_devices(&self) -> usize {
+        self.total
+    }
+
+    pub fn available(&self) -> usize {
+        self.total - self.in_use
+    }
+
+    pub fn in_use(&self) -> usize {
+        self.in_use
+    }
+
+    /// Free devices on `node`.
+    pub fn available_on(&self, node: NodeId) -> usize {
+        self.free[node].len()
+    }
+
+    /// Allocate `n` devices.
+    ///
+    /// `StrictPack`: all `n` from a single node (preferring
+    /// `preferred_node` — the locality-aware scheduling of §6.2); if `n`
+    /// exceeds a node, whole nodes first, remainder strict-packed.
+    /// `Pack`: fill nodes in logical order regardless of boundaries —
+    /// faithfully reproducing the fragmentation failure mode.
+    pub fn allocate(
+        &mut self,
+        n: usize,
+        strategy: PlacementStrategy,
+        preferred_node: Option<NodeId>,
+    ) -> Option<Placement> {
+        if n == 0 || self.available() < n {
+            return None;
+        }
+        let devices = match strategy {
+            PlacementStrategy::StrictPack => self.alloc_strict(n, preferred_node)?,
+            PlacementStrategy::Pack => self.alloc_pack(n)?,
+        };
+        self.in_use += devices.len();
+        Some(Placement { devices })
+    }
+
+    fn alloc_strict(&mut self, n: usize, preferred: Option<NodeId>) -> Option<Vec<DeviceId>> {
+        let per_node = self.cfg.devices_per_node;
+        let mut out = Vec::with_capacity(n);
+        let mut remaining = n;
+
+        // Multi-node allocations take whole nodes first.
+        while remaining > per_node {
+            let node = self.fullest_node(per_node, preferred)?;
+            for _ in 0..per_node {
+                out.push(self.free[node].pop().unwrap());
+            }
+            remaining -= per_node;
+        }
+        // Remainder from one node, preferring locality then best-fit
+        // (smallest sufficient free set → less fragmentation).
+        let node = self.fit_node(remaining, preferred).or_else(|| {
+            // Roll back if we can't finish.
+            for d in out.drain(..) {
+                self.free[d / per_node].push(d);
+            }
+            None
+        })?;
+        for _ in 0..remaining {
+            out.push(self.free[node].pop().unwrap());
+        }
+        Some(out)
+    }
+
+    fn fullest_node(&self, need: usize, preferred: Option<NodeId>) -> Option<NodeId> {
+        if let Some(p) = preferred {
+            if self.free[p].len() >= need {
+                return Some(p);
+            }
+        }
+        (0..self.cfg.nodes)
+            .filter(|&i| self.free[i].len() >= need)
+            .max_by_key(|&i| self.free[i].len())
+    }
+
+    fn fit_node(&self, need: usize, preferred: Option<NodeId>) -> Option<NodeId> {
+        if need == 0 {
+            return Some(preferred.unwrap_or(0));
+        }
+        if let Some(p) = preferred {
+            if self.free[p].len() >= need {
+                return Some(p);
+            }
+        }
+        (0..self.cfg.nodes)
+            .filter(|&i| self.free[i].len() >= need)
+            .min_by_key(|&i| self.free[i].len())
+    }
+
+    fn alloc_pack(&mut self, n: usize) -> Option<Vec<DeviceId>> {
+        // Logical-order packing: walk nodes, take whatever is free. This
+        // is what splits an agent's bundle across node boundaries.
+        let mut out = Vec::with_capacity(n);
+        for node in 0..self.cfg.nodes {
+            while out.len() < n {
+                match self.free[node].pop() {
+                    Some(d) => out.push(d),
+                    None => break,
+                }
+            }
+            if out.len() == n {
+                return Some(out);
+            }
+        }
+        // Shouldn't happen (available checked), but roll back defensively.
+        for d in out {
+            self.free[d / self.cfg.devices_per_node].push(d);
+        }
+        None
+    }
+
+    pub fn release(&mut self, placement: &Placement) {
+        for &d in &placement.devices {
+            let node = d / self.cfg.devices_per_node;
+            debug_assert!(!self.free[node].contains(&d), "double free of device {d}");
+            self.free[node].push(d);
+        }
+        self.in_use -= placement.devices.len();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+
+    fn small_cfg() -> ClusterConfig {
+        ClusterConfig {
+            nodes: 4,
+            devices_per_node: 8,
+            ..ClusterConfig::default()
+        }
+    }
+
+    #[test]
+    fn strict_pack_never_splits_small_allocs() {
+        let mut pool = DevicePool::whole_cluster(small_cfg());
+        // 4 nodes × 8 devices: only one 5-device alloc fits per node.
+        for _ in 0..4 {
+            let p = pool
+                .allocate(5, PlacementStrategy::StrictPack, None)
+                .unwrap();
+            assert!(!p.crosses_nodes(&small_cfg()), "{:?}", p.devices);
+        }
+        // 12 devices remain (3 per node) but STRICT_PACK refuses to split
+        // a 5-device bundle across nodes — it fails rather than fragment.
+        assert!(pool.allocate(5, PlacementStrategy::StrictPack, None).is_none());
+        assert_eq!(pool.available(), 12);
+    }
+
+    #[test]
+    fn pack_splits_across_nodes() {
+        let cfg = small_cfg();
+        let mut pool = DevicePool::whole_cluster(cfg);
+        // Fragment node 0: take 5, leaving 3 free.
+        let _hold = pool.allocate(5, PlacementStrategy::Pack, None).unwrap();
+        // PACK takes node0's 3 remaining + 2 from node1 → split bundle.
+        let p = pool.allocate(5, PlacementStrategy::Pack, None).unwrap();
+        assert!(p.crosses_nodes(&cfg), "{:?}", p.devices);
+    }
+
+    #[test]
+    fn strict_pack_avoids_split_where_pack_splits() {
+        let cfg = small_cfg();
+        let mut pool = DevicePool::whole_cluster(cfg);
+        let _hold = pool.allocate(5, PlacementStrategy::StrictPack, None).unwrap();
+        let p = pool.allocate(5, PlacementStrategy::StrictPack, None).unwrap();
+        assert!(!p.crosses_nodes(&cfg));
+    }
+
+    #[test]
+    fn locality_preference_honored() {
+        let cfg = small_cfg();
+        let mut pool = DevicePool::whole_cluster(cfg);
+        let p = pool
+            .allocate(4, PlacementStrategy::StrictPack, Some(2))
+            .unwrap();
+        assert_eq!(p.primary_node(&cfg), 2);
+    }
+
+    #[test]
+    fn multinode_alloc_takes_whole_nodes() {
+        let cfg = small_cfg();
+        let mut pool = DevicePool::whole_cluster(cfg);
+        let p = pool
+            .allocate(20, PlacementStrategy::StrictPack, None)
+            .unwrap();
+        assert_eq!(p.devices.len(), 20);
+        assert_eq!(p.nodes(&cfg).len(), 3); // 8 + 8 + 4
+        assert_eq!(pool.available(), 12);
+    }
+
+    #[test]
+    fn exhaustion_returns_none_and_rolls_back() {
+        let cfg = small_cfg();
+        let mut pool = DevicePool::whole_cluster(cfg);
+        let held: Vec<_> = (0..4)
+            .map(|_| pool.allocate(7, PlacementStrategy::StrictPack, None).unwrap())
+            .collect();
+        assert_eq!(pool.available(), 4);
+        assert!(pool.allocate(5, PlacementStrategy::StrictPack, None).is_none());
+        assert_eq!(pool.available(), 4); // unchanged after failed alloc
+        for p in &held {
+            pool.release(p);
+        }
+        assert_eq!(pool.available(), 32);
+    }
+
+    #[test]
+    fn pool_subsets_are_disjoint() {
+        let cfg = small_cfg();
+        let mut rollout = DevicePool::new(cfg, 0, 3);
+        let mut training = DevicePool::new(cfg, 3, 4);
+        assert_eq!(rollout.total_devices(), 24);
+        assert_eq!(training.total_devices(), 8);
+        let a = rollout.allocate(24, PlacementStrategy::Pack, None).unwrap();
+        let b = training.allocate(8, PlacementStrategy::Pack, None).unwrap();
+        assert!(a.devices.iter().all(|d| !b.devices.contains(d)));
+    }
+
+    #[test]
+    fn prop_alloc_release_conserves_devices() {
+        forall("alloc/release conservation", 100, |rng| {
+            let cfg = small_cfg();
+            let mut pool = DevicePool::whole_cluster(cfg);
+            let mut live: Vec<Placement> = Vec::new();
+            for _ in 0..30 {
+                if rng.f64() < 0.6 {
+                    let n = rng.below(10) as usize + 1;
+                    let strat = if rng.f64() < 0.5 {
+                        PlacementStrategy::Pack
+                    } else {
+                        PlacementStrategy::StrictPack
+                    };
+                    if let Some(p) = pool.allocate(n, strat, None) {
+                        assert_eq!(p.devices.len(), n);
+                        live.push(p);
+                    }
+                } else if !live.is_empty() {
+                    let i = rng.below(live.len() as u64) as usize;
+                    pool.release(&live.swap_remove(i));
+                }
+                // Invariants: no device appears twice across live placements.
+                let mut all: Vec<DeviceId> =
+                    live.iter().flat_map(|p| p.devices.iter().copied()).collect();
+                let n_live = all.len();
+                all.sort_unstable();
+                all.dedup();
+                assert_eq!(all.len(), n_live, "duplicate device granted");
+                assert_eq!(pool.available() + n_live, 32);
+            }
+        });
+    }
+}

@@ -1,0 +1,181 @@
+//! GRPO algorithm pieces on the coordinator side (§2.1): group-relative
+//! advantage normalization, multi-agent credit assignment, and batch
+//! assembly for the AOT `grad` artifact.
+//!
+//! The L2/L1 layers compute the clipped surrogate loss and its gradient;
+//! *this* module decides what advantage each token of each agent's
+//! sample carries — the part that is multi-agent specific.
+
+/// Group-relative advantages (GRPO, Shao et al. 2024): within one query's
+/// candidate group, A_i = (r_i − mean) / (std + ε). Returns zeros for a
+/// degenerate group (all equal rewards) — no gradient, which is correct.
+pub fn group_advantages(rewards: &[f64]) -> Vec<f64> {
+    let n = rewards.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let mean = rewards.iter().sum::<f64>() / n as f64;
+    let var = rewards.iter().map(|r| (r - mean).powi(2)).sum::<f64>() / n as f64;
+    let std = var.sqrt();
+    if std < 1e-8 {
+        return vec![0.0; n];
+    }
+    rewards.iter().map(|r| (r - mean) / std).collect()
+}
+
+/// Multi-agent credit assignment: how a trajectory-level (global) reward
+/// and an agent's own call-level (local) reward combine into the reward
+/// used for that agent's sample.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CreditAssignment {
+    /// Every agent in the trajectory shares the global reward.
+    Shared,
+    /// Every agent is judged only on its own call's reward.
+    Local,
+    /// Blend: alpha·global + (1−alpha)·local (the usual compromise for
+    /// "collaboration effectiveness + task correctness", §2.1).
+    Blend(f64),
+}
+
+impl CreditAssignment {
+    pub fn credit(&self, global: f64, local: f64) -> f64 {
+        match *self {
+            CreditAssignment::Shared => global,
+            CreditAssignment::Local => local,
+            CreditAssignment::Blend(a) => a * global + (1.0 - a) * local,
+        }
+    }
+}
+
+/// One agent-sample ready for training: the (prompt ++ response) token
+/// sequence plus per-token advantage/mask rows, padded to `t_train`.
+#[derive(Debug, Clone)]
+pub struct TrainRow {
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+    pub adv: Vec<f32>,
+    pub old_logp: Vec<f32>,
+    pub mask: Vec<f32>,
+}
+
+/// Assemble a training row from a prompt + sampled response.
+///
+/// Layout (teacher-forcing): `tokens[t]` predicts `targets[t] =
+/// sequence[t+1]`; response positions get `advantage` and mask 1; prompt
+/// positions and padding get mask 0.
+pub fn make_row(
+    prompt: &[i32],
+    response: &[i32],
+    response_logp: &[f32],
+    advantage: f32,
+    t_train: usize,
+) -> TrainRow {
+    assert_eq!(response.len(), response_logp.len());
+    let mut seq: Vec<i32> = Vec::with_capacity(prompt.len() + response.len());
+    seq.extend_from_slice(prompt);
+    seq.extend_from_slice(response);
+    seq.truncate(t_train + 1);
+
+    let mut tokens = vec![0i32; t_train];
+    let mut targets = vec![0i32; t_train];
+    let mut adv = vec![0f32; t_train];
+    let mut old_logp = vec![0f32; t_train];
+    let mut mask = vec![0f32; t_train];
+
+    let n_in = seq.len().saturating_sub(1).min(t_train);
+    tokens[..n_in].copy_from_slice(&seq[..n_in]);
+    targets[..n_in].copy_from_slice(&seq[1..n_in + 1]);
+    // Response tokens start being *predicted* at position prompt_len-1
+    // (the position whose target is response[0]).
+    let resp_start = prompt.len().saturating_sub(1);
+    for (j, (&_r, &lp)) in response.iter().zip(response_logp).enumerate() {
+        let pos = resp_start + j;
+        if pos >= t_train {
+            break;
+        }
+        adv[pos] = advantage;
+        old_logp[pos] = lp;
+        mask[pos] = 1.0;
+    }
+    TrainRow {
+        tokens,
+        targets,
+        adv,
+        old_logp,
+        mask,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+
+    #[test]
+    fn advantages_zero_mean_unit_scale() {
+        let a = group_advantages(&[1.0, 2.0, 3.0, 4.0]);
+        let mean: f64 = a.iter().sum::<f64>() / 4.0;
+        assert!(mean.abs() < 1e-12);
+        assert!(a[3] > 0.0 && a[0] < 0.0);
+        // Order preserved.
+        assert!(a.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn degenerate_group_gets_zero() {
+        assert_eq!(group_advantages(&[0.5; 8]), vec![0.0; 8]);
+        assert!(group_advantages(&[]).is_empty());
+    }
+
+    #[test]
+    fn prop_advantages_invariants() {
+        forall("group advantage invariants", 200, |rng| {
+            let n = rng.below(16) as usize + 2;
+            let rewards: Vec<f64> = (0..n).map(|_| rng.f64() * 10.0).collect();
+            let a = group_advantages(&rewards);
+            let mean: f64 = a.iter().sum::<f64>() / n as f64;
+            assert!(mean.abs() < 1e-9, "mean {mean}");
+            // Shift invariance.
+            let shifted: Vec<f64> = rewards.iter().map(|r| r + 100.0).collect();
+            let a2 = group_advantages(&shifted);
+            for (x, y) in a.iter().zip(&a2) {
+                assert!((x - y).abs() < 1e-6);
+            }
+        });
+    }
+
+    #[test]
+    fn credit_assignment_modes() {
+        assert_eq!(CreditAssignment::Shared.credit(1.0, 0.0), 1.0);
+        assert_eq!(CreditAssignment::Local.credit(1.0, 0.25), 0.25);
+        let b = CreditAssignment::Blend(0.5).credit(1.0, 0.0);
+        assert!((b - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn make_row_layout() {
+        let prompt = vec![10, 11, 12];
+        let response = vec![20, 21];
+        let logp = vec![-0.5, -0.7];
+        let row = make_row(&prompt, &response, &logp, 1.5, 8);
+        // seq = [10,11,12,20,21]; tokens = seq[..4], targets = seq[1..5]
+        assert_eq!(&row.tokens[..4], &[10, 11, 12, 20]);
+        assert_eq!(&row.targets[..4], &[11, 12, 20, 21]);
+        // Response predicted at positions 2 and 3.
+        assert_eq!(row.mask, vec![0.0, 0.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(row.adv[2], 1.5);
+        assert_eq!(row.old_logp[3], -0.7);
+        // Prompt positions carry no advantage.
+        assert_eq!(row.adv[0], 0.0);
+    }
+
+    #[test]
+    fn make_row_truncates_long_sequences() {
+        let prompt: Vec<i32> = (0..6).collect();
+        let response: Vec<i32> = (100..120).collect();
+        let logp = vec![-1.0; 20];
+        let row = make_row(&prompt, &response, &logp, 1.0, 10);
+        assert_eq!(row.tokens.len(), 10);
+        assert_eq!(row.mask.iter().filter(|&&m| m == 1.0).count(), 5); // positions 5..10
+    }
+}

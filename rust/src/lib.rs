@@ -1,0 +1,35 @@
+//! # FlexMARL
+//!
+//! Reproduction of *"Rollout-Training Co-Design for Efficient LLM-Based
+//! Multi-Agent Reinforcement Learning"* (CS.LG 2026) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the paper's system contribution: joint
+//!   orchestrator (experience store + micro-batch asynchronous pipeline),
+//!   rollout engine (parallel sampling + hierarchical load balancing),
+//!   training engine (agent-centric allocation + state swap), the Set/Get
+//!   heterogeneous object store, baselines, a discrete-event cluster
+//!   simulator for paper-scale experiments, and a PJRT runtime that
+//!   executes the AOT-compiled policy models for the real end-to-end run.
+//! * **L2 (python/compile/model.py)** — GRPO policy transformer, lowered
+//!   once to HLO text (`make artifacts`).
+//! * **L1 (python/compile/kernels/)** — Pallas flash-attention and fused
+//!   GRPO-loss kernels, validated against pure-jnp oracles.
+//!
+//! Python never runs on the request path: the Rust binary loads
+//! `artifacts/*.hlo.txt` via PJRT and is self-contained.
+
+pub mod baselines;
+pub mod cluster;
+pub mod config;
+pub mod grpo;
+pub mod memstore;
+pub mod metrics;
+pub mod orchestrator;
+pub mod rollout;
+pub mod runtime;
+pub mod sim;
+pub mod store;
+pub mod training;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,297 @@
+//! FlexMARL leader CLI.
+//!
+//! Subcommands:
+//!   simulate   — run one framework/workload on the cluster simulator
+//!   table2     — overall performance sweep (Table 2 + Fig. 7 breakdown)
+//!   table3     — ablation study (load balancing / async pipeline)
+//!   table4     — heterogeneous scalability (5×32B, 3×32B+7×14B, 15×14B)
+//!   fig1       — preliminary observations (latency CDF, queue series)
+//!   fig8       — per-agent processed rollout load series (Figs. 8/9)
+//!   fig10      — resource-utilization comparison
+//!   fig11      — training-state swap overhead across model sizes
+//!   inspect    — summarize the AOT artifact manifest
+//!   train      — real end-to-end MARL training via PJRT (see also
+//!                examples/marl_train.rs)
+//!
+//! Config overrides: --workload MA|CA --framework <name> --steps N
+//! --seed N --micro-batch N --delta N --instances N --json <path>
+
+use flexmarl::baselines::{evaluate, sweep, Framework};
+use flexmarl::config::{framework_by_name, ExperimentConfig, ModelScale, WorkloadConfig};
+use flexmarl::metrics::{render_table2, table_rows, StepReport};
+use flexmarl::orchestrator::SimOptions;
+use flexmarl::training::{swap_in_cost, swap_out_cost};
+use flexmarl::util::cli::Args;
+use flexmarl::util::json::Json;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "simulate" => cmd_simulate(&args),
+        "table2" => cmd_table2(&args),
+        "table3" => cmd_table3(&args),
+        "table4" => cmd_table4(&args),
+        "fig1" => cmd_fig1(&args),
+        "fig8" => cmd_fig8(&args),
+        "fig10" => cmd_fig10(&args),
+        "fig11" => cmd_fig11(&args),
+        "inspect" => cmd_inspect(&args),
+        "train" => cmd_train(&args),
+        _ => {
+            eprintln!("{}", HELP);
+            if cmd != "help" {
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+const HELP: &str = "flexmarl — rollout-training co-design for LLM-based MARL
+usage: flexmarl <simulate|table2|table3|table4|fig1|fig8|fig10|fig11|inspect|train> [options]
+options: --workload MA|CA  --framework <name>  --steps N  --seed N
+         --micro-batch N  --delta N  --instances N  --json <path>  --quiet";
+
+fn build_cfg(args: &Args) -> ExperimentConfig {
+    let wl = match args.get_or("workload", "MA").to_ascii_uppercase().as_str() {
+        "CA" => WorkloadConfig::ca(),
+        _ => WorkloadConfig::ma(),
+    };
+    let fw = framework_by_name(&args.get_or("framework", "FlexMARL"))
+        .unwrap_or_else(|| {
+            eprintln!("unknown framework");
+            std::process::exit(2)
+        });
+    let mut cfg = ExperimentConfig::new(wl, fw);
+    cfg.steps = args.get_usize("steps", 3);
+    cfg.seed = args.get_u64("seed", 2048);
+    cfg.pipeline.micro_batch = args.get_usize("micro-batch", cfg.pipeline.micro_batch);
+    cfg.pipeline.delta_threshold = args.get_usize("delta", cfg.pipeline.delta_threshold);
+    cfg.validate().unwrap_or_else(|e| {
+        eprintln!("invalid config: {e}");
+        std::process::exit(2)
+    });
+    cfg
+}
+
+fn build_opts(args: &Args) -> SimOptions {
+    SimOptions {
+        instances_per_agent: args.get_usize("instances", 2),
+        track_agents: vec![0, 1, 2],
+        ..SimOptions::default()
+    }
+}
+
+fn emit_json(args: &Args, j: &Json) {
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, j.to_pretty()).expect("write json");
+        eprintln!("wrote {path}");
+    }
+}
+
+fn cmd_simulate(args: &Args) {
+    let cfg = build_cfg(args);
+    let opts = build_opts(args);
+    let rep = evaluate(&cfg, &opts);
+    print_report(&rep);
+    emit_json(args, &rep.to_json());
+}
+
+fn print_report(r: &StepReport) {
+    println!(
+        "{:<24} {:>8} e2e {:>8.1}s  rollout {:>8.1}s  train {:>7.1}s  other {:>6.1}s  \
+         {:>8.1} tps  util {:>5.1}%  scale_ops {}",
+        r.framework,
+        r.workload,
+        r.e2e_s,
+        r.rollout_s,
+        r.train_s,
+        r.other_s,
+        r.throughput_tps(),
+        r.utilization() * 100.0,
+        r.scale_ops
+    );
+}
+
+fn cmd_table2(args: &Args) {
+    let mut all = Vec::new();
+    for wl in ["MA", "CA"] {
+        let mut a2 = Args::parse(std::iter::empty::<String>());
+        a2.options = args.options.clone();
+        a2.options.insert("workload".into(), wl.into());
+        let cfg = build_cfg(&a2);
+        let opts = build_opts(args);
+        let reports = sweep(&cfg, &opts);
+        println!("\n== {} dataset ==", wl);
+        for r in &reports {
+            print_report(r);
+        }
+        println!("\n{}", render_table2(wl, &table_rows(&reports)));
+        all.extend(reports);
+    }
+    emit_json(args, &Json::arr(all.iter().map(|r| r.to_json())));
+}
+
+fn cmd_table3(args: &Args) {
+    for wl in ["MA", "CA"] {
+        println!("\n== Ablation on {} ==", wl);
+        let mut a2 = Args::parse(std::iter::empty::<String>());
+        a2.options = args.options.clone();
+        a2.options.insert("workload".into(), wl.into());
+        let base = build_cfg(&a2);
+        let opts = build_opts(args);
+        let mas = {
+            let mut c = base.clone();
+            c.framework = Framework::mas_rl();
+            evaluate(&c, &opts)
+        };
+        for fw in [
+            Framework::flexmarl_no_balancing(),
+            Framework::flexmarl_no_async(),
+            Framework::flexmarl(),
+        ] {
+            let mut c = base.clone();
+            c.framework = fw;
+            let r = evaluate(&c, &opts);
+            println!(
+                "{:<26} E2E {:>7.1}s  speedup {:>4.1}x  throughput {:>7.1}tps",
+                fw.name,
+                r.e2e_s,
+                mas.e2e_s / r.e2e_s,
+                r.throughput_tps()
+            );
+        }
+    }
+}
+
+fn cmd_table4(args: &Args) {
+    println!("== Large-scale heterogeneous deployments (Table 4) ==");
+    for spec in [
+        vec![(5usize, ModelScale::B32)],
+        vec![(3, ModelScale::B32), (7, ModelScale::B14)],
+        vec![(15, ModelScale::B14)],
+    ] {
+        let wl = WorkloadConfig::scale_config(&spec);
+        let name = wl.name.clone();
+        let mut cfg = ExperimentConfig::new(wl, Framework::flexmarl());
+        cfg.steps = args.get_usize("steps", 3);
+        cfg.seed = args.get_u64("seed", 2048);
+        let opts = build_opts(args);
+        let r = evaluate(&cfg, &opts);
+        println!(
+            "{:<16} rollout {:>7.1}s  training {:>6.1}s  E2E {:>7.1}s  throughput {:>7.1}tps",
+            name,
+            r.rollout_s,
+            r.train_s,
+            r.e2e_s,
+            r.throughput_tps()
+        );
+    }
+}
+
+fn cmd_fig1(args: &Args) {
+    let mut cfg = build_cfg(args);
+    cfg.framework = Framework::dist_rl(); // preliminary setup: no co-design
+    cfg.steps = 1;
+    let opts = build_opts(args);
+    let out = flexmarl::orchestrator::simulate(&cfg, &opts);
+    let r = &out.reports[0];
+    println!("== Fig 1(a): interaction latency distribution ==");
+    let mut lats = r.trajectory_latencies.clone();
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    for q in [0.5, 0.9, 0.99, 1.0] {
+        let idx = ((lats.len() - 1) as f64 * q) as usize;
+        println!("  p{:<4} {:>8.1}s", (q * 100.0) as u32, lats[idx]);
+    }
+    println!("== Fig 1(b): queued requests over time (agents 0..3) ==");
+    for (a, series) in &r.queued_series {
+        let peak = series.iter().map(|&(_, q)| q).max().unwrap_or(0);
+        println!("  agent {a}: peak queue {peak}, samples {}", series.len());
+    }
+    emit_json(args, &r.to_json());
+}
+
+fn cmd_fig8(args: &Args) {
+    let cfg = build_cfg(args);
+    let opts = build_opts(args);
+    let out = flexmarl::orchestrator::simulate(&cfg, &opts);
+    let r = &out.reports[0];
+    println!(
+        "== Figs 8/9: processed rollout load over time ({}, {}) ==",
+        cfg.framework.name, cfg.workload.name
+    );
+    for (a, series) in &r.processed_series {
+        let total = series.last().map(|&(_, c)| c).unwrap_or(0);
+        let t_done = series
+            .iter()
+            .find(|&&(_, c)| c == total && total > 0)
+            .map(|&(t, _)| t)
+            .unwrap_or(0.0);
+        println!("  agent {a}: {total} requests, finished at {t_done:.0}s");
+    }
+    emit_json(args, &r.to_json());
+}
+
+fn cmd_fig10(args: &Args) {
+    for wl in ["MA", "CA"] {
+        println!("== Fig 10: utilization on {} ==", wl);
+        let mut a2 = Args::parse(std::iter::empty::<String>());
+        a2.options = args.options.clone();
+        a2.options.insert("workload".into(), wl.into());
+        let base = build_cfg(&a2);
+        let opts = build_opts(args);
+        for r in sweep(&base, &opts) {
+            println!("  {:<12} {:>5.1}%", r.framework, r.utilization() * 100.0);
+        }
+    }
+}
+
+fn cmd_fig11(_args: &Args) {
+    println!("== Fig 11: state swap overhead vs model size ==");
+    let cfg = flexmarl::config::ClusterConfig::default();
+    println!(
+        "{:<6} {:>10} {:>10} {:>10} {:>10}",
+        "model", "suspend", "offload", "resume", "onload"
+    );
+    for m in [ModelScale::B3, ModelScale::B7, ModelScale::B14, ModelScale::B32] {
+        let out = swap_out_cost(m, &cfg);
+        let inn = swap_in_cost(m, &cfg, true);
+        println!(
+            "{:<6} {:>9.2}s {:>9.2}s {:>9.2}s {:>9.2}s",
+            format!("{}B", m.params_b as u32),
+            out.control_s,
+            out.transfer_s,
+            inn.control_s,
+            inn.transfer_s
+        );
+    }
+}
+
+fn cmd_inspect(args: &Args) {
+    let path = args.get_or("manifest", "artifacts/manifest.json");
+    match flexmarl::runtime::Manifest::load(&path) {
+        Ok(m) => {
+            println!("{}", m.summary());
+        }
+        Err(e) => {
+            eprintln!("failed to load {path}: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn cmd_train(args: &Args) {
+    let steps = args.get_usize("steps", 20);
+    let agents = args.get_usize("agents", 3);
+    let dir = args.get_or("artifacts", "artifacts");
+    let seed = args.get_u64("seed", 2048);
+    let lr = args.get_f64("lr", 3e-4) as f32;
+    match flexmarl::runtime::marl::train_e2e(&dir, agents, steps, seed, lr, !args.has_flag("quiet"))
+    {
+        Ok(summary) => println!("{summary}"),
+        Err(e) => {
+            eprintln!("training failed: {e}");
+            std::process::exit(1);
+        }
+    }
+}

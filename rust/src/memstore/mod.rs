@@ -1,0 +1,331 @@
+//! Set/Get heterogeneous object store (§7 "System Implementation").
+//!
+//! FlexMARL unifies device and host memory behind KV semantics: each node
+//! runs a *resident daemon* that tracks the distributed metadata of
+//! heterogeneous objects; `Set` publishes an object (registering its
+//! location), `Get` resolves the location and plans the cheapest transfer
+//! path — D2D (intra-node HCCS or cross-node via RDMA), H2D/D2H
+//! (offload), or RH2D (cross-node host staging + local host-to-device).
+//!
+//! Two consumers:
+//!  * the simulator asks for *transfer latencies* (`TransferModel`)
+//!    computed from `ClusterConfig` bandwidths + control-plane op costs —
+//!    including the §9 lesson that per-parameter synchronization is
+//!    control-plane dominated (O(N_params) kernel launches) while an
+//!    aggregated contiguous buffer is O(1);
+//!  * the real mini-cluster stores actual payload bytes (weights,
+//!    optimizer state) for instance scaling and training-state swap.
+
+use crate::cluster::{DeviceId, NodeId};
+use crate::config::ClusterConfig;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+/// Where an object currently lives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Location {
+    Device(DeviceId),
+    Host(NodeId),
+}
+
+/// Transfer path classes of §7.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Path {
+    Local,       // already at destination
+    D2dIntra,    // device→device, same node (HCCS)
+    D2dCross,    // device→device, across nodes (RDMA)
+    H2d,         // host→device, same node
+    D2h,         // device→host, same node
+    Rh2d,        // remote host → local host (RDMA, zero-copy) → device
+    D2hCross,    // device → remote host
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct TransferPlan {
+    pub path: Path,
+    pub bytes: f64,
+    pub seconds: f64,
+}
+
+/// Latency model over the cluster fabric.
+#[derive(Debug, Clone, Copy)]
+pub struct TransferModel {
+    pub cfg: ClusterConfig,
+}
+
+impl TransferModel {
+    pub fn new(cfg: ClusterConfig) -> Self {
+        TransferModel { cfg }
+    }
+
+    fn node_of(&self, d: DeviceId) -> NodeId {
+        d / self.cfg.devices_per_node
+    }
+
+    /// Plan moving `bytes` from `src` to `dst` as ONE contiguous buffer
+    /// (the optimized path: O(1) control-plane).
+    pub fn plan(&self, src: Location, dst: Location, bytes: f64) -> TransferPlan {
+        let (path, bw) = match (src, dst) {
+            (a, b) if a == b => (Path::Local, f64::INFINITY),
+            (Location::Device(s), Location::Device(d)) => {
+                if self.node_of(s) == self.node_of(d) {
+                    (Path::D2dIntra, self.cfg.d2d_bw)
+                } else {
+                    (Path::D2dCross, self.cfg.rdma_bw)
+                }
+            }
+            (Location::Host(n), Location::Device(d)) => {
+                if n == self.node_of(d) {
+                    (Path::H2d, self.cfg.h2d_bw)
+                } else {
+                    // RH2D: RDMA host→host staged, then local H2D; the
+                    // stages pipeline, so the slower link dominates.
+                    (Path::Rh2d, self.cfg.rdma_bw.min(self.cfg.h2d_bw))
+                }
+            }
+            (Location::Device(d), Location::Host(n)) => {
+                if self.node_of(d) == n {
+                    (Path::D2h, self.cfg.h2d_bw)
+                } else {
+                    (Path::D2hCross, self.cfg.rdma_bw.min(self.cfg.h2d_bw))
+                }
+            }
+            (Location::Host(_), Location::Host(_)) => (Path::Rh2d, self.cfg.rdma_bw),
+        };
+        let wire = if bw.is_finite() { bytes / bw } else { 0.0 };
+        TransferPlan {
+            path,
+            bytes,
+            seconds: self.cfg.control_op_s + wire,
+        }
+    }
+
+    /// The naive parameter-by-parameter synchronization the paper
+    /// measured: every parameter tensor is its own transfer op, so the
+    /// control plane (task scheduling + kernel launch) is paid `n_ops`
+    /// times. §9: >99% of latency for billions of params; aggregating
+    /// into one contiguous buffer gave ~200×.
+    pub fn plan_per_param(
+        &self,
+        src: Location,
+        dst: Location,
+        bytes: f64,
+        n_ops: u64,
+    ) -> TransferPlan {
+        let one = self.plan(src, dst, bytes);
+        TransferPlan {
+            path: one.path,
+            bytes,
+            seconds: self.cfg.control_op_s * n_ops as f64 + (one.seconds - self.cfg.control_op_s),
+        }
+    }
+}
+
+/// Object metadata held by the resident daemons.
+#[derive(Debug, Clone)]
+pub struct ObjectMeta {
+    pub location: Location,
+    pub bytes: f64,
+    pub version: u64,
+}
+
+/// The distributed metadata plane + optional payload storage. A single
+/// process stands in for all per-node daemons (they share one metadata
+/// namespace in the paper too); `node_view` documents which daemon would
+/// answer, but resolution is location-transparent either way.
+#[derive(Debug, Default)]
+pub struct MemStore {
+    meta: Mutex<BTreeMap<String, ObjectMeta>>,
+    payload: Mutex<BTreeMap<String, Arc<Vec<u8>>>>,
+    /// pub/sub: keys → subscriber labels (instances awaiting weights).
+    subs: Mutex<BTreeMap<String, Vec<String>>>,
+    events: Mutex<Vec<String>>,
+}
+
+impl MemStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Set API: register (and optionally store) an object. Bumps version.
+    pub fn set(&self, key: &str, location: Location, bytes: f64, data: Option<Vec<u8>>) -> u64 {
+        let mut meta = self.meta.lock().unwrap();
+        let version = meta.get(key).map(|m| m.version + 1).unwrap_or(1);
+        meta.insert(
+            key.to_string(),
+            ObjectMeta {
+                location,
+                bytes,
+                version,
+            },
+        );
+        if let Some(d) = data {
+            self.payload.lock().unwrap().insert(key.to_string(), Arc::new(d));
+        }
+        // publish to subscribers
+        let subs = self.subs.lock().unwrap();
+        if let Some(waiters) = subs.get(key) {
+            let mut ev = self.events.lock().unwrap();
+            for w in waiters {
+                ev.push(format!("notify {w}: {key} v{version}"));
+            }
+        }
+        version
+    }
+
+    /// Get API: resolve location and plan the transfer to `dst`.
+    pub fn get(&self, key: &str, dst: Location, model: &TransferModel) -> Option<TransferPlan> {
+        let meta = self.meta.lock().unwrap();
+        let m = meta.get(key)?;
+        Some(model.plan(m.location, dst, m.bytes))
+    }
+
+    /// Get with relocation: also updates the metadata to the new location
+    /// (move semantics, used by swap-in).
+    pub fn take(&self, key: &str, dst: Location, model: &TransferModel) -> Option<TransferPlan> {
+        let mut meta = self.meta.lock().unwrap();
+        let m = meta.get_mut(key)?;
+        let plan = model.plan(m.location, dst, m.bytes);
+        m.location = dst;
+        Some(plan)
+    }
+
+    pub fn payload(&self, key: &str) -> Option<Arc<Vec<u8>>> {
+        self.payload.lock().unwrap().get(key).cloned()
+    }
+
+    pub fn meta(&self, key: &str) -> Option<ObjectMeta> {
+        self.meta.lock().unwrap().get(key).cloned()
+    }
+
+    pub fn subscribe(&self, key: &str, subscriber: &str) {
+        self.subs
+            .lock()
+            .unwrap()
+            .entry(key.to_string())
+            .or_default()
+            .push(subscriber.to_string());
+    }
+
+    pub fn drain_events(&self) -> Vec<String> {
+        std::mem::take(&mut self.events.lock().unwrap())
+    }
+
+    pub fn remove(&self, key: &str) {
+        self.meta.lock().unwrap().remove(key);
+        self.payload.lock().unwrap().remove(key);
+    }
+
+    pub fn len(&self) -> usize {
+        self.meta.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> TransferModel {
+        TransferModel::new(ClusterConfig::default())
+    }
+
+    #[test]
+    fn path_classification() {
+        let m = model();
+        let dpn = m.cfg.devices_per_node;
+        assert_eq!(m.plan(Location::Device(0), Location::Device(1), 1e9).path, Path::D2dIntra);
+        assert_eq!(
+            m.plan(Location::Device(0), Location::Device(dpn), 1e9).path,
+            Path::D2dCross
+        );
+        assert_eq!(m.plan(Location::Host(0), Location::Device(0), 1e9).path, Path::H2d);
+        assert_eq!(m.plan(Location::Device(0), Location::Host(0), 1e9).path, Path::D2h);
+        assert_eq!(m.plan(Location::Host(1), Location::Device(0), 1e9).path, Path::Rh2d);
+        assert_eq!(m.plan(Location::Device(0), Location::Device(0), 1e9).path, Path::Local);
+    }
+
+    #[test]
+    fn intra_node_faster_than_cross() {
+        let m = model();
+        let dpn = m.cfg.devices_per_node;
+        let intra = m.plan(Location::Device(0), Location::Device(1), 28e9).seconds;
+        let cross = m.plan(Location::Device(0), Location::Device(dpn), 28e9).seconds;
+        assert!(intra < cross);
+    }
+
+    #[test]
+    fn contiguous_vs_per_param_200x_lesson() {
+        // 14B params in bf16 = 28 GB; per-tensor sync ≈ 400 ops/layer ×
+        // many layers — use 1e5 tensor ops (conservative vs per-param).
+        let m = model();
+        let bytes = 28e9;
+        let contiguous = m.plan(Location::Device(0), Location::Device(1), bytes);
+        let shattered = m.plan_per_param(Location::Device(0), Location::Device(1), bytes, 7_000_000);
+        let speedup = shattered.seconds / contiguous.seconds;
+        // §9: control plane >99% of latency, ~200× speedup from O(1).
+        assert!(speedup > 100.0, "speedup {speedup}");
+        let control_frac =
+            (shattered.seconds - bytes / m.cfg.d2d_bw) / shattered.seconds;
+        assert!(control_frac > 0.99, "control fraction {control_frac}");
+    }
+
+    #[test]
+    fn set_get_roundtrip_with_payload() {
+        let s = MemStore::new();
+        let v1 = s.set("agentA/weights", Location::Device(3), 1e6, Some(vec![1, 2, 3]));
+        assert_eq!(v1, 1);
+        let v2 = s.set("agentA/weights", Location::Device(3), 1e6, Some(vec![4, 5]));
+        assert_eq!(v2, 2);
+        assert_eq!(*s.payload("agentA/weights").unwrap(), vec![4, 5]);
+        let plan = s.get("agentA/weights", Location::Device(4), &model()).unwrap();
+        assert_eq!(plan.path, Path::D2dIntra);
+        assert!(s.get("missing", Location::Device(0), &model()).is_none());
+    }
+
+    #[test]
+    fn take_relocates() {
+        let s = MemStore::new();
+        s.set("k", Location::Device(0), 2e9, None);
+        let p = s.take("k", Location::Host(0), &model()).unwrap();
+        assert_eq!(p.path, Path::D2h);
+        // Second take from host to device on another node = RH2D.
+        let p2 = s.take("k", Location::Device(100), &model()).unwrap();
+        assert_eq!(p2.path, Path::Rh2d);
+        assert_eq!(s.meta("k").unwrap().location, Location::Device(100));
+    }
+
+    #[test]
+    fn pubsub_notifies_on_set() {
+        let s = MemStore::new();
+        s.subscribe("agentB/weights", "instance-7");
+        s.set("agentB/weights", Location::Device(1), 1.0, None);
+        let ev = s.drain_events();
+        assert_eq!(ev.len(), 1);
+        assert!(ev[0].contains("instance-7"));
+        assert!(s.drain_events().is_empty());
+    }
+
+    #[test]
+    fn fig11_swap_magnitudes() {
+        // Offload (D2H) of ZeRO-3-sharded training states should land in
+        // the paper's 0.5 s (3B) → 3.8 s (32B) band given per-device
+        // sharding across the process group.
+        use crate::config::ModelScale;
+        let m = model();
+        for (scale, lo, hi) in [
+            (ModelScale::B3, 0.1, 1.5),
+            (ModelScale::B32, 1.5, 6.0),
+        ] {
+            let shards = scale.train_group_devices() as f64;
+            let per_dev = scale.train_state_bytes() / shards;
+            // Per-device D2H offloads run in parallel across the group;
+            // PCIe is shared 2:1 per node pair of devices.
+            let t = m.plan(Location::Device(0), Location::Host(0), per_dev * 2.0).seconds;
+            assert!(t > lo && t < hi, "{}B: {t}s", scale.params_b);
+        }
+    }
+}

@@ -1,0 +1,192 @@
+//! Evaluation metrics (§8.1): E2E time, speedup, token throughput, agent
+//! rollout load, and hardware utilization — plus the time series behind
+//! Figs. 1b, 8, 9, 10.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Result of simulating (or really running) one MARL step.
+#[derive(Debug, Clone, Default)]
+pub struct StepReport {
+    pub framework: String,
+    pub workload: String,
+    /// Wall/virtual seconds for the whole step.
+    pub e2e_s: f64,
+    /// Time until the last trajectory finished generating.
+    pub rollout_s: f64,
+    /// Non-overlapped policy-training time (time the step spends in
+    /// training *after* rollouts are done — what Fig. 7 plots).
+    pub train_s: f64,
+    /// Everything else: phase switching, weight sync, swaps.
+    pub other_s: f64,
+    /// Total generated tokens.
+    pub tokens: f64,
+    /// Device-seconds of useful work (rollout decode + training compute).
+    pub busy_device_s: f64,
+    /// Devices available to the run (for utilization).
+    pub pool_devices: usize,
+    /// Per-agent processed-call counts.
+    pub agent_calls: Vec<usize>,
+    /// (time, processed_calls) series per tracked agent (Figs. 8/9).
+    pub processed_series: BTreeMap<usize, Vec<(f64, usize)>>,
+    /// (time, queued_requests) series per tracked agent (Fig. 1b).
+    pub queued_series: BTreeMap<usize, Vec<(f64, usize)>>,
+    /// (time, busy_devices) series (Fig. 10).
+    pub busy_series: Vec<(f64, usize)>,
+    /// Interaction latencies of completed trajectories (Fig. 1a).
+    pub trajectory_latencies: Vec<f64>,
+    /// Scaling operations performed (inter-agent LB).
+    pub scale_ops: usize,
+    /// State swap seconds incurred (training engine).
+    pub swap_s: f64,
+}
+
+impl StepReport {
+    pub fn throughput_tps(&self) -> f64 {
+        if self.e2e_s > 0.0 {
+            self.tokens / self.e2e_s
+        } else {
+            0.0
+        }
+    }
+
+    pub fn utilization(&self) -> f64 {
+        if self.pool_devices == 0 || self.e2e_s == 0.0 {
+            0.0
+        } else {
+            (self.busy_device_s / (self.pool_devices as f64 * self.e2e_s)).min(1.0)
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("framework", Json::str(self.framework.clone())),
+            ("workload", Json::str(self.workload.clone())),
+            ("e2e_s", Json::num(self.e2e_s)),
+            ("rollout_s", Json::num(self.rollout_s)),
+            ("train_s", Json::num(self.train_s)),
+            ("other_s", Json::num(self.other_s)),
+            ("tokens", Json::num(self.tokens)),
+            ("throughput_tps", Json::num(self.throughput_tps())),
+            ("utilization", Json::num(self.utilization())),
+            ("scale_ops", Json::num(self.scale_ops as f64)),
+            ("swap_s", Json::num(self.swap_s)),
+            (
+                "agent_calls",
+                Json::arr(self.agent_calls.iter().map(|&c| Json::num(c as f64))),
+            ),
+        ])
+    }
+}
+
+/// Aggregate several steps (mean over steps, as the paper's per-sample
+/// averages do).
+pub fn aggregate(reports: &[StepReport]) -> StepReport {
+    assert!(!reports.is_empty());
+    let n = reports.len() as f64;
+    let mut out = reports[0].clone();
+    if reports.len() == 1 {
+        return out;
+    }
+    out.e2e_s = reports.iter().map(|r| r.e2e_s).sum::<f64>() / n;
+    out.rollout_s = reports.iter().map(|r| r.rollout_s).sum::<f64>() / n;
+    out.train_s = reports.iter().map(|r| r.train_s).sum::<f64>() / n;
+    out.other_s = reports.iter().map(|r| r.other_s).sum::<f64>() / n;
+    out.tokens = reports.iter().map(|r| r.tokens).sum::<f64>() / n;
+    out.busy_device_s = reports.iter().map(|r| r.busy_device_s).sum::<f64>() / n;
+    out.swap_s = reports.iter().map(|r| r.swap_s).sum::<f64>() / n;
+    out.scale_ops = (reports.iter().map(|r| r.scale_ops).sum::<usize>() as f64 / n) as usize;
+    let n_agents = out.agent_calls.len();
+    out.agent_calls = (0..n_agents)
+        .map(|i| {
+            (reports.iter().map(|r| r.agent_calls[i]).sum::<usize>() as f64 / n) as usize
+        })
+        .collect();
+    out
+}
+
+/// A Table-2 style comparison row.
+#[derive(Debug, Clone)]
+pub struct TableRow {
+    pub framework: String,
+    pub e2e_s: f64,
+    pub speedup: f64,
+    pub throughput_tps: f64,
+}
+
+/// Build Table-2 rows: speedups relative to the first (baseline) entry.
+pub fn table_rows(reports: &[StepReport]) -> Vec<TableRow> {
+    let base = reports.first().map(|r| r.e2e_s).unwrap_or(1.0);
+    reports
+        .iter()
+        .map(|r| TableRow {
+            framework: r.framework.clone(),
+            e2e_s: r.e2e_s,
+            speedup: base / r.e2e_s,
+            throughput_tps: r.throughput_tps(),
+        })
+        .collect()
+}
+
+pub fn render_table2(workload: &str, rows: &[TableRow]) -> String {
+    let mut s = format!(
+        "| Dataset | Framework | E2E Time | Speedup | Throughput |\n|---|---|---|---|---|\n"
+    );
+    for r in rows {
+        s.push_str(&format!(
+            "| {} | {} | {:.1}s | {:.1}x | {:.1}tps |\n",
+            workload, r.framework, r.e2e_s, r.speedup, r.throughput_tps
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(fw: &str, e2e: f64, tokens: f64) -> StepReport {
+        StepReport {
+            framework: fw.into(),
+            workload: "MA".into(),
+            e2e_s: e2e,
+            rollout_s: e2e * 0.8,
+            train_s: e2e * 0.15,
+            other_s: e2e * 0.05,
+            tokens,
+            busy_device_s: 100.0,
+            pool_devices: 10,
+            agent_calls: vec![5, 3],
+            ..StepReport::default()
+        }
+    }
+
+    #[test]
+    fn throughput_and_utilization() {
+        let r = mk("X", 100.0, 50_000.0);
+        assert!((r.throughput_tps() - 500.0).abs() < 1e-9);
+        assert!((r.utilization() - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn speedup_relative_to_first() {
+        let rows = table_rows(&[mk("base", 900.0, 1.0), mk("fast", 300.0, 1.0)]);
+        assert!((rows[0].speedup - 1.0).abs() < 1e-9);
+        assert!((rows[1].speedup - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn aggregate_means() {
+        let a = aggregate(&[mk("X", 100.0, 1000.0), mk("X", 200.0, 3000.0)]);
+        assert!((a.e2e_s - 150.0).abs() < 1e-9);
+        assert!((a.tokens - 2000.0).abs() < 1e-9);
+        assert_eq!(a.agent_calls, vec![5, 3]);
+    }
+
+    #[test]
+    fn json_emission_parses() {
+        let j = mk("X", 10.0, 100.0).to_json();
+        let parsed = crate::util::json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.at(&["framework"]).unwrap().as_str(), Some("X"));
+    }
+}

@@ -1,0 +1,13 @@
+//! Joint orchestrator (§4): rollout-training disaggregation, the
+//! experience store ([`crate::store`]), and the micro-batch asynchronous
+//! pipeline that decouples gradient computation from parameter updates
+//! while preserving synchronous on-policy semantics.
+//!
+//! [`simloop`] drives the coordinator components under virtual time for
+//! the paper-scale experiments; the real PJRT-backed loop lives in
+//! [`crate::runtime::marl`] and `examples/marl_train.rs` — both share
+//! the same store / manager / scaler / allocator code paths.
+
+pub mod simloop;
+
+pub use simloop::{simulate, SimOptions, SimOutcome};

@@ -1,0 +1,1075 @@
+//! The MARL step engine: drives the *real* coordinator components
+//! (experience store, rollout manager/scheduler/scaler, process groups,
+//! allocators, swap and transfer models) under virtual time to reproduce
+//! the paper's cluster-scale experiments (§8) for every framework
+//! variant of Table 1/§8.1.
+//!
+//! Framework behaviour matrix (all from `config::Framework` flags):
+//!  * MAS-RL    — colocated pool, serial query processing, full-batch
+//!                sync training, onload/offload phase switches;
+//!  * DistRL    — disaggregated pools, parallel sampling, sync training,
+//!                static training partitions;
+//!  * MARTI     — colocated, parallel sampling, one-step-async rollouts
+//!                (step s+1 generates with stale params while step s
+//!                trains), static partitions;
+//!  * FlexMARL  — disaggregated, parallel sampling, hierarchical load
+//!                balancing, micro-batch async pipeline, agent-centric
+//!                allocation with state swap.
+
+use crate::cluster::DevicePool;
+use crate::config::ExperimentConfig;
+use crate::memstore::TransferModel;
+use crate::metrics::StepReport;
+use crate::rollout::{
+    plan_migration, CallRef, Dispatch, Mode, RequestId, RolloutManager, TrajectoryScheduler,
+};
+use crate::sim::EventQueue;
+use crate::store::{ColumnType, ExperienceStore, SampleId, Value};
+use crate::training::{
+    apply_update_s, grad_compute_s, swap_in_cost, swap_out_cost, AgentCentricAllocator,
+};
+use crate::workload::{Generator, StepWorkload};
+use std::collections::BTreeMap;
+
+/// Engine knobs not fixed by the paper (documented in DESIGN.md §5).
+#[derive(Debug, Clone)]
+pub struct SimOptions {
+    /// Initial inference instances per agent (uniform — the static
+    /// baseline allocation FlexMARL's scaler then reshapes).
+    pub instances_per_agent: usize,
+    /// Continuous-batching slots per instance.
+    pub concurrency: usize,
+    /// Rollout-manager poll period for load metrics / scaling (§5.2).
+    pub scaler_poll_s: f64,
+    /// Inference-engine re-init after a weight migration.
+    pub reinit_s: f64,
+    /// Colocated phase-switch cost, each direction (onload/offload).
+    pub switch_s: f64,
+    /// Extra context tokens per training sample (prompt + history).
+    pub context_tokens: f64,
+    /// Post-update weight broadcast to inference instances.
+    pub sync_s: f64,
+    /// Agents whose queue/processed series are recorded (Figs. 1b/8/9).
+    pub track_agents: Vec<usize>,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        SimOptions {
+            instances_per_agent: 2,
+            concurrency: 4,
+            scaler_poll_s: 2.0,
+            reinit_s: 1.0,
+            switch_s: 14.0,
+            context_tokens: 256.0,
+            sync_s: 1.5,
+            track_agents: vec![],
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+enum Ev {
+    StartStep(usize),
+    CallDone(RequestId),
+    Poll,
+    /// Weight transfer for a migration arrived; instances can re-register
+    /// once drained.
+    MigrationArrive {
+        donor_insts: Vec<usize>,
+        target: usize,
+    },
+    SwitchToTrainDone(usize),
+    SwitchToRolloutDone(usize),
+    SwapInDone { agent: usize, step: usize },
+    GradDone { agent: usize, step: usize, n: usize },
+    ApplyDone { agent: usize, step: usize },
+    SwapOutDone { agent: usize },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum AgentTrain {
+    Idle,
+    SwappingIn,
+    Computing,
+    Applying,
+    SwappingOut,
+}
+
+struct ReqInfo {
+    step: usize,
+    call: CallRef,
+    /// Pure decode seconds (device-busy part).
+    decode_s: f64,
+    /// Env/tool seconds appended after decode.
+    env_s: f64,
+    agent: usize,
+}
+
+struct StepCtl {
+    workload: StepWorkload,
+    sched: TrajectoryScheduler,
+    started: bool,
+    rollout_done: bool,
+    start_t: f64,
+    rollout_end_t: f64,
+    end_t: f64,
+    /// Samples each agent must grad-process this step.
+    expected: Vec<usize>,
+    grads_done: Vec<usize>,
+    applied: Vec<bool>,
+    traj_remaining: usize,
+    traj_start: Vec<f64>,
+    traj_end: Vec<f64>,
+    /// (query, turn) → (outstanding candidates, completed-call tokens).
+    /// GRPO groups become ready together: advantages need the whole
+    /// group's rewards, so samples enter the store at group completion.
+    group_pending: BTreeMap<(usize, usize), (usize, Vec<f64>)>,
+}
+
+pub struct SimOutcome {
+    pub reports: Vec<StepReport>,
+    /// Overall wall time of the whole simulated run.
+    pub total_s: f64,
+}
+
+pub fn simulate(cfg: &ExperimentConfig, opts: &SimOptions) -> SimOutcome {
+    Engine::new(cfg, opts).run()
+}
+
+struct Engine<'a> {
+    cfg: &'a ExperimentConfig,
+    opts: &'a SimOptions,
+    q: EventQueue<Ev>,
+    man: RolloutManager,
+    store: ExperienceStore,
+    transfer: TransferModel,
+    steps: Vec<StepCtl>,
+    reqs: BTreeMap<RequestId, ReqInfo>,
+    next_rid: RequestId,
+    /// Which step each agent's rollout requests currently come from
+    /// (MARTI overlap: requests of different steps can coexist).
+    cur_rollout_step: usize,
+    /// Training state machine per agent.
+    tstate: Vec<AgentTrain>,
+    /// Which step each agent is currently training.
+    tstep: Vec<usize>,
+    alloc: AgentCentricAllocator,
+    /// Static mode: placements held forever (None entries if agent idle).
+    static_mode: bool,
+    agent_busy_scaling: Vec<bool>,
+    /// Devices per agent instance (cache).
+    inst_dev: Vec<usize>,
+    /// instance id → agent it belongs to now.
+    inst_agent: BTreeMap<usize, usize>,
+    pool_devices: usize,
+    busy_device_s: f64,
+    /// Per-step busy accounting for per-step utilization.
+    busy_per_step: Vec<f64>,
+    sample_seq: u64,
+    // metrics
+    processed_series: BTreeMap<usize, Vec<(f64, usize)>>,
+    queued_series: BTreeMap<usize, Vec<(f64, usize)>>,
+    busy_series: Vec<(f64, usize)>,
+    scale_ops: usize,
+    swap_s_total: f64,
+    switch_s_total: Vec<f64>,
+    colocated_switches: usize,
+    sim_end: f64,
+}
+
+impl<'a> Engine<'a> {
+    fn new(cfg: &'a ExperimentConfig, opts: &'a SimOptions) -> Self {
+        let n_agents = cfg.workload.agents.len();
+        let gen = Generator::new(&cfg.workload, cfg.seed);
+        let steps: Vec<StepCtl> = (0..cfg.steps)
+            .map(|s| {
+                let workload = gen.step(s);
+                let mode = if cfg.framework.parallel_sampling {
+                    Mode::Parallel {
+                        inter_query: cfg.workload.inter_query,
+                    }
+                } else {
+                    Mode::SerialQueries
+                };
+                let sched = TrajectoryScheduler::new(&workload, mode);
+                let expected = workload.calls_per_agent(n_agents);
+                let traj_remaining = workload.trajectories.len();
+                let mut group_pending: BTreeMap<(usize, usize), (usize, Vec<f64>)> =
+                    BTreeMap::new();
+                for t in &workload.trajectories {
+                    for (ci, _) in t.calls.iter().enumerate() {
+                        group_pending.entry((t.query, ci)).or_insert((0, vec![])).0 += 1;
+                    }
+                }
+                StepCtl {
+                    traj_start: vec![0.0; workload.trajectories.len()],
+                    traj_end: vec![0.0; workload.trajectories.len()],
+                    workload,
+                    sched,
+                    started: false,
+                    rollout_done: false,
+                    start_t: 0.0,
+                    rollout_end_t: 0.0,
+                    end_t: 0.0,
+                    expected,
+                    grads_done: vec![0; n_agents],
+                    applied: vec![false; n_agents],
+                    traj_remaining,
+                    group_pending,
+                }
+            })
+            .collect();
+
+        // ---- pools -------------------------------------------------------
+        let inst_dev: Vec<usize> = cfg
+            .workload
+            .agents
+            .iter()
+            .map(|a| a.model.instance_devices())
+            .collect();
+        let static_instances = if cfg.framework.parallel_sampling {
+            opts.instances_per_agent
+        } else {
+            1 // MAS-RL: one engine per agent
+        };
+        let rollout_devices: usize = inst_dev.iter().map(|d| d * static_instances).sum();
+        let train_devices: usize = cfg
+            .workload
+            .agents
+            .iter()
+            .map(|a| a.model.train_group_devices())
+            .sum();
+        let dpn = cfg.cluster.devices_per_node;
+        let rollout_nodes = rollout_devices.div_ceil(dpn).max(1);
+        let train_nodes = train_devices.div_ceil(dpn).max(1);
+        // Pool accounting (utilization denominator): disaggregated runs
+        // provision both pools; a colocated one-step-async system (MARTI)
+        // must also hold inference instances and training groups alive
+        // simultaneously; only strict alternation (MAS-RL) can truly
+        // time-multiplex one pool.
+        let overlap = cfg.framework.disaggregated || cfg.framework.one_step_async_rollout;
+        let pool_devices = if overlap {
+            (rollout_nodes + train_nodes) * dpn
+        } else {
+            rollout_nodes.max(train_nodes) * dpn
+        };
+        let train_pool = DevicePool::new(
+            cfg.cluster,
+            0,
+            train_nodes.min(cfg.cluster.nodes),
+        );
+        let models: Vec<_> = cfg.workload.agents.iter().map(|a| a.model).collect();
+        let alloc = AgentCentricAllocator::new(train_pool, &models, &cfg.cluster);
+
+        // MAS-RL is the naive single-agent-RL port: one inference engine
+        // per agent (no replication); the others deploy a uniform static
+        // pool that FlexMARL's scaler then reshapes.
+        let mut man = RolloutManager::new(n_agents);
+        for a in 0..n_agents {
+            for _ in 0..static_instances {
+                man.add_instance(a, opts.concurrency);
+            }
+        }
+        let mut inst_agent = BTreeMap::new();
+        for a in 0..n_agents {
+            for iid in man.instances_of(a) {
+                inst_agent.insert(iid, a);
+            }
+        }
+
+        let store = ExperienceStore::new();
+        for a in 0..n_agents {
+            store.create_table(
+                &agent_key(a),
+                &[("tokens", ColumnType::Float), ("reward", ColumnType::Float)],
+            );
+        }
+
+        Engine {
+            cfg,
+            opts,
+            q: EventQueue::new(),
+            man,
+            store,
+            transfer: TransferModel::new(cfg.cluster),
+            steps,
+            reqs: BTreeMap::new(),
+            next_rid: 0,
+            cur_rollout_step: 0,
+            tstate: vec![AgentTrain::Idle; n_agents],
+            tstep: vec![0; n_agents],
+            alloc,
+            static_mode: !cfg.framework.agent_centric,
+            agent_busy_scaling: vec![false; n_agents],
+            inst_dev,
+            inst_agent,
+            pool_devices,
+            busy_device_s: 0.0,
+            busy_per_step: vec![0.0; cfg.steps],
+            sample_seq: 0,
+            processed_series: opts.track_agents.iter().map(|&a| (a, vec![])).collect(),
+            queued_series: opts.track_agents.iter().map(|&a| (a, vec![])).collect(),
+            busy_series: Vec::new(),
+            scale_ops: 0,
+            swap_s_total: 0.0,
+            switch_s_total: vec![0.0; cfg.steps],
+            colocated_switches: 0,
+            sim_end: 0.0,
+        }
+    }
+
+    fn n_agents(&self) -> usize {
+        self.cfg.workload.agents.len()
+    }
+
+    fn run(mut self) -> SimOutcome {
+        self.q.push_at(0.0, Ev::StartStep(0));
+        self.q.push_at(self.opts.scaler_poll_s, Ev::Poll);
+        let mut guard = 0u64;
+        let mut histo: BTreeMap<&'static str, u64> = BTreeMap::new();
+        while let Some((t, ev)) = self.q.pop() {
+            guard += 1;
+            *histo.entry(ev_name(&ev)).or_insert(0) += 1;
+            if guard >= 1_000_000 {
+                panic!(
+                    "event-budget exceeded (livelock?) at t={t}: {histo:?}, \
+                     tstate={:?}, steps done={:?}",
+                    self.tstate,
+                    self.steps
+                        .iter()
+                        .map(|s| (s.started, s.rollout_done, s.applied.clone()))
+                        .collect::<Vec<_>>()
+                );
+            }
+            self.handle(t, ev);
+            if self.all_done() {
+                self.sim_end = t;
+                break;
+            }
+        }
+        self.build_reports()
+    }
+
+    fn all_done(&self) -> bool {
+        self.steps
+            .iter()
+            .all(|s| s.started && s.rollout_done && s.applied.iter().all(|&x| x))
+    }
+
+    // -----------------------------------------------------------------------
+    // Event handling
+    // -----------------------------------------------------------------------
+
+    fn handle(&mut self, t: f64, ev: Ev) {
+        match ev {
+            Ev::StartStep(s) => self.start_step(t, s),
+            Ev::CallDone(rid) => self.call_done(t, rid),
+            Ev::Poll => self.poll(t),
+            Ev::MigrationArrive { donor_insts, target } => {
+                self.migration_arrive(t, donor_insts, target)
+            }
+            Ev::SwitchToTrainDone(s) => {
+                self.switch_s_total[s] += self.opts.switch_s;
+                for a in 0..self.n_agents() {
+                    self.maybe_train(t, a);
+                }
+            }
+            Ev::SwitchToRolloutDone(s) => {
+                self.switch_s_total[s] += self.opts.switch_s;
+                if s + 1 < self.steps.len() {
+                    self.q.push_at(t, Ev::StartStep(s + 1));
+                }
+            }
+            Ev::SwapInDone { agent, step } => {
+                debug_assert_eq!(self.tstate[agent], AgentTrain::SwappingIn);
+                self.tstate[agent] = AgentTrain::Computing;
+                self.dispatch_grad(t, agent, step);
+            }
+            Ev::GradDone { agent, step, n } => self.grad_done(t, agent, step, n),
+            Ev::ApplyDone { agent, step } => self.apply_done(t, agent, step),
+            Ev::SwapOutDone { agent } => {
+                debug_assert_eq!(self.tstate[agent], AgentTrain::SwappingOut);
+                self.tstate[agent] = AgentTrain::Idle;
+                // Devices freed — maybe a queued agent can bind now.
+                if !self.static_mode {
+                    if let Some(next) = self.alloc.next_waiter() {
+                        self.maybe_train(t, next);
+                    }
+                }
+                // New work may have arrived while this agent was swapping
+                // out (e.g., the rollout finished meanwhile).
+                self.maybe_train(t, agent);
+            }
+        }
+    }
+
+    fn start_step(&mut self, t: f64, s: usize) {
+        let n_agents = self.n_agents();
+        {
+            let st = &mut self.steps[s];
+            debug_assert!(!st.started);
+            st.started = true;
+            st.start_t = t;
+            self.cur_rollout_step = s;
+            // Agents with zero calls this step are trivially applied.
+            for a in 0..n_agents {
+                if st.expected[a] == 0 {
+                    st.applied[a] = true;
+                }
+            }
+        }
+        let ready = self.steps[s].sched.start();
+        for c in ready {
+            self.submit_call(t, s, c);
+        }
+        // Degenerate workload (no trajectories).
+        if self.steps[s].traj_remaining == 0 {
+            self.rollout_finished(t, s);
+        }
+    }
+
+    fn submit_call(&mut self, t: f64, step: usize, c: CallRef) {
+        let spec = self.steps[step].workload.trajectories[c.traj].calls[c.call].clone();
+        if c.call == 0 {
+            self.steps[step].traj_start[c.traj] = t;
+        }
+        let rid = self.next_rid;
+        self.next_rid += 1;
+        let mut decode_s = spec.tokens / self.cfg.workload.agents[spec.agent].model.decode_tps();
+        // Colocated architectures share HBM/compute between phases: when
+        // training overlaps generation on the same pool (MARTI's one-step
+        // async), decode pays a memory-contention penalty (§4.1).
+        if !self.cfg.framework.disaggregated
+            && self
+                .tstate
+                .iter()
+                .any(|s| matches!(s, AgentTrain::Computing | AgentTrain::Applying))
+        {
+            decode_s *= 1.3;
+        }
+        self.reqs.insert(
+            rid,
+            ReqInfo {
+                step,
+                call: c,
+                decode_s,
+                env_s: spec.env_s,
+                agent: spec.agent,
+            },
+        );
+        match self.man.submit(rid, spec.agent) {
+            Dispatch::Started(_) => {
+                let info = &self.reqs[&rid];
+                self.q.push_in(info.decode_s + info.env_s, Ev::CallDone(rid));
+            }
+            Dispatch::Enqueued(_) | Dispatch::Parked => {}
+        }
+    }
+
+    fn call_done(&mut self, t: f64, rid: RequestId) {
+        let info = self.reqs.remove(&rid).expect("unknown request");
+        // Device-busy: decode seconds × the slot's device share.
+        let dev = self.inst_dev[info.agent] as f64;
+        let busy = info.decode_s * dev / self.opts.concurrency as f64;
+        self.busy_device_s += busy;
+        self.busy_per_step[info.step] += busy;
+
+        if let Some(promoted) = self.man.complete(rid) {
+            let p = &self.reqs[&promoted];
+            self.q.push_in(p.decode_s + p.env_s, Ev::CallDone(promoted));
+        }
+
+        // Record the call's sample; GRPO groups become ready together
+        // (the advantage of each candidate needs the group's rewards).
+        let step = info.step;
+        let tokens = self.steps[step].workload.trajectories[info.call.traj].calls
+            [info.call.call]
+            .tokens;
+        let key = (
+            self.steps[step].workload.trajectories[info.call.traj].query,
+            info.call.call,
+        );
+        let entry = self.steps[step]
+            .group_pending
+            .get_mut(&key)
+            .expect("group bookkeeping");
+        entry.0 -= 1;
+        entry.1.push(tokens);
+        if entry.0 == 0 {
+            // Group complete → all its samples are fully generated.
+            let group_tokens = std::mem::take(&mut entry.1);
+            for tok in group_tokens {
+                self.insert_sample(step, info.agent, tok);
+            }
+            if self.cfg.framework.async_pipeline {
+                self.maybe_train(t, info.agent);
+            }
+        }
+
+        // Per-trajectory completion time (Fig. 1a interaction latency).
+        if info.call.call + 1
+            == self.steps[step].workload.trajectories[info.call.traj].calls.len()
+        {
+            self.steps[step].traj_end[info.call.traj] = t;
+        }
+
+        // Advance the dependency DAG.
+        let ready = self.steps[step].sched.complete(info.call);
+        for c in ready {
+            self.submit_call(t, step, c);
+        }
+
+        // Trajectory / rollout completion bookkeeping.
+        let st = &mut self.steps[step];
+        if st.sched.is_done() && !st.rollout_done {
+            self.rollout_finished(t, step);
+        }
+    }
+
+    fn insert_sample(&mut self, step: usize, agent: usize, tokens: f64) {
+        let id = SampleId::new(self.sample_seq, 1, 0);
+        self.sample_seq += 1;
+        let key = agent_key(agent);
+        self.store.insert(&key, step as u64, id).unwrap();
+        self.store
+            .set_value(&key, step as u64, id, "tokens", Value::Float(tokens))
+            .unwrap();
+        self.store
+            .set_value(&key, step as u64, id, "reward", Value::Float(1.0))
+            .unwrap();
+    }
+
+    fn rollout_finished(&mut self, t: f64, s: usize) {
+        {
+            let st = &mut self.steps[s];
+            st.rollout_done = true;
+            st.rollout_end_t = t;
+            for (i, traj) in st.workload.trajectories.iter().enumerate() {
+                let _ = traj;
+                let _ = i;
+            }
+        }
+        let fw = self.cfg.framework;
+        if !fw.disaggregated && !fw.one_step_async_rollout {
+            // MAS-RL: offload inference, onload training states.
+            self.colocated_switches += 1;
+            self.q.push_in(self.opts.switch_s, Ev::SwitchToTrainDone(s));
+        } else {
+            for a in 0..self.n_agents() {
+                self.maybe_train(t, a);
+            }
+        }
+        if fw.one_step_async_rollout {
+            // MARTI: next step's rollout starts now with stale params
+            // (a pipelined half-switch to restore instance weights).
+            if s + 1 < self.steps.len() {
+                self.q.push_in(self.opts.switch_s * 0.5, Ev::StartStep(s + 1));
+                self.switch_s_total[s] += self.opts.switch_s * 0.5;
+            }
+        }
+    }
+
+    // -----------------------------------------------------------------------
+    // Training pipeline (§4.3 + §6)
+    // -----------------------------------------------------------------------
+
+    /// Can `agent` begin (or continue) training work right now?
+    fn maybe_train(&mut self, t: f64, agent: usize) {
+        if self.tstate[agent] != AgentTrain::Idle {
+            return;
+        }
+        let Some(step) = self.train_step_for(agent) else {
+            return;
+        };
+        let fw = self.cfg.framework;
+        // Sync frameworks only train after the step's rollout concluded
+        // (and for colocated MAS-RL, after the phase switch — gated by
+        // the SwitchToTrainDone event calling back into here).
+        if !fw.async_pipeline && !self.steps[step].rollout_done {
+            return;
+        }
+        if !fw.disaggregated && !fw.one_step_async_rollout {
+            // MAS-RL: must be past the switch (switch event re-triggers).
+            if !self.steps[step].rollout_done {
+                return;
+            }
+        }
+        let ready = self.store.count_ready(&agent_key(agent), Some(step as u64));
+        let micro = self.cfg.pipeline.micro_batch;
+        let all_in = self.steps[step].rollout_done;
+        let have_work = ready >= micro || (all_in && ready > 0);
+        let need_apply = all_in
+            && ready == 0
+            && self.steps[step].grads_done[agent] == self.steps[step].expected[agent]
+            && !self.steps[step].applied[agent];
+        if !have_work && !need_apply {
+            return;
+        }
+
+        // Bind resources.
+        let model = self.cfg.workload.agents[agent].model;
+        if self.static_mode {
+            // Static partition always bound; no swap cost.
+            self.tstate[agent] = AgentTrain::Computing;
+            if need_apply {
+                self.begin_apply(t, agent, step);
+            } else {
+                self.dispatch_grad(t, agent, step);
+            }
+        } else {
+            match self.alloc.activate(agent) {
+                Some((_p, local)) => {
+                    let cost = swap_in_cost(model, &self.cfg.cluster, local);
+                    self.swap_s_total += cost.total();
+                    self.tstate[agent] = AgentTrain::SwappingIn;
+                    if need_apply {
+                        // Rare: resources were released before apply.
+                        self.tstate[agent] = AgentTrain::Computing;
+                        self.q.push_in(cost.total(), Ev::GradDone { agent, step, n: 0 });
+                    } else {
+                        self.q.push_in(cost.total(), Ev::SwapInDone { agent, step });
+                    }
+                }
+                None => { /* queued on the allocator; retried on release */ }
+            }
+        }
+    }
+
+    /// Earliest step with outstanding training work for `agent`.
+    fn train_step_for(&self, agent: usize) -> Option<usize> {
+        for (s, st) in self.steps.iter().enumerate() {
+            if !st.started {
+                break;
+            }
+            if !st.applied[agent] {
+                return Some(s);
+            }
+        }
+        None
+    }
+
+    fn dispatch_grad(&mut self, t: f64, agent: usize, step: usize) {
+        let micro = self.cfg.pipeline.micro_batch;
+        let fetched = self
+            .store
+            .fetch_ready(&agent_key(agent), Some(step as u64), micro);
+        if fetched.is_empty() {
+            // Nothing to compute: either apply or release.
+            let st = &self.steps[step];
+            if st.rollout_done
+                && st.grads_done[agent] == st.expected[agent]
+                && !st.applied[agent]
+            {
+                self.begin_apply(t, agent, step);
+            } else {
+                self.release_training(t, agent);
+            }
+            return;
+        }
+        let n = fetched.len();
+        let tokens: f64 = fetched
+            .iter()
+            .map(|f| {
+                f.value("tokens").and_then(|v| v.as_f64()).unwrap_or(0.0)
+                    + self.opts.context_tokens
+            })
+            .sum();
+        let keys: Vec<_> = fetched.iter().map(|f| f.key).collect();
+        self.store.complete(&agent_key(agent), &keys).unwrap();
+        let model = self.cfg.workload.agents[agent].model;
+        let dur = grad_compute_s(model, tokens);
+        let gdev = model.train_group_devices() as f64;
+        self.busy_device_s += dur * gdev;
+        self.busy_per_step[step] += dur * gdev;
+        self.q.push_in(dur, Ev::GradDone { agent, step, n });
+        let _ = t;
+    }
+
+    fn grad_done(&mut self, t: f64, agent: usize, step: usize, n: usize) {
+        self.steps[step].grads_done[agent] += n;
+        debug_assert!(
+            self.steps[step].grads_done[agent] <= self.steps[step].expected[agent],
+            "agent {agent} over-trained"
+        );
+        // Continue: more micro batches, apply, or release.
+        let ready = self.store.count_ready(&agent_key(agent), Some(step as u64));
+        let st = &self.steps[step];
+        let micro = self.cfg.pipeline.micro_batch;
+        if ready >= micro || (st.rollout_done && ready > 0) {
+            self.dispatch_grad(t, agent, step);
+        } else if st.rollout_done && st.grads_done[agent] == st.expected[agent] {
+            self.begin_apply(t, agent, step);
+        } else {
+            // §6.1: no new experiences → suspend-to-destroy.
+            self.release_training(t, agent);
+        }
+    }
+
+    fn begin_apply(&mut self, t: f64, agent: usize, step: usize) {
+        self.tstate[agent] = AgentTrain::Applying;
+        let model = self.cfg.workload.agents[agent].model;
+        let dur = apply_update_s(model) + self.opts.sync_s;
+        let gdev = model.train_group_devices() as f64;
+        self.busy_device_s += apply_update_s(model) * gdev;
+        self.busy_per_step[step] += apply_update_s(model) * gdev;
+        self.q.push_in(dur, Ev::ApplyDone { agent, step });
+        let _ = t;
+    }
+
+    fn apply_done(&mut self, t: f64, agent: usize, step: usize) {
+        self.steps[step].applied[agent] = true;
+        self.release_training(t, agent);
+        self.check_step_complete(t, step);
+        // The agent may have next-step samples waiting (MARTI overlap).
+        self.maybe_train(t, agent);
+    }
+
+    fn release_training(&mut self, t: f64, agent: usize) {
+        if self.static_mode {
+            self.tstate[agent] = AgentTrain::Idle;
+            return;
+        }
+        let model = self.cfg.workload.agents[agent].model;
+        if self.alloc.release(agent).is_some() {
+            let cost = swap_out_cost(model, &self.cfg.cluster);
+            self.swap_s_total += cost.total();
+            self.tstate[agent] = AgentTrain::SwappingOut;
+            self.q.push_in(cost.total(), Ev::SwapOutDone { agent });
+        } else {
+            self.tstate[agent] = AgentTrain::Idle;
+        }
+        let _ = t;
+    }
+
+    fn check_step_complete(&mut self, t: f64, step: usize) {
+        let st = &self.steps[step];
+        if !(st.rollout_done && st.applied.iter().all(|&x| x)) {
+            return;
+        }
+        self.steps[step].end_t = t;
+        let fw = self.cfg.framework;
+        if fw.one_step_async_rollout {
+            // Next step already started at rollout boundary.
+            return;
+        }
+        if step + 1 < self.steps.len() {
+            if !fw.disaggregated {
+                // MAS-RL: switch back to inference before next rollout.
+                self.colocated_switches += 1;
+                self.q.push_in(self.opts.switch_s, Ev::SwitchToRolloutDone(step));
+            } else {
+                self.q.push_at(t, Ev::StartStep(step + 1));
+            }
+        }
+    }
+
+    // -----------------------------------------------------------------------
+    // Load balancing + metric sampling
+    // -----------------------------------------------------------------------
+
+    fn poll(&mut self, t: f64) {
+        // Metric series for tracked agents.
+        for (&a, series) in self.processed_series.iter_mut() {
+            series.push((t, self.man.completed_per_agent[a] as usize));
+        }
+        for (&a, series) in self.queued_series.iter_mut() {
+            series.push((t, self.man.queue_len(a)));
+        }
+        let busy_now: usize = (0..self.n_agents())
+            .map(|a| {
+                let outstanding = self.man.outstanding(a).min(
+                    self.man.instance_count(a) * self.opts.concurrency,
+                );
+                (outstanding * self.inst_dev[a]).div_ceil(self.opts.concurrency)
+            })
+            .sum::<usize>()
+            + self.alloc.active_devices();
+        self.busy_series.push((t, busy_now));
+
+        if self.cfg.framework.load_balancing {
+            let queue_lens = self.man.queue_lens();
+            let counts = self.man.instance_counts();
+            if let Some(plan) = plan_migration(
+                &queue_lens,
+                &counts,
+                self.cfg.pipeline.delta_threshold,
+                &self.agent_busy_scaling,
+            ) {
+                // Drain the donor's *idlest* instances (least stranded
+                // work); displaced requests re-queue on its survivors.
+                let donor_insts: Vec<usize> = self
+                    .man
+                    .instances_by_load(plan.donor)
+                    .into_iter()
+                    .take(plan.n_instances)
+                    .collect();
+                let mut displaced = Vec::new();
+                for &iid in &donor_insts {
+                    displaced.extend(self.man.drain_instance(iid));
+                }
+                for rid in displaced {
+                    let agent = self.reqs[&rid].agent;
+                    if let Dispatch::Started(_) = self.man.submit(rid, agent) {
+                        let info = &self.reqs[&rid];
+                        self.q
+                            .push_in(info.decode_s + info.env_s, Ev::CallDone(rid));
+                    }
+                }
+                self.agent_busy_scaling[plan.donor] = true;
+                self.agent_busy_scaling[plan.target] = true;
+                self.scale_ops += 1;
+                // Weight transfer via Set/Get (contiguous buffer, §9).
+                let model = self.cfg.workload.agents[plan.target].model;
+                let lat = crate::rollout::migration_latency(
+                    model,
+                    &self.transfer,
+                    0,
+                    self.cfg.cluster.devices_per_node, // cross-node typical
+                    self.opts.reinit_s,
+                );
+                self.q.push_in(
+                    lat,
+                    Ev::MigrationArrive {
+                        donor_insts,
+                        target: plan.target,
+                    },
+                );
+            }
+        }
+        if !self.all_done() {
+            self.q.push_in(self.opts.scaler_poll_s, Ev::Poll);
+        }
+    }
+
+    fn migration_arrive(&mut self, t: f64, donor_insts: Vec<usize>, target: usize) {
+        // Any not-yet-drained instance finishes its active requests
+        // first; re-check shortly.
+        if donor_insts.iter().any(|&i| !self.man.is_drained(i)) {
+            self.q.push_in(1.0, Ev::MigrationArrive { donor_insts, target });
+            return;
+        }
+        let donor = donor_insts
+            .first()
+            .and_then(|i| self.inst_agent.get(i))
+            .copied();
+        for iid in donor_insts {
+            self.man.remove_instance(iid);
+            let (new_id, started) = self.man.add_instance(target, self.opts.concurrency);
+            self.inst_agent.insert(new_id, target);
+            for rid in started {
+                let info = &self.reqs[&rid];
+                self.q.push_in(info.decode_s + info.env_s, Ev::CallDone(rid));
+            }
+        }
+        if let Some(d) = donor {
+            self.agent_busy_scaling[d] = false;
+        }
+        self.agent_busy_scaling[target] = false;
+        let _ = t;
+    }
+
+    // -----------------------------------------------------------------------
+    // Reports
+    // -----------------------------------------------------------------------
+
+    fn build_reports(self) -> SimOutcome {
+        let n_steps = self.steps.len();
+        let total_s = self.sim_end;
+        let overlap_share = total_s / n_steps as f64;
+        let mut reports = Vec::with_capacity(n_steps);
+        for (s, st) in self.steps.iter().enumerate() {
+            let e2e = if self.cfg.framework.one_step_async_rollout {
+                // Overlapped steps: amortized per-step time.
+                overlap_share
+            } else {
+                st.end_t - st.start_t
+            };
+            let rollout_s = st.rollout_end_t - st.start_t;
+            let train_s = (st.end_t - st.rollout_end_t - self.switch_s_total[s]).max(0.0);
+            let latencies: Vec<f64> = (0..st.workload.trajectories.len())
+                .map(|i| (st.traj_end[i] - st.traj_start[i]).max(0.0))
+                .collect();
+            reports.push(StepReport {
+                framework: self.cfg.framework.name.to_string(),
+                workload: self.cfg.workload.name.clone(),
+                e2e_s: e2e,
+                rollout_s,
+                train_s,
+                other_s: (e2e - rollout_s - train_s).max(0.0),
+                tokens: st.workload.total_tokens(),
+                busy_device_s: self.busy_per_step[s],
+                pool_devices: self.pool_devices,
+                agent_calls: st.workload.calls_per_agent(self.n_agents()),
+                processed_series: if s == 0 {
+                    self.processed_series.clone()
+                } else {
+                    BTreeMap::new()
+                },
+                queued_series: if s == 0 {
+                    self.queued_series.clone()
+                } else {
+                    BTreeMap::new()
+                },
+                busy_series: if s == 0 { self.busy_series.clone() } else { vec![] },
+                trajectory_latencies: latencies,
+                scale_ops: self.scale_ops / n_steps.max(1),
+                swap_s: self.swap_s_total / n_steps as f64,
+            });
+        }
+        SimOutcome { reports, total_s }
+    }
+}
+
+fn agent_key(a: usize) -> String {
+    format!("agent{a}")
+}
+
+fn ev_name(ev: &Ev) -> &'static str {
+    match ev {
+        Ev::StartStep(_) => "StartStep",
+        Ev::CallDone(_) => "CallDone",
+        Ev::Poll => "Poll",
+        Ev::MigrationArrive { .. } => "MigrationArrive",
+        Ev::SwitchToTrainDone(_) => "SwitchToTrain",
+        Ev::SwitchToRolloutDone(_) => "SwitchToRollout",
+        Ev::SwapInDone { .. } => "SwapInDone",
+        Ev::GradDone { .. } => "GradDone",
+        Ev::ApplyDone { .. } => "ApplyDone",
+        Ev::SwapOutDone { .. } => "SwapOutDone",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ExperimentConfig, Framework, WorkloadConfig};
+
+    fn small_cfg(fw: Framework) -> ExperimentConfig {
+        let mut wl = WorkloadConfig::ma();
+        wl.queries_per_step = 2;
+        wl.group_size = 4;
+        let mut cfg = ExperimentConfig::new(wl, fw);
+        cfg.steps = 2;
+        cfg
+    }
+
+    fn run(fw: Framework) -> SimOutcome {
+        simulate(&small_cfg(fw), &SimOptions::default())
+    }
+
+    #[test]
+    fn all_frameworks_complete() {
+        for fw in Framework::all_baselines() {
+            let out = run(fw);
+            assert_eq!(out.reports.len(), 2, "{}", fw.name);
+            for r in &out.reports {
+                assert!(r.e2e_s > 0.0);
+                assert!(r.rollout_s > 0.0);
+                assert!(r.tokens > 0.0);
+                assert!(r.e2e_s >= r.rollout_s * 0.5, "{}", fw.name);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let a = run(Framework::flexmarl());
+        let b = run(Framework::flexmarl());
+        for (x, y) in a.reports.iter().zip(&b.reports) {
+            assert_eq!(x.e2e_s, y.e2e_s);
+            assert_eq!(x.tokens, y.tokens);
+        }
+    }
+
+    #[test]
+    fn ordering_masrl_slowest_flexmarl_fastest() {
+        // Paper-shaped load (skew + queueing) — the regime where the
+        // co-design pays off; the tiny uncontended configs of the other
+        // tests deliberately do not show it.
+        let mut cfg = small_cfg(Framework::flexmarl());
+        cfg.workload.queries_per_step = 4;
+        cfg.workload.group_size = 16;
+        cfg.steps = 1;
+        let opts = SimOptions {
+            instances_per_agent: 2,
+            ..SimOptions::default()
+        };
+        let t = |fw: Framework| {
+            let mut c = cfg.clone();
+            c.framework = fw;
+            simulate(&c, &opts).total_s
+        };
+        let mas = t(Framework::mas_rl());
+        let dist = t(Framework::dist_rl());
+        let flex = t(Framework::flexmarl());
+        assert!(mas > dist, "MAS-RL {mas} ≤ DistRL {dist}");
+        assert!(dist > flex, "DistRL {dist} ≤ FlexMARL {flex}");
+    }
+
+    #[test]
+    fn async_pipeline_hides_training() {
+        let flex = run(Framework::flexmarl());
+        let noasync = run(Framework::flexmarl_no_async());
+        // Non-overlapped training time must be smaller with the pipeline.
+        let t_async: f64 = flex.reports.iter().map(|r| r.train_s).sum();
+        let t_sync: f64 = noasync.reports.iter().map(|r| r.train_s).sum();
+        assert!(
+            t_async < t_sync,
+            "async train tail {t_async} ≥ sync {t_sync}"
+        );
+    }
+
+    #[test]
+    fn tokens_are_framework_invariant() {
+        // Same workload → same generated tokens, whatever the system.
+        let a = run(Framework::mas_rl());
+        let b = run(Framework::flexmarl());
+        for (x, y) in a.reports.iter().zip(&b.reports) {
+            assert_eq!(x.tokens, y.tokens);
+        }
+    }
+
+    #[test]
+    fn load_balancer_triggers_scaling_on_skew() {
+        let mut cfg = small_cfg(Framework::flexmarl());
+        cfg.workload.queries_per_step = 4;
+        cfg.workload.group_size = 16;
+        cfg.steps = 1;
+        let opts = SimOptions {
+            instances_per_agent: 2,
+            ..SimOptions::default()
+        };
+        let out = simulate(&cfg, &opts);
+        assert!(out.reports[0].scale_ops > 0, "no scaling on skewed load");
+    }
+
+    #[test]
+    fn flexmarl_beats_no_balancing_on_skew() {
+        let mut base = small_cfg(Framework::flexmarl());
+        base.workload.queries_per_step = 4;
+        base.workload.group_size = 16;
+        base.steps = 1;
+        let mut nolb = base.clone();
+        nolb.framework = Framework::flexmarl_no_balancing();
+        let opts = SimOptions {
+            instances_per_agent: 2,
+            ..SimOptions::default()
+        };
+        let t_lb = simulate(&base, &opts).total_s;
+        let t_nolb = simulate(&nolb, &opts).total_s;
+        assert!(t_lb < t_nolb, "LB {t_lb} ≥ no-LB {t_nolb}");
+    }
+
+    #[test]
+    fn utilization_flexmarl_beats_masrl() {
+        let flex = run(Framework::flexmarl());
+        let mas = run(Framework::mas_rl());
+        let u_flex = flex.reports[0].utilization();
+        let u_mas = mas.reports[0].utilization();
+        assert!(
+            u_flex > u_mas,
+            "FlexMARL util {u_flex} ≤ MAS-RL {u_mas}"
+        );
+    }
+}

@@ -1,0 +1,207 @@
+//! Indexed binary min-heap with update-key (substrate).
+//!
+//! §5.2: "A dedicated rollout manager employs a min-heap data structure
+//! to track the instantaneous load of backend inference instances."
+//! Instance loads change on every dispatch/completion, so we need
+//! decrease/increase-key — `std::collections::BinaryHeap` has neither.
+//! Keys are (load, id) so equal loads break ties deterministically.
+
+#[derive(Debug, Clone)]
+pub struct IndexedMinHeap {
+    /// heap[i] = item id; ordered by key.
+    heap: Vec<usize>,
+    /// pos[id] = Some(index in heap) for members.
+    pos: Vec<Option<usize>>,
+    /// key[id] = current load.
+    key: Vec<u64>,
+}
+
+impl IndexedMinHeap {
+    pub fn new() -> Self {
+        IndexedMinHeap {
+            heap: Vec::new(),
+            pos: Vec::new(),
+            key: Vec::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn contains(&self, id: usize) -> bool {
+        self.pos.get(id).copied().flatten().is_some()
+    }
+
+    pub fn key_of(&self, id: usize) -> Option<u64> {
+        if self.contains(id) {
+            Some(self.key[id])
+        } else {
+            None
+        }
+    }
+
+    fn less(&self, a: usize, b: usize) -> bool {
+        let (ia, ib) = (self.heap[a], self.heap[b]);
+        (self.key[ia], ia) < (self.key[ib], ib)
+    }
+
+    fn swap(&mut self, a: usize, b: usize) {
+        self.heap.swap(a, b);
+        self.pos[self.heap[a]] = Some(a);
+        self.pos[self.heap[b]] = Some(b);
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if self.less(i, parent) {
+                self.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut smallest = i;
+            if l < self.heap.len() && self.less(l, smallest) {
+                smallest = l;
+            }
+            if r < self.heap.len() && self.less(r, smallest) {
+                smallest = r;
+            }
+            if smallest == i {
+                break;
+            }
+            self.swap(i, smallest);
+            i = smallest;
+        }
+    }
+
+    /// Insert `id` with `key`; panics if already present.
+    pub fn insert(&mut self, id: usize, key: u64) {
+        assert!(!self.contains(id), "id {id} already in heap");
+        if id >= self.pos.len() {
+            self.pos.resize(id + 1, None);
+            self.key.resize(id + 1, 0);
+        }
+        self.key[id] = key;
+        self.pos[id] = Some(self.heap.len());
+        self.heap.push(id);
+        self.sift_up(self.heap.len() - 1);
+    }
+
+    /// The id with the minimum (key, id).
+    pub fn peek_min(&self) -> Option<usize> {
+        self.heap.first().copied()
+    }
+
+    /// Change `id`'s key, restoring heap order either direction.
+    pub fn update(&mut self, id: usize, key: u64) {
+        let i = self.pos[id].expect("id not in heap");
+        let old = self.key[id];
+        self.key[id] = key;
+        if key < old {
+            self.sift_up(i);
+        } else {
+            self.sift_down(i);
+        }
+    }
+
+    pub fn remove(&mut self, id: usize) {
+        let i = self.pos[id].expect("id not in heap");
+        let last = self.heap.len() - 1;
+        self.swap(i, last);
+        self.heap.pop();
+        self.pos[id] = None;
+        if i < self.heap.len() {
+            self.sift_up(i);
+            self.sift_down(i);
+        }
+    }
+
+    /// All member ids (arbitrary order).
+    pub fn ids(&self) -> impl Iterator<Item = usize> + '_ {
+        self.heap.iter().copied()
+    }
+}
+
+impl Default for IndexedMinHeap {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+
+    #[test]
+    fn min_tracks_updates() {
+        let mut h = IndexedMinHeap::new();
+        h.insert(0, 5);
+        h.insert(1, 3);
+        h.insert(2, 7);
+        assert_eq!(h.peek_min(), Some(1));
+        h.update(1, 10);
+        assert_eq!(h.peek_min(), Some(0));
+        h.update(2, 1);
+        assert_eq!(h.peek_min(), Some(2));
+        h.remove(2);
+        assert_eq!(h.peek_min(), Some(0));
+        assert_eq!(h.len(), 2);
+    }
+
+    #[test]
+    fn equal_keys_tie_break_by_id() {
+        let mut h = IndexedMinHeap::new();
+        h.insert(5, 2);
+        h.insert(3, 2);
+        h.insert(9, 2);
+        assert_eq!(h.peek_min(), Some(3));
+    }
+
+    #[test]
+    fn prop_matches_linear_scan() {
+        forall("heap min == linear-scan min", 100, |rng| {
+            let mut h = IndexedMinHeap::new();
+            let n = 12usize;
+            let mut model: Vec<Option<u64>> = vec![None; n];
+            for _ in 0..200 {
+                let id = rng.below(n as u64) as usize;
+                match (model[id].is_some(), rng.below(3)) {
+                    (false, _) => {
+                        let k = rng.below(50);
+                        h.insert(id, k);
+                        model[id] = Some(k);
+                    }
+                    (true, 0) => {
+                        h.remove(id);
+                        model[id] = None;
+                    }
+                    (true, _) => {
+                        let k = rng.below(50);
+                        h.update(id, k);
+                        model[id] = Some(k);
+                    }
+                }
+                let expect = model
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(i, k)| k.map(|k| (k, i)))
+                    .min()
+                    .map(|(_, i)| i);
+                assert_eq!(h.peek_min(), expect);
+            }
+        });
+    }
+}

@@ -1,0 +1,416 @@
+//! Intra-agent rollout manager (§5.2): per-agent inference-instance
+//! pools with min-heap least-loaded dispatch, per-instance continuous-
+//! batching slots, and fault tolerance (completion removal, timeout
+//! cancellation, re-queue of unfinished requests).
+//!
+//! The manager is pure scheduling state — no clocks, no I/O — so the
+//! discrete-event simulator and the real PJRT mini-cluster drive the
+//! same code (DESIGN.md §4).
+
+use super::heap::IndexedMinHeap;
+use std::collections::{BTreeMap, VecDeque};
+
+pub type RequestId = u64;
+pub type InstanceId = usize;
+pub type AgentId = usize;
+
+/// Where a submitted request ended up.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dispatch {
+    /// Started immediately on the instance (a free batching slot).
+    Started(InstanceId),
+    /// Enqueued on the least-loaded instance.
+    Enqueued(InstanceId),
+    /// Agent currently has no instances (mid-migration) — parked.
+    Parked,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ReqState {
+    Parked,
+    Queued(InstanceId),
+    Active(InstanceId),
+}
+
+#[derive(Debug)]
+struct Instance {
+    agent: AgentId,
+    max_concurrency: usize,
+    active: Vec<RequestId>,
+    queue: VecDeque<RequestId>,
+    /// Draining: finishes active work, accepts nothing new (migration).
+    draining: bool,
+}
+
+impl Instance {
+    fn load(&self) -> u64 {
+        (self.active.len() + self.queue.len()) as u64
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct RolloutManager {
+    instances: Vec<Option<Instance>>,
+    /// Per-agent min-heap over instance loads.
+    heaps: Vec<IndexedMinHeap>,
+    requests: BTreeMap<RequestId, (AgentId, ReqState)>,
+    /// Requests waiting for an agent with zero instances.
+    parked: Vec<VecDeque<RequestId>>,
+    /// Monotone counters for metrics.
+    pub completed_per_agent: Vec<u64>,
+}
+
+impl RolloutManager {
+    pub fn new(n_agents: usize) -> Self {
+        RolloutManager {
+            instances: Vec::new(),
+            heaps: (0..n_agents).map(|_| IndexedMinHeap::new()).collect(),
+            requests: BTreeMap::new(),
+            parked: (0..n_agents).map(|_| VecDeque::new()).collect(),
+            completed_per_agent: vec![0; n_agents],
+        }
+    }
+
+    pub fn n_agents(&self) -> usize {
+        self.heaps.len()
+    }
+
+    // ---- instance lifecycle ------------------------------------------------
+
+    pub fn add_instance(&mut self, agent: AgentId, max_concurrency: usize) -> (InstanceId, Vec<RequestId>) {
+        let id = self.instances.len();
+        self.instances.push(Some(Instance {
+            agent,
+            max_concurrency,
+            active: Vec::new(),
+            queue: VecDeque::new(),
+            draining: false,
+        }));
+        self.heaps[agent].insert(id, 0);
+        // Un-park any waiting requests: they start/queue on the new instance.
+        let mut started = Vec::new();
+        while let Some(rid) = self.parked[agent].pop_front() {
+            match self.place(rid, agent) {
+                Dispatch::Started(_) => started.push(rid),
+                Dispatch::Enqueued(_) => {}
+                Dispatch::Parked => unreachable!("instance just added"),
+            }
+        }
+        (id, started)
+    }
+
+    /// Begin removing an instance (inter-agent migration). Its queued
+    /// requests are returned for re-submission; active requests keep
+    /// running — the instance detaches once drained (`is_drained`).
+    pub fn drain_instance(&mut self, iid: InstanceId) -> Vec<RequestId> {
+        let inst = self.instances[iid].as_mut().expect("no such instance");
+        inst.draining = true;
+        let agent = inst.agent;
+        let displaced: Vec<RequestId> = inst.queue.drain(..).collect();
+        for rid in &displaced {
+            self.requests.remove(rid);
+        }
+        self.heaps[agent].remove(iid);
+        displaced
+    }
+
+    pub fn is_drained(&self, iid: InstanceId) -> bool {
+        self.instances[iid]
+            .as_ref()
+            .map(|i| i.draining && i.active.is_empty())
+            .unwrap_or(true)
+    }
+
+    /// Finalize removal of a drained instance.
+    pub fn remove_instance(&mut self, iid: InstanceId) {
+        assert!(self.is_drained(iid), "instance {iid} still has active work");
+        self.instances[iid] = None;
+    }
+
+    pub fn instances_of(&self, agent: AgentId) -> Vec<InstanceId> {
+        self.heaps[agent].ids().collect()
+    }
+
+    /// Instances sorted by current load (idlest first) — migration picks
+    /// donors from the front so draining strands minimal active work.
+    pub fn instances_by_load(&self, agent: AgentId) -> Vec<InstanceId> {
+        let mut ids: Vec<InstanceId> = self.heaps[agent].ids().collect();
+        ids.sort_by_key(|&i| {
+            let inst = self.instances[i].as_ref().unwrap();
+            (inst.active.len() + inst.queue.len(), i)
+        });
+        ids
+    }
+
+    pub fn instance_count(&self, agent: AgentId) -> usize {
+        self.heaps[agent].len()
+    }
+
+    // ---- request lifecycle ---------------------------------------------------
+
+    /// Least-loaded dispatch (min-heap, §5.2).
+    pub fn submit(&mut self, rid: RequestId, agent: AgentId) -> Dispatch {
+        assert!(
+            !self.requests.contains_key(&rid),
+            "request {rid} already submitted"
+        );
+        self.place(rid, agent)
+    }
+
+    fn place(&mut self, rid: RequestId, agent: AgentId) -> Dispatch {
+        let Some(iid) = self.heaps[agent].peek_min() else {
+            self.parked[agent].push_back(rid);
+            self.requests.insert(rid, (agent, ReqState::Parked));
+            return Dispatch::Parked;
+        };
+        let inst = self.instances[iid].as_mut().unwrap();
+        let d = if inst.active.len() < inst.max_concurrency {
+            inst.active.push(rid);
+            self.requests.insert(rid, (agent, ReqState::Active(iid)));
+            Dispatch::Started(iid)
+        } else {
+            inst.queue.push_back(rid);
+            self.requests.insert(rid, (agent, ReqState::Queued(iid)));
+            Dispatch::Enqueued(iid)
+        };
+        self.heaps[agent].update(iid, self.instances[iid].as_ref().unwrap().load());
+        d
+    }
+
+    /// A request finished generating. Returns the next request that
+    /// starts on the freed slot (if any).
+    pub fn complete(&mut self, rid: RequestId) -> Option<RequestId> {
+        let (agent, state) = self.requests.remove(&rid).expect("unknown request");
+        let ReqState::Active(iid) = state else {
+            panic!("request {rid} completed but not active");
+        };
+        self.completed_per_agent[agent] += 1;
+        let inst = self.instances[iid].as_mut().unwrap();
+        inst.active.retain(|&r| r != rid);
+        let next = inst.queue.pop_front();
+        if let Some(nrid) = next {
+            inst.active.push(nrid);
+            self.requests.insert(nrid, (agent, ReqState::Active(iid)));
+        }
+        if !inst.draining {
+            self.heaps[agent].update(iid, self.instances[iid].as_ref().unwrap().load());
+        }
+        next
+    }
+
+    /// Fault tolerance: cancel a timed-out or failed request wherever it
+    /// is. Returns the request that starts on the freed slot, if the
+    /// cancelled one was active.
+    pub fn cancel(&mut self, rid: RequestId) -> Option<RequestId> {
+        let (agent, state) = self.requests.remove(&rid)?;
+        match state {
+            ReqState::Parked => {
+                self.parked[agent].retain(|&r| r != rid);
+                None
+            }
+            ReqState::Queued(iid) => {
+                let inst = self.instances[iid].as_mut().unwrap();
+                inst.queue.retain(|&r| r != rid);
+                if !inst.draining {
+                    self.heaps[agent].update(iid, inst.load());
+                }
+                None
+            }
+            ReqState::Active(iid) => {
+                let inst = self.instances[iid].as_mut().unwrap();
+                inst.active.retain(|&r| r != rid);
+                let next = inst.queue.pop_front();
+                if let Some(nrid) = next {
+                    inst.active.push(nrid);
+                    self.requests.insert(nrid, (agent, ReqState::Active(iid)));
+                }
+                if !inst.draining {
+                    self.heaps[agent].update(iid, self.instances[iid].as_ref().unwrap().load());
+                }
+                next
+            }
+        }
+    }
+
+    // ---- load metrics (polled by the inter-agent scaler) --------------------
+
+    /// Waiting requests for an agent: queued on instances + parked.
+    pub fn queue_len(&self, agent: AgentId) -> usize {
+        let queued: usize = self.heaps[agent]
+            .ids()
+            .map(|iid| self.instances[iid].as_ref().unwrap().queue.len())
+            .sum();
+        queued + self.parked[agent].len()
+    }
+
+    /// Active + queued (total outstanding).
+    pub fn outstanding(&self, agent: AgentId) -> usize {
+        let inflight: usize = self.heaps[agent]
+            .ids()
+            .map(|iid| {
+                let i = self.instances[iid].as_ref().unwrap();
+                i.active.len() + i.queue.len()
+            })
+            .sum();
+        inflight + self.parked[agent].len()
+    }
+
+    pub fn queue_lens(&self) -> Vec<usize> {
+        (0..self.n_agents()).map(|a| self.queue_len(a)).collect()
+    }
+
+    pub fn instance_counts(&self) -> Vec<usize> {
+        (0..self.n_agents()).map(|a| self.instance_count(a)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+
+    #[test]
+    fn least_loaded_dispatch() {
+        let mut m = RolloutManager::new(1);
+        let (i0, _) = m.add_instance(0, 1);
+        let (i1, _) = m.add_instance(0, 1);
+        assert_eq!(m.submit(1, 0), Dispatch::Started(i0));
+        assert_eq!(m.submit(2, 0), Dispatch::Started(i1));
+        // Both full: next goes to queue of the (tie-break lowest id).
+        assert_eq!(m.submit(3, 0), Dispatch::Enqueued(i0));
+        assert_eq!(m.submit(4, 0), Dispatch::Enqueued(i1));
+        assert_eq!(m.queue_len(0), 2);
+    }
+
+    #[test]
+    fn completion_starts_queued_fifo() {
+        let mut m = RolloutManager::new(1);
+        let (i0, _) = m.add_instance(0, 1);
+        m.submit(1, 0);
+        m.submit(2, 0);
+        m.submit(3, 0);
+        assert_eq!(m.complete(1), Some(2));
+        assert_eq!(m.queue_len(0), 1);
+        assert_eq!(m.complete(2), Some(3));
+        assert_eq!(m.complete(3), None);
+        assert_eq!(m.completed_per_agent[0], 3);
+        assert_eq!(m.queue_len(0), 0);
+        let _ = i0;
+    }
+
+    #[test]
+    fn concurrency_slots_respected() {
+        let mut m = RolloutManager::new(1);
+        m.add_instance(0, 4);
+        for r in 0..6 {
+            m.submit(r, 0);
+        }
+        assert_eq!(m.queue_len(0), 2); // 4 active, 2 queued
+        assert_eq!(m.outstanding(0), 6);
+    }
+
+    #[test]
+    fn parked_requests_start_when_instance_arrives() {
+        let mut m = RolloutManager::new(2);
+        assert_eq!(m.submit(1, 1), Dispatch::Parked);
+        assert_eq!(m.submit(2, 1), Dispatch::Parked);
+        assert_eq!(m.queue_len(1), 2);
+        let (_, started) = m.add_instance(1, 1);
+        assert_eq!(started, vec![1]); // 1 starts, 2 queues
+        assert_eq!(m.queue_len(1), 1);
+    }
+
+    #[test]
+    fn cancel_in_all_states() {
+        let mut m = RolloutManager::new(2);
+        m.add_instance(0, 1);
+        m.submit(1, 0); // active
+        m.submit(2, 0); // queued
+        m.submit(3, 1); // parked
+        assert_eq!(m.cancel(2), None);
+        assert_eq!(m.cancel(3), None);
+        assert_eq!(m.cancel(1), None); // frees slot; queue empty now
+        assert_eq!(m.outstanding(0), 0);
+        assert_eq!(m.cancel(99), None); // unknown: no-op
+    }
+
+    #[test]
+    fn cancel_active_promotes_queued() {
+        let mut m = RolloutManager::new(1);
+        m.add_instance(0, 1);
+        m.submit(1, 0);
+        m.submit(2, 0);
+        assert_eq!(m.cancel(1), Some(2));
+        assert_eq!(m.queue_len(0), 0);
+        assert_eq!(m.outstanding(0), 1);
+    }
+
+    #[test]
+    fn drain_displaces_queue_keeps_active() {
+        let mut m = RolloutManager::new(2);
+        let (i0, _) = m.add_instance(0, 1);
+        m.add_instance(0, 1);
+        m.submit(1, 0);
+        m.submit(2, 0);
+        m.submit(3, 0); // queued on i0
+        let displaced = m.drain_instance(i0);
+        assert_eq!(displaced, vec![3]);
+        assert!(!m.is_drained(i0)); // request 1 still active
+        // Displaced request re-submits to the surviving instance.
+        m.submit(3, 0);
+        assert_eq!(m.complete(1), None); // drained instance starts nothing new
+        assert!(m.is_drained(i0));
+        m.remove_instance(i0);
+        assert_eq!(m.instance_count(0), 1);
+    }
+
+    #[test]
+    fn prop_no_lost_requests_and_balanced() {
+        forall("manager conserves requests; load stays balanced", 60, |rng| {
+            let mut m = RolloutManager::new(3);
+            for a in 0..3 {
+                for _ in 0..(rng.below(3) + 1) {
+                    m.add_instance(a, 2);
+                }
+            }
+            let mut outstanding = vec![0usize; 3];
+            // Only *active* requests can complete (the simulator only
+            // fires completion events for started generation).
+            let mut active: Vec<(RequestId, usize)> = Vec::new();
+            let mut next_rid = 0;
+            for _ in 0..300 {
+                if rng.f64() < 0.6 {
+                    let a = rng.below(3) as usize;
+                    match m.submit(next_rid, a) {
+                        Dispatch::Started(_) => active.push((next_rid, a)),
+                        Dispatch::Enqueued(_) => {}
+                        Dispatch::Parked => panic!("instances exist"),
+                    }
+                    outstanding[a] += 1;
+                    next_rid += 1;
+                } else if !active.is_empty() {
+                    let i = rng.below(active.len() as u64) as usize;
+                    let (rid, a) = active.swap_remove(i);
+                    if let Some(promoted) = m.complete(rid) {
+                        active.push((promoted, a));
+                    }
+                    outstanding[a] -= 1;
+                }
+                for a in 0..3 {
+                    assert_eq!(m.outstanding(a), outstanding[a], "agent {a}");
+                }
+            }
+            // Drain everything: no request may be lost.
+            while let Some((rid, a)) = active.pop() {
+                if let Some(promoted) = m.complete(rid) {
+                    active.push((promoted, a));
+                }
+                outstanding[a] -= 1;
+            }
+            assert_eq!(outstanding, vec![0, 0, 0]);
+            for a in 0..3 {
+                assert_eq!(m.outstanding(a), 0);
+            }
+        });
+    }
+}

@@ -1,0 +1,18 @@
+//! Rollout engine (§5): parallel sampling + hierarchical load balancing.
+//!
+//! * [`parallel`] — dependency-driven trajectory scheduling (inter-query
+//!   and intra-query parallelism vs the serial baseline model);
+//! * [`manager`] — intra-agent min-heap least-loaded dispatch over
+//!   inference instances, with fault tolerance;
+//! * [`scaler`] — inter-agent elastic instance migration on queue-length
+//!   disparity > Δ, weights moved via the Set/Get store;
+//! * [`heap`] — the indexed min-heap substrate the manager uses.
+
+pub mod heap;
+pub mod manager;
+pub mod parallel;
+pub mod scaler;
+
+pub use manager::{AgentId, Dispatch, InstanceId, RequestId, RolloutManager};
+pub use parallel::{CallRef, Mode, TrajectoryScheduler};
+pub use scaler::{migration_latency, plan_migration, MigrationPlan};

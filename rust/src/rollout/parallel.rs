@@ -1,0 +1,281 @@
+//! Parallel sampling (§5.1): dependency-driven scheduling of multi-agent
+//! trajectory generation.
+//!
+//! Sequential baseline: the next user query starts only after the whole
+//! rollout of the current query finishes, and turns proceed in lockstep.
+//! FlexMARL restructures this into a concurrent execution model with
+//!  * inter-query parallelism — up to `inter_query` queries in flight;
+//!  * intra-query parallelism — a query's GRPO candidates progress
+//!    independently; a call is ready the moment its upstream (previous
+//!    call of the same candidate chain) completes.
+
+use crate::workload::StepWorkload;
+use std::collections::BTreeSet;
+
+/// Identifies one call: (trajectory index in the workload, call index).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct CallRef {
+    pub traj: usize,
+    pub call: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// Queries serial; per turn, all candidates batch then barrier
+    /// (the MAS-RL execution model).
+    SerialQueries,
+    /// Dependency-driven: candidates independent, `inter_query` queries
+    /// concurrently admitted.
+    Parallel { inter_query: usize },
+}
+
+#[derive(Debug)]
+pub struct TrajectoryScheduler {
+    mode: Mode,
+    /// Per trajectory: number of calls and next-call cursor.
+    n_calls: Vec<usize>,
+    next_call: Vec<usize>,
+    query_of: Vec<usize>,
+    /// Queries grouped: query -> trajectory indices.
+    members: Vec<Vec<usize>>,
+    admitted: BTreeSet<usize>,
+    next_query: usize,
+    /// Serial mode: per query, outstanding completions in current turn.
+    turn_pending: Vec<usize>,
+    completed_trajs: usize,
+}
+
+impl TrajectoryScheduler {
+    pub fn new(wl: &StepWorkload, mode: Mode) -> Self {
+        let n = wl.trajectories.len();
+        let n_queries = wl
+            .trajectories
+            .iter()
+            .map(|t| t.query)
+            .max()
+            .map(|m| m + 1)
+            .unwrap_or(0);
+        let mut members = vec![Vec::new(); n_queries];
+        for (i, t) in wl.trajectories.iter().enumerate() {
+            members[t.query].push(i);
+        }
+        TrajectoryScheduler {
+            mode,
+            n_calls: wl.trajectories.iter().map(|t| t.calls.len()).collect(),
+            next_call: vec![0; n],
+            query_of: wl.trajectories.iter().map(|t| t.query).collect(),
+            members,
+            admitted: BTreeSet::new(),
+            next_query: 0,
+            turn_pending: vec![0; n_queries],
+            completed_trajs: 0,
+        }
+    }
+
+    pub fn n_queries(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.completed_trajs == self.n_calls.len()
+    }
+
+    pub fn completed_trajectories(&self) -> usize {
+        self.completed_trajs
+    }
+
+    /// Initial ready calls (admits queries up to the concurrency limit).
+    pub fn start(&mut self) -> Vec<CallRef> {
+        let mut ready = Vec::new();
+        let limit = match self.mode {
+            Mode::SerialQueries => 1,
+            Mode::Parallel { inter_query } => inter_query.max(1),
+        };
+        while self.next_query < self.members.len() && self.admitted.len() < limit {
+            ready.extend(self.admit_next_query());
+        }
+        ready
+    }
+
+    fn admit_next_query(&mut self) -> Vec<CallRef> {
+        let q = self.next_query;
+        self.next_query += 1;
+        self.admitted.insert(q);
+        let mut out = Vec::new();
+        for &t in &self.members[q] {
+            if self.n_calls[t] > 0 {
+                out.push(CallRef { traj: t, call: 0 });
+            } else {
+                self.completed_trajs += 1; // degenerate empty chain
+            }
+        }
+        self.turn_pending[q] = out.len();
+        out
+    }
+
+    /// Mark a call complete; returns the calls that become ready.
+    pub fn complete(&mut self, c: CallRef) -> Vec<CallRef> {
+        debug_assert_eq!(self.next_call[c.traj], c.call, "out-of-order completion");
+        self.next_call[c.traj] = c.call + 1;
+        let q = self.query_of[c.traj];
+        let traj_done = self.next_call[c.traj] == self.n_calls[c.traj];
+        if traj_done {
+            self.completed_trajs += 1;
+        }
+
+        let mut ready = Vec::new();
+        match self.mode {
+            Mode::Parallel { inter_query } => {
+                if !traj_done {
+                    ready.push(CallRef {
+                        traj: c.traj,
+                        call: c.call + 1,
+                    });
+                }
+                // Query fully done → admit the next one.
+                if self.query_done(q) {
+                    self.admitted.remove(&q);
+                    let limit = inter_query.max(1);
+                    while self.next_query < self.members.len() && self.admitted.len() < limit {
+                        ready.extend(self.admit_next_query());
+                    }
+                }
+            }
+            Mode::SerialQueries => {
+                self.turn_pending[q] -= 1;
+                if self.turn_pending[q] == 0 {
+                    // Turn barrier reached: issue next turn for all
+                    // still-unfinished candidates.
+                    let next: Vec<CallRef> = self.members[q]
+                        .iter()
+                        .filter(|&&t| self.next_call[t] < self.n_calls[t])
+                        .map(|&t| CallRef {
+                            traj: t,
+                            call: self.next_call[t],
+                        })
+                        .collect();
+                    if next.is_empty() {
+                        // Query complete → start the next query.
+                        self.admitted.remove(&q);
+                        if self.next_query < self.members.len() {
+                            ready.extend(self.admit_next_query());
+                        }
+                    } else {
+                        self.turn_pending[q] = next.len();
+                        ready.extend(next);
+                    }
+                }
+            }
+        }
+        ready
+    }
+
+    fn query_done(&self, q: usize) -> bool {
+        self.members[q]
+            .iter()
+            .all(|&t| self.next_call[t] == self.n_calls[t])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadConfig;
+    use crate::workload::Generator;
+
+    fn workload() -> StepWorkload {
+        let mut wl = WorkloadConfig::ma();
+        wl.queries_per_step = 3;
+        wl.group_size = 4;
+        Generator::new(&wl, 7).step(0)
+    }
+
+    fn drain(mut sched: TrajectoryScheduler, wl: &StepWorkload) -> (usize, usize) {
+        // Execute everything, tracking max concurrently-ready calls.
+        let mut frontier = sched.start();
+        let mut max_width = frontier.len();
+        let mut total = 0;
+        while let Some(c) = frontier.pop() {
+            total += 1;
+            frontier.extend(sched.complete(c));
+            max_width = max_width.max(frontier.len() + 1);
+        }
+        assert!(sched.is_done());
+        assert_eq!(total, wl.total_calls());
+        (total, max_width)
+    }
+
+    #[test]
+    fn parallel_executes_all_calls() {
+        let wl = workload();
+        let sched = TrajectoryScheduler::new(&wl, Mode::Parallel { inter_query: 4 });
+        let (total, width) = drain(sched, &wl);
+        assert!(total > 0);
+        // With 3 queries × 4 candidates admitted concurrently, width
+        // must exceed one query's group.
+        assert!(width > 4, "width {width}");
+    }
+
+    #[test]
+    fn serial_never_overlaps_queries() {
+        let wl = workload();
+        let mut sched = TrajectoryScheduler::new(&wl, Mode::SerialQueries);
+        let mut frontier = sched.start();
+        // All initially-ready calls belong to query 0.
+        assert!(frontier.iter().all(|c| wl.trajectories[c.traj].query == 0));
+        // At every point, ready calls span exactly one query.
+        while let Some(c) = frontier.pop() {
+            let ready = sched.complete(c);
+            let queries: std::collections::BTreeSet<usize> = frontier
+                .iter()
+                .chain(&ready)
+                .map(|c| wl.trajectories[c.traj].query)
+                .collect();
+            assert!(queries.len() <= 1, "{queries:?}");
+            frontier.extend(ready);
+        }
+        assert!(sched.is_done());
+    }
+
+    #[test]
+    fn serial_has_turn_barriers() {
+        let wl = workload();
+        let mut sched = TrajectoryScheduler::new(&wl, Mode::SerialQueries);
+        let frontier = sched.start();
+        // Complete all but one call of turn 0 — no new calls released.
+        let mut released = Vec::new();
+        for &c in &frontier[..frontier.len() - 1] {
+            released.extend(sched.complete(c));
+        }
+        assert!(released.is_empty(), "barrier leaked {released:?}");
+        // Completing the last one releases the whole next turn.
+        let next = sched.complete(*frontier.last().unwrap());
+        assert!(!next.is_empty());
+        assert!(next.iter().all(|c| c.call == 1));
+    }
+
+    #[test]
+    fn inter_query_limit_respected() {
+        let wl = workload();
+        let mut sched = TrajectoryScheduler::new(&wl, Mode::Parallel { inter_query: 2 });
+        let frontier = sched.start();
+        let queries: std::collections::BTreeSet<usize> = frontier
+            .iter()
+            .map(|c| wl.trajectories[c.traj].query)
+            .collect();
+        assert_eq!(queries.len(), 2); // only 2 of 3 admitted
+    }
+
+    #[test]
+    fn parallel_chains_stay_ordered() {
+        let wl = workload();
+        let mut sched = TrajectoryScheduler::new(&wl, Mode::Parallel { inter_query: 8 });
+        let mut frontier = sched.start();
+        let mut seen_call = vec![0usize; wl.trajectories.len()];
+        while let Some(c) = frontier.pop() {
+            assert_eq!(c.call, seen_call[c.traj], "dependency violated");
+            seen_call[c.traj] += 1;
+            frontier.extend(sched.complete(c));
+        }
+    }
+}

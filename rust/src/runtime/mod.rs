@@ -1,0 +1,376 @@
+//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt` +
+//! `manifest.json`) and execute them from the Rust request path.
+//!
+//! Flow per artifact: HLO text → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `PjRtClient::compile` → execute.
+//! Text (not serialized proto) is the interchange format — jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+//! text parser reassigns them (see python/compile/aot.py).
+//!
+//! All entry computations are lowered with `return_tuple=True`, so every
+//! execution returns one tuple literal that we decompose. On the CPU
+//! PJRT backend "device" buffers live in host memory, so the
+//! literal round-trip is a memcpy, not a PCIe transfer (§Perf/L3 in
+//! EXPERIMENTS.md quantifies it).
+
+pub mod marl;
+pub mod policy;
+
+use crate::util::json::{parse, Json};
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug)]
+pub struct RuntimeError(pub String);
+
+impl fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "runtime error: {}", self.0)
+    }
+}
+impl std::error::Error for RuntimeError {}
+
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        RuntimeError(format!("xla: {e}"))
+    }
+}
+
+pub type Result<T> = std::result::Result<T, RuntimeError>;
+
+// ---------------------------------------------------------------------------
+// Manifest (the Python→Rust ABI)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub max_seq: usize,
+    pub num_params: usize,
+    pub kl_beta: f64,
+    pub clip_eps: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Shapes {
+    pub b_roll: usize,
+    pub t_prompt: usize,
+    pub b_grad: usize,
+    pub t_train: usize,
+    /// Tokens per `decode_blk` execution (0 = artifact absent).
+    pub decode_block: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelInfo,
+    pub shapes: Shapes,
+    pub param_spec: Vec<TensorSpec>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn spec_from_json(j: &Json) -> Result<TensorSpec> {
+    Ok(TensorSpec {
+        name: j
+            .get("name")
+            .and_then(Json::as_str)
+            .unwrap_or("")
+            .to_string(),
+        shape: j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| RuntimeError("missing shape".into()))?
+            .iter()
+            .map(|d| d.as_usize().unwrap_or(0))
+            .collect(),
+        dtype: j
+            .get("dtype")
+            .and_then(Json::as_str)
+            .unwrap_or("float32")
+            .to_string(),
+    })
+}
+
+impl Manifest {
+    pub fn load(path: &str) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| RuntimeError(format!("{path}: {e} (run `make artifacts`)")))?;
+        let j = parse(&text).map_err(|e| RuntimeError(e.to_string()))?;
+        let dir = Path::new(path)
+            .parent()
+            .unwrap_or(Path::new("."))
+            .to_path_buf();
+        let get = |p: &[&str]| -> Result<usize> {
+            j.at(p)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| RuntimeError(format!("manifest missing {p:?}")))
+        };
+        let model = ModelInfo {
+            vocab: get(&["model", "vocab"])?,
+            d_model: get(&["model", "d_model"])?,
+            n_layers: get(&["model", "n_layers"])?,
+            n_heads: get(&["model", "n_heads"])?,
+            max_seq: get(&["model", "max_seq"])?,
+            num_params: get(&["model", "num_params"])?,
+            kl_beta: j.at(&["model", "kl_beta"]).and_then(Json::as_f64).unwrap_or(0.02),
+            clip_eps: j.at(&["model", "clip_eps"]).and_then(Json::as_f64).unwrap_or(0.2),
+        };
+        let shapes = Shapes {
+            b_roll: get(&["shapes", "b_roll"])?,
+            t_prompt: get(&["shapes", "t_prompt"])?,
+            b_grad: get(&["shapes", "b_grad"])?,
+            t_train: get(&["shapes", "t_train"])?,
+            decode_block: j
+                .at(&["shapes", "decode_block"])
+                .and_then(Json::as_usize)
+                .unwrap_or(0),
+        };
+        let param_spec = j
+            .at(&["param_spec"])
+            .and_then(Json::as_arr)
+            .ok_or_else(|| RuntimeError("missing param_spec".into()))?
+            .iter()
+            .map(spec_from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let mut artifacts = BTreeMap::new();
+        for (name, art) in j
+            .at(&["artifacts"])
+            .and_then(Json::as_obj)
+            .ok_or_else(|| RuntimeError("missing artifacts".into()))?
+        {
+            let inputs = art
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+                .iter()
+                .map(spec_from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = art
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+                .iter()
+                .map(spec_from_json)
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    file: art
+                        .get("file")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| RuntimeError(format!("artifact {name}: no file")))?
+                        .to_string(),
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+        Ok(Manifest {
+            dir,
+            model,
+            shapes,
+            param_spec,
+            artifacts,
+        })
+    }
+
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "model: vocab={} d_model={} layers={} heads={} max_seq={} params={:.1}M\n\
+             shapes: b_roll={} t_prompt={} b_grad={} t_train={}\nartifacts:\n",
+            self.model.vocab,
+            self.model.d_model,
+            self.model.n_layers,
+            self.model.n_heads,
+            self.model.max_seq,
+            self.model.num_params as f64 / 1e6,
+            self.shapes.b_roll,
+            self.shapes.t_prompt,
+            self.shapes.b_grad,
+            self.shapes.t_train,
+        );
+        for (name, a) in &self.artifacts {
+            s.push_str(&format!(
+                "  {:<8} {} ({} in, {} out)\n",
+                name,
+                a.file,
+                a.inputs.len(),
+                a.outputs.len()
+            ));
+        }
+        s
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Compiled executables
+// ---------------------------------------------------------------------------
+
+pub struct Executable {
+    pub name: String,
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Run with host literals; returns the decomposed output tuple.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.spec.inputs.len() {
+            return Err(RuntimeError(format!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            )));
+        }
+        let bufs = self.exe.execute::<xla::Literal>(inputs)?;
+        let lit = bufs[0][0].to_literal_sync()?;
+        let outs = lit.to_tuple()?;
+        if outs.len() != self.spec.outputs.len() {
+            return Err(RuntimeError(format!(
+                "{}: expected {} outputs, got {}",
+                self.name,
+                self.spec.outputs.len(),
+                outs.len()
+            )));
+        }
+        Ok(outs)
+    }
+}
+
+/// The compiled model bundle: one per AOT artifact set; shared by every
+/// agent whose policy uses this architecture (parameters are data, not
+/// code — all agents run the same executables with their own weights).
+pub struct ModelRuntime {
+    pub manifest: Manifest,
+    pub client: xla::PjRtClient,
+    exes: BTreeMap<String, Executable>,
+}
+
+impl ModelRuntime {
+    pub fn load(artifacts_dir: &str) -> Result<ModelRuntime> {
+        let manifest = Manifest::load(
+            &Path::new(artifacts_dir)
+                .join("manifest.json")
+                .to_string_lossy(),
+        )?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut exes = BTreeMap::new();
+        for (name, spec) in &manifest.artifacts {
+            let path = manifest.dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(path.to_string_lossy().as_ref())?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            exes.insert(
+                name.clone(),
+                Executable {
+                    name: name.clone(),
+                    spec: spec.clone(),
+                    exe,
+                },
+            );
+        }
+        Ok(ModelRuntime {
+            manifest,
+            client,
+            exes,
+        })
+    }
+
+    pub fn exe(&self, name: &str) -> Result<&Executable> {
+        self.exes
+            .get(name)
+            .ok_or_else(|| RuntimeError(format!("no artifact '{name}'")))
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.manifest.param_spec.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal helpers
+// ---------------------------------------------------------------------------
+
+pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+pub fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+pub fn scalar_f32(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+pub fn scalar_i32(x: i32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+pub fn to_f32(l: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(l.to_vec::<f32>()?)
+}
+
+pub fn first_f32(l: &xla::Literal) -> Result<f32> {
+    Ok(l.get_first_element::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_path() -> Option<String> {
+        let p = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json");
+        std::path::Path::new(p).exists().then(|| p.to_string())
+    }
+
+    #[test]
+    fn manifest_parses_and_summarizes() {
+        let Some(p) = manifest_path() else {
+            eprintln!("skipped: run `make artifacts` first");
+            return;
+        };
+        let m = Manifest::load(&p).unwrap();
+        assert_eq!(m.param_spec.len(), 10);
+        assert!(m.artifacts.contains_key("init"));
+        assert!(m.artifacts.contains_key("grad"));
+        assert!(m.model.num_params > 1_000_000);
+        let s = m.summary();
+        assert!(s.contains("prefill"));
+        // Param spec total matches declared count.
+        let total: usize = m.param_spec.iter().map(|p| p.elems()).sum();
+        assert_eq!(total, m.model.num_params);
+    }
+
+    #[test]
+    fn missing_manifest_is_actionable() {
+        let e = Manifest::load("/nonexistent/manifest.json").unwrap_err();
+        assert!(e.to_string().contains("make artifacts"));
+    }
+}

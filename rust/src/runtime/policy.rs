@@ -1,0 +1,439 @@
+//! Per-agent policy state over the shared [`ModelRuntime`]: parameters +
+//! optimizer state + gradient cache, with the rollout (prefill/decode)
+//! and training (grad/accum/apply) entry points.
+//!
+//! This realizes the §4.3 decoupling on the real runtime: `grad_on_rows`
+//! only *computes and caches* gradients (micro batches); `apply` performs
+//! the unified parameter update and bumps `policy_version` — exactly the
+//! contract the simulator's pipeline assumes.
+
+use super::{lit_f32, lit_i32, scalar_f32, scalar_i32, to_f32, ModelRuntime, Result, RuntimeError};
+use crate::grpo::TrainRow;
+use crate::util::rng::Pcg64;
+
+/// One generated candidate: sampled tokens + their behaviour logprobs.
+#[derive(Debug, Clone)]
+pub struct Rollout {
+    pub response: Vec<i32>,
+    pub logp: Vec<f32>,
+}
+
+/// Diagnostics of one gradient micro batch.
+#[derive(Debug, Clone, Copy)]
+pub struct GradStats {
+    pub loss: f32,
+    pub kl: f32,
+    pub ratio: f32,
+    pub entropy: f32,
+    pub grad_norm: f32,
+    pub rows: usize,
+}
+
+pub struct AgentPolicy {
+    pub agent_id: usize,
+    pub version: u64,
+    params: Vec<xla::Literal>,
+    m: Vec<xla::Literal>,
+    v: Vec<xla::Literal>,
+    count: xla::Literal,
+    grad_cache: Option<Vec<xla::Literal>>,
+    n_cached: usize,
+    rng: Pcg64,
+}
+
+fn zeros_like_params(rt: &ModelRuntime) -> Vec<xla::Literal> {
+    rt.manifest
+        .param_spec
+        .iter()
+        .map(|s| {
+            let dims: Vec<usize> = s.shape.clone();
+            xla::Literal::create_from_shape(xla::PrimitiveType::F32, &dims)
+        })
+        .collect()
+}
+
+impl AgentPolicy {
+    pub fn new(rt: &ModelRuntime, agent_id: usize, seed: u64) -> Result<AgentPolicy> {
+        let outs = rt.exe("init")?.run(&[scalar_i32(seed as i32)])?;
+        Ok(AgentPolicy {
+            agent_id,
+            version: 0,
+            params: outs,
+            m: zeros_like_params(rt),
+            v: zeros_like_params(rt),
+            count: scalar_i32(0),
+            grad_cache: None,
+            n_cached: 0,
+            rng: Pcg64::with_stream(seed, 0xa9e17 + agent_id as u64),
+        })
+    }
+
+    // ---- rollout path -------------------------------------------------------
+
+    /// Generate `gen_len` tokens for `b_roll` prompts in one batch
+    /// (intra-query parallelism: the GRPO candidate group).
+    pub fn generate(
+        &mut self,
+        rt: &ModelRuntime,
+        prompts: &[Vec<i32>],
+        gen_len: usize,
+        temperature: f32,
+    ) -> Result<Vec<Rollout>> {
+        let sh = &rt.manifest.shapes;
+        let b = sh.b_roll;
+        let tp = sh.t_prompt;
+        let vocab = rt.manifest.model.vocab;
+        if prompts.len() != b || prompts.iter().any(|p| p.len() != tp) {
+            return Err(RuntimeError(format!(
+                "generate expects {b} prompts of {tp} tokens"
+            )));
+        }
+        let max_gen = rt.manifest.model.max_seq - tp;
+        let gen_len = gen_len.min(max_gen);
+
+        let flat: Vec<i32> = prompts.iter().flatten().copied().collect();
+        let tokens = lit_i32(&flat, &[b as i64, tp as i64])?;
+        let mut inputs: Vec<xla::Literal> = self.params.to_vec();
+        inputs.push(tokens);
+        let mut outs = rt.exe("prefill")?.run(&inputs)?;
+        let mut vc = outs.pop().unwrap();
+        let mut kc = outs.pop().unwrap();
+        let mut logits = outs.pop().unwrap();
+
+        let mut rollouts: Vec<Rollout> = (0..b)
+            .map(|_| Rollout {
+                response: Vec::with_capacity(gen_len),
+                logp: Vec::with_capacity(gen_len),
+            })
+            .collect();
+
+        for step in 0..gen_len {
+            let logits_host = to_f32(&logits)?;
+            let mut next = Vec::with_capacity(b);
+            for (row, r) in rollouts.iter_mut().enumerate() {
+                let row_logits = &logits_host[row * vocab..(row + 1) * vocab];
+                let (tok, logp) = sample_token(row_logits, temperature, &mut self.rng);
+                r.response.push(tok);
+                r.logp.push(logp);
+                next.push(tok);
+            }
+            if step + 1 == gen_len {
+                break;
+            }
+            let pos = (tp + step) as i32;
+            let mut dec_in: Vec<xla::Literal> = self.params.to_vec();
+            dec_in.push(kc);
+            dec_in.push(vc);
+            dec_in.push(lit_i32(&next, &[b as i64])?);
+            dec_in.push(scalar_i32(pos));
+            let mut douts = rt.exe("decode")?.run(&dec_in)?;
+            vc = douts.pop().unwrap();
+            kc = douts.pop().unwrap();
+            logits = douts.pop().unwrap();
+        }
+        Ok(rollouts)
+    }
+
+    /// Block-decode generation (§Perf/L2+L3): `decode_blk` runs
+    /// `decode_block` tokens per executable call with sampling on-graph,
+    /// cutting the per-token host↔device literal traffic by the block
+    /// factor. Numerically equivalent decode path; sampling RNG differs
+    /// from [`Self::generate`] (jax threefry vs host PCG), both seeded
+    /// deterministically.
+    pub fn generate_block(
+        &mut self,
+        rt: &ModelRuntime,
+        prompts: &[Vec<i32>],
+        gen_len: usize,
+        temperature: f32,
+    ) -> Result<Vec<Rollout>> {
+        let sh = &rt.manifest.shapes;
+        let (b, tp) = (sh.b_roll, sh.t_prompt);
+        let vocab = rt.manifest.model.vocab;
+        let block = rt.manifest.shapes.decode_block;
+        if block == 0 {
+            return self.generate(rt, prompts, gen_len, temperature);
+        }
+        if prompts.len() != b || prompts.iter().any(|p| p.len() != tp) {
+            return Err(RuntimeError(format!(
+                "generate_block expects {b} prompts of {tp} tokens"
+            )));
+        }
+        let max_gen = rt.manifest.model.max_seq - tp;
+        let gen_len = gen_len.min(max_gen);
+
+        let flat: Vec<i32> = prompts.iter().flatten().copied().collect();
+        let mut inputs: Vec<xla::Literal> = self.params.to_vec();
+        inputs.push(lit_i32(&flat, &[b as i64, tp as i64])?);
+        let mut outs = rt.exe("prefill")?.run(&inputs)?;
+        let mut vc = outs.pop().unwrap();
+        let mut kc = outs.pop().unwrap();
+        let logits = outs.pop().unwrap();
+
+        // First token sampled host-side from the prefill logits.
+        let logits_host = to_f32(&logits)?;
+        let mut rollouts: Vec<Rollout> = Vec::with_capacity(b);
+        let mut last = Vec::with_capacity(b);
+        for row in 0..b {
+            let (tok, logp) =
+                sample_token(&logits_host[row * vocab..(row + 1) * vocab], temperature, &mut self.rng);
+            rollouts.push(Rollout {
+                response: vec![tok],
+                logp: vec![logp],
+            });
+            last.push(tok);
+        }
+
+        let mut pos = tp; // position of the last sampled token
+        while rollouts[0].response.len() < gen_len {
+            let seed = self.rng.next_u64() as i32;
+            let mut dec_in: Vec<xla::Literal> = self.params.to_vec();
+            dec_in.push(kc);
+            dec_in.push(vc);
+            dec_in.push(lit_i32(&last, &[b as i64])?);
+            dec_in.push(scalar_i32(pos as i32));
+            dec_in.push(scalar_i32(seed));
+            dec_in.push(scalar_f32(temperature));
+            let mut bouts = rt.exe("decode_blk")?.run(&dec_in)?;
+            vc = bouts.pop().unwrap();
+            kc = bouts.pop().unwrap();
+            let logps = to_f32(&bouts.pop().unwrap())?; // [block, B]
+            let toks = bouts.pop().unwrap().to_vec::<i32>()?; // [block, B]
+            let take = block.min(gen_len - rollouts[0].response.len());
+            for step in 0..take {
+                for row in 0..b {
+                    rollouts[row].response.push(toks[step * b + row]);
+                    rollouts[row].logp.push(logps[step * b + row]);
+                }
+            }
+            for row in 0..b {
+                last[row] = toks[(block - 1) * b + row];
+            }
+            pos += block;
+            if pos + block >= rt.manifest.model.max_seq {
+                break;
+            }
+        }
+        for r in &mut rollouts {
+            r.response.truncate(gen_len);
+            r.logp.truncate(gen_len);
+        }
+        Ok(rollouts)
+    }
+
+    // ---- training path ------------------------------------------------------
+
+    /// Compute gradients on up to `b_grad` rows and fold them into the
+    /// agent's gradient cache (§4.3: no parameter update here).
+    pub fn grad_on_rows(&mut self, rt: &ModelRuntime, rows: &[TrainRow]) -> Result<GradStats> {
+        let sh = &rt.manifest.shapes;
+        let (b, t) = (sh.b_grad, sh.t_train);
+        if rows.is_empty() || rows.len() > b {
+            return Err(RuntimeError(format!(
+                "grad batch must have 1..={b} rows, got {}",
+                rows.len()
+            )));
+        }
+        // Pad to the compiled batch with zero-mask rows.
+        let mut tokens = vec![0i32; b * t];
+        let mut targets = vec![0i32; b * t];
+        let mut adv = vec![0f32; b * t];
+        let mut old_logp = vec![0f32; b * t];
+        let mut mask = vec![0f32; b * t];
+        for (i, row) in rows.iter().enumerate() {
+            tokens[i * t..(i + 1) * t].copy_from_slice(&row.tokens);
+            targets[i * t..(i + 1) * t].copy_from_slice(&row.targets);
+            adv[i * t..(i + 1) * t].copy_from_slice(&row.adv);
+            old_logp[i * t..(i + 1) * t].copy_from_slice(&row.old_logp);
+            mask[i * t..(i + 1) * t].copy_from_slice(&row.mask);
+        }
+        let dims = [b as i64, t as i64];
+        let mut inputs: Vec<xla::Literal> = self.params.to_vec();
+        inputs.push(lit_i32(&tokens, &dims)?);
+        inputs.push(lit_i32(&targets, &dims)?);
+        inputs.push(lit_f32(&adv, &dims)?);
+        inputs.push(lit_f32(&old_logp, &dims)?);
+        // Reference policy = behaviour policy snapshot (strictly
+        // on-policy per step), so ref_logp == old_logp.
+        inputs.push(lit_f32(&old_logp, &dims)?);
+        inputs.push(lit_f32(&mask, &dims)?);
+        let mut outs = rt.exe("grad")?.run(&inputs)?;
+        let gnorm = super::first_f32(&outs.pop().unwrap())?;
+        let ent = super::first_f32(&outs.pop().unwrap())?;
+        let ratio = super::first_f32(&outs.pop().unwrap())?;
+        let kl = super::first_f32(&outs.pop().unwrap())?;
+        let loss = super::first_f32(&outs.pop().unwrap())?;
+        let grads = outs;
+
+        self.grad_cache = Some(match self.grad_cache.take() {
+            None => grads,
+            Some(acc) => {
+                let mut inputs = acc;
+                inputs.extend(grads);
+                rt.exe("accum")?.run(&inputs)?
+            }
+        });
+        self.n_cached += 1;
+        Ok(GradStats {
+            loss,
+            kl,
+            ratio,
+            entropy: ent,
+            grad_norm: gnorm,
+            rows: rows.len(),
+        })
+    }
+
+    pub fn cached_micro_batches(&self) -> usize {
+        self.n_cached
+    }
+
+    /// Unified parameter update from the gradient cache: Adam step with
+    /// scale 1/n_cached (micro-batch mean ≡ full-batch mean), then
+    /// `policy_version += 1`.
+    pub fn apply(&mut self, rt: &ModelRuntime, lr: f32) -> Result<()> {
+        let acc = self
+            .grad_cache
+            .take()
+            .ok_or_else(|| RuntimeError("apply with empty gradient cache".into()))?;
+        let scale = 1.0 / self.n_cached as f32;
+        // Move (not clone) the old params/optimizer state into the call:
+        // they are replaced wholesale by the outputs, so the host
+        // round-trip copy a clone would cost (~16 × model bytes) is pure
+        // waste (§Perf/L3, measured in benches/hotpath.rs).
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(4 * acc.len() + 3);
+        inputs.extend(std::mem::take(&mut self.params));
+        inputs.extend(std::mem::take(&mut self.m));
+        inputs.extend(std::mem::take(&mut self.v));
+        inputs.push(std::mem::replace(&mut self.count, scalar_i32(0)));
+        inputs.extend(acc);
+        inputs.push(scalar_f32(scale));
+        inputs.push(scalar_f32(lr));
+        let mut outs = rt.exe("apply")?.run(&inputs)?;
+        let np = rt.n_params();
+        self.count = outs.pop().unwrap();
+        self.v = outs.split_off(np * 2);
+        self.m = outs.split_off(np);
+        self.params = outs;
+        self.n_cached = 0;
+        self.version += 1;
+        Ok(())
+    }
+
+    /// Evaluate per-token logprobs of given sequences (ref-policy eval).
+    pub fn token_logprobs(
+        &self,
+        rt: &ModelRuntime,
+        tokens: &[i32],
+        targets: &[i32],
+    ) -> Result<Vec<f32>> {
+        let sh = &rt.manifest.shapes;
+        let dims = [sh.b_grad as i64, sh.t_train as i64];
+        let mut inputs: Vec<xla::Literal> = self.params.to_vec();
+        inputs.push(lit_i32(tokens, &dims)?);
+        inputs.push(lit_i32(targets, &dims)?);
+        let outs = rt.exe("logprob")?.run(&inputs)?;
+        to_f32(&outs[0])
+    }
+
+    /// Serialize weights as one contiguous buffer (the §9 O(1) lesson) —
+    /// used for instance weight migration and training-state swap.
+    pub fn weights_blob(&self) -> Result<Vec<u8>> {
+        let mut out = Vec::new();
+        for p in &self.params {
+            let v = to_f32(p)?;
+            out.extend(v.iter().flat_map(|x| x.to_le_bytes()));
+        }
+        Ok(out)
+    }
+
+    /// Restore weights from a contiguous buffer (shapes from the manifest).
+    pub fn load_weights_blob(&mut self, rt: &ModelRuntime, blob: &[u8]) -> Result<()> {
+        let total: usize = rt.manifest.param_spec.iter().map(|s| s.elems()).sum();
+        if blob.len() != total * 4 {
+            return Err(RuntimeError(format!(
+                "weight blob size {} != expected {}",
+                blob.len(),
+                total * 4
+            )));
+        }
+        let mut off = 0;
+        let mut params = Vec::with_capacity(rt.manifest.param_spec.len());
+        for s in &rt.manifest.param_spec {
+            let n = s.elems();
+            let floats: Vec<f32> = blob[off..off + n * 4]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            let dims: Vec<i64> = s.shape.iter().map(|&d| d as i64).collect();
+            params.push(lit_f32(&floats, &dims)?);
+            off += n * 4;
+        }
+        self.params = params;
+        Ok(())
+    }
+}
+
+/// Temperature sampling with logprob of the chosen token.
+pub fn sample_token(logits: &[f32], temperature: f32, rng: &mut Pcg64) -> (i32, f32) {
+    let t = temperature.max(1e-4);
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = logits.iter().map(|&l| ((l - max) / t).exp()).collect();
+    let sum: f32 = exps.iter().sum();
+    let mut x = rng.f64() as f32 * sum;
+    let mut idx = exps.len() - 1;
+    for (i, &e) in exps.iter().enumerate() {
+        x -= e;
+        if x <= 0.0 {
+            idx = i;
+            break;
+        }
+    }
+    // logp under the *untempered* distribution (behaviour logprob used
+    // by the ratio must match what grad-time log_softmax computes).
+    let lse = {
+        let s: f32 = logits.iter().map(|&l| (l - max).exp()).sum();
+        max + s.ln()
+    };
+    (idx as i32, logits[idx] - lse)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_token_respects_distribution() {
+        let mut rng = Pcg64::new(1);
+        let logits = vec![0.0f32, 5.0, 0.0, 0.0];
+        let mut hits = 0;
+        for _ in 0..200 {
+            let (tok, logp) = sample_token(&logits, 1.0, &mut rng);
+            assert!(logp <= 0.0);
+            if tok == 1 {
+                hits += 1;
+            }
+        }
+        assert!(hits > 180, "{hits}");
+    }
+
+    #[test]
+    fn sample_token_low_temperature_is_greedy() {
+        let mut rng = Pcg64::new(2);
+        let logits = vec![1.0f32, 1.2, 0.9];
+        for _ in 0..50 {
+            let (tok, _) = sample_token(&logits, 0.01, &mut rng);
+            assert_eq!(tok, 1);
+        }
+    }
+
+    #[test]
+    fn logp_is_log_softmax_of_choice() {
+        let mut rng = Pcg64::new(3);
+        let logits = vec![0.5f32, -0.5];
+        let (tok, logp) = sample_token(&logits, 1.0, &mut rng);
+        let z = (0.5f32).exp() + (-0.5f32).exp();
+        let expect = logits[tok as usize] - z.ln();
+        assert!((logp - expect).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,210 @@
+//! Discrete-event simulation core (substrate).
+//!
+//! The paper's evaluation runs on a 48-node NPU production cluster; this
+//! module provides the virtual-time machinery that lets us reproduce the
+//! *scheduling behaviour* of that cluster (queueing, overlap, load
+//! balancing, resource binding) deterministically on one CPU. The MARL
+//! engine (`orchestrator::simloop`) and the paper benches drive it.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Virtual time in seconds.
+pub type Time = f64;
+
+/// Min-heap event queue with FIFO tie-breaking (stable, deterministic).
+#[derive(Debug)]
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Entry<E>>,
+    seq: u64,
+    now: Time,
+}
+
+#[derive(Debug)]
+struct Entry<E> {
+    time: Time,
+    seq: u64,
+    payload: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<E> Eq for Entry<E> {}
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed for min-heap; ties broken by insertion order.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            seq: 0,
+            now: 0.0,
+        }
+    }
+
+    pub fn now(&self) -> Time {
+        self.now
+    }
+
+    /// Schedule `payload` at absolute time `t` (clamped to now).
+    pub fn push_at(&mut self, t: Time, payload: E) {
+        let time = if t < self.now { self.now } else { t };
+        self.heap.push(Entry {
+            time,
+            seq: self.seq,
+            payload,
+        });
+        self.seq += 1;
+    }
+
+    /// Schedule after a delay.
+    pub fn push_in(&mut self, dt: Time, payload: E) {
+        debug_assert!(dt >= 0.0, "negative delay {dt}");
+        self.push_at(self.now + dt, payload);
+    }
+
+    /// Pop the next event, advancing the clock.
+    pub fn pop(&mut self) -> Option<(Time, E)> {
+        self.heap.pop().map(|e| {
+            debug_assert!(e.time >= self.now);
+            self.now = e.time;
+            (e.time, e.payload)
+        })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Accumulates busy device-seconds over a set of devices — the hardware
+/// utilization metric of RQ3 ("percentage of time AI cores remain active").
+#[derive(Debug, Clone, Default)]
+pub struct BusyTracker {
+    busy_device_seconds: f64,
+    /// (time, devices_busy) step series for Fig. 10 style plots.
+    series: Vec<(Time, usize)>,
+    current_busy: usize,
+}
+
+impl BusyTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record `n_devices` busy for `duration` seconds starting at `t`.
+    pub fn add_busy(&mut self, n_devices: usize, duration: Time) {
+        self.busy_device_seconds += n_devices as f64 * duration;
+    }
+
+    pub fn mark(&mut self, t: Time, busy_now: usize) {
+        if self.series.last().map(|&(_, b)| b) != Some(busy_now) {
+            self.series.push((t, busy_now));
+        }
+        self.current_busy = busy_now;
+    }
+
+    pub fn busy_device_seconds(&self) -> f64 {
+        self.busy_device_seconds
+    }
+
+    /// Average utilization over [0, horizon] for a pool of `total` devices.
+    pub fn utilization(&self, total_devices: usize, horizon: Time) -> f64 {
+        if total_devices == 0 || horizon <= 0.0 {
+            return 0.0;
+        }
+        (self.busy_device_seconds / (total_devices as f64 * horizon)).min(1.0)
+    }
+
+    /// Utilization time-series with the given sample period, computed
+    /// from the step series (Fig. 10).
+    pub fn series(&self) -> &[(Time, usize)] {
+        &self.series
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_pop_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push_at(3.0, "c");
+        q.push_at(1.0, "a");
+        q.push_at(2.0, "b");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn ties_are_fifo() {
+        let mut q = EventQueue::new();
+        for i in 0..10 {
+            q.push_at(5.0, i);
+        }
+        let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut q = EventQueue::new();
+        q.push_at(2.0, ());
+        q.push_at(1.0, ());
+        let (t1, _) = q.pop().unwrap();
+        // Past-time push clamps to now.
+        q.push_at(0.5, ());
+        let (t2, _) = q.pop().unwrap();
+        let (t3, _) = q.pop().unwrap();
+        assert_eq!(t1, 1.0);
+        assert_eq!(t2, 1.0);
+        assert_eq!(t3, 2.0);
+        assert_eq!(q.now(), 2.0);
+    }
+
+    #[test]
+    fn push_in_uses_current_time() {
+        let mut q = EventQueue::new();
+        q.push_at(10.0, "first");
+        q.pop();
+        q.push_in(5.0, "second");
+        let (t, _) = q.pop().unwrap();
+        assert_eq!(t, 15.0);
+    }
+
+    #[test]
+    fn busy_tracker_utilization() {
+        let mut b = BusyTracker::new();
+        b.add_busy(4, 10.0); // 40 device-seconds
+        assert!((b.utilization(8, 10.0) - 0.5).abs() < 1e-12);
+        assert!((b.utilization(8, 20.0) - 0.25).abs() < 1e-12);
+        assert_eq!(b.utilization(0, 10.0), 0.0);
+    }
+}

@@ -1,0 +1,651 @@
+//! Experience store (§4.2): the structured data plane between rollout
+//! and training under the disaggregated architecture.
+//!
+//! Multi-table organization: each agent gets a dedicated table (enabling
+//! heterogeneous policies/configs per agent, §4.3). Each table has three
+//! column categories:
+//!  * meta-information — `policy_version`, `sample_id`
+//!    (`{input_id}_{number_of_turns}_{trajectory_id}`, globally unique,
+//!    deterministically ordered, traceable), and a `processing` flag
+//!    (read-but-not-yet-updated);
+//!  * data columns — user-defined fields (prompt, response, rewards…);
+//!  * status columns — one boolean per data column: fully generated?
+//!
+//! Type-aware hybrid storage: simple scalars (int/float/bool) are stored
+//! by value in the table; complex payloads (strings, token lists,
+//! tensors) are stored by reference — the table records only the location
+//! key of a blob parked in the store's arena (standing in for the
+//! Set/Get heterogeneous-object plane of §7).
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+// ---------------------------------------------------------------------------
+// Sample identity
+// ---------------------------------------------------------------------------
+
+/// `sample_id = {input_id}_{number_of_turns}_{trajectory_id}` (§4.2).
+/// Ordering is lexicographic on the numeric triple → deterministic
+/// dispatch order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SampleId {
+    pub input_id: u64,
+    pub turns: u32,
+    pub trajectory_id: u64,
+}
+
+impl SampleId {
+    pub fn new(input_id: u64, turns: u32, trajectory_id: u64) -> Self {
+        SampleId {
+            input_id,
+            turns,
+            trajectory_id,
+        }
+    }
+}
+
+impl fmt::Display for SampleId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}_{}_{}", self.input_id, self.turns, self.trajectory_id)
+    }
+}
+
+/// Combined with `policy_version`, the identifier is globally unique
+/// across asynchronous retries of the same trajectory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SampleKey {
+    pub version: u64,
+    pub id: SampleId,
+}
+
+// ---------------------------------------------------------------------------
+// Hybrid value model
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ColumnType {
+    Int,
+    Float,
+    Bool,
+    /// Complex payload — stored by reference.
+    Blob,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    /// Location key into the blob arena.
+    Ref(u64),
+}
+
+impl Value {
+    pub fn column_type(&self) -> ColumnType {
+        match self {
+            Value::Int(_) => ColumnType::Int,
+            Value::Float(_) => ColumnType::Float,
+            Value::Bool(_) => ColumnType::Bool,
+            Value::Ref(_) => ColumnType::Blob,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+}
+
+/// Opaque complex payloads (token sequences, logprob rows, tensors).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Blob {
+    Tokens(Vec<i32>),
+    Floats(Vec<f32>),
+    Text(String),
+}
+
+// ---------------------------------------------------------------------------
+// Table
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+struct Row {
+    /// Data column values (None until first write).
+    values: Vec<Option<Value>>,
+    /// Paired status columns: value fully generated?
+    status: Vec<bool>,
+    /// Read-but-not-yet-consumed (dispatched to a trainer).
+    processing: bool,
+    /// Insertion sequence — FIFO tie-break within a version.
+    seq: u64,
+}
+
+/// One agent's table.
+#[derive(Debug)]
+pub struct Table {
+    pub agent: String,
+    schema: Vec<(String, ColumnType)>,
+    rows: BTreeMap<SampleKey, Row>,
+    seq: u64,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum StoreError {
+    NoSuchTable(String),
+    NoSuchColumn(String),
+    TypeMismatch { column: String, expected: ColumnType },
+    DuplicateSample(SampleKey),
+    UnknownSample(SampleKey),
+}
+
+impl fmt::Display for StoreError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StoreError::NoSuchTable(a) => write!(f, "no table for agent {a}"),
+            StoreError::NoSuchColumn(c) => write!(f, "no column {c}"),
+            StoreError::TypeMismatch { column, expected } => {
+                write!(f, "column {column} expects {expected:?}")
+            }
+            StoreError::DuplicateSample(k) => write!(f, "duplicate sample {} v{}", k.id, k.version),
+            StoreError::UnknownSample(k) => write!(f, "unknown sample {} v{}", k.id, k.version),
+        }
+    }
+}
+
+impl std::error::Error for StoreError {}
+
+impl Table {
+    fn col(&self, name: &str) -> Result<usize, StoreError> {
+        self.schema
+            .iter()
+            .position(|(n, _)| n == name)
+            .ok_or_else(|| StoreError::NoSuchColumn(name.to_string()))
+    }
+
+    fn insert(&mut self, key: SampleKey) -> Result<(), StoreError> {
+        if self.rows.contains_key(&key) {
+            return Err(StoreError::DuplicateSample(key));
+        }
+        let n = self.schema.len();
+        self.rows.insert(
+            key,
+            Row {
+                values: vec![None; n],
+                status: vec![false; n],
+                processing: false,
+                seq: self.seq,
+            },
+        );
+        self.seq += 1;
+        Ok(())
+    }
+
+    fn set(&mut self, key: SampleKey, column: &str, value: Value) -> Result<(), StoreError> {
+        let ci = self.col(column)?;
+        let expected = self.schema[ci].1;
+        if value.column_type() != expected {
+            return Err(StoreError::TypeMismatch {
+                column: column.to_string(),
+                expected,
+            });
+        }
+        let row = self
+            .rows
+            .get_mut(&key)
+            .ok_or(StoreError::UnknownSample(key))?;
+        row.values[ci] = Some(value);
+        row.status[ci] = true;
+        Ok(())
+    }
+
+    fn ready(&self, key: &SampleKey) -> bool {
+        self.rows
+            .get(key)
+            .map(|r| !r.processing && r.status.iter().all(|&s| s))
+            .unwrap_or(false)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Store
+// ---------------------------------------------------------------------------
+
+/// A sample handed to the training engine.
+#[derive(Debug, Clone)]
+pub struct FetchedSample {
+    pub key: SampleKey,
+    pub values: Vec<(String, Value)>,
+}
+
+impl FetchedSample {
+    pub fn value(&self, column: &str) -> Option<&Value> {
+        self.values
+            .iter()
+            .find(|(n, _)| n == column)
+            .map(|(_, v)| v)
+    }
+}
+
+#[derive(Default)]
+struct Inner {
+    tables: BTreeMap<String, Table>,
+    blobs: BTreeMap<u64, Blob>,
+}
+
+/// The experience store: thread-safe (rollout workers produce, trainer
+/// process groups consume), deterministic dispatch order.
+pub struct ExperienceStore {
+    inner: Mutex<Inner>,
+    next_blob: AtomicU64,
+}
+
+impl Default for ExperienceStore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ExperienceStore {
+    pub fn new() -> Self {
+        ExperienceStore {
+            inner: Mutex::new(Inner::default()),
+            next_blob: AtomicU64::new(1),
+        }
+    }
+
+    /// Create (or replace) an agent's table with the given data columns.
+    pub fn create_table(&self, agent: &str, schema: &[(&str, ColumnType)]) {
+        let mut g = self.inner.lock().unwrap();
+        g.tables.insert(
+            agent.to_string(),
+            Table {
+                agent: agent.to_string(),
+                schema: schema
+                    .iter()
+                    .map(|(n, t)| (n.to_string(), *t))
+                    .collect(),
+                rows: BTreeMap::new(),
+                seq: 0,
+            },
+        );
+    }
+
+    pub fn agents(&self) -> Vec<String> {
+        self.inner.lock().unwrap().tables.keys().cloned().collect()
+    }
+
+    /// Register a new sample row (meta columns only).
+    pub fn insert(&self, agent: &str, version: u64, id: SampleId) -> Result<(), StoreError> {
+        let mut g = self.inner.lock().unwrap();
+        let t = g
+            .tables
+            .get_mut(agent)
+            .ok_or_else(|| StoreError::NoSuchTable(agent.to_string()))?;
+        t.insert(SampleKey { version, id })
+    }
+
+    /// Write a scalar field; marks its status column generated.
+    pub fn set_value(
+        &self,
+        agent: &str,
+        version: u64,
+        id: SampleId,
+        column: &str,
+        value: Value,
+    ) -> Result<(), StoreError> {
+        let mut g = self.inner.lock().unwrap();
+        let t = g
+            .tables
+            .get_mut(agent)
+            .ok_or_else(|| StoreError::NoSuchTable(agent.to_string()))?;
+        t.set(SampleKey { version, id }, column, value)
+    }
+
+    /// Write a complex payload: parks the blob, stores the reference
+    /// (type-aware hybrid storage).
+    pub fn set_blob(
+        &self,
+        agent: &str,
+        version: u64,
+        id: SampleId,
+        column: &str,
+        blob: Blob,
+    ) -> Result<u64, StoreError> {
+        let blob_key = self.next_blob.fetch_add(1, Ordering::Relaxed);
+        let mut g = self.inner.lock().unwrap();
+        let t = g
+            .tables
+            .get_mut(agent)
+            .ok_or_else(|| StoreError::NoSuchTable(agent.to_string()))?;
+        t.set(SampleKey { version, id }, column, Value::Ref(blob_key))?;
+        g.blobs.insert(blob_key, blob);
+        Ok(blob_key)
+    }
+
+    pub fn blob(&self, key: u64) -> Option<Blob> {
+        self.inner.lock().unwrap().blobs.get(&key).cloned()
+    }
+
+    /// Number of fully-generated, not-yet-dispatched samples — the
+    /// micro-batch trigger input (§4.3).
+    pub fn count_ready(&self, agent: &str, version: Option<u64>) -> usize {
+        let g = self.inner.lock().unwrap();
+        g.tables
+            .get(agent)
+            .map(|t| {
+                t.rows
+                    .keys()
+                    .filter(|k| version.map(|v| k.version == v).unwrap_or(true))
+                    .filter(|k| t.ready(k))
+                    .count()
+            })
+            .unwrap_or(0)
+    }
+
+    /// Dispatch up to `limit` ready samples (deterministic order: version,
+    /// then sample id), marking them `processing` so concurrent fetches
+    /// never double-dispatch. `version` filters to one policy snapshot —
+    /// the consistency guarantee that keeps training on-policy.
+    pub fn fetch_ready(
+        &self,
+        agent: &str,
+        version: Option<u64>,
+        limit: usize,
+    ) -> Vec<FetchedSample> {
+        let mut g = self.inner.lock().unwrap();
+        let Inner { tables, blobs: _ } = &mut *g;
+        let Some(t) = tables.get_mut(agent) else {
+            return Vec::new();
+        };
+        let keys: Vec<SampleKey> = t
+            .rows
+            .iter()
+            .filter(|(k, r)| {
+                version.map(|v| k.version == v).unwrap_or(true)
+                    && !r.processing
+                    && r.status.iter().all(|&s| s)
+            })
+            .map(|(k, _)| *k)
+            .take(limit)
+            .collect();
+        let mut out = Vec::with_capacity(keys.len());
+        for k in keys {
+            let row = t.rows.get_mut(&k).unwrap();
+            row.processing = true;
+            let values = t
+                .schema
+                .iter()
+                .zip(&row.values)
+                .map(|((n, _), v)| (n.clone(), v.clone().unwrap()))
+                .collect();
+            out.push(FetchedSample { key: k, values });
+        }
+        out
+    }
+
+    /// Consume dispatched samples after their gradient is computed
+    /// (removes rows and their blobs).
+    pub fn complete(&self, agent: &str, keys: &[SampleKey]) -> Result<(), StoreError> {
+        let mut g = self.inner.lock().unwrap();
+        let t = g
+            .tables
+            .get_mut(agent)
+            .ok_or_else(|| StoreError::NoSuchTable(agent.to_string()))?;
+        let mut blob_keys = Vec::new();
+        for k in keys {
+            let row = t.rows.remove(k).ok_or(StoreError::UnknownSample(*k))?;
+            for v in row.values.into_iter().flatten() {
+                if let Value::Ref(b) = v {
+                    blob_keys.push(b);
+                }
+            }
+        }
+        for b in blob_keys {
+            g.blobs.remove(&b);
+        }
+        Ok(())
+    }
+
+    /// Fault tolerance: a trainer died — return its samples to the pool.
+    pub fn requeue(&self, agent: &str, keys: &[SampleKey]) -> Result<(), StoreError> {
+        let mut g = self.inner.lock().unwrap();
+        let t = g
+            .tables
+            .get_mut(agent)
+            .ok_or_else(|| StoreError::NoSuchTable(agent.to_string()))?;
+        for k in keys {
+            let row = t.rows.get_mut(k).ok_or(StoreError::UnknownSample(*k))?;
+            row.processing = false;
+        }
+        Ok(())
+    }
+
+    /// Drop all rows belonging to policy versions older than `min_version`
+    /// (stale data from cancelled asynchronous rollouts).
+    pub fn evict_stale(&self, agent: &str, min_version: u64) -> usize {
+        let mut g = self.inner.lock().unwrap();
+        let Some(t) = g.tables.get_mut(agent) else {
+            return 0;
+        };
+        let stale: Vec<SampleKey> = t
+            .rows
+            .keys()
+            .filter(|k| k.version < min_version)
+            .copied()
+            .collect();
+        for k in &stale {
+            t.rows.remove(k);
+        }
+        stale.len()
+    }
+
+    pub fn total_rows(&self) -> usize {
+        let g = self.inner.lock().unwrap();
+        g.tables.values().map(|t| t.rows.len()).sum()
+    }
+
+    pub fn total_blobs(&self) -> usize {
+        self.inner.lock().unwrap().blobs.len()
+    }
+}
+
+/// The standard GRPO sample schema used by the orchestrator.
+pub fn grpo_schema() -> Vec<(&'static str, ColumnType)> {
+    vec![
+        ("prompt", ColumnType::Blob),
+        ("response", ColumnType::Blob),
+        ("old_logp", ColumnType::Blob),
+        ("reward", ColumnType::Float),
+        ("advantage", ColumnType::Float),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::forall;
+
+    fn store_with(agent: &str) -> ExperienceStore {
+        let s = ExperienceStore::new();
+        s.create_table(agent, &grpo_schema());
+        s
+    }
+
+    fn fill(s: &ExperienceStore, agent: &str, v: u64, id: SampleId) {
+        s.insert(agent, v, id).unwrap();
+        s.set_blob(agent, v, id, "prompt", Blob::Tokens(vec![1, 2])).unwrap();
+        s.set_blob(agent, v, id, "response", Blob::Tokens(vec![3])).unwrap();
+        s.set_blob(agent, v, id, "old_logp", Blob::Floats(vec![-0.5])).unwrap();
+        s.set_value(agent, v, id, "reward", Value::Float(0.7)).unwrap();
+        s.set_value(agent, v, id, "advantage", Value::Float(0.1)).unwrap();
+    }
+
+    #[test]
+    fn sample_id_format_and_order() {
+        let id = SampleId::new(12, 3, 7);
+        assert_eq!(id.to_string(), "12_3_7");
+        let a = SampleId::new(1, 1, 1);
+        let b = SampleId::new(1, 2, 0);
+        let c = SampleId::new(2, 0, 0);
+        assert!(a < b && b < c);
+    }
+
+    #[test]
+    fn partial_rows_are_not_ready() {
+        let s = store_with("a");
+        let id = SampleId::new(0, 1, 0);
+        s.insert("a", 1, id).unwrap();
+        assert_eq!(s.count_ready("a", None), 0);
+        s.set_blob("a", 1, id, "prompt", Blob::Tokens(vec![1])).unwrap();
+        s.set_blob("a", 1, id, "response", Blob::Tokens(vec![2])).unwrap();
+        s.set_blob("a", 1, id, "old_logp", Blob::Floats(vec![-1.0])).unwrap();
+        s.set_value("a", 1, id, "reward", Value::Float(1.0)).unwrap();
+        assert_eq!(s.count_ready("a", None), 0); // advantage still missing
+        s.set_value("a", 1, id, "advantage", Value::Float(0.5)).unwrap();
+        assert_eq!(s.count_ready("a", None), 1);
+    }
+
+    #[test]
+    fn fetch_marks_processing_no_double_dispatch() {
+        let s = store_with("a");
+        for i in 0..5 {
+            fill(&s, "a", 1, SampleId::new(i, 1, 0));
+        }
+        let first = s.fetch_ready("a", Some(1), 3);
+        assert_eq!(first.len(), 3);
+        let second = s.fetch_ready("a", Some(1), 10);
+        assert_eq!(second.len(), 2); // only the remaining two
+        let third = s.fetch_ready("a", Some(1), 10);
+        assert!(third.is_empty());
+    }
+
+    #[test]
+    fn version_filtering_keeps_on_policy() {
+        let s = store_with("a");
+        fill(&s, "a", 1, SampleId::new(0, 1, 0));
+        fill(&s, "a", 2, SampleId::new(1, 1, 0));
+        assert_eq!(s.count_ready("a", Some(1)), 1);
+        assert_eq!(s.count_ready("a", Some(2)), 1);
+        assert_eq!(s.count_ready("a", None), 2);
+        let f = s.fetch_ready("a", Some(2), 10);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].key.version, 2);
+    }
+
+    #[test]
+    fn complete_removes_rows_and_blobs() {
+        let s = store_with("a");
+        fill(&s, "a", 1, SampleId::new(0, 1, 0));
+        assert_eq!(s.total_blobs(), 3);
+        let f = s.fetch_ready("a", None, 1);
+        s.complete("a", &[f[0].key]).unwrap();
+        assert_eq!(s.total_rows(), 0);
+        assert_eq!(s.total_blobs(), 0);
+    }
+
+    #[test]
+    fn requeue_returns_samples() {
+        let s = store_with("a");
+        fill(&s, "a", 1, SampleId::new(0, 1, 0));
+        let f = s.fetch_ready("a", None, 1);
+        assert_eq!(s.count_ready("a", None), 0);
+        s.requeue("a", &[f[0].key]).unwrap();
+        assert_eq!(s.count_ready("a", None), 1);
+    }
+
+    #[test]
+    fn evict_stale_versions() {
+        let s = store_with("a");
+        fill(&s, "a", 1, SampleId::new(0, 1, 0));
+        fill(&s, "a", 2, SampleId::new(1, 1, 0));
+        assert_eq!(s.evict_stale("a", 2), 1);
+        assert_eq!(s.count_ready("a", None), 1);
+    }
+
+    #[test]
+    fn duplicate_and_type_errors() {
+        let s = store_with("a");
+        let id = SampleId::new(0, 1, 0);
+        s.insert("a", 1, id).unwrap();
+        assert!(matches!(
+            s.insert("a", 1, id),
+            Err(StoreError::DuplicateSample(_))
+        ));
+        assert!(matches!(
+            s.set_value("a", 1, id, "reward", Value::Bool(true)),
+            Err(StoreError::TypeMismatch { .. })
+        ));
+        assert!(matches!(
+            s.set_value("a", 1, id, "nope", Value::Float(0.0)),
+            Err(StoreError::NoSuchColumn(_))
+        ));
+        assert!(matches!(
+            s.insert("b", 1, id),
+            Err(StoreError::NoSuchTable(_))
+        ));
+    }
+
+    #[test]
+    fn per_agent_tables_are_independent() {
+        let s = ExperienceStore::new();
+        s.create_table("a", &grpo_schema());
+        s.create_table("b", &[("reward", ColumnType::Float)]);
+        fill(&s, "a", 1, SampleId::new(0, 1, 0));
+        let id = SampleId::new(0, 1, 0); // same id, different table — fine
+        s.insert("b", 1, id).unwrap();
+        s.set_value("b", 1, id, "reward", Value::Float(1.0)).unwrap();
+        assert_eq!(s.count_ready("a", None), 1);
+        assert_eq!(s.count_ready("b", None), 1);
+    }
+
+    #[test]
+    fn fetch_order_is_deterministic() {
+        let s = store_with("a");
+        // Insert out of order.
+        for &(inp, tr) in &[(3u64, 0u64), (1, 1), (1, 0), (2, 0)] {
+            fill(&s, "a", 1, SampleId::new(inp, 1, tr));
+        }
+        let f = s.fetch_ready("a", None, 10);
+        let ids: Vec<String> = f.iter().map(|x| x.key.id.to_string()).collect();
+        assert_eq!(ids, vec!["1_1_0", "1_1_1", "2_1_0", "3_1_0"]);
+    }
+
+    #[test]
+    fn prop_dispatch_exactly_once() {
+        forall("store dispatches each ready sample exactly once", 60, |rng| {
+            let s = store_with("a");
+            let n = rng.below(40) as usize + 1;
+            for i in 0..n {
+                fill(&s, "a", 1, SampleId::new(i as u64, 1, 0));
+            }
+            let mut seen = std::collections::BTreeSet::new();
+            loop {
+                let batch = rng.below(7) as usize + 1;
+                let f = s.fetch_ready("a", None, batch);
+                if f.is_empty() {
+                    break;
+                }
+                for x in &f {
+                    assert!(seen.insert(x.key), "double dispatch {:?}", x.key);
+                }
+                // Randomly complete or requeue-and-refetch.
+                let keys: Vec<SampleKey> = f.iter().map(|x| x.key).collect();
+                if rng.f64() < 0.8 {
+                    s.complete("a", &keys).unwrap();
+                } else {
+                    s.requeue("a", &keys).unwrap();
+                    for k in &keys {
+                        seen.remove(k);
+                    }
+                }
+            }
+            assert_eq!(seen.len(), n);
+            assert_eq!(s.total_rows(), 0);
+        });
+    }
+}

@@ -1,0 +1,194 @@
+//! Process groups (§6.1): gang-scheduled lifecycle management of all
+//! training processes belonging to one agent.
+//!
+//! "Suspend-to-destroy": suspending a group *terminates* its processes
+//! and returns every device to the cluster pool immediately (unlike
+//! naive suspension that parks process contexts in HBM); resuming
+//! re-creates the group from the last checkpoint, preferring the node it
+//! previously occupied (locality-aware, §6.2) to minimize state-swap
+//! cost.
+
+use crate::cluster::{DevicePool, NodeId, Placement, PlacementStrategy};
+use crate::config::ModelScale;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum GroupState {
+    /// No processes, no devices; states (if any) checkpointed on host.
+    Destroyed,
+    /// Gang-scheduled and running on a placement.
+    Active(Placement),
+}
+
+#[derive(Debug)]
+pub struct ProcessGroup {
+    pub agent: usize,
+    pub model: ModelScale,
+    pub state: GroupState,
+    /// Node of the last activation (locality preference on resume).
+    pub last_node: Option<NodeId>,
+    /// Checkpoint bookkeeping: how many times states were saved/restored.
+    pub swaps_out: u64,
+    pub swaps_in: u64,
+    /// Micro batches processed since last parameter update (gradient
+    /// cache occupancy, §4.3).
+    pub cached_micro_batches: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ActivateError {
+    AlreadyActive,
+    InsufficientResources,
+}
+
+impl ProcessGroup {
+    pub fn new(agent: usize, model: ModelScale) -> Self {
+        ProcessGroup {
+            agent,
+            model,
+            state: GroupState::Destroyed,
+            last_node: None,
+            swaps_out: 0,
+            swaps_in: 0,
+            cached_micro_batches: 0,
+        }
+    }
+
+    pub fn is_active(&self) -> bool {
+        matches!(self.state, GroupState::Active(_))
+    }
+
+    pub fn devices_needed(&self) -> usize {
+        self.model.train_group_devices()
+    }
+
+    /// Gang-schedule the group: all devices or nothing (§6.1 cites
+    /// Feitelson's gang scheduling). Returns whether the placement landed
+    /// on the preferred (previous) node — the swap-in path differs.
+    pub fn activate(
+        &mut self,
+        pool: &mut DevicePool,
+        strategy: PlacementStrategy,
+        dpn: usize,
+    ) -> Result<(Placement, bool), ActivateError> {
+        if self.is_active() {
+            return Err(ActivateError::AlreadyActive);
+        }
+        let placement = pool
+            .allocate(self.devices_needed(), strategy, self.last_node)
+            .ok_or(ActivateError::InsufficientResources)?;
+        let node = placement.devices[0] / dpn;
+        let local = self.last_node == Some(node) || self.last_node.is_none();
+        self.last_node = Some(node);
+        self.state = GroupState::Active(placement.clone());
+        self.swaps_in += u64::from(!local || self.swaps_out > 0);
+        Ok((placement, local))
+    }
+
+    /// Suspend-to-destroy: checkpoint + terminate + release all devices.
+    pub fn destroy(&mut self, pool: &mut DevicePool) -> Option<Placement> {
+        match std::mem::replace(&mut self.state, GroupState::Destroyed) {
+            GroupState::Active(p) => {
+                pool.release(&p);
+                self.swaps_out += 1;
+                self.cached_micro_batches = 0;
+                Some(p)
+            }
+            GroupState::Destroyed => None,
+        }
+    }
+
+    pub fn placement(&self) -> Option<&Placement> {
+        match &self.state {
+            GroupState::Active(p) => Some(p),
+            GroupState::Destroyed => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    fn pool() -> (DevicePool, usize) {
+        let cfg = ClusterConfig {
+            nodes: 4,
+            devices_per_node: 16,
+            ..ClusterConfig::default()
+        };
+        (DevicePool::whole_cluster(cfg), cfg.devices_per_node)
+    }
+
+    #[test]
+    fn gang_all_or_nothing() {
+        let (mut pool, dpn) = pool();
+        let mut g = ProcessGroup::new(0, ModelScale::B14); // needs 8
+        let (p, _) = g.activate(&mut pool, PlacementStrategy::StrictPack, dpn).unwrap();
+        assert_eq!(p.devices.len(), 8);
+        assert!(g.is_active());
+        assert_eq!(pool.in_use(), 8);
+        assert!(matches!(
+            g.activate(&mut pool, PlacementStrategy::StrictPack, dpn),
+            Err(ActivateError::AlreadyActive)
+        ));
+    }
+
+    #[test]
+    fn destroy_releases_everything() {
+        let (mut pool, dpn) = pool();
+        let mut g = ProcessGroup::new(0, ModelScale::B32); // needs 16
+        g.activate(&mut pool, PlacementStrategy::StrictPack, dpn).unwrap();
+        g.cached_micro_batches = 3;
+        let released = g.destroy(&mut pool).unwrap();
+        assert_eq!(released.devices.len(), 16);
+        assert_eq!(pool.in_use(), 0);
+        assert!(!g.is_active());
+        assert_eq!(g.cached_micro_batches, 0);
+        assert_eq!(g.swaps_out, 1);
+        assert!(g.destroy(&mut pool).is_none()); // idempotent
+    }
+
+    #[test]
+    fn resume_prefers_previous_node() {
+        let (mut pool, dpn) = pool();
+        let mut g = ProcessGroup::new(0, ModelScale::B14);
+        let (p1, _) = g.activate(&mut pool, PlacementStrategy::StrictPack, dpn).unwrap();
+        let node1 = p1.devices[0] / dpn;
+        g.destroy(&mut pool);
+        // Occupy part of the cluster so the preference matters.
+        let _other = pool.allocate(8, PlacementStrategy::StrictPack, None);
+        let (p2, local) = g.activate(&mut pool, PlacementStrategy::StrictPack, dpn).unwrap();
+        assert_eq!(p2.devices[0] / dpn, node1);
+        assert!(local);
+    }
+
+    #[test]
+    fn resume_elsewhere_when_previous_node_full() {
+        let (mut pool, dpn) = pool();
+        let mut g = ProcessGroup::new(0, ModelScale::B14);
+        let (p1, _) = g.activate(&mut pool, PlacementStrategy::StrictPack, dpn).unwrap();
+        let node1 = p1.devices[0] / dpn;
+        g.destroy(&mut pool);
+        // Fill the previous node completely.
+        let mut held = Vec::new();
+        while pool.available_on(node1) > 0 {
+            held.push(pool.allocate(1, PlacementStrategy::StrictPack, Some(node1)).unwrap());
+        }
+        let (p2, local) = g.activate(&mut pool, PlacementStrategy::StrictPack, dpn).unwrap();
+        assert_ne!(p2.devices[0] / dpn, node1);
+        assert!(!local); // cross-node resume → RH2D swap path
+    }
+
+    #[test]
+    fn insufficient_resources_is_clean() {
+        let (mut pool, dpn) = pool();
+        let _hog = pool.allocate(60, PlacementStrategy::Pack, None).unwrap();
+        let mut g = ProcessGroup::new(0, ModelScale::B14);
+        assert!(matches!(
+            g.activate(&mut pool, PlacementStrategy::StrictPack, dpn),
+            Err(ActivateError::InsufficientResources)
+        ));
+        assert!(!g.is_active());
+        assert_eq!(pool.in_use(), 60);
+    }
+}

@@ -1,0 +1,174 @@
+//! Training-state swap (§6.2, Fig. 6): move weights + optimizer states
+//! between device and host memory through the Set/Get API when process
+//! groups are destroyed/re-created.
+//!
+//! Cost model (validated against Fig. 11's measurements in
+//! `benches`): per-group states are ZeRO-3 sharded, every device
+//! offloads its shard over the host link in parallel (the link is shared
+//! by the devices of one node, so effective per-shard bandwidth divides
+//! by the node's concurrently-offloading devices); suspend/resume of the
+//! process group itself is a near-constant control-plane cost.
+
+use crate::config::{ClusterConfig, ModelScale};
+use crate::memstore::{Location, MemStore, TransferModel};
+
+/// Control-plane constants (Fig. 11: suspend/resume "minimal and nearly
+/// constant regardless of model scale").
+pub const SUSPEND_S: f64 = 0.35;
+pub const RESUME_S: f64 = 0.55;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SwapCost {
+    /// Process-group control-plane (suspend or resume).
+    pub control_s: f64,
+    /// Data movement (offload or onload).
+    pub transfer_s: f64,
+}
+
+impl SwapCost {
+    pub fn total(&self) -> f64 {
+        self.control_s + self.transfer_s
+    }
+}
+
+fn shard_transfer_s(model: ModelScale, cfg: &ClusterConfig, bw: f64) -> f64 {
+    let group = model.train_group_devices() as f64;
+    let shard_bytes = model.train_state_bytes() / group;
+    // Every device has a dedicated host link (`bw`), but concurrent
+    // offloads on one node contend for host memory bandwidth. A group
+    // spans ceil(group/devices_per_node) nodes.
+    let nodes = (group / cfg.devices_per_node as f64).ceil();
+    let devices_per_node_in_group = group / nodes;
+    let eff_bw = bw.min(cfg.host_mem_bw / devices_per_node_in_group);
+    shard_bytes / eff_bw + cfg.control_op_s
+}
+
+/// Swap-out = suspend the process group + offload states D2H.
+pub fn swap_out_cost(model: ModelScale, cfg: &ClusterConfig) -> SwapCost {
+    SwapCost {
+        control_s: SUSPEND_S,
+        transfer_s: shard_transfer_s(model, cfg, cfg.h2d_bw),
+    }
+}
+
+/// Swap-in = re-create the process group + onload states.
+/// `local` = resumed on the node holding the checkpoint (H2D); otherwise
+/// the RH2D path (RDMA staging) applies.
+pub fn swap_in_cost(model: ModelScale, cfg: &ClusterConfig, local: bool) -> SwapCost {
+    let bw = if local {
+        cfg.h2d_bw
+    } else {
+        cfg.h2d_bw.min(cfg.rdma_bw)
+    };
+    let penalty = if local { 1.0 } else { 1.15 }; // staging overhead
+    SwapCost {
+        control_s: RESUME_S,
+        transfer_s: shard_transfer_s(model, cfg, bw) * penalty,
+    }
+}
+
+/// Execute a swap-out against the real object store (used by the real
+/// mini-cluster and the Fig. 6 integration test): publishes each state
+/// shard under `agent/<id>/state`, returns the modeled cost.
+pub fn swap_out(
+    store: &MemStore,
+    transfer: &TransferModel,
+    agent: usize,
+    model: ModelScale,
+    device0: usize,
+    payload: Option<Vec<u8>>,
+) -> SwapCost {
+    let node = device0 / transfer.cfg.devices_per_node;
+    store.set(
+        &format!("agent/{agent}/train_state"),
+        Location::Host(node),
+        model.train_state_bytes(),
+        payload,
+    );
+    swap_out_cost(model, &transfer.cfg)
+}
+
+/// Execute a swap-in: resolves the checkpoint via Get, relocates it to
+/// the destination device, returns the modeled cost.
+pub fn swap_in(
+    store: &MemStore,
+    transfer: &TransferModel,
+    agent: usize,
+    model: ModelScale,
+    dst_device: usize,
+) -> Option<SwapCost> {
+    let key = format!("agent/{agent}/train_state");
+    let meta = store.meta(&key)?;
+    let local = match meta.location {
+        Location::Host(n) => n == dst_device / transfer.cfg.devices_per_node,
+        Location::Device(_) => false,
+    };
+    store.take(&key, Location::Device(dst_device), transfer)?;
+    Some(swap_in_cost(model, &transfer.cfg, local))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ClusterConfig {
+        ClusterConfig::default()
+    }
+
+    #[test]
+    fn fig11_offload_grows_with_model_size() {
+        let sizes = [ModelScale::B3, ModelScale::B7, ModelScale::B14, ModelScale::B32];
+        let costs: Vec<f64> = sizes
+            .iter()
+            .map(|&m| swap_out_cost(m, &cfg()).transfer_s)
+            .collect();
+        for w in costs.windows(2) {
+            assert!(w[1] > w[0], "{costs:?}");
+        }
+        // Paper band: 0.5 s (3B) → 3.8 s (32B).
+        assert!(costs[0] > 0.1 && costs[0] < 1.2, "3B offload {}", costs[0]);
+        assert!(costs[3] > 1.8 && costs[3] < 6.0, "32B offload {}", costs[3]);
+    }
+
+    #[test]
+    fn fig11_control_plane_constant() {
+        let a = swap_out_cost(ModelScale::B3, &cfg()).control_s;
+        let b = swap_out_cost(ModelScale::B32, &cfg()).control_s;
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn fig11_total_swap_within_budget() {
+        // "our state swap overhead is only 11 s for the largest model".
+        let total = swap_out_cost(ModelScale::B32, &cfg()).total()
+            + swap_in_cost(ModelScale::B32, &cfg(), true).total();
+        assert!(total < 12.0, "total {total}");
+        assert!(total > 3.0, "{total}"); // it is not free either
+    }
+
+    #[test]
+    fn nonlocal_resume_costs_more() {
+        let local = swap_in_cost(ModelScale::B14, &cfg(), true).total();
+        let remote = swap_in_cost(ModelScale::B14, &cfg(), false).total();
+        assert!(remote > local);
+    }
+
+    #[test]
+    fn store_roundtrip_relocates_state() {
+        let store = MemStore::new();
+        let t = TransferModel::new(cfg());
+        let out = swap_out(&store, &t, 3, ModelScale::B14, 32, Some(vec![7; 16]));
+        assert!(out.total() > SUSPEND_S);
+        let meta = store.meta("agent/3/train_state").unwrap();
+        assert_eq!(meta.location, Location::Host(2)); // device 32 → node 2
+        // Resume on the same node → H2D; meta moves to the device.
+        let in_local = swap_in(&store, &t, 3, ModelScale::B14, 33).unwrap();
+        let in_cost_remote = swap_in_cost(ModelScale::B14, &cfg(), false);
+        assert!(in_local.total() < in_cost_remote.total() + RESUME_S);
+        assert_eq!(
+            store.meta("agent/3/train_state").unwrap().location,
+            Location::Device(33)
+        );
+        assert!(swap_in(&store, &t, 99, ModelScale::B14, 0).is_none());
+    }
+}

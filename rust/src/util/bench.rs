@@ -1,0 +1,109 @@
+//! Micro-bench harness (substrate; `criterion` is not vendored).
+//!
+//! Warmup + timed iterations with mean/std/min reporting; used by the
+//! `cargo bench` targets (`harness = false`). Deliberately simple: fixed
+//! iteration counts scaled to hit a target measurement time, no outlier
+//! rejection beyond reporting min.
+
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub std: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10} iters   mean {:>12}   min {:>12}   ±{}",
+            self.name,
+            self.iters,
+            fmt_dur(self.mean),
+            fmt_dur(self.min),
+            fmt_dur(self.std),
+        )
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.2}s", ns / 1e9)
+    }
+}
+
+/// Benchmark `f`, auto-scaling iteration count to ~`target` total runtime.
+pub fn bench<F: FnMut()>(name: &str, target: Duration, mut f: F) -> BenchResult {
+    // Warmup + calibration.
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().max(Duration::from_nanos(20));
+    let iters = (target.as_nanos() / once.as_nanos()).clamp(3, 10_000) as u64;
+
+    let mut s = Summary::new();
+    let mut min = Duration::MAX;
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        let dt = t.elapsed();
+        s.add(dt.as_secs_f64());
+        min = min.min(dt);
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean: Duration::from_secs_f64(s.mean()),
+        std: Duration::from_secs_f64(s.std()),
+        min,
+    }
+}
+
+/// Run-once timing for expensive end-to-end benches (paper tables).
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, Duration) {
+    let t = Instant::now();
+    let out = f();
+    (out, t.elapsed())
+}
+
+/// Prevent the optimizer from discarding a computed value.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("spin", Duration::from_millis(20), || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc);
+        });
+        assert!(r.iters >= 3);
+        assert!(r.mean > Duration::ZERO);
+        assert!(r.min <= r.mean);
+    }
+
+    #[test]
+    fn fmt_dur_units() {
+        assert!(fmt_dur(Duration::from_nanos(500)).ends_with("ns"));
+        assert!(fmt_dur(Duration::from_micros(50)).ends_with("µs"));
+        assert!(fmt_dur(Duration::from_millis(5)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).ends_with("s"));
+    }
+}

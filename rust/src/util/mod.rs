@@ -1,0 +1,10 @@
+//! Substrate utilities built from scratch for the offline image:
+//! PRNG + distributions, JSON, CLI parsing, statistics, bench harness,
+//! and a tiny property-testing helper.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,61 @@
+//! Property-testing helper (substrate; the `proptest` crate is not
+//! vendored). Runs a property over many seeded random cases and reports
+//! the failing seed so a case can be replayed deterministically:
+//!
+//! ```
+//! use flexmarl::util::proptest::forall;
+//! forall("sorted stays sorted", 200, |rng| {
+//!     let mut v: Vec<u64> = (0..rng.below(50)).map(|_| rng.below(1000)).collect();
+//!     v.sort();
+//!     assert!(v.windows(2).all(|w| w[0] <= w[1]));
+//! });
+//! ```
+
+use super::rng::Pcg64;
+
+/// Run `prop` for `cases` seeded inputs; panic with the seed on failure.
+pub fn forall<F: Fn(&mut Pcg64) + std::panic::RefUnwindSafe>(name: &str, cases: u64, prop: F) {
+    for seed in 0..cases {
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Pcg64::with_stream(seed, 0x9e37_79b9_7f4a_7c15);
+            prop(&mut rng);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| payload.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!("property '{name}' failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Replay a single seed (debugging helper).
+pub fn replay<F: FnOnce(&mut Pcg64)>(seed: u64, prop: F) {
+    let mut rng = Pcg64::with_stream(seed, 0x9e37_79b9_7f4a_7c15);
+    prop(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall("trivial", 50, |rng| {
+            let x = rng.below(100);
+            assert!(x < 100);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let result = std::panic::catch_unwind(|| {
+            forall("always-fails", 3, |_| panic!("boom"));
+        });
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("seed 0"), "{msg}");
+    }
+}

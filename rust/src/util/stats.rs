@@ -1,0 +1,253 @@
+//! Streaming statistics + fixed-bucket histograms for metrics and the
+//! bench harness (criterion is not vendored; `bench.rs` builds on this).
+
+/// Welford online mean/variance plus min/max.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.min }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.max }
+    }
+
+    pub fn merge(&mut self, other: &Summary) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = (self.n + other.n) as f64;
+        let d = other.mean - self.mean;
+        let mean = self.mean + d * other.n as f64 / n;
+        self.m2 += other.m2 + d * d * self.n as f64 * other.n as f64 / n;
+        self.mean = mean;
+        self.n += other.n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Exact-percentile reservoir: keeps every sample (fine at our scales),
+/// sorts lazily on query.
+#[derive(Debug, Clone, Default)]
+pub struct Percentiles {
+    xs: Vec<f64>,
+}
+
+impl Percentiles {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.xs.push(x);
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    /// q in [0, 1]; nearest-rank.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.xs.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.xs.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((s.len() as f64 - 1.0) * q.clamp(0.0, 1.0)).floor() as usize;
+        s[idx]
+    }
+
+    pub fn median(&self) -> f64 {
+        self.quantile(0.5)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            0.0
+        } else {
+            self.xs.iter().sum::<f64>() / self.xs.len() as f64
+        }
+    }
+}
+
+/// Log-spaced latency histogram (for Fig. 1a style CDFs).
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    lo: f64,
+    ratio: f64,
+    buckets: Vec<u64>,
+    underflow: u64,
+    overflow: u64,
+}
+
+impl LogHistogram {
+    /// Buckets geometrically spanning [lo, hi).
+    pub fn new(lo: f64, hi: f64, n: usize) -> Self {
+        assert!(lo > 0.0 && hi > lo && n > 0);
+        LogHistogram {
+            lo,
+            ratio: (hi / lo).powf(1.0 / n as f64),
+            buckets: vec![0; n],
+            underflow: 0,
+            overflow: 0,
+        }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        if x < self.lo {
+            self.underflow += 1;
+            return;
+        }
+        let idx = (x / self.lo).ln() / self.ratio.ln();
+        let idx = idx as usize;
+        if idx >= self.buckets.len() {
+            self.overflow += 1;
+        } else {
+            self.buckets[idx] += 1;
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.buckets.iter().sum::<u64>() + self.underflow + self.overflow
+    }
+
+    /// (bucket_upper_bound, cumulative_fraction) series — a CDF.
+    pub fn cdf(&self) -> Vec<(f64, f64)> {
+        let total = self.total().max(1) as f64;
+        let mut cum = self.underflow;
+        let mut out = Vec::with_capacity(self.buckets.len());
+        let mut edge = self.lo;
+        for b in &self.buckets {
+            cum += b;
+            edge *= self.ratio;
+            out.push((edge, cum as f64 / total));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_matches_naive() {
+        let xs = [1.0, 2.0, 3.5, -1.0, 0.25];
+        let mut s = Summary::new();
+        for &x in &xs {
+            s.add(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (xs.len() - 1) as f64;
+        assert!((s.mean() - mean).abs() < 1e-12);
+        assert!((s.var() - var).abs() < 1e-12);
+        assert_eq!(s.min(), -1.0);
+        assert_eq!(s.max(), 3.5);
+    }
+
+    #[test]
+    fn summary_merge_equals_combined() {
+        let mut a = Summary::new();
+        let mut b = Summary::new();
+        let mut c = Summary::new();
+        for i in 0..100 {
+            let x = (i as f64).sin() * 3.0;
+            if i % 2 == 0 { a.add(x) } else { b.add(x) }
+            c.add(x);
+        }
+        a.merge(&b);
+        assert!((a.mean() - c.mean()).abs() < 1e-10);
+        assert!((a.var() - c.var()).abs() < 1e-9);
+        assert_eq!(a.count(), c.count());
+    }
+
+    #[test]
+    fn percentiles() {
+        let mut p = Percentiles::new();
+        for i in 1..=100 {
+            p.add(i as f64);
+        }
+        assert_eq!(p.median(), 50.0);
+        assert_eq!(p.quantile(0.0), 1.0);
+        assert_eq!(p.quantile(1.0), 100.0);
+        assert_eq!(p.p99(), 99.0);
+    }
+
+    #[test]
+    fn log_histogram_cdf_monotone() {
+        let mut h = LogHistogram::new(0.01, 200.0, 32);
+        for i in 1..1000 {
+            h.add(i as f64 * 0.05);
+        }
+        let cdf = h.cdf();
+        for w in cdf.windows(2) {
+            assert!(w[1].1 >= w[0].1);
+            assert!(w[1].0 > w[0].0);
+        }
+        assert!((cdf.last().unwrap().1 - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,261 @@
+//! Workload generator: the synthetic analogue of the proprietary MA/CA
+//! e-commerce datasets (§8.1; substitution documented in DESIGN.md §2).
+//!
+//! A MARL *step* processes `queries_per_step` user queries. Each query is
+//! expanded by intra-query parallelism into `group_size` GRPO candidate
+//! *trajectories*; each trajectory is a chain of `turns` agent calls
+//! (agents drawn from the skewed invocation distribution — Obs. 2:
+//! core agents carry >76% of calls). Each call generates a lognormal
+//! token count capped at `max_tokens` — the long-tail interaction
+//! latency of Fig. 1a — plus an environment/tool latency.
+//!
+//! The generator is deterministic in (seed, step): both the simulator
+//! and the real mini-cluster replay identical workloads.
+
+pub mod corpus;
+
+use crate::config::WorkloadConfig;
+use crate::util::rng::Pcg64;
+
+/// One agent invocation within a trajectory.
+#[derive(Debug, Clone)]
+pub struct CallSpec {
+    pub agent: usize,
+    /// Generated response length in tokens (the service demand).
+    pub tokens: f64,
+    /// Environment/tool latency paid after generation (seconds).
+    pub env_s: f64,
+}
+
+/// One GRPO candidate: a dependency chain of calls.
+#[derive(Debug, Clone)]
+pub struct TrajectorySpec {
+    pub query: usize,
+    pub candidate: usize,
+    pub calls: Vec<CallSpec>,
+}
+
+impl TrajectorySpec {
+    pub fn total_tokens(&self) -> f64 {
+        self.calls.iter().map(|c| c.tokens).sum()
+    }
+
+    /// Service time of the whole chain on uncontended instances.
+    pub fn ideal_latency(&self, decode_tps: impl Fn(usize) -> f64) -> f64 {
+        self.calls
+            .iter()
+            .map(|c| c.tokens / decode_tps(c.agent) + c.env_s)
+            .sum()
+    }
+}
+
+/// The full workload of one MARL step.
+#[derive(Debug, Clone)]
+pub struct StepWorkload {
+    pub step: usize,
+    pub trajectories: Vec<TrajectorySpec>,
+}
+
+impl StepWorkload {
+    pub fn total_tokens(&self) -> f64 {
+        self.trajectories.iter().map(|t| t.total_tokens()).sum()
+    }
+
+    pub fn total_calls(&self) -> usize {
+        self.trajectories.iter().map(|t| t.calls.len()).sum()
+    }
+
+    /// Per-agent call counts (the Fig. 8/9 "processed rollout load").
+    pub fn calls_per_agent(&self, n_agents: usize) -> Vec<usize> {
+        let mut out = vec![0; n_agents];
+        for t in &self.trajectories {
+            for c in &t.calls {
+                out[c.agent] += 1;
+            }
+        }
+        out
+    }
+
+    /// Samples (trajectories) that involve agent `a` — its training load.
+    pub fn samples_for_agent(&self, a: usize) -> usize {
+        self.trajectories
+            .iter()
+            .filter(|t| t.calls.iter().any(|c| c.agent == a))
+            .count()
+    }
+}
+
+pub struct Generator<'a> {
+    wl: &'a WorkloadConfig,
+    seed: u64,
+}
+
+impl<'a> Generator<'a> {
+    pub fn new(wl: &'a WorkloadConfig, seed: u64) -> Self {
+        Generator { wl, seed }
+    }
+
+    /// Deterministic workload for `step`.
+    pub fn step(&self, step: usize) -> StepWorkload {
+        let wl = self.wl;
+        let weights: Vec<f64> = wl.agents.iter().map(|a| a.invoke_weight).collect();
+        let mut trajectories = Vec::new();
+        for q in 0..wl.queries_per_step {
+            // The workflow *skeleton* (agent sequence, turn count) is per
+            // query: all GRPO candidates answer the same user query, so
+            // they traverse the same agents; token counts differ per
+            // candidate (sampling temperature).
+            let mut qrng = Pcg64::with_stream(
+                self.seed ^ 0x5157_u64,
+                (step as u64) << 32 | q as u64,
+            );
+            let turns = wl.min_turns
+                + qrng.below((wl.max_turns - wl.min_turns + 1) as u64) as usize;
+            let skeleton: Vec<usize> =
+                (0..turns).map(|_| qrng.categorical(&weights)).collect();
+
+            for cand in 0..wl.group_size {
+                let mut crng = Pcg64::with_stream(
+                    self.seed ^ 0xca4d_u64,
+                    ((step as u64) << 40) | ((q as u64) << 20) | cand as u64,
+                );
+                let calls = skeleton
+                    .iter()
+                    .map(|&agent| {
+                        let a = &wl.agents[agent];
+                        let tokens = crng
+                            .lognormal(a.mean_tokens.ln(), a.token_sigma)
+                            .min(wl.max_tokens)
+                            .max(8.0);
+                        let env_s = crng.lognormal(wl.env_mu.ln().max(-3.0), wl.env_sigma);
+                        CallSpec {
+                            agent,
+                            tokens,
+                            env_s: env_s.min(30.0),
+                        }
+                    })
+                    .collect();
+                trajectories.push(TrajectorySpec {
+                    query: q,
+                    candidate: cand,
+                    calls,
+                });
+            }
+        }
+        StepWorkload { step, trajectories }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadConfig;
+
+    #[test]
+    fn deterministic_per_seed_and_step() {
+        let wl = WorkloadConfig::ma();
+        let g = Generator::new(&wl, 2048);
+        let a = g.step(0);
+        let b = g.step(0);
+        assert_eq!(a.total_calls(), b.total_calls());
+        assert_eq!(a.total_tokens(), b.total_tokens());
+        let c = g.step(1);
+        assert_ne!(a.total_tokens(), c.total_tokens());
+        let g2 = Generator::new(&wl, 1);
+        assert_ne!(a.total_tokens(), g2.step(0).total_tokens());
+    }
+
+    #[test]
+    fn batch_size_is_queries_times_group() {
+        let wl = WorkloadConfig::ma();
+        let w = Generator::new(&wl, 2048).step(0);
+        assert_eq!(
+            w.trajectories.len(),
+            wl.queries_per_step * wl.group_size
+        );
+        // §8.1: global batch 64.
+        assert_eq!(w.trajectories.len(), 64);
+    }
+
+    #[test]
+    fn candidates_share_skeleton() {
+        let wl = WorkloadConfig::ma();
+        let w = Generator::new(&wl, 2048).step(0);
+        let q0: Vec<&TrajectorySpec> =
+            w.trajectories.iter().filter(|t| t.query == 0).collect();
+        let skel: Vec<usize> = q0[0].calls.iter().map(|c| c.agent).collect();
+        for t in &q0 {
+            let s: Vec<usize> = t.calls.iter().map(|c| c.agent).collect();
+            assert_eq!(s, skel);
+            // but token counts differ across candidates
+        }
+        assert!(q0[0].calls[0].tokens != q0[1].calls[0].tokens);
+    }
+
+    #[test]
+    fn core_agents_receive_majority_of_calls() {
+        let wl = WorkloadConfig::ma();
+        // Average over steps to smooth sampling noise.
+        let g = Generator::new(&wl, 2048);
+        let mut per_agent = vec![0usize; wl.agents.len()];
+        for s in 0..20 {
+            let w = g.step(s);
+            for (i, c) in w.calls_per_agent(wl.agents.len()).iter().enumerate() {
+                per_agent[i] += c;
+            }
+        }
+        let total: usize = per_agent.iter().sum();
+        let core = wl.core_agents();
+        let core_calls: usize = core.iter().map(|&i| per_agent[i]).sum();
+        let share = core_calls as f64 / total as f64;
+        // Obs. 2: skewed — small set of core agents dominates.
+        assert!(share > 0.40, "core share {share}");
+        // and auxiliaries individually small
+        let max_aux = per_agent
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !core.contains(i))
+            .map(|(_, &c)| c)
+            .max()
+            .unwrap();
+        assert!(max_aux < *per_agent.iter().max().unwrap());
+    }
+
+    #[test]
+    fn token_distribution_long_tailed_and_capped() {
+        let wl = WorkloadConfig::ma();
+        let g = Generator::new(&wl, 2048);
+        let mut all: Vec<f64> = Vec::new();
+        for s in 0..30 {
+            for t in &g.step(s).trajectories {
+                for c in &t.calls {
+                    all.push(c.tokens);
+                }
+            }
+        }
+        let max = all.iter().cloned().fold(0.0, f64::max);
+        assert!(max <= wl.max_tokens);
+        assert!(max > 0.9 * wl.max_tokens, "tail never reaches cap: {max}");
+        let mean = all.iter().sum::<f64>() / all.len() as f64;
+        let mut sorted = all.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = sorted[sorted.len() / 2];
+        assert!(mean > 1.2 * median, "not long-tailed: mean {mean} median {median}");
+    }
+
+    #[test]
+    fn fig1a_latency_anchor() {
+        // Worst user-query interaction latency should land near the
+        // paper's ~170 s (Fig. 1a) on uncontended 14B instances.
+        let wl = WorkloadConfig::ma();
+        let g = Generator::new(&wl, 2048);
+        let mut worst: f64 = 0.0;
+        for s in 0..10 {
+            for t in &g.step(s).trajectories {
+                let lat = t.ideal_latency(|a| wl.agents[a].model.decode_tps());
+                worst = worst.max(lat);
+            }
+        }
+        assert!(worst > 100.0 && worst < 320.0, "worst {worst}");
+    }
+}

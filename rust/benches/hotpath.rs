@@ -3,47 +3,129 @@
 //! PJRT executable latencies that bound the real end-to-end run.
 //!
 //! `harness = false` bench on `flexmarl::util::bench` (criterion is not
-//! vendored). Before/after numbers are recorded in EXPERIMENTS.md §Perf.
+//! vendored). Every result is also written to `BENCH_hotpath.json`
+//! (name → ns/iter, mean over the timed iterations) next to the stdout
+//! report so the perf trajectory stays trackable across PRs.
+//!
+//! Flags:
+//!  * `--smoke` — CI mode: minimal iteration counts, no timing
+//!    assertions; verifies the benches still run end-to-end.
 
 use flexmarl::baselines::Framework;
 use flexmarl::config::{ExperimentConfig, WorkloadConfig};
 use flexmarl::orchestrator::{simulate, SimOptions};
 use flexmarl::rollout::{heap::IndexedMinHeap, RolloutManager};
-use flexmarl::sim::EventQueue;
-use flexmarl::store::{grpo_schema, Blob, ExperienceStore, SampleId, Value};
-use flexmarl::util::bench::{bench, black_box};
+use flexmarl::sim::{EventQueue, QueueKind};
+use flexmarl::store::{
+    grpo_schema, Blob, ExperienceStore, Field, PutRow, SampleId, Value,
+};
+use flexmarl::util::bench::{bench, black_box, BenchResult};
+use flexmarl::util::json::Json;
 use flexmarl::util::rng::Pcg64;
+use std::collections::BTreeMap;
 use std::time::Duration;
 
-const T: Duration = Duration::from_millis(300);
+/// Collects results for the stdout report and `BENCH_hotpath.json`.
+struct Recorder {
+    entries: Vec<(String, f64)>,
+}
+
+impl Recorder {
+    fn new() -> Recorder {
+        Recorder { entries: Vec::new() }
+    }
+
+    fn add(&mut self, r: BenchResult) {
+        println!("{}", r.report());
+        self.entries.push((r.name.clone(), r.mean.as_nanos() as f64));
+    }
+
+    fn write_json(&self, path: &str) {
+        let map: BTreeMap<String, Json> = self
+            .entries
+            .iter()
+            .map(|(n, ns)| (n.clone(), Json::num(*ns)))
+            .collect();
+        let text = Json::Obj(map).to_pretty();
+        match std::fs::write(path, text) {
+            Ok(()) => println!("\nwrote {path} ({} benches)", self.entries.len()),
+            Err(e) => eprintln!("could not write {path}: {e}"),
+        }
+    }
+}
 
 fn main() {
-    println!("════════ hot-path micro-benches ════════");
-    bench_event_queue();
-    bench_heap();
-    bench_manager();
-    bench_store();
-    bench_json();
-    bench_sim_engine();
-    bench_pjrt();
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    // Smoke mode still runs every bench body (so CI exercises the code
+    // paths) but with a minimal measurement budget.
+    let t = if smoke {
+        Duration::from_millis(1)
+    } else {
+        Duration::from_millis(300)
+    };
+    println!(
+        "════════ hot-path micro-benches{} ════════",
+        if smoke { " (smoke)" } else { "" }
+    );
+    let mut rec = Recorder::new();
+    bench_event_queue(&mut rec, t);
+    bench_heap(&mut rec, t);
+    bench_manager(&mut rec, t);
+    bench_store(&mut rec, t);
+    bench_json(&mut rec, t);
+    bench_sim_engine(&mut rec, t);
+    if !smoke {
+        bench_pjrt(&mut rec);
+    }
+    rec.write_json("BENCH_hotpath.json");
 }
 
-fn bench_event_queue() {
-    let r = bench("sim::EventQueue push+pop (1k events)", T, || {
-        let mut q = EventQueue::new();
-        let mut rng = Pcg64::new(1);
-        for i in 0..1000u64 {
-            q.push_at(rng.f64() * 100.0, i);
-        }
-        while let Some(e) = q.pop() {
-            black_box(e);
-        }
-    });
-    println!("{}", r.report());
+fn queue_drain(kind: QueueKind) {
+    let mut q = EventQueue::with_kind(kind);
+    let mut rng = Pcg64::new(1);
+    for i in 0..1000u64 {
+        q.push_at(rng.f64() * 100.0, i);
+    }
+    while let Some(e) = q.pop() {
+        black_box(e);
+    }
 }
 
-fn bench_heap() {
-    let r = bench("rollout::IndexedMinHeap 10k mixed ops", T, || {
+/// The simloop's actual pattern: a rolling horizon of near-future
+/// events — push a few, pop one, repeat.
+fn queue_rolling(kind: QueueKind) {
+    let mut q = EventQueue::with_kind(kind);
+    let mut rng = Pcg64::new(4);
+    for i in 0..64u64 {
+        q.push_at(rng.f64() * 3.0, i);
+    }
+    for i in 0..5000u64 {
+        let (t, e) = q.pop().unwrap();
+        black_box(e);
+        q.push_at(t + rng.f64() * 3.0, i);
+    }
+    while let Some(e) = q.pop() {
+        black_box(e);
+    }
+}
+
+fn bench_event_queue(rec: &mut Recorder, t: Duration) {
+    rec.add(bench("sim::EventQueue[heap] push+pop (1k events)", t, || {
+        queue_drain(QueueKind::BinaryHeap)
+    }));
+    rec.add(bench("sim::EventQueue[calendar] push+pop (1k events)", t, || {
+        queue_drain(QueueKind::Calendar)
+    }));
+    rec.add(bench("sim::EventQueue[heap] rolling horizon (5k)", t, || {
+        queue_rolling(QueueKind::BinaryHeap)
+    }));
+    rec.add(bench("sim::EventQueue[calendar] rolling horizon (5k)", t, || {
+        queue_rolling(QueueKind::Calendar)
+    }));
+}
+
+fn bench_heap(rec: &mut Recorder, t: Duration) {
+    rec.add(bench("rollout::IndexedMinHeap 10k mixed ops", t, || {
         let mut h = IndexedMinHeap::new();
         let mut rng = Pcg64::new(2);
         for i in 0..64 {
@@ -54,12 +136,11 @@ fn bench_heap() {
             h.update(id, rng.below(100));
             black_box(h.peek_min());
         }
-    });
-    println!("{}", r.report());
+    }));
 }
 
-fn bench_manager() {
-    let r = bench("rollout::Manager submit+complete (1k reqs, 8 agents)", T, || {
+fn bench_manager(rec: &mut Recorder, t: Duration) {
+    rec.add(bench("rollout::Manager submit+complete (1k reqs, 8 agents)", t, || {
         let mut m = RolloutManager::new(8);
         for a in 0..8 {
             m.add_instance(a, 4);
@@ -85,12 +166,11 @@ fn bench_manager() {
             }
         }
         black_box(m.completed_per_agent.clone());
-    });
-    println!("{}", r.report());
+    }));
 }
 
-fn bench_store() {
-    let r = bench("store::ExperienceStore insert+fill (256 samples)", T, || {
+fn bench_store(rec: &mut Recorder, t: Duration) {
+    rec.add(bench("store::ExperienceStore insert+fill (256 samples)", t, || {
         let s = ExperienceStore::new();
         s.create_table("a", &grpo_schema());
         for i in 0..256 {
@@ -103,13 +183,12 @@ fn bench_store() {
             s.set_value("a", 1, id, "advantage", Value::Float(0.1)).unwrap();
         }
         black_box(s.count_ready("a", Some(1)));
-    });
-    println!("{}", r.report());
+    }));
 
     let s = ExperienceStore::new();
     s.create_table("a", &grpo_schema());
     let mut i = 0u64;
-    let r = bench("store::fetch_ready micro-batch 16 (hot loop)", T, || {
+    rec.add(bench("store::fetch_ready micro-batch 16 (hot loop)", t, || {
         for _ in 0..16 {
             let id = SampleId::new(i, 1, 0);
             i += 1;
@@ -124,33 +203,66 @@ fn bench_store() {
         let keys: Vec<_> = f.iter().map(|x| x.key).collect();
         s.complete("a", &keys).unwrap();
         black_box(keys);
-    });
-    println!("{}", r.report());
+    }));
+
+    // The batched producer/consumer path the simloop actually uses:
+    // one lock acquisition per group write, one per micro-batch take.
+    let s = ExperienceStore::new();
+    s.create_table("a", &grpo_schema());
+    let mut j = 0u64;
+    rec.add(bench("store::put_rows+take_batch micro-batch 16", t, || {
+        let rows: Vec<PutRow> = (0..16)
+            .map(|_| {
+                let id = SampleId::new(j, 1, 0);
+                j += 1;
+                PutRow {
+                    version: 1,
+                    id,
+                    fields: vec![
+                        ("prompt", Field::Blob(Blob::Tokens(vec![1; 8]))),
+                        ("response", Field::Blob(Blob::Tokens(vec![2; 8]))),
+                        ("old_logp", Field::Blob(Blob::Floats(vec![-0.5; 8]))),
+                        ("reward", Field::Value(Value::Float(0.5))),
+                        ("advantage", Field::Value(Value::Float(0.1))),
+                    ],
+                }
+            })
+            .collect();
+        s.put_rows("a", rows).unwrap();
+        black_box(s.take_batch("a", Some(1), 16).len());
+    }));
 }
 
-fn bench_json() {
+fn bench_json(rec: &mut Recorder, t: Duration) {
     if let Ok(text) = std::fs::read_to_string("artifacts/manifest.json") {
-        let r = bench("util::json parse manifest.json", T, || {
+        rec.add(bench("util::json parse manifest.json", t, || {
             black_box(flexmarl::util::json::parse(&text).unwrap());
-        });
-        println!("{}", r.report());
+        }));
     }
 }
 
-fn bench_sim_engine() {
+fn bench_sim_engine(rec: &mut Recorder, t: Duration) {
     let cfg = {
         let mut c = ExperimentConfig::new(WorkloadConfig::ma(), Framework::flexmarl());
         c.steps = 1;
         c
     };
-    let opts = SimOptions::default();
-    let r = bench("orchestrator::simulate 1 MA step (FlexMARL)", T, || {
-        black_box(simulate(&cfg, &opts).total_s);
-    });
-    println!("{}", r.report());
+    for kind in [QueueKind::Calendar, QueueKind::BinaryHeap] {
+        let opts = SimOptions {
+            event_queue: kind,
+            ..SimOptions::default()
+        };
+        let name = match kind {
+            QueueKind::Calendar => "orchestrator::simulate 1 MA step (calendar)",
+            QueueKind::BinaryHeap => "orchestrator::simulate 1 MA step (heap)",
+        };
+        rec.add(bench(name, t, || {
+            black_box(simulate(&cfg, &opts).total_s);
+        }));
+    }
 }
 
-fn bench_pjrt() {
+fn bench_pjrt(rec: &mut Recorder) {
     let Ok(rt) = flexmarl::runtime::ModelRuntime::load("artifacts") else {
         println!("(PJRT benches skipped: run `make artifacts` first)");
         return;
@@ -163,31 +275,27 @@ fn bench_pjrt() {
     let prompt = corpus.make_prompt(&mut rng, 0);
     let prompts: Vec<Vec<i32>> = (0..sh.b_roll).map(|_| prompt.clone()).collect();
 
-    let r = bench("pjrt: prefill+16-token generate, per-token path", Duration::from_secs(3), || {
+    rec.add(bench("pjrt: prefill+16-token generate, per-token path", Duration::from_secs(3), || {
         black_box(policy.generate(&rt, &prompts, 16, 1.0).unwrap());
-    });
-    println!("{}", r.report());
+    }));
 
-    let r = bench("pjrt: prefill+16-token generate, decode_blk path", Duration::from_secs(3), || {
+    rec.add(bench("pjrt: prefill+16-token generate, decode_blk path", Duration::from_secs(3), || {
         black_box(policy.generate_block(&rt, &prompts, 16, 1.0).unwrap());
-    });
-    println!("{}", r.report());
+    }));
 
     let rollouts = policy.generate(&rt, &prompts, 16, 1.0).unwrap();
     let rows: Vec<_> = rollouts
         .iter()
         .map(|ro| flexmarl::grpo::make_row(&prompt, &ro.response, &ro.logp, 0.5, sh.t_train))
         .collect();
-    let r = bench("pjrt: grad micro-batch (b_grad rows padded)", Duration::from_secs(3), || {
+    rec.add(bench("pjrt: grad micro-batch (b_grad rows padded)", Duration::from_secs(3), || {
         black_box(policy.grad_on_rows(&rt, &rows).unwrap());
-    });
-    println!("{}", r.report());
+    }));
     policy.apply(&rt, 1e-4).unwrap();
 
-    let r = bench("pjrt: apply (Adam update, full param set)", Duration::from_secs(2), || {
+    rec.add(bench("pjrt: apply (Adam update, full param set)", Duration::from_secs(2), || {
         // Re-seed the cache each iteration so apply has work.
         policy.grad_on_rows(&rt, &rows[..1.min(rows.len())].to_vec()).unwrap();
         policy.apply(&rt, 1e-4).unwrap();
-    });
-    println!("{}", r.report());
+    }));
 }

@@ -38,6 +38,10 @@ fn wl(name: &str) -> WorkloadConfig {
 
 fn main() {
     println!("════════ FlexMARL paper benches (virtual-time cluster simulator) ════════");
+    println!(
+        "event queue backend: {:?} (bit-identical to the heap fallback; see tests)",
+        opts().event_queue
+    );
     bench_table2();
     bench_fig7();
     bench_fig1();

@@ -33,3 +33,4 @@ pub mod store;
 pub mod training;
 pub mod util;
 pub mod workload;
+pub mod xla_stub;

@@ -23,8 +23,8 @@ use crate::metrics::StepReport;
 use crate::rollout::{
     plan_migration, CallRef, Dispatch, Mode, RequestId, RolloutManager, TrajectoryScheduler,
 };
-use crate::sim::EventQueue;
-use crate::store::{ColumnType, ExperienceStore, SampleId, Value};
+use crate::sim::{EventQueue, QueueKind};
+use crate::store::{ColumnType, ExperienceStore, Field, PutRow, SampleId, Value};
 use crate::training::{
     apply_update_s, grad_compute_s, swap_in_cost, swap_out_cost, AgentCentricAllocator,
 };
@@ -51,6 +51,10 @@ pub struct SimOptions {
     pub sync_s: f64,
     /// Agents whose queue/processed series are recorded (Figs. 1b/8/9).
     pub track_agents: Vec<usize>,
+    /// Event-queue backend. `Calendar` is the O(1) bucketed queue tuned
+    /// for the simloop's dense near-future events; `BinaryHeap` is the
+    /// reference fallback. Both produce bit-identical simulations.
+    pub event_queue: QueueKind,
 }
 
 impl Default for SimOptions {
@@ -64,6 +68,7 @@ impl Default for SimOptions {
             context_tokens: 256.0,
             sync_s: 1.5,
             track_agents: vec![],
+            event_queue: QueueKind::Calendar,
         }
     }
 }
@@ -106,6 +111,40 @@ struct ReqInfo {
     agent: usize,
 }
 
+/// Slab of in-flight request metadata: `RequestId`s are slot indices
+/// and freed slots recycle through a free-list, so steady-state
+/// stepping allocates nothing per request.
+#[derive(Default)]
+struct ReqSlab {
+    slots: Vec<Option<ReqInfo>>,
+    free: Vec<u32>,
+}
+
+impl ReqSlab {
+    fn alloc(&mut self, info: ReqInfo) -> RequestId {
+        match self.free.pop() {
+            Some(i) => {
+                self.slots[i as usize] = Some(info);
+                i as RequestId
+            }
+            None => {
+                self.slots.push(Some(info));
+                (self.slots.len() - 1) as RequestId
+            }
+        }
+    }
+
+    fn get(&self, rid: RequestId) -> &ReqInfo {
+        self.slots[rid as usize].as_ref().expect("unknown request")
+    }
+
+    fn remove(&mut self, rid: RequestId) -> ReqInfo {
+        let info = self.slots[rid as usize].take().expect("unknown request");
+        self.free.push(rid as u32);
+        info
+    }
+}
+
 struct StepCtl {
     workload: StepWorkload,
     sched: TrajectoryScheduler,
@@ -145,8 +184,7 @@ struct Engine<'a> {
     store: ExperienceStore,
     transfer: TransferModel,
     steps: Vec<StepCtl>,
-    reqs: BTreeMap<RequestId, ReqInfo>,
-    next_rid: RequestId,
+    reqs: ReqSlab,
     /// Which step each agent's rollout requests currently come from
     /// (MARTI overlap: requests of different steps can coexist).
     cur_rollout_step: usize,
@@ -289,13 +327,12 @@ impl<'a> Engine<'a> {
         Engine {
             cfg,
             opts,
-            q: EventQueue::new(),
+            q: EventQueue::with_kind(opts.event_queue),
             man,
             store,
             transfer: TransferModel::new(cfg.cluster),
             steps,
-            reqs: BTreeMap::new(),
-            next_rid: 0,
+            reqs: ReqSlab::default(),
             cur_rollout_step: 0,
             tstate: vec![AgentTrain::Idle; n_agents],
             tstep: vec![0; n_agents],
@@ -434,8 +471,6 @@ impl<'a> Engine<'a> {
         if c.call == 0 {
             self.steps[step].traj_start[c.traj] = t;
         }
-        let rid = self.next_rid;
-        self.next_rid += 1;
         let mut decode_s = spec.tokens / self.cfg.workload.agents[spec.agent].model.decode_tps();
         // Colocated architectures share HBM/compute between phases: when
         // training overlaps generation on the same pool (MARTI's one-step
@@ -448,19 +483,16 @@ impl<'a> Engine<'a> {
         {
             decode_s *= 1.3;
         }
-        self.reqs.insert(
-            rid,
-            ReqInfo {
-                step,
-                call: c,
-                decode_s,
-                env_s: spec.env_s,
-                agent: spec.agent,
-            },
-        );
+        let rid = self.reqs.alloc(ReqInfo {
+            step,
+            call: c,
+            decode_s,
+            env_s: spec.env_s,
+            agent: spec.agent,
+        });
         match self.man.submit(rid, spec.agent) {
             Dispatch::Started(_) => {
-                let info = &self.reqs[&rid];
+                let info = self.reqs.get(rid);
                 self.q.push_in(info.decode_s + info.env_s, Ev::CallDone(rid));
             }
             Dispatch::Enqueued(_) | Dispatch::Parked => {}
@@ -468,7 +500,7 @@ impl<'a> Engine<'a> {
     }
 
     fn call_done(&mut self, t: f64, rid: RequestId) {
-        let info = self.reqs.remove(&rid).expect("unknown request");
+        let info = self.reqs.remove(rid);
         // Device-busy: decode seconds × the slot's device share.
         let dev = self.inst_dev[info.agent] as f64;
         let busy = info.decode_s * dev / self.opts.concurrency as f64;
@@ -476,7 +508,7 @@ impl<'a> Engine<'a> {
         self.busy_per_step[info.step] += busy;
 
         if let Some(promoted) = self.man.complete(rid) {
-            let p = &self.reqs[&promoted];
+            let p = self.reqs.get(promoted);
             self.q.push_in(p.decode_s + p.env_s, Ev::CallDone(promoted));
         }
 
@@ -490,18 +522,39 @@ impl<'a> Engine<'a> {
             self.steps[step].workload.trajectories[info.call.traj].query,
             info.call.call,
         );
-        let entry = self.steps[step]
-            .group_pending
-            .get_mut(&key)
-            .expect("group bookkeeping");
-        entry.0 -= 1;
-        entry.1.push(tokens);
-        if entry.0 == 0 {
-            // Group complete → all its samples are fully generated.
-            let group_tokens = std::mem::take(&mut entry.1);
-            for tok in group_tokens {
-                self.insert_sample(step, info.agent, tok);
+        let ready_group = {
+            let entry = self.steps[step]
+                .group_pending
+                .get_mut(&key)
+                .expect("group bookkeeping");
+            entry.0 -= 1;
+            entry.1.push(tokens);
+            if entry.0 == 0 {
+                Some(std::mem::take(&mut entry.1))
+            } else {
+                None
             }
+        };
+        if let Some(group_tokens) = ready_group {
+            // Group complete → all its samples are fully generated.
+            // One batched write amortizes the table lock over the group.
+            let version = step as u64;
+            let rows: Vec<PutRow> = group_tokens
+                .into_iter()
+                .map(|tok| {
+                    let id = SampleId::new(self.sample_seq, 1, 0);
+                    self.sample_seq += 1;
+                    PutRow {
+                        version,
+                        id,
+                        fields: vec![
+                            ("tokens", Field::Value(Value::Float(tok))),
+                            ("reward", Field::Value(Value::Float(1.0))),
+                        ],
+                    }
+                })
+                .collect();
+            self.store.put_rows(&agent_key(info.agent), rows).unwrap();
             if self.cfg.framework.async_pipeline {
                 self.maybe_train(t, info.agent);
             }
@@ -525,19 +578,6 @@ impl<'a> Engine<'a> {
         if st.sched.is_done() && !st.rollout_done {
             self.rollout_finished(t, step);
         }
-    }
-
-    fn insert_sample(&mut self, step: usize, agent: usize, tokens: f64) {
-        let id = SampleId::new(self.sample_seq, 1, 0);
-        self.sample_seq += 1;
-        let key = agent_key(agent);
-        self.store.insert(&key, step as u64, id).unwrap();
-        self.store
-            .set_value(&key, step as u64, id, "tokens", Value::Float(tokens))
-            .unwrap();
-        self.store
-            .set_value(&key, step as u64, id, "reward", Value::Float(1.0))
-            .unwrap();
     }
 
     fn rollout_finished(&mut self, t: f64, s: usize) {
@@ -651,9 +691,11 @@ impl<'a> Engine<'a> {
 
     fn dispatch_grad(&mut self, t: f64, agent: usize, step: usize) {
         let micro = self.cfg.pipeline.micro_batch;
+        // Fused dispatch+consume: the micro-batch is gradient-processed
+        // unconditionally, so take it in one store-lock acquisition.
         let fetched = self
             .store
-            .fetch_ready(&agent_key(agent), Some(step as u64), micro);
+            .take_batch(&agent_key(agent), Some(step as u64), micro);
         if fetched.is_empty() {
             // Nothing to compute: either apply or release.
             let st = &self.steps[step];
@@ -675,8 +717,6 @@ impl<'a> Engine<'a> {
                     + self.opts.context_tokens
             })
             .sum();
-        let keys: Vec<_> = fetched.iter().map(|f| f.key).collect();
-        self.store.complete(&agent_key(agent), &keys).unwrap();
         let model = self.cfg.workload.agents[agent].model;
         let dur = grad_compute_s(model, tokens);
         let gdev = model.train_group_devices() as f64;
@@ -809,9 +849,9 @@ impl<'a> Engine<'a> {
                     displaced.extend(self.man.drain_instance(iid));
                 }
                 for rid in displaced {
-                    let agent = self.reqs[&rid].agent;
+                    let agent = self.reqs.get(rid).agent;
                     if let Dispatch::Started(_) = self.man.submit(rid, agent) {
-                        let info = &self.reqs[&rid];
+                        let info = self.reqs.get(rid);
                         self.q
                             .push_in(info.decode_s + info.env_s, Ev::CallDone(rid));
                     }
@@ -858,7 +898,7 @@ impl<'a> Engine<'a> {
             let (new_id, started) = self.man.add_instance(target, self.opts.concurrency);
             self.inst_agent.insert(new_id, target);
             for rid in started {
-                let info = &self.reqs[&rid];
+                let info = self.reqs.get(rid);
                 self.q.push_in(info.decode_s + info.env_s, Ev::CallDone(rid));
             }
         }

@@ -8,7 +8,8 @@
 //! same code (DESIGN.md §4).
 
 use super::heap::IndexedMinHeap;
-use std::collections::{BTreeMap, VecDeque};
+use crate::util::hash::FastMap;
+use std::collections::VecDeque;
 
 pub type RequestId = u64;
 pub type InstanceId = usize;
@@ -53,7 +54,9 @@ pub struct RolloutManager {
     instances: Vec<Option<Instance>>,
     /// Per-agent min-heap over instance loads.
     heaps: Vec<IndexedMinHeap>,
-    requests: BTreeMap<RequestId, (AgentId, ReqState)>,
+    /// Request table on the submit/complete hot path: O(1) fast-hash
+    /// map (request ids are trusted, in-process, mostly sequential).
+    requests: FastMap<RequestId, (AgentId, ReqState)>,
     /// Requests waiting for an agent with zero instances.
     parked: Vec<VecDeque<RequestId>>,
     /// Monotone counters for metrics.
@@ -65,7 +68,7 @@ impl RolloutManager {
         RolloutManager {
             instances: Vec::new(),
             heaps: (0..n_agents).map(|_| IndexedMinHeap::new()).collect(),
-            requests: BTreeMap::new(),
+            requests: FastMap::default(),
             parked: (0..n_agents).map(|_| VecDeque::new()).collect(),
             completed_per_agent: vec![0; n_agents],
         }

@@ -10,7 +10,6 @@
 //!    call of the same candidate chain) completes.
 
 use crate::workload::StepWorkload;
-use std::collections::BTreeSet;
 
 /// Identifies one call: (trajectory index in the workload, call index).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
@@ -38,7 +37,12 @@ pub struct TrajectoryScheduler {
     query_of: Vec<usize>,
     /// Queries grouped: query -> trajectory indices.
     members: Vec<Vec<usize>>,
-    admitted: BTreeSet<usize>,
+    /// Number of queries currently admitted. Queries are admitted in
+    /// index order and each leaves admission exactly once (when its
+    /// last call completes), so a counter replaces the old `BTreeSet`
+    /// membership scans — admission checks are O(1) on the ready-pop
+    /// hot path.
+    admitted: usize,
     next_query: usize,
     /// Serial mode: per query, outstanding completions in current turn.
     turn_pending: Vec<usize>,
@@ -65,7 +69,7 @@ impl TrajectoryScheduler {
             next_call: vec![0; n],
             query_of: wl.trajectories.iter().map(|t| t.query).collect(),
             members,
-            admitted: BTreeSet::new(),
+            admitted: 0,
             next_query: 0,
             turn_pending: vec![0; n_queries],
             completed_trajs: 0,
@@ -91,7 +95,7 @@ impl TrajectoryScheduler {
             Mode::SerialQueries => 1,
             Mode::Parallel { inter_query } => inter_query.max(1),
         };
-        while self.next_query < self.members.len() && self.admitted.len() < limit {
+        while self.next_query < self.members.len() && self.admitted < limit {
             ready.extend(self.admit_next_query());
         }
         ready
@@ -100,7 +104,7 @@ impl TrajectoryScheduler {
     fn admit_next_query(&mut self) -> Vec<CallRef> {
         let q = self.next_query;
         self.next_query += 1;
-        self.admitted.insert(q);
+        self.admitted += 1;
         let mut out = Vec::new();
         for &t in &self.members[q] {
             if self.n_calls[t] > 0 {
@@ -134,9 +138,9 @@ impl TrajectoryScheduler {
                 }
                 // Query fully done → admit the next one.
                 if self.query_done(q) {
-                    self.admitted.remove(&q);
+                    self.admitted -= 1;
                     let limit = inter_query.max(1);
-                    while self.next_query < self.members.len() && self.admitted.len() < limit {
+                    while self.next_query < self.members.len() && self.admitted < limit {
                         ready.extend(self.admit_next_query());
                     }
                 }
@@ -156,7 +160,7 @@ impl TrajectoryScheduler {
                         .collect();
                     if next.is_empty() {
                         // Query complete → start the next query.
-                        self.admitted.remove(&q);
+                        self.admitted -= 1;
                         if self.next_query < self.members.len() {
                             ready.extend(self.admit_next_query());
                         }

@@ -16,7 +16,11 @@
 pub mod marl;
 pub mod policy;
 
+// The xla_extension crate is not vendored in this offline image; the
+// inert stub keeps this layer compiling (see src/xla_stub.rs for how
+// to swap the real bindings back in).
 use crate::util::json::{parse, Json};
+use crate::xla_stub as xla;
 use std::collections::BTreeMap;
 use std::fmt;
 use std::path::{Path, PathBuf};

@@ -10,6 +10,7 @@
 use super::{lit_f32, lit_i32, scalar_f32, scalar_i32, to_f32, ModelRuntime, Result, RuntimeError};
 use crate::grpo::TrainRow;
 use crate::util::rng::Pcg64;
+use crate::xla_stub as xla;
 
 /// One generated candidate: sampled tokens + their behaviour logprobs.
 #[derive(Debug, Clone)]

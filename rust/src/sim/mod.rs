@@ -5,6 +5,24 @@
 //! *scheduling behaviour* of that cluster (queueing, overlap, load
 //! balancing, resource binding) deterministically on one CPU. The MARL
 //! engine (`orchestrator::simloop`) and the paper benches drive it.
+//!
+//! Two interchangeable queue backends produce **bit-identical** pop
+//! sequences (verified by property and integration tests):
+//!  * [`QueueKind::BinaryHeap`] — `std::collections::BinaryHeap`,
+//!    O(log n) push/pop, the reference implementation and fallback;
+//!  * [`QueueKind::Calendar`] — a bucketed calendar queue (Brown 1988),
+//!    amortized O(1) push/pop under the simloop's dense near-future
+//!    event pattern; buckets re-grid adaptively on load and when the
+//!    active window drains.
+//!
+//! # Time invariant
+//!
+//! Event times must be finite. A NaN would silently corrupt heap order
+//! (`partial_cmp(..).unwrap_or(Equal)` treats it as equal to
+//! everything), and both NaN and ±inf misfile calendar buckets.
+//! `push_at` rejects non-finite times with a debug assertion; callers
+//! must keep virtual-time arithmetic NaN-free (`0.0 * inf`,
+//! `inf - inf`, `0.0 / 0.0` are the usual sources).
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -12,12 +30,29 @@ use std::collections::BinaryHeap;
 /// Virtual time in seconds.
 pub type Time = f64;
 
-/// Min-heap event queue with FIFO tie-breaking (stable, deterministic).
+/// Event-queue backend selection (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum QueueKind {
+    /// Binary-heap reference backend.
+    #[default]
+    BinaryHeap,
+    /// Bucketed calendar queue — O(1) amortized for dense near-future
+    /// event patterns.
+    Calendar,
+}
+
+/// Min event queue with FIFO tie-breaking (stable, deterministic).
 #[derive(Debug)]
 pub struct EventQueue<E> {
-    heap: BinaryHeap<Entry<E>>,
+    backend: Backend<E>,
     seq: u64,
     now: Time,
+}
+
+#[derive(Debug)]
+enum Backend<E> {
+    Heap(BinaryHeap<Entry<E>>),
+    Calendar(Calendar<E>),
 }
 
 #[derive(Debug)]
@@ -41,6 +76,8 @@ impl<E> PartialOrd for Entry<E> {
 impl<E> Ord for Entry<E> {
     fn cmp(&self, other: &Self) -> Ordering {
         // Reversed for min-heap; ties broken by insertion order.
+        // Times are never NaN (module invariant), so partial_cmp is
+        // total here.
         other
             .time
             .partial_cmp(&self.time)
@@ -49,12 +86,207 @@ impl<E> Ord for Entry<E> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Calendar backend
+// ---------------------------------------------------------------------------
+
+const CAL_INITIAL_BUCKETS: usize = 64;
+const CAL_MAX_BUCKETS: usize = 1 << 16;
+/// Re-grid when the in-window population exceeds this per-bucket load.
+const CAL_MAX_LOAD: usize = 4;
+/// Buckets bigger than this (same-timestamp storms that re-gridding
+/// cannot split) are sorted once and popped from the tail, keeping the
+/// drain O(b log b) instead of O(b²) min-scans.
+const CAL_SORT_THRESHOLD: usize = 32;
+
+#[derive(Debug)]
+struct Calendar<E> {
+    /// Unsorted buckets; pop scans the current bucket for the (time,
+    /// seq) minimum. Bucket populations stay O(1) via re-gridding.
+    buckets: Vec<Vec<Entry<E>>>,
+    /// Time of bucket 0's lower edge.
+    origin: Time,
+    width: f64,
+    /// First possibly-non-empty bucket (monotone within a window:
+    /// pushes always land at or after the bucket of `now`).
+    cur: usize,
+    in_window: usize,
+    /// Events at or beyond the window end, unsorted.
+    overflow: Vec<Entry<E>>,
+    /// Whether `buckets[cur]` is currently sorted descending by
+    /// (time, seq) — min at the tail, popped O(1).
+    cur_sorted: bool,
+    len: usize,
+}
+
+impl<E> Calendar<E> {
+    fn new() -> Self {
+        Calendar {
+            buckets: (0..CAL_INITIAL_BUCKETS).map(|_| Vec::new()).collect(),
+            origin: 0.0,
+            width: 1.0,
+            cur: 0,
+            in_window: 0,
+            overflow: Vec::new(),
+            cur_sorted: false,
+            len: 0,
+        }
+    }
+
+    fn window_end(&self) -> Time {
+        self.origin + self.width * self.buckets.len() as f64
+    }
+
+    fn push(&mut self, e: Entry<E>) {
+        self.push_inner(e, true);
+    }
+
+    fn push_inner(&mut self, e: Entry<E>, allow_regrid: bool) {
+        self.len += 1;
+        if e.time < self.window_end() {
+            // A time below bucket `cur`'s edge (possible when the grid
+            // origin sits ahead of `now`) files into the frontier
+            // bucket: it is scanned first, so ordering is preserved —
+            // every event in a later bucket has a strictly later edge.
+            // `as usize` saturates negative values to 0.
+            let idx = (((e.time - self.origin) / self.width) as usize)
+                .min(self.buckets.len() - 1)
+                .max(self.cur);
+            if idx == self.cur && self.cur_sorted {
+                // Keep the drained-from bucket sorted (descending).
+                let k = (e.time, e.seq);
+                let pos = self.buckets[idx].partition_point(|x| (x.time, x.seq) > k);
+                self.buckets[idx].insert(pos, e);
+            } else {
+                self.buckets[idx].push(e);
+            }
+            self.in_window += 1;
+            // Growth re-grid — but only while the grid can still grow:
+            // at CAL_MAX_BUCKETS re-gridding cannot reduce per-bucket
+            // load, and triggering it on every push would make pushes
+            // O(n). Past the cap, load per bucket simply grows.
+            if allow_regrid
+                && self.buckets.len() < CAL_MAX_BUCKETS
+                && self.in_window > self.buckets.len() * CAL_MAX_LOAD
+            {
+                self.regrid();
+            }
+        } else {
+            self.overflow.push(e);
+        }
+    }
+
+    fn pop(&mut self) -> Option<Entry<E>> {
+        if self.len == 0 {
+            return None;
+        }
+        loop {
+            while self.cur < self.buckets.len() && self.buckets[self.cur].is_empty() {
+                self.cur += 1;
+                self.cur_sorted = false;
+            }
+            if self.cur == self.buckets.len() {
+                // Window drained — re-grid around the remaining events.
+                debug_assert!(!self.overflow.is_empty());
+                self.regrid();
+                continue;
+            }
+            let b = &mut self.buckets[self.cur];
+            let e = if self.cur_sorted {
+                b.pop().expect("non-empty sorted bucket")
+            } else if b.len() > CAL_SORT_THRESHOLD {
+                // Same-timestamp storm re-gridding can't split: sort
+                // once (descending), then pop the min from the tail.
+                b.sort_unstable_by(|a, b2| {
+                    (b2.time, b2.seq)
+                        .partial_cmp(&(a.time, a.seq))
+                        .expect("finite event times")
+                });
+                self.cur_sorted = true;
+                b.pop().expect("non-empty bucket")
+            } else {
+                let mut mi = 0;
+                for i in 1..b.len() {
+                    if (b[i].time, b[i].seq) < (b[mi].time, b[mi].seq) {
+                        mi = i;
+                    }
+                }
+                b.swap_remove(mi)
+            };
+            self.in_window -= 1;
+            self.len -= 1;
+            return Some(e);
+        }
+    }
+
+    /// Rebuild the grid around the current population: origin at the
+    /// earliest event, bucket count ~ population, width ~ span /
+    /// buckets. All events (window + overflow) are redistributed; the
+    /// new window always covers the latest event, so `overflow` only
+    /// repopulates through later far-future pushes. Amortized O(1) per
+    /// event: growth re-grids double the bucket count, drain re-grids
+    /// touch each event once per window advance.
+    fn regrid(&mut self) {
+        let mut all: Vec<Entry<E>> = Vec::with_capacity(self.len);
+        for b in &mut self.buckets {
+            all.append(b);
+        }
+        all.append(&mut self.overflow);
+        debug_assert_eq!(all.len(), self.len);
+        debug_assert!(!all.is_empty());
+        let mut min_t = f64::INFINITY;
+        let mut max_t = f64::NEG_INFINITY;
+        for e in &all {
+            min_t = min_t.min(e.time);
+            max_t = max_t.max(e.time);
+        }
+        let n = all.len().max(1);
+        let nb = n
+            .next_power_of_two()
+            .clamp(CAL_INITIAL_BUCKETS, CAL_MAX_BUCKETS);
+        let span = max_t - min_t;
+        let width = if span > 0.0 { span * 1.25 / nb as f64 } else { 1.0 };
+        self.origin = min_t;
+        self.width = width;
+        if self.buckets.len() != nb {
+            self.buckets.resize_with(nb, Vec::new);
+        }
+        self.cur = 0;
+        self.cur_sorted = false;
+        self.in_window = 0;
+        self.len = 0;
+        for e in all {
+            self.push_inner(e, false);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// EventQueue facade
+// ---------------------------------------------------------------------------
+
 impl<E> EventQueue<E> {
+    /// Heap-backed queue (the reference backend).
     pub fn new() -> Self {
+        Self::with_kind(QueueKind::BinaryHeap)
+    }
+
+    pub fn with_kind(kind: QueueKind) -> Self {
+        let backend = match kind {
+            QueueKind::BinaryHeap => Backend::Heap(BinaryHeap::new()),
+            QueueKind::Calendar => Backend::Calendar(Calendar::new()),
+        };
         EventQueue {
-            heap: BinaryHeap::new(),
+            backend,
             seq: 0,
             now: 0.0,
+        }
+    }
+
+    pub fn kind(&self) -> QueueKind {
+        match self.backend {
+            Backend::Heap(_) => QueueKind::BinaryHeap,
+            Backend::Calendar(_) => QueueKind::Calendar,
         }
     }
 
@@ -63,14 +295,23 @@ impl<E> EventQueue<E> {
     }
 
     /// Schedule `payload` at absolute time `t` (clamped to now).
+    ///
+    /// `t` must be finite — never NaN (see the module-level time
+    /// invariant); an infinite time would additionally break calendar
+    /// bucket indexing.
     pub fn push_at(&mut self, t: Time, payload: E) {
+        debug_assert!(t.is_finite(), "non-finite event time {t} would corrupt queue order");
         let time = if t < self.now { self.now } else { t };
-        self.heap.push(Entry {
+        let entry = Entry {
             time,
             seq: self.seq,
             payload,
-        });
+        };
         self.seq += 1;
+        match &mut self.backend {
+            Backend::Heap(h) => h.push(entry),
+            Backend::Calendar(c) => c.push(entry),
+        }
     }
 
     /// Schedule after a delay.
@@ -81,7 +322,11 @@ impl<E> EventQueue<E> {
 
     /// Pop the next event, advancing the clock.
     pub fn pop(&mut self) -> Option<(Time, E)> {
-        self.heap.pop().map(|e| {
+        let e = match &mut self.backend {
+            Backend::Heap(h) => h.pop(),
+            Backend::Calendar(c) => c.pop(),
+        };
+        e.map(|e| {
             debug_assert!(e.time >= self.now);
             self.now = e.time;
             (e.time, e.payload)
@@ -89,11 +334,14 @@ impl<E> EventQueue<E> {
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len() == 0
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        match &self.backend {
+            Backend::Heap(h) => h.len(),
+            Backend::Calendar(c) => c.len,
+        }
     }
 }
 
@@ -152,51 +400,131 @@ impl BusyTracker {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::proptest::forall;
+
+    fn both_kinds() -> [QueueKind; 2] {
+        [QueueKind::BinaryHeap, QueueKind::Calendar]
+    }
 
     #[test]
     fn events_pop_in_time_order() {
-        let mut q = EventQueue::new();
-        q.push_at(3.0, "c");
-        q.push_at(1.0, "a");
-        q.push_at(2.0, "b");
-        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
-        assert_eq!(order, vec!["a", "b", "c"]);
+        for kind in both_kinds() {
+            let mut q = EventQueue::with_kind(kind);
+            q.push_at(3.0, "c");
+            q.push_at(1.0, "a");
+            q.push_at(2.0, "b");
+            let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+            assert_eq!(order, vec!["a", "b", "c"], "{kind:?}");
+        }
     }
 
     #[test]
     fn ties_are_fifo() {
-        let mut q = EventQueue::new();
-        for i in 0..10 {
-            q.push_at(5.0, i);
+        for kind in both_kinds() {
+            let mut q = EventQueue::with_kind(kind);
+            for i in 0..10 {
+                q.push_at(5.0, i);
+            }
+            let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+            assert_eq!(order, (0..10).collect::<Vec<_>>(), "{kind:?}");
         }
-        let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
-        assert_eq!(order, (0..10).collect::<Vec<_>>());
     }
 
     #[test]
     fn clock_advances_monotonically() {
-        let mut q = EventQueue::new();
-        q.push_at(2.0, ());
-        q.push_at(1.0, ());
-        let (t1, _) = q.pop().unwrap();
-        // Past-time push clamps to now.
-        q.push_at(0.5, ());
-        let (t2, _) = q.pop().unwrap();
-        let (t3, _) = q.pop().unwrap();
-        assert_eq!(t1, 1.0);
-        assert_eq!(t2, 1.0);
-        assert_eq!(t3, 2.0);
-        assert_eq!(q.now(), 2.0);
+        for kind in both_kinds() {
+            let mut q = EventQueue::with_kind(kind);
+            q.push_at(2.0, ());
+            q.push_at(1.0, ());
+            let (t1, _) = q.pop().unwrap();
+            // Past-time push clamps to now.
+            q.push_at(0.5, ());
+            let (t2, _) = q.pop().unwrap();
+            let (t3, _) = q.pop().unwrap();
+            assert_eq!(t1, 1.0);
+            assert_eq!(t2, 1.0);
+            assert_eq!(t3, 2.0);
+            assert_eq!(q.now(), 2.0);
+        }
     }
 
     #[test]
     fn push_in_uses_current_time() {
-        let mut q = EventQueue::new();
-        q.push_at(10.0, "first");
-        q.pop();
-        q.push_in(5.0, "second");
-        let (t, _) = q.pop().unwrap();
-        assert_eq!(t, 15.0);
+        for kind in both_kinds() {
+            let mut q = EventQueue::with_kind(kind);
+            q.push_at(10.0, "first");
+            q.pop();
+            q.push_in(5.0, "second");
+            let (t, _) = q.pop().unwrap();
+            assert_eq!(t, 15.0);
+        }
+    }
+
+    #[test]
+    fn calendar_survives_bursts_and_jumps() {
+        // Growth re-grid (burst), window-advance re-grid (drain), and
+        // far-future overflow all on one queue.
+        let mut q = EventQueue::with_kind(QueueKind::Calendar);
+        for i in 0..2000u64 {
+            q.push_at(1.0 + (i % 7) as f64 * 1e-3, i);
+        }
+        q.push_at(1e6, 999_999);
+        let mut last = -1.0;
+        let mut n = 0;
+        while let Some((t, _)) = q.pop() {
+            assert!(t >= last);
+            last = t;
+            n += 1;
+        }
+        assert_eq!(n, 2001);
+        assert_eq!(last, 1e6);
+    }
+
+    #[test]
+    fn prop_calendar_matches_heap_exactly() {
+        forall("calendar pops == heap pops", 120, |rng| {
+            let mut heap = EventQueue::with_kind(QueueKind::BinaryHeap);
+            let mut cal = EventQueue::with_kind(QueueKind::Calendar);
+            let mut next_id = 0u64;
+            for _ in 0..400 {
+                if rng.f64() < 0.6 {
+                    // Mix of dense near-future, exact ties, and
+                    // far-future outliers.
+                    let t = match rng.below(10) {
+                        0 => heap.now(),                        // tie with now
+                        1 => heap.now() + 1000.0 * rng.f64(),   // far future
+                        2 => heap.now() - rng.f64(),            // past → clamp
+                        _ => heap.now() + rng.f64() * 3.0,      // dense
+                    };
+                    heap.push_at(t, next_id);
+                    cal.push_at(t, next_id);
+                    next_id += 1;
+                } else {
+                    let a = heap.pop();
+                    let b = cal.pop();
+                    match (a, b) {
+                        (None, None) => {}
+                        (Some((ta, ea)), Some((tb, eb))) => {
+                            assert_eq!(ta, tb, "time diverged");
+                            assert_eq!(ea, eb, "order diverged");
+                        }
+                        other => panic!("length diverged: {other:?}"),
+                    }
+                    assert_eq!(heap.now(), cal.now());
+                    assert_eq!(heap.len(), cal.len());
+                }
+            }
+            // Drain both completely.
+            loop {
+                match (heap.pop(), cal.pop()) {
+                    (None, None) => break,
+                    (Some((ta, ea)), Some((tb, eb))) => {
+                        assert_eq!((ta, ea), (tb, eb));
+                    }
+                    other => panic!("length diverged: {other:?}"),
+                }
+            }
+        });
     }
 
     #[test]

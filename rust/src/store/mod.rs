@@ -16,11 +16,47 @@
 //! tensors) are stored by reference — the table records only the location
 //! key of a blob parked in the store's arena (standing in for the
 //! Set/Get heterogeneous-object plane of §7).
+//!
+//! # Layout & hot-path invariants (see also rust/DESIGN.md §3)
+//!
+//! The store is on the per-call critical path of the micro-batch
+//! pipeline, so tables are **columnar over a slot slab** rather than a
+//! key-ordered row map:
+//!
+//! ```text
+//!  index: FastMap<SampleKey, slot>         key → slot lookup, O(1)
+//!  keys/processing/missing/occupied: Vec   one entry per slot
+//!  cols[c].data: contiguous typed Vec      one column per schema field
+//!  cols[c].set:  Vec<bool>                 the paired status column
+//!  free: Vec<slot>                         slot free-list (slab reuse)
+//!  ready: BTreeSet<SampleKey>             dispatch-ready rows, key order
+//!  ready_by_version: BTreeMap<u64,usize>   O(log V) ready counts
+//! ```
+//!
+//! Invariants maintained by every mutation (checked by the scan-path
+//! property tests):
+//!  * `ready` contains exactly the keys of occupied rows with
+//!    `missing == 0 && !processing` — it is updated **on status-column
+//!    writes**, never by scanning;
+//!  * `ready_by_version[v]` equals the number of ready keys with
+//!    version `v`; entries are removed when they reach zero;
+//!  * dispatch order is ascending `(version, sample_id)` — identical to
+//!    the old `BTreeMap` scan path;
+//!  * a slot on the free-list has been removed from `index` and `ready`.
+//!
+//! Locking discipline (deadlock-free by construction):
+//!  1. the table-map `RwLock` is only held to clone a table's `Arc`;
+//!  2. each table is an independent `Mutex` shard — producers for agent
+//!     A never contend with consumers of agent B;
+//!  3. blob-arena shard locks are never taken while a table lock is
+//!     held; blobs are parked **before** the referencing status column
+//!     is set, so a ready row's blob refs always resolve.
 
-use std::collections::BTreeMap;
+use crate::util::hash::FastMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, RwLock};
 
 // ---------------------------------------------------------------------------
 // Sample identity
@@ -37,6 +73,17 @@ pub struct SampleId {
 }
 
 impl SampleId {
+    pub const MIN: SampleId = SampleId {
+        input_id: 0,
+        turns: 0,
+        trajectory_id: 0,
+    };
+    pub const MAX: SampleId = SampleId {
+        input_id: u64::MAX,
+        turns: u32::MAX,
+        trajectory_id: u64::MAX,
+    };
+
     pub fn new(input_id: u64, turns: u32, trajectory_id: u64) -> Self {
         SampleId {
             input_id,
@@ -109,29 +156,101 @@ pub enum Blob {
     Text(String),
 }
 
-// ---------------------------------------------------------------------------
-// Table
-// ---------------------------------------------------------------------------
-
+/// One field of a batched [`ExperienceStore::put_rows`] write: either a
+/// scalar stored by value or a payload parked in the blob arena.
 #[derive(Debug, Clone)]
-struct Row {
-    /// Data column values (None until first write).
-    values: Vec<Option<Value>>,
-    /// Paired status columns: value fully generated?
-    status: Vec<bool>,
-    /// Read-but-not-yet-consumed (dispatched to a trainer).
-    processing: bool,
-    /// Insertion sequence — FIFO tie-break within a version.
-    seq: u64,
+pub enum Field {
+    Value(Value),
+    Blob(Blob),
 }
 
-/// One agent's table.
+/// One row of a batched write (all fields set under a single table-lock
+/// acquisition — the micro-batch producer path).
+#[derive(Debug, Clone)]
+pub struct PutRow<'a> {
+    pub version: u64,
+    pub id: SampleId,
+    pub fields: Vec<(&'a str, Field)>,
+}
+
+// ---------------------------------------------------------------------------
+// Columnar table
+// ---------------------------------------------------------------------------
+
 #[derive(Debug)]
-pub struct Table {
-    pub agent: String,
+enum ColData {
+    Int(Vec<i64>),
+    Float(Vec<f64>),
+    Bool(Vec<bool>),
+    /// Blob location keys.
+    Blob(Vec<u64>),
+}
+
+impl ColData {
+    fn new(ty: ColumnType) -> ColData {
+        match ty {
+            ColumnType::Int => ColData::Int(Vec::new()),
+            ColumnType::Float => ColData::Float(Vec::new()),
+            ColumnType::Bool => ColData::Bool(Vec::new()),
+            ColumnType::Blob => ColData::Blob(Vec::new()),
+        }
+    }
+
+    fn push_default(&mut self) {
+        match self {
+            ColData::Int(v) => v.push(0),
+            ColData::Float(v) => v.push(0.0),
+            ColData::Bool(v) => v.push(false),
+            ColData::Blob(v) => v.push(0),
+        }
+    }
+
+    fn write(&mut self, slot: usize, value: &Value) {
+        match (self, value) {
+            (ColData::Int(v), Value::Int(x)) => v[slot] = *x,
+            (ColData::Float(v), Value::Float(x)) => v[slot] = *x,
+            (ColData::Bool(v), Value::Bool(x)) => v[slot] = *x,
+            (ColData::Blob(v), Value::Ref(x)) => v[slot] = *x,
+            _ => unreachable!("type checked before write"),
+        }
+    }
+
+    fn read(&self, slot: usize) -> Value {
+        match self {
+            ColData::Int(v) => Value::Int(v[slot]),
+            ColData::Float(v) => Value::Float(v[slot]),
+            ColData::Bool(v) => Value::Bool(v[slot]),
+            ColData::Blob(v) => Value::Ref(v[slot]),
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Column {
+    data: ColData,
+    /// The paired status column: value fully generated?
+    set: Vec<bool>,
+}
+
+/// One agent's table: a columnar slot slab plus the ready-set index.
+#[derive(Debug)]
+struct Table {
     schema: Vec<(String, ColumnType)>,
-    rows: BTreeMap<SampleKey, Row>,
-    seq: u64,
+    cols: Vec<Column>,
+    /// Per-slot row metadata.
+    keys: Vec<SampleKey>,
+    processing: Vec<bool>,
+    /// Status columns still unset for this row.
+    missing: Vec<u32>,
+    occupied: Vec<bool>,
+    /// Slot free-list (slab reuse; steady state allocates nothing).
+    free: Vec<u32>,
+    /// key → slot.
+    index: FastMap<SampleKey, u32>,
+    /// Dispatch-ready rows in deterministic (version, id) order.
+    ready: BTreeSet<SampleKey>,
+    ready_by_version: BTreeMap<u64, usize>,
+    live_rows: usize,
 }
 
 #[derive(Debug, Clone, PartialEq)]
@@ -160,6 +279,29 @@ impl fmt::Display for StoreError {
 impl std::error::Error for StoreError {}
 
 impl Table {
+    fn new(schema: Vec<(String, ColumnType)>) -> Table {
+        let cols = schema
+            .iter()
+            .map(|&(_, ty)| Column {
+                data: ColData::new(ty),
+                set: Vec::new(),
+            })
+            .collect();
+        Table {
+            schema,
+            cols,
+            keys: Vec::new(),
+            processing: Vec::new(),
+            missing: Vec::new(),
+            occupied: Vec::new(),
+            free: Vec::new(),
+            index: FastMap::default(),
+            ready: BTreeSet::new(),
+            ready_by_version: BTreeMap::new(),
+            live_rows: 0,
+        }
+    }
+
     fn col(&self, name: &str) -> Result<usize, StoreError> {
         self.schema
             .iter()
@@ -167,25 +309,63 @@ impl Table {
             .ok_or_else(|| StoreError::NoSuchColumn(name.to_string()))
     }
 
+    fn mark_ready(&mut self, key: SampleKey) {
+        if self.ready.insert(key) {
+            *self.ready_by_version.entry(key.version).or_insert(0) += 1;
+        }
+    }
+
+    fn unmark_ready(&mut self, key: SampleKey) {
+        if self.ready.remove(&key) {
+            let c = self
+                .ready_by_version
+                .get_mut(&key.version)
+                .expect("ready count out of sync");
+            *c -= 1;
+            if *c == 0 {
+                self.ready_by_version.remove(&key.version);
+            }
+        }
+    }
+
     fn insert(&mut self, key: SampleKey) -> Result<(), StoreError> {
-        if self.rows.contains_key(&key) {
+        if self.index.contains_key(&key) {
             return Err(StoreError::DuplicateSample(key));
         }
-        let n = self.schema.len();
-        self.rows.insert(
-            key,
-            Row {
-                values: vec![None; n],
-                status: vec![false; n],
-                processing: false,
-                seq: self.seq,
-            },
-        );
-        self.seq += 1;
+        let slot = match self.free.pop() {
+            Some(s) => {
+                let s = s as usize;
+                self.keys[s] = key;
+                self.processing[s] = false;
+                self.occupied[s] = true;
+                self.missing[s] = self.cols.len() as u32;
+                for c in &mut self.cols {
+                    c.set[s] = false;
+                }
+                s
+            }
+            None => {
+                let s = self.keys.len();
+                self.keys.push(key);
+                self.processing.push(false);
+                self.occupied.push(true);
+                self.missing.push(self.cols.len() as u32);
+                for c in &mut self.cols {
+                    c.set.push(false);
+                    c.data.push_default();
+                }
+                s
+            }
+        };
+        self.index.insert(key, slot as u32);
+        self.live_rows += 1;
+        if self.cols.is_empty() {
+            self.mark_ready(key); // degenerate meta-only schema
+        }
         Ok(())
     }
 
-    fn set(&mut self, key: SampleKey, column: &str, value: Value) -> Result<(), StoreError> {
+    fn set(&mut self, key: SampleKey, column: &str, value: &Value) -> Result<(), StoreError> {
         let ci = self.col(column)?;
         let expected = self.schema[ci].1;
         if value.column_type() != expected {
@@ -194,20 +374,142 @@ impl Table {
                 expected,
             });
         }
-        let row = self
-            .rows
-            .get_mut(&key)
-            .ok_or(StoreError::UnknownSample(key))?;
-        row.values[ci] = Some(value);
-        row.status[ci] = true;
+        let slot = *self
+            .index
+            .get(&key)
+            .ok_or(StoreError::UnknownSample(key))? as usize;
+        self.cols[ci].data.write(slot, value);
+        if !self.cols[ci].set[slot] {
+            self.cols[ci].set[slot] = true;
+            self.missing[slot] -= 1;
+            if self.missing[slot] == 0 && !self.processing[slot] {
+                self.mark_ready(key);
+            }
+        }
         Ok(())
     }
 
-    fn ready(&self, key: &SampleKey) -> bool {
-        self.rows
-            .get(key)
-            .map(|r| !r.processing && r.status.iter().all(|&s| s))
-            .unwrap_or(false)
+    /// Ready keys in dispatch order, optionally restricted to a version.
+    fn ready_range(&self, version: Option<u64>, limit: usize) -> Vec<SampleKey> {
+        match version {
+            None => self.ready.iter().take(limit).copied().collect(),
+            Some(v) => {
+                let lo = SampleKey {
+                    version: v,
+                    id: SampleId::MIN,
+                };
+                let hi = SampleKey {
+                    version: v,
+                    id: SampleId::MAX,
+                };
+                self.ready.range(lo..=hi).take(limit).copied().collect()
+            }
+        }
+    }
+
+    fn count_ready(&self, version: Option<u64>) -> usize {
+        match version {
+            None => self.ready.len(),
+            Some(v) => self.ready_by_version.get(&v).copied().unwrap_or(0),
+        }
+    }
+
+    fn sample(&self, slot: usize, key: SampleKey) -> FetchedSample {
+        let values = self
+            .schema
+            .iter()
+            .enumerate()
+            .map(|(ci, (n, _))| (n.clone(), self.cols[ci].data.read(slot)))
+            .collect();
+        FetchedSample {
+            key,
+            values,
+            blobs: Vec::new(),
+        }
+    }
+
+    /// Dispatch up to `limit` ready samples, marking them `processing`.
+    fn fetch(&mut self, version: Option<u64>, limit: usize) -> Vec<FetchedSample> {
+        let keys = self.ready_range(version, limit);
+        let mut out = Vec::with_capacity(keys.len());
+        for key in keys {
+            let slot = self.index[&key] as usize;
+            self.processing[slot] = true;
+            self.unmark_ready(key);
+            out.push(self.sample(slot, key));
+        }
+        out
+    }
+
+    /// Blob location keys referenced by a row's set blob columns,
+    /// tagged with the column index.
+    fn blob_refs(&self, slot: usize) -> Vec<(usize, u64)> {
+        let mut out = Vec::new();
+        for (ci, c) in self.cols.iter().enumerate() {
+            if c.set[slot] {
+                if let ColData::Blob(v) = &c.data {
+                    out.push((ci, v[slot]));
+                }
+            }
+        }
+        out
+    }
+
+    /// Return a (still-indexed-out) row's slot to the free-list.
+    fn free_row(&mut self, key: SampleKey, slot: usize) {
+        self.unmark_ready(key);
+        self.occupied[slot] = false;
+        self.free.push(slot as u32);
+        self.live_rows -= 1;
+    }
+
+    /// Remove a row, returning its blob location keys for arena cleanup.
+    fn remove_row(&mut self, key: SampleKey) -> Result<Vec<u64>, StoreError> {
+        let slot = self
+            .index
+            .remove(&key)
+            .ok_or(StoreError::UnknownSample(key))? as usize;
+        let refs = self.blob_refs(slot);
+        self.free_row(key, slot);
+        Ok(refs.into_iter().map(|(_, k)| k).collect())
+    }
+
+    /// Fused fetch+consume: dispatch and remove in one pass. Returns the
+    /// samples plus each row's (column, blob key) refs for the caller to
+    /// resolve against the arena.
+    #[allow(clippy::type_complexity)]
+    fn take(
+        &mut self,
+        version: Option<u64>,
+        limit: usize,
+    ) -> Vec<(FetchedSample, Vec<(usize, u64)>)> {
+        let keys = self.ready_range(version, limit);
+        let mut out = Vec::with_capacity(keys.len());
+        for key in keys {
+            let slot = self.index.remove(&key).expect("ready key indexed") as usize;
+            let sample = self.sample(slot, key);
+            let refs = self.blob_refs(slot);
+            self.free_row(key, slot);
+            out.push((sample, refs));
+        }
+        out
+    }
+
+    /// The pre-columnar reference path: recompute the ready set by a
+    /// full slab scan. Only used by diagnostics and the property tests
+    /// that pin the ready-set index to identical dispatch behaviour.
+    fn scan_ready(&self, version: Option<u64>) -> Vec<SampleKey> {
+        let mut out: Vec<SampleKey> = (0..self.keys.len())
+            .filter(|&s| {
+                self.occupied[s]
+                    && !self.processing[s]
+                    && self.missing[s] == 0
+                    && version.map(|v| self.keys[s].version == v).unwrap_or(true)
+            })
+            .map(|s| self.keys[s])
+            .collect();
+        out.sort_unstable();
+        out
     }
 }
 
@@ -220,6 +522,10 @@ impl Table {
 pub struct FetchedSample {
     pub key: SampleKey,
     pub values: Vec<(String, Value)>,
+    /// Blob payloads resolved inline by [`ExperienceStore::take_batch`]
+    /// (empty for plain `fetch_ready`, where payloads stay in the arena
+    /// until `complete`).
+    pub blobs: Vec<(String, Blob)>,
 }
 
 impl FetchedSample {
@@ -229,18 +535,23 @@ impl FetchedSample {
             .find(|(n, _)| n == column)
             .map(|(_, v)| v)
     }
+
+    pub fn blob(&self, column: &str) -> Option<&Blob> {
+        self.blobs
+            .iter()
+            .find(|(n, _)| n == column)
+            .map(|(_, b)| b)
+    }
 }
 
-#[derive(Default)]
-struct Inner {
-    tables: BTreeMap<String, Table>,
-    blobs: BTreeMap<u64, Blob>,
-}
+const BLOB_SHARDS: usize = 16;
 
 /// The experience store: thread-safe (rollout workers produce, trainer
-/// process groups consume), deterministic dispatch order.
+/// process groups consume), deterministic dispatch order. Tables are
+/// independent lock shards; the blob arena is sharded by key.
 pub struct ExperienceStore {
-    inner: Mutex<Inner>,
+    tables: RwLock<BTreeMap<String, Arc<Mutex<Table>>>>,
+    blobs: Vec<Mutex<FastMap<u64, Blob>>>,
     next_blob: AtomicU64,
 }
 
@@ -253,39 +564,42 @@ impl Default for ExperienceStore {
 impl ExperienceStore {
     pub fn new() -> Self {
         ExperienceStore {
-            inner: Mutex::new(Inner::default()),
+            tables: RwLock::new(BTreeMap::new()),
+            blobs: (0..BLOB_SHARDS).map(|_| Mutex::new(FastMap::default())).collect(),
             next_blob: AtomicU64::new(1),
         }
     }
 
+    fn table(&self, agent: &str) -> Result<Arc<Mutex<Table>>, StoreError> {
+        self.tables
+            .read()
+            .unwrap()
+            .get(agent)
+            .cloned()
+            .ok_or_else(|| StoreError::NoSuchTable(agent.to_string()))
+    }
+
+    fn blob_shard(&self, key: u64) -> &Mutex<FastMap<u64, Blob>> {
+        &self.blobs[key as usize & (BLOB_SHARDS - 1)]
+    }
+
     /// Create (or replace) an agent's table with the given data columns.
     pub fn create_table(&self, agent: &str, schema: &[(&str, ColumnType)]) {
-        let mut g = self.inner.lock().unwrap();
-        g.tables.insert(
-            agent.to_string(),
-            Table {
-                agent: agent.to_string(),
-                schema: schema
-                    .iter()
-                    .map(|(n, t)| (n.to_string(), *t))
-                    .collect(),
-                rows: BTreeMap::new(),
-                seq: 0,
-            },
-        );
+        let schema = schema.iter().map(|(n, t)| (n.to_string(), *t)).collect();
+        self.tables
+            .write()
+            .unwrap()
+            .insert(agent.to_string(), Arc::new(Mutex::new(Table::new(schema))));
     }
 
     pub fn agents(&self) -> Vec<String> {
-        self.inner.lock().unwrap().tables.keys().cloned().collect()
+        self.tables.read().unwrap().keys().cloned().collect()
     }
 
     /// Register a new sample row (meta columns only).
     pub fn insert(&self, agent: &str, version: u64, id: SampleId) -> Result<(), StoreError> {
-        let mut g = self.inner.lock().unwrap();
-        let t = g
-            .tables
-            .get_mut(agent)
-            .ok_or_else(|| StoreError::NoSuchTable(agent.to_string()))?;
+        let t = self.table(agent)?;
+        let mut t = t.lock().unwrap();
         t.insert(SampleKey { version, id })
     }
 
@@ -298,16 +612,15 @@ impl ExperienceStore {
         column: &str,
         value: Value,
     ) -> Result<(), StoreError> {
-        let mut g = self.inner.lock().unwrap();
-        let t = g
-            .tables
-            .get_mut(agent)
-            .ok_or_else(|| StoreError::NoSuchTable(agent.to_string()))?;
-        t.set(SampleKey { version, id }, column, value)
+        let t = self.table(agent)?;
+        let mut t = t.lock().unwrap();
+        t.set(SampleKey { version, id }, column, &value)
     }
 
     /// Write a complex payload: parks the blob, stores the reference
-    /// (type-aware hybrid storage).
+    /// (type-aware hybrid storage). The blob is parked *before* the
+    /// status column flips so a concurrent consumer that sees the row
+    /// become ready can always resolve the reference.
     pub fn set_blob(
         &self,
         agent: &str,
@@ -316,35 +629,97 @@ impl ExperienceStore {
         column: &str,
         blob: Blob,
     ) -> Result<u64, StoreError> {
+        let t = self.table(agent)?;
         let blob_key = self.next_blob.fetch_add(1, Ordering::Relaxed);
-        let mut g = self.inner.lock().unwrap();
-        let t = g
-            .tables
-            .get_mut(agent)
-            .ok_or_else(|| StoreError::NoSuchTable(agent.to_string()))?;
-        t.set(SampleKey { version, id }, column, Value::Ref(blob_key))?;
-        g.blobs.insert(blob_key, blob);
-        Ok(blob_key)
+        self.blob_shard(blob_key).lock().unwrap().insert(blob_key, blob);
+        let res = {
+            let mut t = t.lock().unwrap();
+            t.set(SampleKey { version, id }, column, &Value::Ref(blob_key))
+        };
+        match res {
+            Ok(()) => Ok(blob_key),
+            Err(e) => {
+                self.blob_shard(blob_key).lock().unwrap().remove(&blob_key);
+                Err(e)
+            }
+        }
+    }
+
+    /// Batched producer write: insert `rows` and set all their fields
+    /// under a single table-lock acquisition (the micro-batch pipeline's
+    /// group-completion path). Blobs are parked in the arena first.
+    ///
+    /// On error, everything up to the failing field remains applied
+    /// (same per-call semantics as the unbatched API — the failing row
+    /// may remain inserted with its earlier fields set); parked blobs
+    /// whose references never reached a column are released.
+    pub fn put_rows(&self, agent: &str, rows: Vec<PutRow<'_>>) -> Result<(), StoreError> {
+        let table = self.table(agent)?;
+        // Park blobs first (see `set_blob`), remembering (row, field)
+        // so an error can release exactly the blobs whose refs never
+        // reached a column.
+        let mut parked: Vec<(usize, usize, u64)> = Vec::new();
+        let mut converted: Vec<(SampleKey, Vec<(&str, Value)>)> = Vec::with_capacity(rows.len());
+        for (ri, row) in rows.into_iter().enumerate() {
+            let key = SampleKey {
+                version: row.version,
+                id: row.id,
+            };
+            let mut vals = Vec::with_capacity(row.fields.len());
+            for (fi, (name, field)) in row.fields.into_iter().enumerate() {
+                match field {
+                    Field::Value(v) => vals.push((name, v)),
+                    Field::Blob(b) => {
+                        let k = self.next_blob.fetch_add(1, Ordering::Relaxed);
+                        self.blob_shard(k).lock().unwrap().insert(k, b);
+                        parked.push((ri, fi, k));
+                        vals.push((name, Value::Ref(k)));
+                    }
+                }
+            }
+            converted.push((key, vals));
+        }
+        // On failure, (row, field) of the first field that did NOT
+        // apply — every parked blob at or after it is unreferenced.
+        let mut failed: Option<(usize, usize, StoreError)> = None;
+        {
+            let mut t = table.lock().unwrap();
+            'rows: for (ri, (key, vals)) in converted.iter().enumerate() {
+                if let Err(e) = t.insert(*key) {
+                    failed = Some((ri, 0, e));
+                    break 'rows;
+                }
+                for (fi, (name, v)) in vals.iter().enumerate() {
+                    if let Err(e) = t.set(*key, name, v) {
+                        failed = Some((ri, fi, e));
+                        break 'rows;
+                    }
+                }
+            }
+        }
+        if let Some((ri, fi, e)) = failed {
+            for &(bri, bfi, k) in &parked {
+                if (bri, bfi) >= (ri, fi) {
+                    self.blob_shard(k).lock().unwrap().remove(&k);
+                }
+            }
+            return Err(e);
+        }
+        Ok(())
     }
 
     pub fn blob(&self, key: u64) -> Option<Blob> {
-        self.inner.lock().unwrap().blobs.get(&key).cloned()
+        self.blob_shard(key).lock().unwrap().get(&key).cloned()
     }
 
     /// Number of fully-generated, not-yet-dispatched samples — the
-    /// micro-batch trigger input (§4.3).
+    /// micro-batch trigger input (§4.3). O(1)/O(log V) off the ready
+    /// index; never scans.
     pub fn count_ready(&self, agent: &str, version: Option<u64>) -> usize {
-        let g = self.inner.lock().unwrap();
-        g.tables
-            .get(agent)
-            .map(|t| {
-                t.rows
-                    .keys()
-                    .filter(|k| version.map(|v| k.version == v).unwrap_or(true))
-                    .filter(|k| t.ready(k))
-                    .count()
-            })
-            .unwrap_or(0)
+        match self.table(agent) {
+            Ok(t) => t.lock().unwrap().count_ready(version),
+            Err(_) => 0,
+        }
     }
 
     /// Dispatch up to `limit` ready samples (deterministic order: version,
@@ -357,33 +732,34 @@ impl ExperienceStore {
         version: Option<u64>,
         limit: usize,
     ) -> Vec<FetchedSample> {
-        let mut g = self.inner.lock().unwrap();
-        let Inner { tables, blobs: _ } = &mut *g;
-        let Some(t) = tables.get_mut(agent) else {
+        match self.table(agent) {
+            Ok(t) => t.lock().unwrap().fetch(version, limit),
+            Err(_) => Vec::new(),
+        }
+    }
+
+    /// Fused dispatch+consume for pipelines that never requeue a
+    /// micro-batch (one table-lock acquisition instead of
+    /// `fetch_ready` + `complete`). Rows are removed; blob payloads are
+    /// pulled from the arena and returned inline on each sample.
+    pub fn take_batch(
+        &self,
+        agent: &str,
+        version: Option<u64>,
+        limit: usize,
+    ) -> Vec<FetchedSample> {
+        let Ok(table) = self.table(agent) else {
             return Vec::new();
         };
-        let keys: Vec<SampleKey> = t
-            .rows
-            .iter()
-            .filter(|(k, r)| {
-                version.map(|v| k.version == v).unwrap_or(true)
-                    && !r.processing
-                    && r.status.iter().all(|&s| s)
-            })
-            .map(|(k, _)| *k)
-            .take(limit)
-            .collect();
-        let mut out = Vec::with_capacity(keys.len());
-        for k in keys {
-            let row = t.rows.get_mut(&k).unwrap();
-            row.processing = true;
-            let values = t
-                .schema
-                .iter()
-                .zip(&row.values)
-                .map(|((n, _), v)| (n.clone(), v.clone().unwrap()))
-                .collect();
-            out.push(FetchedSample { key: k, values });
+        let taken = table.lock().unwrap().take(version, limit);
+        let mut out = Vec::with_capacity(taken.len());
+        for (mut sample, refs) in taken {
+            for (ci, bkey) in refs {
+                if let Some(b) = self.blob_shard(bkey).lock().unwrap().remove(&bkey) {
+                    sample.blobs.push((sample.values[ci].0.clone(), b));
+                }
+            }
+            out.push(sample);
         }
         out
     }
@@ -391,66 +767,104 @@ impl ExperienceStore {
     /// Consume dispatched samples after their gradient is computed
     /// (removes rows and their blobs).
     pub fn complete(&self, agent: &str, keys: &[SampleKey]) -> Result<(), StoreError> {
-        let mut g = self.inner.lock().unwrap();
-        let t = g
-            .tables
-            .get_mut(agent)
-            .ok_or_else(|| StoreError::NoSuchTable(agent.to_string()))?;
+        let table = self.table(agent)?;
         let mut blob_keys = Vec::new();
-        for k in keys {
-            let row = t.rows.remove(k).ok_or(StoreError::UnknownSample(*k))?;
-            for v in row.values.into_iter().flatten() {
-                if let Value::Ref(b) = v {
-                    blob_keys.push(b);
+        let mut failed = None;
+        {
+            let mut t = table.lock().unwrap();
+            for k in keys {
+                match t.remove_row(*k) {
+                    Ok(mut bs) => blob_keys.append(&mut bs),
+                    Err(e) => {
+                        failed = Some(e);
+                        break;
+                    }
                 }
             }
         }
         for b in blob_keys {
-            g.blobs.remove(&b);
+            self.blob_shard(b).lock().unwrap().remove(&b);
         }
-        Ok(())
+        match failed {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
     }
 
     /// Fault tolerance: a trainer died — return its samples to the pool.
     pub fn requeue(&self, agent: &str, keys: &[SampleKey]) -> Result<(), StoreError> {
-        let mut g = self.inner.lock().unwrap();
-        let t = g
-            .tables
-            .get_mut(agent)
-            .ok_or_else(|| StoreError::NoSuchTable(agent.to_string()))?;
+        let table = self.table(agent)?;
+        let mut t = table.lock().unwrap();
         for k in keys {
-            let row = t.rows.get_mut(k).ok_or(StoreError::UnknownSample(*k))?;
-            row.processing = false;
+            let slot = *t.index.get(k).ok_or(StoreError::UnknownSample(*k))? as usize;
+            t.processing[slot] = false;
+            if t.missing[slot] == 0 {
+                t.mark_ready(*k);
+            }
         }
         Ok(())
     }
 
     /// Drop all rows belonging to policy versions older than `min_version`
-    /// (stale data from cancelled asynchronous rollouts).
+    /// (stale data from cancelled asynchronous rollouts). Their blobs are
+    /// released from the arena as well.
     pub fn evict_stale(&self, agent: &str, min_version: u64) -> usize {
-        let mut g = self.inner.lock().unwrap();
-        let Some(t) = g.tables.get_mut(agent) else {
+        let Ok(table) = self.table(agent) else {
             return 0;
         };
-        let stale: Vec<SampleKey> = t
-            .rows
-            .keys()
-            .filter(|k| k.version < min_version)
-            .copied()
-            .collect();
-        for k in &stale {
-            t.rows.remove(k);
+        let mut blob_keys = Vec::new();
+        let n = {
+            let mut t = table.lock().unwrap();
+            let mut stale: Vec<SampleKey> = t
+                .index
+                .keys()
+                .filter(|k| k.version < min_version)
+                .copied()
+                .collect();
+            stale.sort_unstable();
+            for k in &stale {
+                if let Ok(mut bs) = t.remove_row(*k) {
+                    blob_keys.append(&mut bs);
+                }
+            }
+            stale.len()
+        };
+        for b in blob_keys {
+            self.blob_shard(b).lock().unwrap().remove(&b);
         }
-        stale.len()
+        n
+    }
+
+    /// Ready keys in dispatch order from the maintained index (read-only
+    /// diagnostic / verification aid).
+    pub fn ready_keys(&self, agent: &str, version: Option<u64>) -> Vec<SampleKey> {
+        match self.table(agent) {
+            Ok(t) => t.lock().unwrap().ready_range(version, usize::MAX),
+            Err(_) => Vec::new(),
+        }
+    }
+
+    /// Ready keys recomputed by the pre-columnar full-scan path. The
+    /// property tests assert this always matches [`Self::ready_keys`];
+    /// production code must never need it.
+    pub fn scan_ready_keys(&self, agent: &str, version: Option<u64>) -> Vec<SampleKey> {
+        match self.table(agent) {
+            Ok(t) => t.lock().unwrap().scan_ready(version),
+            Err(_) => Vec::new(),
+        }
     }
 
     pub fn total_rows(&self) -> usize {
-        let g = self.inner.lock().unwrap();
-        g.tables.values().map(|t| t.rows.len()).sum()
+        self.tables
+            .read()
+            .unwrap()
+            .values()
+            .map(|t| t.lock().unwrap().live_rows)
+            .sum()
     }
 
     pub fn total_blobs(&self) -> usize {
-        self.inner.lock().unwrap().blobs.len()
+        self.blobs.iter().map(|s| s.lock().unwrap().len()).sum()
     }
 }
 
@@ -565,6 +979,8 @@ mod tests {
         fill(&s, "a", 2, SampleId::new(1, 1, 0));
         assert_eq!(s.evict_stale("a", 2), 1);
         assert_eq!(s.count_ready("a", None), 1);
+        // Evicted rows release their blobs too.
+        assert_eq!(s.total_blobs(), 3);
     }
 
     #[test]
@@ -613,6 +1029,189 @@ mod tests {
         let f = s.fetch_ready("a", None, 10);
         let ids: Vec<String> = f.iter().map(|x| x.key.id.to_string()).collect();
         assert_eq!(ids, vec!["1_1_0", "1_1_1", "2_1_0", "3_1_0"]);
+    }
+
+    #[test]
+    fn slab_reuses_slots_after_complete() {
+        let s = store_with("a");
+        for round in 0..4u64 {
+            for i in 0..8 {
+                fill(&s, "a", 1, SampleId::new(round * 8 + i, 1, 0));
+            }
+            let f = s.fetch_ready("a", None, 8);
+            assert_eq!(f.len(), 8);
+            let keys: Vec<SampleKey> = f.iter().map(|x| x.key).collect();
+            s.complete("a", &keys).unwrap();
+        }
+        assert_eq!(s.total_rows(), 0);
+        assert_eq!(s.total_blobs(), 0);
+    }
+
+    #[test]
+    fn put_rows_batch_and_take_batch_roundtrip() {
+        let s = store_with("a");
+        let rows: Vec<PutRow> = (0..16u64)
+            .map(|i| PutRow {
+                version: 1,
+                id: SampleId::new(i, 1, 0),
+                fields: vec![
+                    ("prompt", Field::Blob(Blob::Tokens(vec![1; 4]))),
+                    ("response", Field::Blob(Blob::Tokens(vec![2; 4]))),
+                    ("old_logp", Field::Blob(Blob::Floats(vec![-0.5; 4]))),
+                    ("reward", Field::Value(Value::Float(0.5))),
+                    ("advantage", Field::Value(Value::Float(0.1))),
+                ],
+            })
+            .collect();
+        s.put_rows("a", rows).unwrap();
+        assert_eq!(s.count_ready("a", Some(1)), 16);
+        assert_eq!(s.total_blobs(), 48);
+        let taken = s.take_batch("a", Some(1), 16);
+        assert_eq!(taken.len(), 16);
+        for t in &taken {
+            assert!(matches!(t.blob("prompt"), Some(Blob::Tokens(v)) if v.len() == 4));
+            assert!(matches!(t.blob("old_logp"), Some(Blob::Floats(_))));
+            assert_eq!(t.value("reward"), Some(&Value::Float(0.5)));
+        }
+        // Fused consume: rows and blobs are gone.
+        assert_eq!(s.total_rows(), 0);
+        assert_eq!(s.total_blobs(), 0);
+        assert!(s.take_batch("a", Some(1), 16).is_empty());
+    }
+
+    #[test]
+    fn put_rows_error_releases_unapplied_blobs() {
+        let s = store_with("a");
+        fill(&s, "a", 1, SampleId::new(0, 1, 0));
+        let before = s.total_blobs();
+        let rows = vec![
+            PutRow {
+                version: 1,
+                id: SampleId::new(0, 1, 0), // duplicate → fails
+                fields: vec![("prompt", Field::Blob(Blob::Tokens(vec![9])))],
+            },
+            PutRow {
+                version: 1,
+                id: SampleId::new(1, 1, 0),
+                fields: vec![("prompt", Field::Blob(Blob::Tokens(vec![9])))],
+            },
+        ];
+        assert!(matches!(
+            s.put_rows("a", rows),
+            Err(StoreError::DuplicateSample(_))
+        ));
+        // The failing row never inserted, so its parked blob and every
+        // later row's parked blob were all released again.
+        assert_eq!(s.total_blobs(), before);
+        assert_eq!(s.total_rows(), 1);
+    }
+
+    #[test]
+    fn meta_only_schema_rows_ready_on_insert() {
+        let s = ExperienceStore::new();
+        s.create_table("m", &[]);
+        s.insert("m", 3, SampleId::new(0, 1, 0)).unwrap();
+        assert_eq!(s.count_ready("m", Some(3)), 1);
+        let f = s.fetch_ready("m", None, 4);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].values.is_empty());
+    }
+
+    #[test]
+    fn ready_index_matches_scan_path() {
+        let s = store_with("a");
+        for i in 0..10 {
+            fill(&s, "a", 1 + i % 3, SampleId::new(i, 1, 0));
+        }
+        // Partially-filled row is in neither view.
+        s.insert("a", 1, SampleId::new(99, 1, 0)).unwrap();
+        let f = s.fetch_ready("a", Some(2), 2); // processing rows drop out
+        assert_eq!(f.len(), 2);
+        for v in [None, Some(1), Some(2), Some(3)] {
+            assert_eq!(s.ready_keys("a", v), s.scan_ready_keys("a", v), "{v:?}");
+        }
+    }
+
+    /// Satellite: the `processing` flag and status columns must
+    /// round-trip identically through the scan path and the ready-set
+    /// index — same samples dispatched in the same deterministic order,
+    /// under arbitrary interleavings of the full mutation API.
+    #[test]
+    fn prop_ready_index_equals_scan_under_random_ops() {
+        forall("ready index == scan path", 80, |rng| {
+            let s = store_with("a");
+            let mut next_input = 0u64;
+            let mut dispatched: Vec<SampleKey> = Vec::new();
+            let mut partial: Vec<SampleKey> = Vec::new();
+            for _ in 0..120 {
+                match rng.below(6) {
+                    0 | 1 => {
+                        // New fully-generated sample.
+                        let v = 1 + rng.below(3);
+                        fill(&s, "a", v, SampleId::new(next_input, 1, 0));
+                        next_input += 1;
+                    }
+                    2 => {
+                        // Partially-generated sample (status columns
+                        // incomplete → must never appear ready).
+                        let v = 1 + rng.below(3);
+                        let id = SampleId::new(next_input, 1, 0);
+                        next_input += 1;
+                        s.insert("a", v, id).unwrap();
+                        s.set_value("a", v, id, "reward", Value::Float(0.0)).unwrap();
+                        partial.push(SampleKey { version: v, id });
+                    }
+                    3 => {
+                        // Finish a pending partial row.
+                        if let Some(k) = partial.pop() {
+                            let (v, id) = (k.version, k.id);
+                            s.set_blob("a", v, id, "prompt", Blob::Tokens(vec![1])).unwrap();
+                            s.set_blob("a", v, id, "response", Blob::Tokens(vec![2])).unwrap();
+                            s.set_blob("a", v, id, "old_logp", Blob::Floats(vec![-1.0])).unwrap();
+                            s.set_value("a", v, id, "advantage", Value::Float(0.1)).unwrap();
+                        }
+                    }
+                    4 => {
+                        // Dispatch a batch; order must equal the scan
+                        // path's prefix.
+                        let version = if rng.below(2) == 0 {
+                            None
+                        } else {
+                            Some(1 + rng.below(3))
+                        };
+                        let limit = rng.below(5) as usize + 1;
+                        let expect: Vec<SampleKey> = s
+                            .scan_ready_keys("a", version)
+                            .into_iter()
+                            .take(limit)
+                            .collect();
+                        let got: Vec<SampleKey> = s
+                            .fetch_ready("a", version, limit)
+                            .iter()
+                            .map(|f| f.key)
+                            .collect();
+                        assert_eq!(got, expect, "dispatch order diverged");
+                        dispatched.extend(got);
+                    }
+                    _ => {
+                        // Resolve some dispatched rows: complete or
+                        // requeue (the `processing` round-trip).
+                        if let Some(k) = dispatched.pop() {
+                            if rng.below(2) == 0 {
+                                s.complete("a", &[k]).unwrap();
+                            } else {
+                                s.requeue("a", &[k]).unwrap();
+                            }
+                        }
+                    }
+                }
+                for v in [None, Some(1), Some(2), Some(3)] {
+                    let idx = s.ready_keys("a", v);
+                    assert_eq!(idx, s.scan_ready_keys("a", v), "index/scan split at {v:?}");
+                    assert_eq!(idx.len(), s.count_ready("a", v), "count_ready stale");
+                }
+            }
+        });
     }
 
     #[test]

@@ -1,0 +1,116 @@
+//! Fast non-cryptographic hashing for hot-path maps (substrate).
+//!
+//! The coordinator's request table and the experience store's key→slot
+//! index sit on the per-call critical path; `std`'s default SipHash is
+//! DoS-resistant but ~4–5× slower than needed for trusted in-process
+//! keys (sequential request ids, `SampleKey` triples). This is an
+//! FxHash-style multiply-xor word hasher: one rotate, one xor, one
+//! multiply per 8-byte word. Never use it on attacker-controlled input.
+
+use std::collections::{HashMap, HashSet};
+use std::hash::{BuildHasherDefault, Hasher};
+
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+/// Multiply-xor word hasher (FxHash family).
+#[derive(Default, Clone)]
+pub struct FastHasher {
+    state: u64,
+}
+
+impl FastHasher {
+    #[inline]
+    fn mix(&mut self, word: u64) {
+        self.state = (self.state.rotate_left(5) ^ word).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FastHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.state
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        let mut chunks = bytes.chunks_exact(8);
+        for c in chunks.by_ref() {
+            self.mix(u64::from_le_bytes(c.try_into().unwrap()));
+        }
+        let rest = chunks.remainder();
+        if !rest.is_empty() {
+            let mut buf = [0u8; 8];
+            buf[..rest.len()].copy_from_slice(rest);
+            self.mix(u64::from_le_bytes(buf));
+        }
+    }
+
+    #[inline]
+    fn write_u8(&mut self, v: u8) {
+        self.mix(v as u64);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, v: u32) {
+        self.mix(v as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, v: u64) {
+        self.mix(v);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, v: usize) {
+        self.mix(v as u64);
+    }
+}
+
+pub type BuildFastHasher = BuildHasherDefault<FastHasher>;
+
+/// `HashMap` with the fast hasher — for trusted, in-process keys only.
+pub type FastMap<K, V> = HashMap<K, V, BuildFastHasher>;
+pub type FastSet<K> = HashSet<K, BuildFastHasher>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_roundtrip() {
+        let mut m: FastMap<u64, u64> = FastMap::default();
+        for i in 0..1000u64 {
+            m.insert(i, i * 3);
+        }
+        for i in 0..1000u64 {
+            assert_eq!(m.get(&i), Some(&(i * 3)));
+        }
+        assert_eq!(m.len(), 1000);
+    }
+
+    #[test]
+    fn distinct_keys_rarely_collide() {
+        let mut seen = FastSet::default();
+        let mut hashes = std::collections::BTreeSet::new();
+        for i in 0..10_000u64 {
+            seen.insert(i);
+            let mut h = FastHasher::default();
+            h.write_u64(i);
+            hashes.insert(h.finish());
+        }
+        assert_eq!(seen.len(), 10_000);
+        // Sequential keys must not alias to a handful of buckets.
+        assert!(hashes.len() > 9_990, "only {} distinct hashes", hashes.len());
+    }
+
+    #[test]
+    fn struct_keys_work() {
+        #[derive(Hash, PartialEq, Eq)]
+        struct K(u64, u32, u64);
+        let mut m: FastMap<K, usize> = FastMap::default();
+        m.insert(K(1, 2, 3), 7);
+        m.insert(K(1, 3, 2), 8);
+        assert_eq!(m[&K(1, 2, 3)], 7);
+        assert_eq!(m[&K(1, 3, 2)], 8);
+    }
+}

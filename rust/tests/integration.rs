@@ -143,6 +143,110 @@ fn simulation_is_deterministic_for_paper_seed() {
 }
 
 #[test]
+fn event_queue_backends_bit_identical() {
+    // Acceptance gate for the calendar queue: for a fixed seed, the
+    // simulation must be bit-identical under either backend — the
+    // bucketed queue may only change *how fast* events pop, never
+    // *which order* they pop in.
+    use flexmarl::sim::QueueKind;
+    for fw in [Framework::flexmarl(), Framework::mas_rl(), Framework::marti()] {
+        let cfg = ma_cfg(fw, 2);
+        let run = |kind: QueueKind| {
+            simulate(
+                &cfg,
+                &SimOptions {
+                    event_queue: kind,
+                    ..opts()
+                },
+            )
+        };
+        let heap = run(QueueKind::BinaryHeap);
+        let cal = run(QueueKind::Calendar);
+        assert_eq!(heap.total_s, cal.total_s, "{}", cfg.framework.name);
+        assert_eq!(heap.reports.len(), cal.reports.len());
+        for (x, y) in heap.reports.iter().zip(&cal.reports) {
+            assert_eq!(x.e2e_s, y.e2e_s, "{}", cfg.framework.name);
+            assert_eq!(x.rollout_s, y.rollout_s);
+            assert_eq!(x.train_s, y.train_s);
+            assert_eq!(x.other_s, y.other_s);
+            assert_eq!(x.tokens, y.tokens);
+            assert_eq!(x.busy_device_s, y.busy_device_s);
+            assert_eq!(x.agent_calls, y.agent_calls);
+            assert_eq!(x.scale_ops, y.scale_ops);
+            assert_eq!(x.swap_s, y.swap_s);
+            assert_eq!(x.trajectory_latencies, y.trajectory_latencies);
+            assert_eq!(x.busy_series, y.busy_series);
+            assert_eq!(x.processed_series, y.processed_series);
+            assert_eq!(x.queued_series, y.queued_series);
+        }
+    }
+}
+
+#[test]
+fn store_batch_and_unbatched_paths_agree() {
+    // The micro-batch pipeline contract: a batched put_rows + take_batch
+    // cycle dispatches the same samples in the same order as the
+    // unbatched insert/set + fetch_ready/complete path.
+    use flexmarl::store::{
+        Blob, ColumnType, ExperienceStore, Field, PutRow, SampleId, Value,
+    };
+    let schema = [
+        ("tokens", ColumnType::Float),
+        ("prompt", ColumnType::Blob),
+    ];
+    let unbatched = ExperienceStore::new();
+    unbatched.create_table("a", &schema);
+    let batched = ExperienceStore::new();
+    batched.create_table("a", &schema);
+    for i in 0..20u64 {
+        let id = SampleId::new(i, 1, 0);
+        unbatched.insert("a", 1, id).unwrap();
+        unbatched
+            .set_value("a", 1, id, "tokens", Value::Float(i as f64))
+            .unwrap();
+        unbatched
+            .set_blob("a", 1, id, "prompt", Blob::Tokens(vec![i as i32]))
+            .unwrap();
+    }
+    let rows: Vec<PutRow> = (0..20u64)
+        .map(|i| PutRow {
+            version: 1,
+            id: SampleId::new(i, 1, 0),
+            fields: vec![
+                ("tokens", Field::Value(Value::Float(i as f64))),
+                ("prompt", Field::Blob(Blob::Tokens(vec![i as i32]))),
+            ],
+        })
+        .collect();
+    batched.put_rows("a", rows).unwrap();
+    assert_eq!(batched.count_ready("a", Some(1)), 20);
+    loop {
+        let a = unbatched.fetch_ready("a", Some(1), 7);
+        let b = batched.take_batch("a", Some(1), 7);
+        assert_eq!(a.len(), b.len());
+        if a.is_empty() {
+            break;
+        }
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.key, y.key);
+            assert_eq!(x.value("tokens"), y.value("tokens"));
+            // take_batch resolves payloads inline; the unbatched path
+            // reads them from the arena before complete().
+            let xk = match x.value("prompt") {
+                Some(Value::Ref(k)) => *k,
+                other => panic!("bad prompt ref {other:?}"),
+            };
+            assert_eq!(unbatched.blob(xk).as_ref(), y.blob("prompt"));
+        }
+        let keys: Vec<_> = a.iter().map(|f| f.key).collect();
+        unbatched.complete("a", &keys).unwrap();
+    }
+    assert_eq!(unbatched.total_rows(), 0);
+    assert_eq!(batched.total_rows(), 0);
+    assert_eq!(batched.total_blobs(), 0);
+}
+
+#[test]
 fn seed_changes_results() {
     let mut cfg = ma_cfg(Framework::flexmarl(), 1);
     let a = simulate(&cfg, &opts()).total_s;

@@ -10,9 +10,17 @@
 //! `artifacts/e2e_metrics.json`.
 //!
 //! Run: `cargo run --release --example marl_train -- --steps 60 --agents 3`
+//! `--scenario <preset>` derives the query-count/chain-length defaults
+//! from the preset's shaped config where the preset shapes those
+//! fields (tool_heavy lengthens chains; others keep the baseline
+//! workflow shape — token/latency shaping applies to the simulator
+//! and serving surfaces, not this tiny-model loop). Explicit
+//! `--queries`/`--chain` still win.
 
+use flexmarl::config::WorkloadConfig;
 use flexmarl::runtime::marl::{run_loop, E2eOptions};
 use flexmarl::util::cli::Args;
+use flexmarl::workload::scenario;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     let args = Args::from_env();
@@ -21,16 +29,35 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let steps = args.get_usize("steps", 40);
     let seed = args.get_u64("seed", 2048);
     let lr = args.get_f64("lr", 3e-4) as f32;
+    let scen_name = args.get_or("scenario", "baseline");
+    let mut base = WorkloadConfig::ma();
+    base.scenario = scen_name.clone();
+    let (shaped, scen) = scenario::resolve(&base).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2)
+    });
+    // Tiny-model defaults; a non-baseline scenario re-derives them from
+    // its shaped config (clamped — the 3M-param policies can't absorb
+    // paper-scale chains). Compare the canonical name so aliases like
+    // "Base-Line" behave identically.
+    let (q_default, chain_default) = if scen.name() == "baseline" {
+        (2, 2)
+    } else {
+        (
+            shaped.queries_per_step.clamp(1, 4),
+            shaped.min_turns.clamp(1, 4),
+        )
+    };
     let opts = E2eOptions {
-        n_queries: args.get_usize("queries", 2),
-        chain_len: args.get_usize("chain", 2),
+        n_queries: args.get_usize("queries", q_default),
+        chain_len: args.get_usize("chain", chain_default),
         gen_len: args.get_usize("gen-len", 32),
         temperature: args.get_f64("temperature", 1.0) as f32,
         easy_task: args.has_flag("easy"),
     };
 
     println!(
-        "MARL e2e: {agents} agents × {steps} steps  (queries {}, chain {}, gen {})",
+        "MARL e2e: {agents} agents × {steps} steps  (scenario {scen_name}, queries {}, chain {}, gen {})",
         opts.n_queries, opts.chain_len, opts.gen_len
     );
     let logs = run_loop(&dir, agents, steps, seed, lr, &opts, true)?;

@@ -10,12 +10,14 @@
 //! virtual-time simulator drives (deliverable (b), domain scenario 2).
 //!
 //! Run: `cargo run --release --example rollout_serve -- --queries 24`
+//! Traffic shapes: `--scenario <preset>` (see `flexmarl scenarios`);
+//! `--trace <path>` replays a recorded JSONL trace instead.
 
-use flexmarl::config::WorkloadConfig;
+use flexmarl::config::{ExperimentConfig, Framework, WorkloadConfig};
 use flexmarl::memstore::{Location, MemStore, TransferModel};
+use flexmarl::orchestrator::resolve_workload;
 use flexmarl::rollout::{plan_migration, Dispatch, RolloutManager};
 use flexmarl::util::cli::Args;
-use flexmarl::workload::Generator;
 use std::collections::BTreeMap;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
@@ -25,18 +27,43 @@ const TIME_SCALE: f64 = 200.0; // simulated seconds per wall second
 fn main() {
     let args = Args::from_env();
     let mut wl = WorkloadConfig::ma();
-    wl.queries_per_step = args.get_usize("queries", 24) / wl.group_size.min(16).max(1);
+    wl.queries_per_step = args.get_usize("queries", 24) / wl.group_size.clamp(1, 16);
     wl.queries_per_step = wl.queries_per_step.max(2);
     wl.group_size = 4;
+    wl.scenario = args.get_or("scenario", "baseline");
     let delta = args.get_usize("delta", 5);
-    let n_agents = wl.agents.len();
 
-    let workload = Generator::new(&wl, args.get_u64("seed", 2048)).step(0);
+    // Exactly the simulator's source-selection path: scenario-shaped
+    // generation, or bit-identical replay of a recorded trace (header
+    // authoritative, n_agents validated) — no parallel logic to drift.
+    if let Some(path) = args.get("trace") {
+        wl.trace = Some(path.to_string());
+    }
+    let mut cfg = ExperimentConfig::new(wl, Framework::flexmarl());
+    cfg.seed = args.get_u64("seed", 2048); // steps stays 1: serve step 0
+    let (resolved, mut step_wls) = resolve_workload(&cfg).unwrap_or_else(|e| {
+        eprintln!("workload resolution failed: {e}");
+        std::process::exit(1)
+    });
+    if step_wls.is_empty() {
+        eprintln!("trace has no steps");
+        std::process::exit(1)
+    }
+    if step_wls.len() > 1 {
+        eprintln!(
+            "note: trace has {} steps; this wall-clock demo serves step 0 only",
+            step_wls.len()
+        );
+    }
+    let wl = resolved.workload;
+    let workload = step_wls.remove(0);
+    let n_agents = wl.agents.len();
     println!(
-        "serving {} trajectories ({} calls) across {} agents (Δ = {delta}, time×{TIME_SCALE})",
+        "serving {} trajectories ({} calls) across {} agents, scenario '{}' (Δ = {delta}, time×{TIME_SCALE})",
         workload.trajectories.len(),
         workload.total_calls(),
-        n_agents
+        n_agents,
+        wl.scenario,
     );
 
     let store = MemStore::new();

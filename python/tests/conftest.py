@@ -1,0 +1,22 @@
+"""Collection gating: the kernel/model/AOT tests import JAX (and
+test_kernels additionally Hypothesis) at module scope. On machines
+without the accelerator toolchain, importing them would abort pytest
+collection with an error; instead we skip those modules cleanly and
+leave the environment-level tests (test_env.py) to run everywhere."""
+
+import importlib.util
+
+collect_ignore = []
+
+
+def _missing(mod: str) -> bool:
+    try:
+        return importlib.util.find_spec(mod) is None
+    except (ImportError, ValueError):
+        return True
+
+
+if _missing("jax"):
+    collect_ignore += ["test_kernels.py", "test_model.py", "test_aot.py"]
+elif _missing("hypothesis"):
+    collect_ignore += ["test_kernels.py"]

@@ -1,0 +1,37 @@
+"""Toolchain-independent environment checks. These always collect and
+run, so the CI python job never ends with 'no tests ran' (pytest exit
+code 5) when JAX is absent — the heavy modules are gated in
+conftest.py instead."""
+
+import importlib.util
+import os
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+PKG = os.path.join(os.path.dirname(HERE), "compile")
+
+
+def test_compile_package_layout():
+    # The AOT pipeline the Rust runtime consumes.
+    for rel in (
+        "model.py",
+        "aot.py",
+        os.path.join("kernels", "__init__.py"),
+        os.path.join("kernels", "attention.py"),
+        os.path.join("kernels", "grpo_loss.py"),
+        os.path.join("kernels", "ref.py"),
+    ):
+        assert os.path.exists(os.path.join(PKG, rel)), rel
+
+
+def test_gating_is_consistent():
+    # If JAX is importable, the JAX-dependent modules must NOT have been
+    # ignored (and vice versa) — guards the conftest logic itself.
+    import conftest
+
+    jax_present = importlib.util.find_spec("jax") is not None
+    ignored = set(conftest.collect_ignore)
+    if jax_present:
+        assert "test_model.py" not in ignored
+        assert "test_aot.py" not in ignored
+    else:
+        assert {"test_kernels.py", "test_model.py", "test_aot.py"} <= ignored

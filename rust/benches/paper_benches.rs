@@ -7,7 +7,7 @@
 //! bench built on `flexmarl::util::bench`. Each section prints the
 //! paper's reported values next to the regenerated ones.
 
-use flexmarl::baselines::{evaluate, Framework};
+use flexmarl::baselines::{evaluate, scenario_sweep, Framework};
 use flexmarl::cluster::{DevicePool, PlacementStrategy};
 use flexmarl::config::{ClusterConfig, ExperimentConfig, ModelScale, WorkloadConfig};
 use flexmarl::memstore::{Location, TransferModel};
@@ -50,6 +50,7 @@ fn main() {
     bench_fig11();
     bench_table3();
     bench_table4();
+    bench_scenarios();
     bench_ablation_micro_batch();
     bench_ablation_delta();
     bench_ablation_swap_policy();
@@ -198,6 +199,28 @@ fn bench_table4() {
             "    {:<14} rollout {:>6.1}s  train {:>5.1}s  e2e {:>6.1}s  {:>7.1}tps",
             name, r.rollout_s, r.train_s, r.e2e_s, r.throughput_tps()
         );
+    }
+}
+
+fn bench_scenarios() {
+    println!("\n── Scenario matrix: traffic shapes × DistRL vs FlexMARL ──");
+    println!("    (each preset stresses a different paper observation; `flexmarl scenarios`)");
+    for fw in [Framework::dist_rl(), Framework::flexmarl()] {
+        // 4 steps so diurnal presets reach their peak multiplier
+        // (bursty's 3x arrives on step 3) — at 1 step the bursty row
+        // would be byte-identical to baseline.
+        let base = cfg(wl("MA"), fw, 4);
+        for r in scenario_sweep(&base, &opts()) {
+            println!(
+                "    {:<13} {:<10} e2e {:>7.1}s  rollout {:>7.1}s  util {:>4.1}%  scale_ops {}",
+                r.scenario,
+                r.framework,
+                r.e2e_s,
+                r.rollout_s,
+                r.utilization() * 100.0,
+                r.scale_ops
+            );
+        }
     }
 }
 

@@ -19,18 +19,27 @@ pub use crate::config::{framework_by_name, Framework};
 
 use crate::config::ExperimentConfig;
 use crate::metrics::{aggregate, StepReport};
-use crate::orchestrator::{simulate, SimOptions};
+use crate::orchestrator::{try_simulate, SimOptions};
 
 /// Run one framework on a config and aggregate its per-step reports
-/// (the per-sample averages the paper tables quote).
+/// (the per-sample averages the paper tables quote). Panics on
+/// workload-resolution failure (see [`try_evaluate`]).
 pub fn evaluate(cfg: &ExperimentConfig, opts: &SimOptions) -> StepReport {
-    let out = simulate(cfg, opts);
+    try_evaluate(cfg, opts).unwrap_or_else(|e| panic!("workload resolution failed: {e}"))
+}
+
+/// [`evaluate`] with workload-resolution failures (unknown scenario,
+/// bad trace) surfaced as `Err` — the CLI path, so a bad `--trace`
+/// exits cleanly instead of panicking.
+pub fn try_evaluate(cfg: &ExperimentConfig, opts: &SimOptions) -> Result<StepReport, String> {
+    let out = try_simulate(cfg, opts)?;
     let mut rep = aggregate(&out.reports);
     if cfg.framework.one_step_async_rollout {
-        // Overlapped steps: amortized E2E is already per-step.
-        rep.e2e_s = out.total_s / cfg.steps as f64;
+        // Overlapped steps: amortized E2E is already per-step. Use the
+        // simulated step count — trace replay can override cfg.steps.
+        rep.e2e_s = out.total_s / out.reports.len().max(1) as f64;
     }
-    rep
+    Ok(rep)
 }
 
 /// Table-2 style sweep: all four frameworks on one workload.
@@ -40,6 +49,26 @@ pub fn sweep(base: &ExperimentConfig, opts: &SimOptions) -> Vec<StepReport> {
         .map(|fw| {
             let mut cfg = base.clone();
             cfg.framework = fw;
+            evaluate(&cfg, opts)
+        })
+        .collect()
+}
+
+/// Scenario-matrix sweep: one framework across every workload scenario
+/// preset ([`crate::workload::scenario`]) — the balancer, trajectory
+/// scheduler, and allocator each get exercised under every traffic
+/// shape the suite knows. The CI scenario matrix and the
+/// `paper_benches` scenario group both run this shape.
+pub fn scenario_sweep(base: &ExperimentConfig, opts: &SimOptions) -> Vec<StepReport> {
+    crate::workload::scenario::all()
+        .iter()
+        .map(|s| {
+            let mut cfg = base.clone();
+            cfg.workload.scenario = s.name().to_string();
+            // A trace would override the scenario (its header is
+            // authoritative) and replay the same steps for every row —
+            // the sweep generates each preset fresh.
+            cfg.workload.trace = None;
             evaluate(&cfg, opts)
         })
         .collect()
@@ -63,5 +92,23 @@ mod tests {
         for r in &rows {
             assert!(r.e2e_s > 0.0 && r.tokens > 0.0);
         }
+    }
+
+    #[test]
+    fn scenario_sweep_covers_every_preset() {
+        let mut cfg = ExperimentConfig::new(WorkloadConfig::ma(), Framework::flexmarl());
+        cfg.workload.queries_per_step = 2;
+        cfg.workload.group_size = 4;
+        cfg.steps = 1;
+        let rows = scenario_sweep(&cfg, &SimOptions::default());
+        let names = crate::workload::scenario::names();
+        assert_eq!(rows.len(), names.len());
+        for (r, name) in rows.iter().zip(&names) {
+            assert_eq!(r.scenario, *name);
+            assert!(r.e2e_s > 0.0 && r.tokens > 0.0, "{name}");
+        }
+        // The shapes genuinely differ: not all rows can agree on tokens.
+        let t0 = rows[0].tokens;
+        assert!(rows.iter().any(|r| r.tokens != t0));
     }
 }

@@ -271,6 +271,12 @@ pub struct WorkloadConfig {
     /// Environment/tool latency added per call, seconds (lognormal).
     pub env_mu: f64,
     pub env_sigma: f64,
+    /// Named traffic-shape preset applied on top of this config
+    /// ([`crate::workload::scenario`]); `"baseline"` leaves it as-is.
+    pub scenario: String,
+    /// Optional JSONL trace path: replay recorded step workloads
+    /// instead of generating ([`crate::workload::trace`]).
+    pub trace: Option<String>,
 }
 
 impl WorkloadConfig {
@@ -304,6 +310,8 @@ impl WorkloadConfig {
             max_tokens: 8192.0,
             env_mu: 0.3,
             env_sigma: 0.8,
+            scenario: "baseline".to_string(),
+            trace: None,
         }
     }
 
@@ -334,6 +342,8 @@ impl WorkloadConfig {
             max_tokens: 8192.0,
             env_mu: 0.2,
             env_sigma: 0.7,
+            scenario: "baseline".to_string(),
+            trace: None,
         }
     }
 
@@ -489,12 +499,29 @@ impl ExperimentConfig {
         if let Some(v) = j.at(&["workload_overrides", "group_size"]).and_then(Json::as_usize) {
             cfg.workload.group_size = v;
         }
+        // Accepted both top-level and under workload_overrides (the
+        // namespace every other workload field uses); nested wins.
+        for path in [&["scenario"][..], &["workload_overrides", "scenario"][..]] {
+            if let Some(v) = j.at(path).and_then(Json::as_str) {
+                cfg.workload.scenario = v.to_string();
+            }
+        }
+        for path in [&["trace"][..], &["workload_overrides", "trace"][..]] {
+            if let Some(v) = j.at(path).and_then(Json::as_str) {
+                cfg.workload.trace = Some(v.to_string());
+            }
+        }
         Ok(cfg)
     }
 
     pub fn validate(&self) -> Result<(), String> {
         if self.workload.agents.is_empty() {
             return Err("no agents".into());
+        }
+        if crate::workload::scenario::by_name(&self.workload.scenario).is_none() {
+            return Err(crate::workload::scenario::unknown_error(
+                &self.workload.scenario,
+            ));
         }
         if self.pipeline.micro_batch == 0
             || self.pipeline.global_batch % self.pipeline.micro_batch != 0
@@ -602,6 +629,28 @@ mod tests {
         assert_eq!(cfg.seed, 7);
         assert_eq!(cfg.pipeline.micro_batch, 8);
         assert_eq!(cfg.steps, 3);
+    }
+
+    #[test]
+    fn scenario_parsed_and_validated() {
+        let j =
+            parse(r#"{"workload": "MA", "scenario": "core_skew", "trace": "t.jsonl"}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.workload.scenario, "core_skew");
+        assert_eq!(cfg.workload.trace.as_deref(), Some("t.jsonl"));
+        cfg.validate().unwrap();
+        // The workload_overrides namespace works too (and wins).
+        let j2 = parse(
+            r#"{"scenario": "uniform",
+                "workload_overrides": {"scenario": "tool_heavy"}}"#,
+        )
+        .unwrap();
+        let cfg2 = ExperimentConfig::from_json(&j2).unwrap();
+        assert_eq!(cfg2.workload.scenario, "tool_heavy");
+        let mut bad = ExperimentConfig::new(WorkloadConfig::ma(), Framework::flexmarl());
+        bad.workload.scenario = "gibberish".into();
+        let err = bad.validate().unwrap_err();
+        assert!(err.contains("gibberish"), "{err}");
     }
 
     #[test]

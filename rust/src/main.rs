@@ -9,12 +9,16 @@
 //!   fig8       — per-agent processed rollout load series (Figs. 8/9)
 //!   fig10      — resource-utilization comparison
 //!   fig11      — training-state swap overhead across model sizes
+//!   scenarios  — list the workload scenario presets
+//!   record     — capture a scenario's workload stream to a JSONL trace
+//!   replay     — re-run a recorded trace (bit-identical workloads)
 //!   inspect    — summarize the AOT artifact manifest
 //!   train      — real end-to-end MARL training via PJRT (see also
 //!                examples/marl_train.rs)
 //!
 //! Config overrides: --workload MA|CA --framework <name> --steps N
 //! --seed N --micro-batch N --delta N --instances N --json <path>
+//! --scenario <preset> --trace <path>
 
 use flexmarl::baselines::{evaluate, sweep, Framework};
 use flexmarl::config::{framework_by_name, ExperimentConfig, ModelScale, WorkloadConfig};
@@ -36,6 +40,9 @@ fn main() {
         "fig8" => cmd_fig8(&args),
         "fig10" => cmd_fig10(&args),
         "fig11" => cmd_fig11(&args),
+        "scenarios" => cmd_scenarios(),
+        "record" => cmd_record(&args),
+        "replay" => cmd_replay(&args),
         "inspect" => cmd_inspect(&args),
         "train" => cmd_train(&args),
         _ => {
@@ -48,9 +55,13 @@ fn main() {
 }
 
 const HELP: &str = "flexmarl — rollout-training co-design for LLM-based MARL
-usage: flexmarl <simulate|table2|table3|table4|fig1|fig8|fig10|fig11|inspect|train> [options]
+usage: flexmarl <simulate|table2|table3|table4|fig1|fig8|fig10|fig11|scenarios|record|replay|inspect|train> [options]
 options: --workload MA|CA  --framework <name>  --steps N  --seed N
-         --micro-batch N  --delta N  --instances N  --json <path>  --quiet";
+         --micro-batch N  --delta N  --instances N  --json <path>  --quiet
+         --scenario <preset>  (see `flexmarl scenarios`)
+         --trace <path>       (replay a recorded JSONL trace)
+record:  --scenario <preset> --steps N --seed N --out <path>
+replay:  --trace <path> [--framework <name>]";
 
 fn build_cfg(args: &Args) -> ExperimentConfig {
     let wl = match args.get_or("workload", "MA").to_ascii_uppercase().as_str() {
@@ -67,11 +78,35 @@ fn build_cfg(args: &Args) -> ExperimentConfig {
     cfg.seed = args.get_u64("seed", 2048);
     cfg.pipeline.micro_batch = args.get_usize("micro-batch", cfg.pipeline.micro_batch);
     cfg.pipeline.delta_threshold = args.get_usize("delta", cfg.pipeline.delta_threshold);
+    if let Some(s) = args.get("scenario") {
+        cfg.workload.scenario = s.to_string();
+    }
+    if let Some(t) = args.get("trace") {
+        cfg.workload.trace = Some(t.to_string());
+    }
     cfg.validate().unwrap_or_else(|e| {
         eprintln!("invalid config: {e}");
         std::process::exit(2)
     });
     cfg
+}
+
+/// Exit cleanly on workload-resolution failure (bad `--trace`,
+/// unknown trace scenario) instead of panicking, with no redundant
+/// pre-flight parse (`replay` still reads the header separately to
+/// reconstruct the recording config).
+fn run_eval(cfg: &ExperimentConfig, opts: &SimOptions) -> StepReport {
+    flexmarl::baselines::try_evaluate(cfg, opts).unwrap_or_else(|e| {
+        eprintln!("invalid workload: {e}");
+        std::process::exit(2)
+    })
+}
+
+fn run_sim(cfg: &ExperimentConfig, opts: &SimOptions) -> flexmarl::orchestrator::SimOutcome {
+    flexmarl::orchestrator::try_simulate(cfg, opts).unwrap_or_else(|e| {
+        eprintln!("invalid workload: {e}");
+        std::process::exit(2)
+    })
 }
 
 fn build_opts(args: &Args) -> SimOptions {
@@ -92,7 +127,7 @@ fn emit_json(args: &Args, j: &Json) {
 fn cmd_simulate(args: &Args) {
     let cfg = build_cfg(args);
     let opts = build_opts(args);
-    let rep = evaluate(&cfg, &opts);
+    let rep = run_eval(&cfg, &opts);
     print_report(&rep);
     emit_json(args, &rep.to_json());
 }
@@ -194,7 +229,7 @@ fn cmd_fig1(args: &Args) {
     cfg.framework = Framework::dist_rl(); // preliminary setup: no co-design
     cfg.steps = 1;
     let opts = build_opts(args);
-    let out = flexmarl::orchestrator::simulate(&cfg, &opts);
+    let out = run_sim(&cfg, &opts);
     let r = &out.reports[0];
     println!("== Fig 1(a): interaction latency distribution ==");
     let mut lats = r.trajectory_latencies.clone();
@@ -214,7 +249,7 @@ fn cmd_fig1(args: &Args) {
 fn cmd_fig8(args: &Args) {
     let cfg = build_cfg(args);
     let opts = build_opts(args);
-    let out = flexmarl::orchestrator::simulate(&cfg, &opts);
+    let out = run_sim(&cfg, &opts);
     let r = &out.reports[0];
     println!(
         "== Figs 8/9: processed rollout load over time ({}, {}) ==",
@@ -265,6 +300,83 @@ fn cmd_fig11(_args: &Args) {
             inn.transfer_s
         );
     }
+}
+
+fn cmd_scenarios() {
+    println!("== Workload scenario presets (DESIGN.md §2 catalogue) ==");
+    println!("{:<14} stresses", "scenario");
+    for s in flexmarl::workload::scenario::all() {
+        println!("{:<14} {}", s.name(), s.stresses());
+    }
+    println!("\nuse: flexmarl simulate --scenario <name>");
+    println!("     flexmarl record --scenario <name> --out t.jsonl");
+    println!("     flexmarl replay --trace t.jsonl");
+}
+
+fn cmd_record(args: &Args) {
+    let cfg = build_cfg(args);
+    let out = args.get_or("out", "trace.jsonl");
+    let tr = flexmarl::workload::Trace::record(&cfg.workload, cfg.seed, cfg.steps)
+        .unwrap_or_else(|e| {
+            eprintln!("record failed: {e}");
+            std::process::exit(1)
+        });
+    tr.write_file(&out).unwrap_or_else(|e| {
+        eprintln!("record failed: {e}");
+        std::process::exit(1)
+    });
+    println!(
+        "recorded {} steps of scenario '{}' on {} (seed {}): {} trajectories, {} calls → {out}",
+        tr.steps.len(),
+        tr.scenario,
+        tr.workload,
+        tr.seed,
+        tr.steps.iter().map(|s| s.trajectories.len()).sum::<usize>(),
+        tr.total_calls(),
+    );
+}
+
+fn cmd_replay(args: &Args) {
+    let path = args.get("trace").unwrap_or_else(|| {
+        eprintln!("replay needs --trace <path>");
+        std::process::exit(2)
+    });
+    let tr = flexmarl::workload::Trace::read_file(path).unwrap_or_else(|e| {
+        eprintln!("replay failed: {e}");
+        std::process::exit(1)
+    });
+    // Reconstruct the recording config from the trace header, so a
+    // replayed run is metric-identical to the generating run. Only the
+    // named presets are reconstructable; traces recorded from custom
+    // configs must be replayed via `simulate --trace` under that config.
+    let mut wl = match tr.workload.to_ascii_uppercase().as_str() {
+        "CA" => WorkloadConfig::ca(),
+        "MA" => WorkloadConfig::ma(),
+        other => {
+            eprintln!(
+                "replay: trace was recorded on workload '{other}', which is not a \
+                 named preset (MA/CA) — rebuild that config and use `simulate --trace`"
+            );
+            std::process::exit(2)
+        }
+    };
+    wl.scenario = tr.scenario.clone();
+    wl.trace = Some(path.to_string());
+    let fw = framework_by_name(&args.get_or("framework", "FlexMARL")).unwrap_or_else(|| {
+        eprintln!("unknown framework");
+        std::process::exit(2)
+    });
+    let mut cfg = ExperimentConfig::new(wl, fw);
+    cfg.steps = tr.steps.len();
+    cfg.seed = tr.seed;
+    // Steps/seed are provenance (trace header wins); engine knobs must
+    // still honor the same flags `simulate` does, or a replayed run
+    // with --micro-batch/--delta silently diverges from its recording.
+    cfg.pipeline.micro_batch = args.get_usize("micro-batch", cfg.pipeline.micro_batch);
+    cfg.pipeline.delta_threshold = args.get_usize("delta", cfg.pipeline.delta_threshold);
+    let rep = run_eval(&cfg, &build_opts(args));
+    print_report(&rep);
+    emit_json(args, &rep.to_json());
 }
 
 fn cmd_inspect(args: &Args) {

@@ -10,6 +10,9 @@ use std::collections::BTreeMap;
 pub struct StepReport {
     pub framework: String,
     pub workload: String,
+    /// Scenario preset the workload was shaped by ("baseline" = as
+    /// configured); see [`crate::workload::scenario`].
+    pub scenario: String,
     /// Wall/virtual seconds for the whole step.
     pub e2e_s: f64,
     /// Time until the last trajectory finished generating.
@@ -62,6 +65,7 @@ impl StepReport {
         Json::obj(vec![
             ("framework", Json::str(self.framework.clone())),
             ("workload", Json::str(self.workload.clone())),
+            ("scenario", Json::str(self.scenario.clone())),
             ("e2e_s", Json::num(self.e2e_s)),
             ("rollout_s", Json::num(self.rollout_s)),
             ("train_s", Json::num(self.train_s)),
@@ -129,8 +133,8 @@ pub fn table_rows(reports: &[StepReport]) -> Vec<TableRow> {
 }
 
 pub fn render_table2(workload: &str, rows: &[TableRow]) -> String {
-    let mut s = format!(
-        "| Dataset | Framework | E2E Time | Speedup | Throughput |\n|---|---|---|---|---|\n"
+    let mut s = String::from(
+        "| Dataset | Framework | E2E Time | Speedup | Throughput |\n|---|---|---|---|---|\n",
     );
     for r in rows {
         s.push_str(&format!(

@@ -10,4 +10,4 @@
 
 pub mod simloop;
 
-pub use simloop::{simulate, SimOptions, SimOutcome};
+pub use simloop::{resolve_workload, simulate, try_simulate, SimOptions, SimOutcome};

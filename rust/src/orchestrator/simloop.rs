@@ -28,7 +28,7 @@ use crate::store::{ColumnType, ExperienceStore, Field, PutRow, SampleId, Value};
 use crate::training::{
     apply_update_s, grad_compute_s, swap_in_cost, swap_out_cost, AgentCentricAllocator,
 };
-use crate::workload::{Generator, StepWorkload};
+use crate::workload::{scenario, StepWorkload, Trace};
 use std::collections::BTreeMap;
 
 /// Engine knobs not fixed by the paper (documented in DESIGN.md §5).
@@ -172,8 +172,68 @@ pub struct SimOutcome {
     pub total_s: f64,
 }
 
+/// Run the discrete-event simulation.
+///
+/// # Panics
+///
+/// Panics if the config's scenario name is unknown or its trace path
+/// is unreadable/invalid — callers that need a clean error (the CLI
+/// does) use [`try_simulate`], which resolves exactly once.
 pub fn simulate(cfg: &ExperimentConfig, opts: &SimOptions) -> SimOutcome {
-    Engine::new(cfg, opts).run()
+    try_simulate(cfg, opts).unwrap_or_else(|e| panic!("workload resolution failed: {e}"))
+}
+
+/// [`simulate`], but workload-resolution failures (unknown scenario,
+/// unreadable/corrupt/mismatched trace) surface as `Err` instead of a
+/// panic, and the trace file is read and parsed exactly once.
+pub fn try_simulate(cfg: &ExperimentConfig, opts: &SimOptions) -> Result<SimOutcome, String> {
+    let (resolved, step_workloads) = resolve_workload(cfg)?;
+    Ok(Engine::new(&resolved, opts, step_workloads).run())
+}
+
+/// Resolve the config's scenario/trace into concrete per-step
+/// workloads: the scenario preset shapes the config, then either the
+/// generator produces `cfg.steps` workloads or — when
+/// `workload.trace` is set — a recorded trace is replayed verbatim
+/// (and `steps` follows the trace).
+///
+/// A trace is authoritative about what it recorded: its header's
+/// scenario overrides `workload.scenario`, so the config is shaped
+/// exactly as at record time (e.g. a `hetero_scale` trace replays
+/// against the mixed 7B/14B/32B ensemble, whatever the caller's
+/// scenario field says). Everything downstream of the returned pair is
+/// deterministic, so a replayed trace reproduces a generated run's
+/// metrics bit-for-bit.
+pub fn resolve_workload(
+    cfg: &ExperimentConfig,
+) -> Result<(ExperimentConfig, Vec<StepWorkload>), String> {
+    let mut base = cfg.workload.clone();
+    let trace = match &base.trace {
+        Some(path) => Some((path.clone(), Trace::read_file(path)?)),
+        None => None,
+    };
+    if let Some((_, tr)) = &trace {
+        base.scenario = tr.scenario.clone();
+    }
+    let (shaped, scen) = scenario::resolve(&base)?;
+    let mut resolved = cfg.clone();
+    resolved.workload = shaped;
+    let step_workloads = if let Some((path, tr)) = trace {
+        if tr.n_agents != resolved.workload.agents.len() {
+            return Err(format!(
+                "trace {path} has {} agents, config has {}",
+                tr.n_agents,
+                resolved.workload.agents.len()
+            ));
+        }
+        resolved.steps = tr.steps.len();
+        tr.steps
+    } else {
+        (0..resolved.steps)
+            .map(|s| scen.step(&resolved.workload, resolved.seed, s))
+            .collect()
+    };
+    Ok((resolved, step_workloads))
 }
 
 struct Engine<'a> {
@@ -185,13 +245,8 @@ struct Engine<'a> {
     transfer: TransferModel,
     steps: Vec<StepCtl>,
     reqs: ReqSlab,
-    /// Which step each agent's rollout requests currently come from
-    /// (MARTI overlap: requests of different steps can coexist).
-    cur_rollout_step: usize,
     /// Training state machine per agent.
     tstate: Vec<AgentTrain>,
-    /// Which step each agent is currently training.
-    tstep: Vec<usize>,
     alloc: AgentCentricAllocator,
     /// Static mode: placements held forever (None entries if agent idle).
     static_mode: bool,
@@ -201,7 +256,6 @@ struct Engine<'a> {
     /// instance id → agent it belongs to now.
     inst_agent: BTreeMap<usize, usize>,
     pool_devices: usize,
-    busy_device_s: f64,
     /// Per-step busy accounting for per-step utilization.
     busy_per_step: Vec<f64>,
     sample_seq: u64,
@@ -212,17 +266,24 @@ struct Engine<'a> {
     scale_ops: usize,
     swap_s_total: f64,
     switch_s_total: Vec<f64>,
-    colocated_switches: usize,
     sim_end: f64,
 }
 
 impl<'a> Engine<'a> {
-    fn new(cfg: &'a ExperimentConfig, opts: &'a SimOptions) -> Self {
+    fn new(
+        cfg: &'a ExperimentConfig,
+        opts: &'a SimOptions,
+        step_workloads: Vec<StepWorkload>,
+    ) -> Self {
         let n_agents = cfg.workload.agents.len();
-        let gen = Generator::new(&cfg.workload, cfg.seed);
-        let steps: Vec<StepCtl> = (0..cfg.steps)
-            .map(|s| {
-                let workload = gen.step(s);
+        assert_eq!(
+            step_workloads.len(),
+            cfg.steps,
+            "engine needs one workload per step"
+        );
+        let steps: Vec<StepCtl> = step_workloads
+            .into_iter()
+            .map(|workload| {
                 let mode = if cfg.framework.parallel_sampling {
                     Mode::Parallel {
                         inter_query: cfg.workload.inter_query,
@@ -237,7 +298,10 @@ impl<'a> Engine<'a> {
                     BTreeMap::new();
                 for t in &workload.trajectories {
                     for (ci, _) in t.calls.iter().enumerate() {
-                        group_pending.entry((t.query, ci)).or_insert((0, vec![])).0 += 1;
+                        group_pending
+                            .entry((t.query, ci))
+                            .or_insert_with(|| (0, Vec::new()))
+                            .0 += 1;
                     }
                 }
                 StepCtl {
@@ -333,16 +397,13 @@ impl<'a> Engine<'a> {
             transfer: TransferModel::new(cfg.cluster),
             steps,
             reqs: ReqSlab::default(),
-            cur_rollout_step: 0,
             tstate: vec![AgentTrain::Idle; n_agents],
-            tstep: vec![0; n_agents],
             alloc,
             static_mode: !cfg.framework.agent_centric,
             agent_busy_scaling: vec![false; n_agents],
             inst_dev,
             inst_agent,
             pool_devices,
-            busy_device_s: 0.0,
             busy_per_step: vec![0.0; cfg.steps],
             sample_seq: 0,
             processed_series: opts.track_agents.iter().map(|&a| (a, vec![])).collect(),
@@ -351,7 +412,6 @@ impl<'a> Engine<'a> {
             scale_ops: 0,
             swap_s_total: 0.0,
             switch_s_total: vec![0.0; cfg.steps],
-            colocated_switches: 0,
             sim_end: 0.0,
         }
     }
@@ -448,7 +508,6 @@ impl<'a> Engine<'a> {
             debug_assert!(!st.started);
             st.started = true;
             st.start_t = t;
-            self.cur_rollout_step = s;
             // Agents with zero calls this step are trivially applied.
             for a in 0..n_agents {
                 if st.expected[a] == 0 {
@@ -504,7 +563,6 @@ impl<'a> Engine<'a> {
         // Device-busy: decode seconds × the slot's device share.
         let dev = self.inst_dev[info.agent] as f64;
         let busy = info.decode_s * dev / self.opts.concurrency as f64;
-        self.busy_device_s += busy;
         self.busy_per_step[info.step] += busy;
 
         if let Some(promoted) = self.man.complete(rid) {
@@ -585,15 +643,10 @@ impl<'a> Engine<'a> {
             let st = &mut self.steps[s];
             st.rollout_done = true;
             st.rollout_end_t = t;
-            for (i, traj) in st.workload.trajectories.iter().enumerate() {
-                let _ = traj;
-                let _ = i;
-            }
         }
         let fw = self.cfg.framework;
         if !fw.disaggregated && !fw.one_step_async_rollout {
             // MAS-RL: offload inference, onload training states.
-            self.colocated_switches += 1;
             self.q.push_in(self.opts.switch_s, Ev::SwitchToTrainDone(s));
         } else {
             for a in 0..self.n_agents() {
@@ -720,7 +773,6 @@ impl<'a> Engine<'a> {
         let model = self.cfg.workload.agents[agent].model;
         let dur = grad_compute_s(model, tokens);
         let gdev = model.train_group_devices() as f64;
-        self.busy_device_s += dur * gdev;
         self.busy_per_step[step] += dur * gdev;
         self.q.push_in(dur, Ev::GradDone { agent, step, n });
         let _ = t;
@@ -751,7 +803,6 @@ impl<'a> Engine<'a> {
         let model = self.cfg.workload.agents[agent].model;
         let dur = apply_update_s(model) + self.opts.sync_s;
         let gdev = model.train_group_devices() as f64;
-        self.busy_device_s += apply_update_s(model) * gdev;
         self.busy_per_step[step] += apply_update_s(model) * gdev;
         self.q.push_in(dur, Ev::ApplyDone { agent, step });
         let _ = t;
@@ -796,7 +847,6 @@ impl<'a> Engine<'a> {
         if step + 1 < self.steps.len() {
             if !fw.disaggregated {
                 // MAS-RL: switch back to inference before next rollout.
-                self.colocated_switches += 1;
                 self.q.push_in(self.opts.switch_s, Ev::SwitchToRolloutDone(step));
             } else {
                 self.q.push_at(t, Ev::StartStep(step + 1));
@@ -933,6 +983,7 @@ impl<'a> Engine<'a> {
             reports.push(StepReport {
                 framework: self.cfg.framework.name.to_string(),
                 workload: self.cfg.workload.name.clone(),
+                scenario: self.cfg.workload.scenario.clone(),
                 e2e_s: e2e,
                 rollout_s,
                 train_s,
@@ -1099,6 +1150,89 @@ mod tests {
         let t_lb = simulate(&base, &opts).total_s;
         let t_nolb = simulate(&nolb, &opts).total_s;
         assert!(t_lb < t_nolb, "LB {t_lb} ≥ no-LB {t_nolb}");
+    }
+
+    #[test]
+    fn all_scenarios_complete_on_small_config() {
+        for name in crate::workload::scenario::names() {
+            let mut cfg = small_cfg(Framework::flexmarl());
+            cfg.workload.scenario = name.to_string();
+            let out = simulate(&cfg, &SimOptions::default());
+            assert_eq!(out.reports.len(), 2, "{name}");
+            assert!(out.total_s > 0.0, "{name}");
+            assert_eq!(out.reports[0].scenario, name);
+            assert!(out.reports.iter().all(|r| r.tokens > 0.0), "{name}");
+        }
+    }
+
+    #[test]
+    fn trace_replay_reproduces_generated_run() {
+        let mut cfg = small_cfg(Framework::flexmarl());
+        cfg.workload.scenario = "core_skew".to_string();
+        let generated = simulate(&cfg, &SimOptions::default());
+
+        let tr = crate::workload::Trace::record(&cfg.workload, cfg.seed, cfg.steps).unwrap();
+        let path = std::env::temp_dir().join("flexmarl_simloop_replay.jsonl");
+        let path = path.to_str().unwrap().to_string();
+        tr.write_file(&path).unwrap();
+        let mut replay_cfg = cfg.clone();
+        replay_cfg.workload.trace = Some(path.clone());
+        let replayed = simulate(&replay_cfg, &SimOptions::default());
+        let _ = std::fs::remove_file(&path);
+
+        assert_eq!(generated.total_s, replayed.total_s);
+        for (a, b) in generated.reports.iter().zip(&replayed.reports) {
+            assert_eq!(a.e2e_s, b.e2e_s);
+            assert_eq!(a.tokens, b.tokens);
+            assert_eq!(a.busy_device_s, b.busy_device_s);
+            assert_eq!(a.agent_calls, b.agent_calls);
+            assert_eq!(a.trajectory_latencies, b.trajectory_latencies);
+        }
+    }
+
+    #[test]
+    fn trace_scenario_is_authoritative_on_replay() {
+        // Regression: a hetero_scale trace replayed under a config
+        // whose scenario field was left at "baseline" must still shape
+        // the mixed ensemble (models drive decode/train pricing) — the
+        // trace header wins, and metrics match the recording run.
+        let mut cfg = small_cfg(Framework::flexmarl());
+        cfg.workload.scenario = "hetero_scale".to_string();
+        let generated = simulate(&cfg, &SimOptions::default());
+        let tr = crate::workload::Trace::record(&cfg.workload, cfg.seed, cfg.steps).unwrap();
+        let path = std::env::temp_dir().join("flexmarl_simloop_authoritative.jsonl");
+        let path = path.to_str().unwrap().to_string();
+        tr.write_file(&path).unwrap();
+
+        let mut replay_cfg = small_cfg(Framework::flexmarl()); // scenario: baseline
+        replay_cfg.workload.trace = Some(path.clone());
+        let (resolved, _) = resolve_workload(&replay_cfg).unwrap();
+        let replayed = simulate(&replay_cfg, &SimOptions::default());
+        let _ = std::fs::remove_file(&path);
+
+        assert_eq!(resolved.workload.scenario, "hetero_scale");
+        assert!(resolved
+            .workload
+            .agents
+            .iter()
+            .any(|a| a.model.params_b != 14.0));
+        assert_eq!(generated.total_s, replayed.total_s);
+        assert_eq!(replayed.reports[0].scenario, "hetero_scale");
+    }
+
+    #[test]
+    fn mismatched_trace_rejected() {
+        let mut cfg = small_cfg(Framework::flexmarl());
+        // Record with 8 MA agents, replay against 6-agent CA: must error.
+        let tr = crate::workload::Trace::record(&cfg.workload, cfg.seed, 1).unwrap();
+        let path = std::env::temp_dir().join("flexmarl_simloop_mismatch.jsonl");
+        let path = path.to_str().unwrap().to_string();
+        tr.write_file(&path).unwrap();
+        cfg.workload = WorkloadConfig::ca();
+        cfg.workload.trace = Some(path.clone());
+        let err = resolve_workload(&cfg).unwrap_err();
+        let _ = std::fs::remove_file(&path);
+        assert!(err.contains("agents"), "{err}");
     }
 
     #[test]

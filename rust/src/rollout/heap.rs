@@ -86,7 +86,14 @@ impl IndexedMinHeap {
         }
     }
 
-    /// Insert `id` with `key`; panics if already present.
+    /// Insert `id` with `key`; **panics** if `id` is already present.
+    ///
+    /// The panic is load-bearing: without it a duplicate insert would
+    /// push a second heap entry for the same id, and since `pos[id]`
+    /// can only track one position, every later `update`/`remove`
+    /// would sift the wrong entry — silent position-tracking
+    /// corruption. Callers that want upsert semantics use
+    /// [`IndexedMinHeap::insert_or_update`].
     pub fn insert(&mut self, id: usize, key: u64) {
         assert!(!self.contains(id), "id {id} already in heap");
         if id >= self.pos.len() {
@@ -97,6 +104,16 @@ impl IndexedMinHeap {
         self.pos[id] = Some(self.heap.len());
         self.heap.push(id);
         self.sift_up(self.heap.len() - 1);
+    }
+
+    /// Upsert: [`IndexedMinHeap::update`] if `id` is present,
+    /// [`IndexedMinHeap::insert`] otherwise.
+    pub fn insert_or_update(&mut self, id: usize, key: u64) {
+        if self.contains(id) {
+            self.update(id, key);
+        } else {
+            self.insert(id, key);
+        }
     }
 
     /// The id with the minimum (key, id).
@@ -167,6 +184,33 @@ mod tests {
         h.insert(5, 2);
         h.insert(3, 2);
         h.insert(9, 2);
+        assert_eq!(h.peek_min(), Some(3));
+    }
+
+    #[test]
+    #[should_panic(expected = "already in heap")]
+    fn duplicate_insert_panics_instead_of_corrupting() {
+        // Regression: a duplicate insert must never create a second
+        // heap entry (which would desync `pos` and corrupt later
+        // update/remove calls) — it panics instead.
+        let mut h = IndexedMinHeap::new();
+        h.insert(3, 5);
+        h.insert(3, 1);
+    }
+
+    #[test]
+    fn insert_or_update_is_safe_on_duplicates() {
+        let mut h = IndexedMinHeap::new();
+        h.insert_or_update(3, 5);
+        h.insert_or_update(7, 2);
+        h.insert_or_update(3, 1); // duplicate id → update, not corrupt
+        assert_eq!(h.len(), 2);
+        assert_eq!(h.peek_min(), Some(3));
+        assert_eq!(h.key_of(3), Some(1));
+        // The structure is still consistent: remove + re-insert works.
+        h.remove(3);
+        assert_eq!(h.peek_min(), Some(7));
+        h.insert_or_update(3, 0);
         assert_eq!(h.peek_min(), Some(3));
     }
 

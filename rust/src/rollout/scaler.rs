@@ -52,10 +52,9 @@ pub fn plan_migration(
     // downstream agents of the same workflow chains, so stripping them
     // bare just moves the bottleneck.
     let want = (disparity / delta_threshold.max(1)).max(1);
-    let n_instances = want
-        .min(instance_counts[donor] - 1)
-        .min((instance_counts[donor] / 2).max(1))
-        .max(1);
+    // Donor has ≥ 2 instances (filter above), so the cap is ≥ 1 = floor.
+    let cap = (instance_counts[donor] - 1).min((instance_counts[donor] / 2).max(1));
+    let n_instances = want.clamp(1, cap);
     Some(MigrationPlan {
         donor,
         target,
@@ -138,6 +137,54 @@ mod tests {
         assert!(large.n_instances >= small.n_instances);
         // Anti-oscillation cap: at most half the donor pool.
         assert!(large.n_instances <= 4);
+    }
+
+    #[test]
+    fn empty_pool_no_migration() {
+        // Zero agents: nothing to balance, and no index panics.
+        assert_eq!(plan_migration(&[], &[], 5, &[]), None);
+        assert_eq!(plan_migration(&[], &[], 0, &[]), None);
+    }
+
+    #[test]
+    fn single_agent_no_migration() {
+        // One agent can be arbitrarily overloaded — there is no peer to
+        // donate, whatever Δ is.
+        assert_eq!(plan_migration(&[100], &[4], 0, &[false]), None);
+    }
+
+    #[test]
+    fn single_instance_agents_cannot_donate() {
+        // Every candidate donor is at the liveness floor (1 instance).
+        assert_eq!(plan_migration(&[40, 0, 0], &[2, 1, 1], 5, &[false; 3]), None);
+    }
+
+    #[test]
+    fn already_balanced_no_migration() {
+        // Equal queues: disparity 0 never exceeds any Δ ≥ 0.
+        let q = [7, 7, 7];
+        let inst = [2, 2, 2];
+        assert_eq!(plan_migration(&q, &inst, 0, &[false; 3]), None);
+        assert_eq!(plan_migration(&q, &inst, 5, &[false; 3]), None);
+    }
+
+    #[test]
+    fn zero_instance_agent_never_targeted() {
+        // An agent with no instances (mid-teardown) must not be picked
+        // as the migration target even with the longest queue.
+        let p = plan_migration(&[9, 0, 4], &[0, 4, 2], 1, &[false; 3]);
+        if let Some(plan) = p {
+            assert_ne!(plan.target, 0);
+        }
+    }
+
+    #[test]
+    fn all_peers_busy_no_migration() {
+        // Target found, but every possible donor is mid-scaling.
+        assert_eq!(
+            plan_migration(&[40, 0, 0], &[2, 4, 4], 5, &[false, true, true]),
+            None
+        );
     }
 
     #[test]

@@ -265,6 +265,12 @@ impl<E> Calendar<E> {
 // EventQueue facade
 // ---------------------------------------------------------------------------
 
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 impl<E> EventQueue<E> {
     /// Heap-backed queue (the reference backend).
     pub fn new() -> Self {
@@ -358,7 +364,6 @@ pub struct BusyTracker {
     busy_device_seconds: f64,
     /// (time, devices_busy) step series for Fig. 10 style plots.
     series: Vec<(Time, usize)>,
-    current_busy: usize,
 }
 
 impl BusyTracker {
@@ -375,7 +380,6 @@ impl BusyTracker {
         if self.series.last().map(|&(_, b)| b) != Some(busy_now) {
             self.series.push((t, busy_now));
         }
-        self.current_busy = busy_now;
     }
 
     pub fn busy_device_seconds(&self) -> f64 {

@@ -13,12 +13,20 @@
 //! and the real mini-cluster replay identical workloads.
 
 pub mod corpus;
+pub mod scenario;
+pub mod trace;
+
+pub use scenario::Scenario;
+pub use trace::Trace;
 
 use crate::config::WorkloadConfig;
 use crate::util::rng::Pcg64;
 
 /// One agent invocation within a trajectory.
-#[derive(Debug, Clone)]
+///
+/// `PartialEq` is exact (bit-level f64 equality) — the trace
+/// record/replay round-trip guarantees and asserts bit-identity.
+#[derive(Debug, Clone, PartialEq)]
 pub struct CallSpec {
     pub agent: usize,
     /// Generated response length in tokens (the service demand).
@@ -28,7 +36,7 @@ pub struct CallSpec {
 }
 
 /// One GRPO candidate: a dependency chain of calls.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct TrajectorySpec {
     pub query: usize,
     pub candidate: usize,
@@ -50,7 +58,7 @@ impl TrajectorySpec {
 }
 
 /// The full workload of one MARL step.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct StepWorkload {
     pub step: usize,
     pub trajectories: Vec<TrajectorySpec>,
@@ -123,10 +131,12 @@ impl<'a> Generator<'a> {
                     .iter()
                     .map(|&agent| {
                         let a = &wl.agents[agent];
+                        // Upper bound floored at 8.0 so a degenerate
+                        // max_tokens < 8 yields 8.0 (as the historical
+                        // min/max chain did) instead of panicking.
                         let tokens = crng
                             .lognormal(a.mean_tokens.ln(), a.token_sigma)
-                            .min(wl.max_tokens)
-                            .max(8.0);
+                            .clamp(8.0, wl.max_tokens.max(8.0));
                         let env_s = crng.lognormal(wl.env_mu.ln().max(-3.0), wl.env_sigma);
                         CallSpec {
                             agent,

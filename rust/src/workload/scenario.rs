@@ -1,0 +1,451 @@
+//! Pluggable workload scenarios: named traffic shapes that stress the
+//! rollout balancer, trajectory scheduler, and agent-centric allocator
+//! in different ways.
+//!
+//! The paper's claims rest on one traffic shape — skewed inter/intra-
+//! agent request patterns (Obs. 2) with long-tail response lengths
+//! (Fig. 1a). A scheduler that wins there can still lose under uniform
+//! load, bursty arrivals, tool-dominated chains, or heterogeneous model
+//! ensembles. Each [`Scenario`] preset shapes a base
+//! [`WorkloadConfig`] into one such traffic pattern; generation stays
+//! deterministic in `(seed, step)`, so every preset can be recorded and
+//! replayed bit-identically via [`crate::workload::trace`].
+//!
+//! The catalogue (preset → what it stresses) is tabulated in
+//! DESIGN.md §2.
+
+use crate::config::{ModelScale, WorkloadConfig};
+use crate::workload::{Generator, StepWorkload};
+
+/// A named traffic shape. `shape` transforms the base config once (per
+/// run); `step` produces the deterministic per-step workload. The
+/// default `step` delegates to the standard [`Generator`], optionally
+/// modulated by [`Scenario::arrival_mult`] — only presets that need a
+/// fundamentally different generation process override it.
+pub trait Scenario {
+    /// Registry key (lower_snake_case).
+    fn name(&self) -> &'static str;
+
+    /// One line: which paper observation/figure this preset stresses.
+    fn stresses(&self) -> &'static str;
+
+    /// Transform the base workload config into this scenario's shape.
+    /// Must be pure: same base in, same shaped config out.
+    fn shape(&self, base: &WorkloadConfig) -> WorkloadConfig;
+
+    /// Per-step arrival-rate multiplier (diurnal/bursty presets);
+    /// 1.0 = steady arrivals.
+    fn arrival_mult(&self, step: usize) -> f64 {
+        let _ = step;
+        1.0
+    }
+
+    /// Deterministic workload for `(seed, step)` over an already-shaped
+    /// config.
+    fn step(&self, wl: &WorkloadConfig, seed: u64, step: usize) -> StepWorkload {
+        let mult = self.arrival_mult(step);
+        if mult == 1.0 {
+            return Generator::new(wl, seed).step(step);
+        }
+        // Arrival modulation scales the query count; per-query RNG
+        // streams are keyed by (seed, step, q), so a step's first K
+        // queries are identical whatever the multiplier — shrinking a
+        // burst is a prefix, not a reshuffle.
+        let mut burst = wl.clone();
+        burst.queries_per_step =
+            ((wl.queries_per_step as f64 * mult).round() as usize).max(1);
+        Generator::new(&burst, seed).step(step)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Presets
+// ---------------------------------------------------------------------------
+
+/// The config exactly as given (§8.1 MA/CA defaults).
+struct Baseline;
+
+impl Scenario for Baseline {
+    fn name(&self) -> &'static str {
+        "baseline"
+    }
+    fn stresses(&self) -> &'static str {
+        "§8.1 defaults: the paper's MA/CA shape as configured"
+    }
+    fn shape(&self, base: &WorkloadConfig) -> WorkloadConfig {
+        base.clone()
+    }
+}
+
+/// Every agent equally likely, homogeneous token budgets, mild tail.
+/// The null hypothesis for Obs. 2: the inter-agent balancer should stay
+/// near-idle, and any scaling it does here is oscillation.
+struct Uniform;
+
+impl Scenario for Uniform {
+    fn name(&self) -> &'static str {
+        "uniform"
+    }
+    fn stresses(&self) -> &'static str {
+        "anti-Obs.2 control: no skew, balancer should stay quiet"
+    }
+    fn shape(&self, base: &WorkloadConfig) -> WorkloadConfig {
+        let mut wl = base.clone();
+        let mean = wl.agents.iter().map(|a| a.mean_tokens).sum::<f64>()
+            / wl.agents.len() as f64;
+        for a in &mut wl.agents {
+            a.invoke_weight = 1.0;
+            a.mean_tokens = mean;
+            a.token_sigma = 0.6;
+        }
+        wl
+    }
+}
+
+/// Obs. 2 sharpened: the top-2 agents' invocation weight is multiplied
+/// so they carry well over the paper's 76% of calls — the regime where
+/// hierarchical load balancing pays (Figs. 8/9).
+struct CoreSkew;
+
+impl Scenario for CoreSkew {
+    fn name(&self) -> &'static str {
+        "core_skew"
+    }
+    fn stresses(&self) -> &'static str {
+        "Obs.2 / Figs.8-9: core agents >76% of calls, LB must migrate"
+    }
+    fn shape(&self, base: &WorkloadConfig) -> WorkloadConfig {
+        let mut wl = base.clone();
+        let mut idx: Vec<usize> = (0..wl.agents.len()).collect();
+        idx.sort_by(|&a, &b| {
+            wl.agents[b]
+                .invoke_weight
+                .partial_cmp(&wl.agents[a].invoke_weight)
+                .unwrap()
+        });
+        for &i in idx.iter().take(2) {
+            wl.agents[i].invoke_weight *= 4.0;
+        }
+        wl
+    }
+}
+
+/// Diurnal arrivals: query volume swings 0.5×–3× across steps. The
+/// static baselines provision for the mean and drown at the peak; the
+/// scaler must track the swing without oscillating.
+struct Bursty;
+
+/// One "day" of arrival multipliers, cycled over steps.
+const DIURNAL: [f64; 6] = [1.0, 0.5, 2.0, 3.0, 1.5, 0.5];
+
+impl Scenario for Bursty {
+    fn name(&self) -> &'static str {
+        "bursty"
+    }
+    fn stresses(&self) -> &'static str {
+        "Fig.1b queue dynamics under diurnal 0.5x-3x arrival swings"
+    }
+    fn shape(&self, base: &WorkloadConfig) -> WorkloadConfig {
+        base.clone()
+    }
+    fn arrival_mult(&self, step: usize) -> f64 {
+        DIURNAL[step % DIURNAL.len()]
+    }
+}
+
+/// Tool-dominated multi-turn chains: longer workflows whose per-call
+/// env/tool latency rivals decode time. Stresses the dependency-driven
+/// scheduler (§5.1) — instances idle on env waits unless other chains
+/// fill the slots.
+struct ToolHeavy;
+
+impl Scenario for ToolHeavy {
+    fn name(&self) -> &'static str {
+        "tool_heavy"
+    }
+    fn stresses(&self) -> &'static str {
+        "§5.1 chains: high env_s tool calls, decode no longer dominates"
+    }
+    fn shape(&self, base: &WorkloadConfig) -> WorkloadConfig {
+        let mut wl = base.clone();
+        wl.min_turns = base.min_turns + 2;
+        wl.max_turns = base.max_turns + 4;
+        wl.env_mu = (base.env_mu * 6.0).max(1.5);
+        wl.env_sigma = 1.0;
+        wl
+    }
+}
+
+/// Heterogeneous model scales (Table 4 / §6.1): agents cycle through
+/// 7B/14B/32B, so instance device footprints and decode rates diverge —
+/// the agent-centric allocator has to bind unequal groups on demand.
+struct HeteroScale;
+
+impl Scenario for HeteroScale {
+    fn name(&self) -> &'static str {
+        "hetero_scale"
+    }
+    fn stresses(&self) -> &'static str {
+        "Table 4 / §6.1: mixed 7B/14B/32B ensemble, unequal bindings"
+    }
+    fn shape(&self, base: &WorkloadConfig) -> WorkloadConfig {
+        const SCALES: [ModelScale; 3] = [ModelScale::B7, ModelScale::B14, ModelScale::B32];
+        let mut wl = base.clone();
+        for (i, a) in wl.agents.iter_mut().enumerate() {
+            a.model = SCALES[i % SCALES.len()];
+        }
+        wl
+    }
+}
+
+/// Straggler tail: token sigma pushed up so a visible fraction of calls
+/// hit the `max_tokens` cap — the Fig. 1a worst case becomes common,
+/// and per-step completion is gated on a few giant decodes.
+struct Straggler;
+
+impl Scenario for Straggler {
+    fn name(&self) -> &'static str {
+        "straggler"
+    }
+    fn stresses(&self) -> &'static str {
+        "Fig.1a tail: sigma up, steps gated on capped giant decodes"
+    }
+    fn shape(&self, base: &WorkloadConfig) -> WorkloadConfig {
+        let mut wl = base.clone();
+        for a in &mut wl.agents {
+            a.token_sigma = 1.6;
+        }
+        wl
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+/// All presets, in catalogue order (DESIGN.md §2).
+pub fn all() -> Vec<Box<dyn Scenario>> {
+    vec![
+        Box::new(Baseline),
+        Box::new(Uniform),
+        Box::new(CoreSkew),
+        Box::new(Bursty),
+        Box::new(ToolHeavy),
+        Box::new(HeteroScale),
+        Box::new(Straggler),
+    ]
+}
+
+/// Registry keys, same order as [`all`].
+pub fn names() -> Vec<&'static str> {
+    all().iter().map(|s| s.name()).collect()
+}
+
+/// Lookup, tolerant of `-`/space separators and case.
+pub fn by_name(name: &str) -> Option<Box<dyn Scenario>> {
+    let n = name.to_ascii_lowercase().replace(['-', ' '], "_");
+    all().into_iter().find(|s| s.name() == n)
+}
+
+/// The one unknown-scenario error message (config validation, trace
+/// parsing, and resolution all report it identically).
+pub fn unknown_error(name: &str) -> String {
+    format!("unknown scenario '{name}' (have: {})", names().join(", "))
+}
+
+/// Resolve the scenario named in `wl.scenario`: returns the shaped
+/// config plus the scenario object that generates its per-step
+/// workloads. The shaped config carries the *canonical* preset name,
+/// so reports and trace headers agree whatever alias spelling
+/// ("Core-Skew", "TOOL HEAVY") the caller used — byte-identical
+/// replay==generate diffs depend on it.
+pub fn resolve(wl: &WorkloadConfig) -> Result<(WorkloadConfig, Box<dyn Scenario>), String> {
+    let scen = by_name(&wl.scenario).ok_or_else(|| unknown_error(&wl.scenario))?;
+    let mut shaped = scen.shape(wl);
+    shaped.scenario = scen.name().to_string();
+    Ok((shaped, scen))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> WorkloadConfig {
+        WorkloadConfig::ma()
+    }
+
+    fn core_share(wl: &WorkloadConfig, w: &StepWorkload) -> f64 {
+        let per_agent = w.calls_per_agent(wl.agents.len());
+        let total: usize = per_agent.iter().sum();
+        let core = wl.core_agents();
+        let core_calls: usize = core.iter().map(|&i| per_agent[i]).sum();
+        core_calls as f64 / total as f64
+    }
+
+    #[test]
+    fn registry_resolves_every_preset() {
+        for name in names() {
+            let s = by_name(name).unwrap();
+            assert_eq!(s.name(), name);
+        }
+        assert!(by_name("Core-Skew").is_some());
+        assert!(by_name("TOOL HEAVY").is_some());
+        assert!(by_name("nope").is_none());
+        // Aliases canonicalize in the shaped config (report/trace
+        // headers must agree with canonically-spelled runs).
+        let mut wl = WorkloadConfig::ma();
+        wl.scenario = "Core-Skew".into();
+        let (shaped, _) = resolve(&wl).unwrap();
+        assert_eq!(shaped.scenario, "core_skew");
+    }
+
+    #[test]
+    fn resolve_reports_known_names_on_error() {
+        let mut wl = base();
+        wl.scenario = "gibberish".into();
+        let err = resolve(&wl).unwrap_err();
+        assert!(err.contains("gibberish") && err.contains("core_skew"), "{err}");
+    }
+
+    #[test]
+    fn baseline_shape_is_identity_generation() {
+        let wl = base();
+        let (shaped, scen) = resolve(&wl).unwrap();
+        let a = scen.step(&shaped, 2048, 0);
+        let b = Generator::new(&wl, 2048).step(0);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn every_preset_generates_deterministically() {
+        for scen in all() {
+            let shaped = scen.shape(&base());
+            let a = scen.step(&shaped, 2048, 1);
+            let b = scen.step(&shaped, 2048, 1);
+            assert_eq!(a, b, "{} not deterministic", scen.name());
+            assert!(a.total_calls() > 0, "{} empty", scen.name());
+            let c = scen.step(&shaped, 7, 1);
+            assert_ne!(
+                a.total_tokens(),
+                c.total_tokens(),
+                "{} ignores seed",
+                scen.name()
+            );
+        }
+    }
+
+    #[test]
+    fn uniform_flattens_the_skew() {
+        let wl = base();
+        let (u_wl, u) = {
+            let mut w = wl.clone();
+            w.scenario = "uniform".into();
+            resolve(&w).unwrap()
+        };
+        let mut share_base = 0.0;
+        let mut share_uniform = 0.0;
+        for s in 0..10 {
+            share_base += core_share(&wl, &Generator::new(&wl, 2048).step(s));
+            // Core agents of the *base* config: uniform spreads load off them.
+            let w = u.step(&u_wl, 2048, s);
+            let per_agent = w.calls_per_agent(wl.agents.len());
+            let total: usize = per_agent.iter().sum();
+            let core: usize = wl.core_agents().iter().map(|&i| per_agent[i]).sum();
+            share_uniform += core as f64 / total as f64;
+        }
+        assert!(
+            share_uniform < 0.7 * share_base,
+            "uniform {share_uniform} vs base {share_base}"
+        );
+    }
+
+    #[test]
+    fn core_skew_sharpens_beyond_baseline() {
+        let mut w = base();
+        w.scenario = "core_skew".into();
+        let (shaped, scen) = resolve(&w).unwrap();
+        let mut share = 0.0;
+        for s in 0..10 {
+            share += core_share(&base(), &scen.step(&shaped, 2048, s)) / 10.0;
+        }
+        // Paper: >76% on the core agents.
+        assert!(share > 0.70, "core share only {share}");
+    }
+
+    #[test]
+    fn bursty_modulates_arrivals_across_steps() {
+        let mut w = base();
+        w.scenario = "bursty".into();
+        let (shaped, scen) = resolve(&w).unwrap();
+        let counts: Vec<usize> = (0..DIURNAL.len())
+            .map(|s| scen.step(&shaped, 2048, s).trajectories.len())
+            .collect();
+        let min = *counts.iter().min().unwrap();
+        let max = *counts.iter().max().unwrap();
+        assert!(max >= 4 * min, "no burst: {counts:?}");
+        // Peak step matches the multiplier schedule.
+        let peak = counts
+            .iter()
+            .enumerate()
+            .max_by_key(|&(_, c)| *c)
+            .unwrap()
+            .0;
+        assert_eq!(DIURNAL[peak], 3.0);
+    }
+
+    #[test]
+    fn tool_heavy_env_latency_dominates() {
+        let mut w = base();
+        w.scenario = "tool_heavy".into();
+        let (shaped, scen) = resolve(&w).unwrap();
+        let mean_env = |wk: &StepWorkload| {
+            let (sum, n) = wk.trajectories.iter().flat_map(|t| &t.calls).fold(
+                (0.0, 0usize),
+                |(s, n), c| (s + c.env_s, n + 1),
+            );
+            sum / n as f64
+        };
+        let heavy = mean_env(&scen.step(&shaped, 2048, 0));
+        let plain = mean_env(&Generator::new(&base(), 2048).step(0));
+        assert!(heavy > 2.0 * plain, "env {heavy} vs {plain}");
+        // Chains lengthened too.
+        assert!(shaped.min_turns > base().min_turns);
+        assert!(shaped.max_turns > base().max_turns);
+    }
+
+    #[test]
+    fn hetero_scale_mixes_model_sizes() {
+        let mut w = base();
+        w.scenario = "hetero_scale".into();
+        let (shaped, _) = resolve(&w).unwrap();
+        let mut sizes: Vec<u64> = shaped
+            .agents
+            .iter()
+            .map(|a| a.model.params_b as u64)
+            .collect();
+        sizes.sort_unstable();
+        sizes.dedup();
+        assert!(sizes.len() >= 3, "{sizes:?}");
+    }
+
+    #[test]
+    fn straggler_fattens_the_tail() {
+        let mut w = base();
+        w.scenario = "straggler".into();
+        let (shaped, scen) = resolve(&w).unwrap();
+        let capped = |wk: &StepWorkload, cap: f64| {
+            wk.trajectories
+                .iter()
+                .flat_map(|t| &t.calls)
+                .filter(|c| c.tokens >= cap)
+                .count()
+        };
+        let mut strag = 0;
+        let mut plain = 0;
+        for s in 0..10 {
+            strag += capped(&scen.step(&shaped, 2048, s), shaped.max_tokens);
+            plain += capped(&Generator::new(&base(), 2048).step(s), base().max_tokens);
+        }
+        assert!(strag > 2 * plain.max(1), "capped calls {strag} vs {plain}");
+    }
+}

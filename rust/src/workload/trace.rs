@@ -1,0 +1,363 @@
+//! Workload trace record/replay (JSONL).
+//!
+//! Any generated workload stream can be captured to a JSONL trace and
+//! replayed bit-identically — across the simulator, the baselines, and
+//! the wall-clock serving example. Replay is exact because Rust's f64
+//! Display emits the shortest round-tripping decimal and our JSON
+//! parser is correctly rounded: `tokens`/`env_s` survive the text
+//! round-trip bit-for-bit.
+//!
+//! Schema (one JSON object per line; documented in DESIGN.md §2):
+//!
+//! ```text
+//! {"kind":"header","version":1,"workload":"MA","scenario":"bursty",
+//!  "seed":2048,"n_agents":8,"steps":3}
+//! {"kind":"step","step":0,"trajectories":[
+//!    {"query":0,"candidate":0,"calls":[[agent,tokens,env_s],...]},...]}
+//! ```
+//!
+//! The header carries provenance (base workload name, scenario, seed)
+//! so a replay run can reconstruct the recording config; the step lines
+//! carry the full per-call data, so replay never re-generates.
+
+use crate::config::WorkloadConfig;
+use crate::util::json::{parse, Json};
+use crate::workload::{scenario, CallSpec, StepWorkload, TrajectorySpec};
+
+pub const TRACE_VERSION: u64 = 1;
+
+/// Largest seed the JSONL header can carry losslessly (JSON numbers
+/// are f64: integers are exact up to 2^53).
+pub const MAX_SEED: u64 = 1 << 53;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trace {
+    /// Base workload name at record time ("MA"/"CA"/custom).
+    pub workload: String,
+    /// Scenario preset the trace was generated under.
+    pub scenario: String,
+    /// Generator seed at record time.
+    pub seed: u64,
+    /// Agent count of the shaped config (replay sanity check).
+    pub n_agents: usize,
+    pub steps: Vec<StepWorkload>,
+}
+
+impl Trace {
+    /// Generate and capture `steps` MARL steps of the scenario named in
+    /// `wl.scenario`.
+    pub fn record(wl: &WorkloadConfig, seed: u64, steps: usize) -> Result<Trace, String> {
+        if steps == 0 {
+            return Err("cannot record a zero-step trace (nothing to replay)".into());
+        }
+        // The header stores the seed as a JSON number (f64): above 2^53
+        // it would silently round, breaking the round-trip contract.
+        if seed > MAX_SEED {
+            return Err(format!(
+                "seed {seed} exceeds 2^53 and cannot round-trip through the JSONL header"
+            ));
+        }
+        let (shaped, scen) = scenario::resolve(wl)?;
+        let step_wls = (0..steps).map(|s| scen.step(&shaped, seed, s)).collect();
+        Ok(Trace {
+            workload: wl.name.clone(),
+            scenario: scen.name().to_string(),
+            seed,
+            n_agents: shaped.agents.len(),
+            steps: step_wls,
+        })
+    }
+
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        let header = Json::obj(vec![
+            ("kind", Json::str("header")),
+            ("version", Json::num(TRACE_VERSION as f64)),
+            ("workload", Json::str(self.workload.clone())),
+            ("scenario", Json::str(self.scenario.clone())),
+            ("seed", Json::num(self.seed as f64)),
+            ("n_agents", Json::num(self.n_agents as f64)),
+            ("steps", Json::num(self.steps.len() as f64)),
+        ]);
+        out.push_str(&header.to_string());
+        out.push('\n');
+        for w in &self.steps {
+            let trajs = Json::arr(w.trajectories.iter().map(|t| {
+                Json::obj(vec![
+                    ("query", Json::num(t.query as f64)),
+                    ("candidate", Json::num(t.candidate as f64)),
+                    (
+                        "calls",
+                        Json::arr(t.calls.iter().map(|c| {
+                            Json::arr([
+                                Json::num(c.agent as f64),
+                                Json::num(c.tokens),
+                                Json::num(c.env_s),
+                            ])
+                        })),
+                    ),
+                ])
+            }));
+            let line = Json::obj(vec![
+                ("kind", Json::str("step")),
+                ("step", Json::num(w.step as f64)),
+                ("trajectories", trajs),
+            ]);
+            out.push_str(&line.to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn from_jsonl(text: &str) -> Result<Trace, String> {
+        let mut header: Option<(String, String, u64, usize, usize)> = None;
+        let mut steps: Vec<StepWorkload> = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let j = parse(line).map_err(|e| format!("trace line {}: {e}", lineno + 1))?;
+            let kind = j
+                .at(&["kind"])
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("trace line {}: missing 'kind'", lineno + 1))?;
+            match kind {
+                "header" => {
+                    let version = j.at(&["version"]).and_then(Json::as_u64).unwrap_or(0);
+                    if version != TRACE_VERSION {
+                        return Err(format!(
+                            "unsupported trace version {version} (want {TRACE_VERSION})"
+                        ));
+                    }
+                    // Replay re-shapes the config from this name, so an
+                    // unknown preset (edited file, newer recorder) must
+                    // fail here as a parse error, not later as a panic.
+                    let scen = req_str(&j, "scenario", lineno)?;
+                    if scenario::by_name(&scen).is_none() {
+                        return Err(scenario::unknown_error(&scen));
+                    }
+                    header = Some((
+                        req_str(&j, "workload", lineno)?,
+                        scen,
+                        req_u64(&j, "seed", lineno)?,
+                        req_u64(&j, "n_agents", lineno)? as usize,
+                        req_u64(&j, "steps", lineno)? as usize,
+                    ));
+                }
+                "step" => {
+                    let Some((_, _, _, n_agents, _)) = &header else {
+                        return Err("trace: step line before header".into());
+                    };
+                    steps.push(parse_step(&j, *n_agents, lineno)?);
+                }
+                other => return Err(format!("trace line {}: unknown kind '{other}'", lineno + 1)),
+            }
+        }
+        let (workload, scenario, seed, n_agents, n_steps) =
+            header.ok_or("trace: no header line")?;
+        if steps.len() != n_steps {
+            return Err(format!(
+                "trace: header says {n_steps} steps, found {}",
+                steps.len()
+            ));
+        }
+        // Mirror the record-side rule: an empty trace has nothing to
+        // replay and would index-panic in the engine.
+        if steps.is_empty() {
+            return Err("trace has no steps (nothing to replay)".into());
+        }
+        Ok(Trace {
+            workload,
+            scenario,
+            seed,
+            n_agents,
+            steps,
+        })
+    }
+
+    pub fn write_file(&self, path: &str) -> Result<(), String> {
+        std::fs::write(path, self.to_jsonl()).map_err(|e| format!("{path}: {e}"))
+    }
+
+    pub fn read_file(path: &str) -> Result<Trace, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Self::from_jsonl(&text)
+    }
+
+    pub fn total_calls(&self) -> usize {
+        self.steps.iter().map(|s| s.total_calls()).sum()
+    }
+}
+
+fn req_str(j: &Json, key: &str, lineno: usize) -> Result<String, String> {
+    j.at(&[key])
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| format!("trace line {}: missing '{key}'", lineno + 1))
+}
+
+fn req_u64(j: &Json, key: &str, lineno: usize) -> Result<u64, String> {
+    j.at(&[key])
+        .and_then(Json::as_u64)
+        .ok_or_else(|| format!("trace line {}: missing '{key}'", lineno + 1))
+}
+
+fn parse_step(j: &Json, n_agents: usize, lineno: usize) -> Result<StepWorkload, String> {
+    let step = req_u64(j, "step", lineno)? as usize;
+    let trajs = j
+        .at(&["trajectories"])
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format!("trace line {}: missing 'trajectories'", lineno + 1))?;
+    let mut trajectories = Vec::with_capacity(trajs.len());
+    for t in trajs {
+        let query = req_u64(t, "query", lineno)? as usize;
+        let candidate = req_u64(t, "candidate", lineno)? as usize;
+        let calls_j = t
+            .at(&["calls"])
+            .and_then(Json::as_arr)
+            .ok_or_else(|| format!("trace line {}: trajectory missing 'calls'", lineno + 1))?;
+        let mut calls = Vec::with_capacity(calls_j.len());
+        for c in calls_j {
+            let triple = c.as_arr().filter(|a| a.len() == 3).ok_or_else(|| {
+                format!("trace line {}: call is not [agent,tokens,env_s]", lineno + 1)
+            })?;
+            let agent = triple[0]
+                .as_u64()
+                .ok_or_else(|| format!("trace line {}: bad agent", lineno + 1))?
+                as usize;
+            // Bound here so a corrupted trace fails as a parse error,
+            // not an index panic deep inside the engine.
+            if agent >= n_agents {
+                return Err(format!(
+                    "trace line {}: agent {agent} out of range (n_agents {n_agents})",
+                    lineno + 1
+                ));
+            }
+            calls.push(CallSpec {
+                agent,
+                tokens: triple[1]
+                    .as_f64()
+                    .ok_or_else(|| format!("trace line {}: bad tokens", lineno + 1))?,
+                env_s: triple[2]
+                    .as_f64()
+                    .ok_or_else(|| format!("trace line {}: bad env_s", lineno + 1))?,
+            });
+        }
+        trajectories.push(TrajectorySpec {
+            query,
+            candidate,
+            calls,
+        });
+    }
+    Ok(StepWorkload { step, trajectories })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadConfig;
+
+    fn small(scenario: &str) -> WorkloadConfig {
+        let mut wl = WorkloadConfig::ma();
+        wl.queries_per_step = 2;
+        wl.group_size = 2;
+        wl.scenario = scenario.to_string();
+        wl
+    }
+
+    #[test]
+    fn jsonl_roundtrip_is_bit_identical_for_every_preset() {
+        for name in scenario::names() {
+            let tr = Trace::record(&small(name), 2048, 2).unwrap();
+            let back = Trace::from_jsonl(&tr.to_jsonl()).unwrap();
+            // PartialEq on f64 fields: exact, not approximate.
+            assert_eq!(tr, back, "{name} round-trip drifted");
+            assert_eq!(back.scenario, name);
+            assert!(back.total_calls() > 0);
+        }
+    }
+
+    #[test]
+    fn replayed_trace_matches_regeneration() {
+        let wl = small("core_skew");
+        let tr = Trace::record(&wl, 7, 3).unwrap();
+        let (shaped, scen) = scenario::resolve(&wl).unwrap();
+        for (s, recorded) in tr.steps.iter().enumerate() {
+            assert_eq!(recorded, &scen.step(&shaped, 7, s));
+        }
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let tr = Trace::record(&small("bursty"), 2048, 2).unwrap();
+        let path = std::env::temp_dir().join("flexmarl_trace_test.jsonl");
+        let path = path.to_str().unwrap().to_string();
+        tr.write_file(&path).unwrap();
+        let back = Trace::read_file(&path).unwrap();
+        assert_eq!(tr, back);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn malformed_traces_rejected() {
+        assert!(Trace::from_jsonl("").is_err());
+        assert!(Trace::from_jsonl("not json\n").is_err());
+        // Step before header.
+        assert!(Trace::from_jsonl(r#"{"kind":"step","step":0,"trajectories":[]}"#).is_err());
+        // Unknown kind.
+        let tr = Trace::record(&small("baseline"), 1, 1).unwrap();
+        let bad = tr.to_jsonl().replace("\"header\"", "\"headerz\"");
+        assert!(Trace::from_jsonl(&bad).is_err());
+        // Header/step-count mismatch.
+        let jsonl = tr.to_jsonl();
+        let header_only = jsonl.lines().next().unwrap();
+        assert!(Trace::from_jsonl(header_only).is_err());
+        // Wrong version.
+        let wrong = jsonl.replace("\"version\":1", "\"version\":99");
+        assert!(Trace::from_jsonl(&wrong).is_err());
+    }
+
+    #[test]
+    fn out_of_range_agent_is_a_parse_error() {
+        // Regression: a corrupted call agent index must fail at parse
+        // time, not panic inside the engine.
+        let tr = Trace::record(&small("baseline"), 1, 1).unwrap();
+        let jsonl = tr.to_jsonl();
+        let a0 = &tr.steps[0].trajectories[0].calls[0];
+        let needle = format!("[{},", a0.agent);
+        let bad = jsonl.replacen(&needle, "[99,", 1);
+        assert_ne!(bad, jsonl, "test setup: call triple not found");
+        let err = Trace::from_jsonl(&bad).unwrap_err();
+        assert!(err.contains("out of range"), "{err}");
+    }
+
+    #[test]
+    fn unknown_scenario_fails_record() {
+        let mut wl = small("baseline");
+        wl.scenario = "nope".into();
+        assert!(Trace::record(&wl, 1, 1).is_err());
+        // Zero steps: nothing to replay — rejected at record time.
+        assert!(Trace::record(&small("baseline"), 1, 0).is_err());
+    }
+
+    #[test]
+    fn unknown_header_scenario_is_a_parse_error() {
+        // Replay re-shapes the config from the header's scenario name,
+        // so a name this build doesn't know must fail at parse time.
+        let tr = Trace::record(&small("baseline"), 1, 1).unwrap();
+        let bad = tr
+            .to_jsonl()
+            .replace("\"scenario\":\"baseline\"", "\"scenario\":\"from_the_future\"");
+        let err = Trace::from_jsonl(&bad).unwrap_err();
+        assert!(err.contains("from_the_future"), "{err}");
+    }
+
+    #[test]
+    fn oversized_seed_rejected_at_record() {
+        // Seeds above 2^53 cannot round-trip through a JSON number.
+        let err = Trace::record(&small("baseline"), MAX_SEED + 1, 1).unwrap_err();
+        assert!(err.contains("2^53"), "{err}");
+        assert!(Trace::record(&small("baseline"), MAX_SEED, 1).is_ok());
+    }
+}

@@ -246,6 +246,81 @@ fn store_batch_and_unbatched_paths_agree() {
     assert_eq!(batched.total_blobs(), 0);
 }
 
+// ---------------------------------------------------------------------------
+// Scenario suite: generate → record → replay round-trips (per preset)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn scenario_roundtrip_per_preset_workloads_and_metrics_bit_identical() {
+    // Acceptance gate for the scenario suite: for every preset,
+    //   generate → record trace → replay trace
+    // yields (a) identical StepWorkloads and (b) identical end-to-end
+    // simulation metrics for the same seed.
+    use flexmarl::orchestrator::resolve_workload;
+    use flexmarl::workload::{scenario, Trace};
+    for name in scenario::names() {
+        let mut cfg = ma_cfg(Framework::flexmarl(), 2);
+        cfg.workload.queries_per_step = 2;
+        cfg.workload.group_size = 4;
+        cfg.workload.scenario = name.to_string();
+
+        // (a) StepWorkloads: trace JSONL round-trip == fresh generation.
+        let tr = Trace::record(&cfg.workload, cfg.seed, cfg.steps).unwrap();
+        let back = Trace::from_jsonl(&tr.to_jsonl()).unwrap();
+        assert_eq!(tr, back, "{name}: JSONL round-trip drifted");
+        let (_, generated) = resolve_workload(&cfg).unwrap();
+        assert_eq!(
+            back.steps, generated,
+            "{name}: replayed workloads differ from generated"
+        );
+
+        // (b) end-to-end metrics: simulate generated vs replayed.
+        let gen_out = simulate(&cfg, &opts());
+        let path = std::env::temp_dir().join(format!("flexmarl_rt_{name}.jsonl"));
+        let path = path.to_str().unwrap().to_string();
+        back.write_file(&path).unwrap();
+        let mut replay_cfg = cfg.clone();
+        replay_cfg.workload.trace = Some(path.clone());
+        let replay_out = simulate(&replay_cfg, &opts());
+        let _ = std::fs::remove_file(&path);
+
+        assert_eq!(gen_out.total_s, replay_out.total_s, "{name}");
+        assert_eq!(gen_out.reports.len(), replay_out.reports.len(), "{name}");
+        for (x, y) in gen_out.reports.iter().zip(&replay_out.reports) {
+            assert_eq!(x.e2e_s, y.e2e_s, "{name}");
+            assert_eq!(x.rollout_s, y.rollout_s, "{name}");
+            assert_eq!(x.train_s, y.train_s, "{name}");
+            assert_eq!(x.tokens, y.tokens, "{name}");
+            assert_eq!(x.busy_device_s, y.busy_device_s, "{name}");
+            assert_eq!(x.agent_calls, y.agent_calls, "{name}");
+            assert_eq!(x.scale_ops, y.scale_ops, "{name}");
+            assert_eq!(x.trajectory_latencies, y.trajectory_latencies, "{name}");
+        }
+    }
+}
+
+#[test]
+fn scenario_presets_change_system_behaviour() {
+    // The presets must be observably different workloads, not renames:
+    // per-agent call distributions and token volumes diverge from
+    // baseline (uniform kills the skew; tool_heavy stretches chains).
+    let run = |name: &str| {
+        let mut cfg = ma_cfg(Framework::flexmarl(), 1);
+        cfg.workload.queries_per_step = 2;
+        cfg.workload.group_size = 4;
+        cfg.workload.scenario = name.to_string();
+        simulate(&cfg, &opts()).reports.remove(0)
+    };
+    let base = run("baseline");
+    let uniform = run("uniform");
+    let tool = run("tool_heavy");
+    assert_ne!(base.agent_calls, uniform.agent_calls);
+    assert!(tool.tokens != base.tokens);
+    // Tool-heavy chains are longer → more calls for the same queries.
+    let calls = |r: &flexmarl::metrics::StepReport| r.agent_calls.iter().sum::<usize>();
+    assert!(calls(&tool) > calls(&base), "{} vs {}", calls(&tool), calls(&base));
+}
+
 #[test]
 fn seed_changes_results() {
     let mut cfg = ma_cfg(Framework::flexmarl(), 1);

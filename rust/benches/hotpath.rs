@@ -13,14 +13,17 @@
 
 use flexmarl::baselines::Framework;
 use flexmarl::config::{ExperimentConfig, WorkloadConfig};
+use flexmarl::exec::{grid_report, run_specs_or_panic, RunGrid};
+use flexmarl::metrics::StepReport;
 use flexmarl::orchestrator::{simulate, SimOptions};
 use flexmarl::rollout::{heap::IndexedMinHeap, RolloutManager};
 use flexmarl::sim::{EventQueue, QueueKind};
 use flexmarl::store::{
     grpo_schema, Blob, ExperienceStore, Field, PutRow, SampleId, Value,
 };
-use flexmarl::util::bench::{bench, black_box, BenchResult};
+use flexmarl::util::bench::{bench, black_box, time_once, BenchResult};
 use flexmarl::util::json::Json;
+use flexmarl::util::pool;
 use flexmarl::util::rng::Pcg64;
 use std::collections::BTreeMap;
 use std::time::Duration;
@@ -74,10 +77,56 @@ fn main() {
     bench_store(&mut rec, t);
     bench_json(&mut rec, t);
     bench_sim_engine(&mut rec, t);
+    bench_sweep(smoke);
     if !smoke {
         bench_pjrt(&mut rec);
     }
     rec.write_json("BENCH_hotpath.json");
+}
+
+/// Sweep group: the fixed framework × scenario grid through the
+/// deterministic parallel executor at jobs=1 vs jobs=N. Wall times go
+/// to `BENCH_sweep.json` so the perf trajectory has sweep-throughput
+/// numbers; the jobs=N output is asserted byte-identical to jobs=1
+/// while we're here (the executor's whole contract).
+fn bench_sweep(smoke: bool) {
+    let mut base = ExperimentConfig::new(WorkloadConfig::ma(), Framework::flexmarl());
+    base.steps = if smoke { 1 } else { 2 };
+    base.workload.queries_per_step = 2;
+    base.workload.group_size = if smoke { 4 } else { 8 };
+    let grid = RunGrid::full();
+    let specs = grid.specs(&base);
+    let opts = SimOptions::default();
+    let jobs_n = pool::default_jobs().max(2);
+
+    let (r1, t1) = time_once(|| run_specs_or_panic(&base, &opts, &specs, 1));
+    let (rn, tn) = time_once(|| run_specs_or_panic(&base, &opts, &specs, jobs_n));
+    let render = |reports: &[StepReport]| grid_report(&base, &specs, reports).to_pretty();
+    assert_eq!(render(&r1), render(&rn), "sweep output depends on thread count");
+
+    let speedup = t1.as_secs_f64() / tn.as_secs_f64().max(1e-9);
+    println!(
+        "\nsweep grid ({} runs, {} frameworks × {} scenarios): \
+         jobs=1 {:.2?}   jobs={jobs_n} {:.2?}   speedup {speedup:.2}x",
+        specs.len(),
+        grid.frameworks.len(),
+        grid.scenarios.len(),
+        t1,
+        tn,
+    );
+    let map: BTreeMap<String, Json> = [
+        ("grid_runs".to_string(), Json::num(specs.len() as f64)),
+        ("jobs_n".to_string(), Json::num(jobs_n as f64)),
+        ("jobs1_ns".to_string(), Json::num(t1.as_nanos() as f64)),
+        ("jobsN_ns".to_string(), Json::num(tn.as_nanos() as f64)),
+        ("speedup".to_string(), Json::num(speedup)),
+    ]
+    .into_iter()
+    .collect();
+    match std::fs::write("BENCH_sweep.json", Json::Obj(map).to_pretty()) {
+        Ok(()) => println!("wrote BENCH_sweep.json"),
+        Err(e) => eprintln!("could not write BENCH_sweep.json: {e}"),
+    }
 }
 
 fn queue_drain(kind: QueueKind) {

@@ -1,13 +1,16 @@
 //! `cargo bench` target regenerating every table AND figure of the
-//! paper's evaluation (§8), plus the ablation benches DESIGN.md §6 calls
+//! paper's evaluation (§8), plus the ablation benches DESIGN.md §7 calls
 //! out (micro-batch size, Δ threshold, suspend-to-destroy vs retain,
 //! contiguous vs per-parameter weight sync, PACK vs STRICT_PACK).
 //!
 //! criterion is not vendored in this image; this is a `harness = false`
 //! bench built on `flexmarl::util::bench`. Each section prints the
-//! paper's reported values next to the regenerated ones.
+//! paper's reported values next to the regenerated ones. Multi-run
+//! sections (Table 2, Fig. 10, the scenario matrix) fan out through the
+//! deterministic parallel executor ([`flexmarl::exec`], DESIGN.md §4) —
+//! rows are bit-identical to a serial run, just faster to regenerate.
 
-use flexmarl::baselines::{evaluate, scenario_sweep, Framework};
+use flexmarl::baselines::{evaluate, scenario_sweep, sweep, Framework};
 use flexmarl::cluster::{DevicePool, PlacementStrategy};
 use flexmarl::config::{ClusterConfig, ExperimentConfig, ModelScale, WorkloadConfig};
 use flexmarl::memstore::{Location, TransferModel};
@@ -65,12 +68,8 @@ fn bench_table2() {
         ("CA", [438.6, 130.0, 112.8, 78.8]),
     ];
     for (w, p) in paper {
-        let (rows, dt) = time_once(|| {
-            Framework::all_baselines()
-                .into_iter()
-                .map(|fw| evaluate(&cfg(wl(w), fw, 3), &opts()))
-                .collect::<Vec<_>>()
-        });
+        // All four frameworks through the parallel executor.
+        let (rows, dt) = time_once(|| sweep(&cfg(wl(w), Framework::flexmarl(), 3), &opts()));
         let base = rows[0].e2e_s;
         println!("  {w} (regenerated in {:.2?}):", dt);
         for (r, pe) in rows.iter().zip(p) {
@@ -142,8 +141,7 @@ fn bench_fig10() {
     println!("\n── Fig 10: utilization (paper CA: 3.6 / 10.2 / 12.3 / 19.8 %) ──");
     for w in ["MA", "CA"] {
         print!("    {w}: ");
-        for fw in Framework::all_baselines() {
-            let r = evaluate(&cfg(wl(w), fw, 3), &opts());
+        for r in sweep(&cfg(wl(w), Framework::flexmarl(), 3), &opts()) {
             print!("{} {:.1}%  ", r.framework, r.utilization() * 100.0);
         }
         println!();

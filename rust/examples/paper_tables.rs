@@ -40,14 +40,33 @@ fn main() {
 fn table2() {
     println!("== Table 2: overall training performance ==");
     let paper: &[(&str, &[(f64, f64, f64)])] = &[
-        ("MA", &[(914.4, 1.0, 119.0), (293.8, 3.1, 401.0), (174.1, 5.3, 642.8), (126.1, 7.3, 910.2)]),
-        ("CA", &[(438.6, 1.0, 265.5), (130.0, 3.4, 571.6), (112.8, 3.9, 655.9), (78.8, 5.6, 821.4)]),
+        (
+            "MA",
+            &[
+                (914.4, 1.0, 119.0),
+                (293.8, 3.1, 401.0),
+                (174.1, 5.3, 642.8),
+                (126.1, 7.3, 910.2),
+            ],
+        ),
+        (
+            "CA",
+            &[
+                (438.6, 1.0, 265.5),
+                (130.0, 3.4, 571.6),
+                (112.8, 3.9, 655.9),
+                (78.8, 5.6, 821.4),
+            ],
+        ),
     ];
     for (wl_name, paper_rows) in paper {
         let wl = if *wl_name == "MA" { WorkloadConfig::ma() } else { WorkloadConfig::ca() };
         let reports = sweep(&cfg(wl, Framework::flexmarl()), &opts());
         let rows = table_rows(&reports);
-        println!("  {wl_name}:  {:<10} {:>22} {:>26}", "framework", "paper (e2e/x/tps)", "ours (e2e/x/tps)");
+        println!(
+            "  {wl_name}:  {:<10} {:>22} {:>26}",
+            "framework", "paper (e2e/x/tps)", "ours (e2e/x/tps)"
+        );
         for (r, p) in rows.iter().zip(*paper_rows) {
             println!(
                 "       {:<10} {:>8.1}s {:>4.1}x {:>7.1}tps   {:>8.1}s {:>4.1}x {:>7.1}tps",
@@ -137,7 +156,9 @@ fn fig11() {
 
 fn table3() {
     println!("\n== Table 3: ablations ==");
-    println!("    paper MA: w/o balancing 152.2s (6.0x)  w/o async 256.2s (3.6x)  full 126.1s (7.3x)");
+    println!(
+        "    paper MA: w/o balancing 152.2s (6.0x)  w/o async 256.2s (3.6x)  full 126.1s (7.3x)"
+    );
     for wl_name in ["MA", "CA"] {
         let wl = if wl_name == "MA" { WorkloadConfig::ma() } else { WorkloadConfig::ca() };
         let mas = evaluate(&cfg(wl.clone(), Framework::mas_rl()), &opts());
@@ -156,7 +177,9 @@ fn table3() {
 
 fn table4() {
     println!("\n== Table 4: heterogeneous scalability (FlexMARL) ==");
-    println!("    paper: 5x32B 160.3s/265.9tps | 3x32B+7x14B 132.5s/334.8tps | 15x14B 41.9s/754.2tps");
+    println!(
+        "    paper: 5x32B 160.3s/265.9tps | 3x32B+7x14B 132.5s/334.8tps | 15x14B 41.9s/754.2tps"
+    );
     for spec in [
         vec![(5usize, ModelScale::B32)],
         vec![(3, ModelScale::B32), (7, ModelScale::B14)],

@@ -99,11 +99,11 @@ fn main() {
         });
     };
 
-    let mut submit = |man: &mut RolloutManager,
-                      req_meta: &mut BTreeMap<u64, (usize, usize, u64)>,
-                      next_rid: &mut u64,
-                      traj: usize,
-                      call: usize| {
+    let submit = |man: &mut RolloutManager,
+                  req_meta: &mut BTreeMap<u64, (usize, usize, u64)>,
+                  next_rid: &mut u64,
+                  traj: usize,
+                  call: usize| {
         let spec = &workload.trajectories[traj].calls[call];
         let rid = *next_rid;
         *next_rid += 1;
@@ -188,7 +188,10 @@ fn main() {
     }
 
     let wall = t0.elapsed().as_secs_f64();
-    println!("\nserved {total_calls} calls in {wall:.1}s wall ({:.0}s simulated)", wall * TIME_SCALE);
+    println!(
+        "\nserved {total_calls} calls in {wall:.1}s wall ({:.0}s simulated)",
+        wall * TIME_SCALE
+    );
     println!("scaling operations: {scale_ops}");
     for a in 0..n_agents {
         println!(

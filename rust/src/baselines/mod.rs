@@ -42,36 +42,46 @@ pub fn try_evaluate(cfg: &ExperimentConfig, opts: &SimOptions) -> Result<StepRep
     Ok(rep)
 }
 
-/// Table-2 style sweep: all four frameworks on one workload.
+/// Table-2 style sweep: all four frameworks on one workload. Runs
+/// through the deterministic parallel executor ([`crate::exec`]) with
+/// the default worker count (`PALLAS_JOBS` / available parallelism) —
+/// rows come back in `Framework::all_baselines` order and are
+/// bit-identical for any worker count.
 pub fn sweep(base: &ExperimentConfig, opts: &SimOptions) -> Vec<StepReport> {
-    Framework::all_baselines()
-        .into_iter()
-        .map(|fw| {
-            let mut cfg = base.clone();
-            cfg.framework = fw;
-            evaluate(&cfg, opts)
-        })
-        .collect()
+    sweep_jobs(base, opts, crate::util::pool::default_jobs())
+}
+
+/// [`sweep`] with an explicit worker count.
+pub fn sweep_jobs(base: &ExperimentConfig, opts: &SimOptions, jobs: usize) -> Vec<StepReport> {
+    let grid = crate::exec::RunGrid {
+        frameworks: Framework::all_baselines(),
+        ..crate::exec::RunGrid::default()
+    };
+    crate::exec::run_specs_or_panic(base, opts, &grid.specs(base), jobs)
 }
 
 /// Scenario-matrix sweep: one framework across every workload scenario
 /// preset ([`crate::workload::scenario`]) — the balancer, trajectory
 /// scheduler, and allocator each get exercised under every traffic
 /// shape the suite knows. The CI scenario matrix and the
-/// `paper_benches` scenario group both run this shape.
+/// `paper_benches` scenario group both run this shape, through the
+/// parallel executor (each preset generates fresh: the scenario axis
+/// clears any base trace, whose header would otherwise override it).
 pub fn scenario_sweep(base: &ExperimentConfig, opts: &SimOptions) -> Vec<StepReport> {
-    crate::workload::scenario::all()
-        .iter()
-        .map(|s| {
-            let mut cfg = base.clone();
-            cfg.workload.scenario = s.name().to_string();
-            // A trace would override the scenario (its header is
-            // authoritative) and replay the same steps for every row —
-            // the sweep generates each preset fresh.
-            cfg.workload.trace = None;
-            evaluate(&cfg, opts)
-        })
-        .collect()
+    scenario_sweep_jobs(base, opts, crate::util::pool::default_jobs())
+}
+
+/// [`scenario_sweep`] with an explicit worker count.
+pub fn scenario_sweep_jobs(
+    base: &ExperimentConfig,
+    opts: &SimOptions,
+    jobs: usize,
+) -> Vec<StepReport> {
+    let grid = crate::exec::RunGrid {
+        scenarios: crate::workload::scenario::owned_names(),
+        ..crate::exec::RunGrid::default()
+    };
+    crate::exec::run_specs_or_panic(base, opts, &grid.specs(base), jobs)
 }
 
 #[cfg(test)]
@@ -110,5 +120,23 @@ mod tests {
         // The shapes genuinely differ: not all rows can agree on tokens.
         let t0 = rows[0].tokens;
         assert!(rows.iter().any(|r| r.tokens != t0));
+    }
+
+    #[test]
+    fn sweeps_are_worker_count_invariant() {
+        let mut cfg = ExperimentConfig::new(WorkloadConfig::ma(), Framework::flexmarl());
+        cfg.workload.queries_per_step = 2;
+        cfg.workload.group_size = 4;
+        cfg.steps = 1;
+        let opts = SimOptions::default();
+        let a = sweep_jobs(&cfg, &opts, 1);
+        let b = sweep_jobs(&cfg, &opts, 3);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.framework, y.framework);
+            assert_eq!(x.e2e_s, y.e2e_s);
+            assert_eq!(x.tokens, y.tokens);
+            assert_eq!(x.agent_calls, y.agent_calls);
+        }
     }
 }

@@ -1,0 +1,376 @@
+//! Deterministic parallel sweep executor (DESIGN.md §4).
+//!
+//! The paper's headline numbers sweep frameworks × scenarios × seeds;
+//! each cell is an independent, fully self-contained simulation, so the
+//! sweep is embarrassingly parallel. The only hard requirement — byte-
+//! identical output whatever the thread count (PR 2's CI diffs demand
+//! it) — is met by construction:
+//!
+//! 1. a [`RunSpec`] is a *pure value*: framework, scenario, seed, and
+//!    config overrides. [`RunSpec::apply`] derives the cell's
+//!    `ExperimentConfig` from the base config and nothing else;
+//! 2. per-spec seeds are *derived*, not drawn: [`derive_seed`] is a
+//!    pure function of `(base_seed, replicate)`, so spec lists are
+//!    identical however the grid is later scheduled;
+//! 3. workers share no mutable simulation state — each cell builds its
+//!    own engine — and [`crate::util::pool::run_ordered`] collects
+//!    results in input order, never completion order.
+//!
+//! Every multi-run driver routes through here: `baselines::sweep` /
+//! `scenario_sweep`, the `sweep` and `scenarios --run` CLI subcommands,
+//! and both bench targets.
+
+use crate::baselines;
+use crate::config::{ExperimentConfig, Framework};
+use crate::metrics::StepReport;
+use crate::orchestrator::SimOptions;
+use crate::util::json::Json;
+use crate::util::pool;
+use crate::workload::scenario;
+
+/// Config knobs a grid may vary besides the three main axes. `None`
+/// inherits the base config's value.
+#[derive(Debug, Clone, Default)]
+pub struct Overrides {
+    pub steps: Option<usize>,
+    pub micro_batch: Option<usize>,
+    pub delta_threshold: Option<usize>,
+    pub queries_per_step: Option<usize>,
+    pub group_size: Option<usize>,
+}
+
+impl Overrides {
+    fn apply(&self, cfg: &mut ExperimentConfig) {
+        if let Some(v) = self.steps {
+            cfg.steps = v;
+        }
+        if let Some(v) = self.micro_batch {
+            cfg.pipeline.micro_batch = v;
+        }
+        if let Some(v) = self.delta_threshold {
+            cfg.pipeline.delta_threshold = v;
+        }
+        if let Some(v) = self.queries_per_step {
+            cfg.workload.queries_per_step = v;
+        }
+        if let Some(v) = self.group_size {
+            cfg.workload.group_size = v;
+        }
+    }
+}
+
+/// One cell of a sweep grid: everything needed to derive the cell's
+/// config from a base [`ExperimentConfig`], as a pure value.
+#[derive(Debug, Clone)]
+pub struct RunSpec {
+    pub framework: Framework,
+    /// `None` inherits the base config's workload source verbatim
+    /// (scenario *and* any trace). `Some(name)` generates fresh under
+    /// that preset — a base trace is cleared, because a trace header is
+    /// authoritative and would silently override the axis.
+    pub scenario: Option<String>,
+    pub seed: u64,
+    pub overrides: Overrides,
+}
+
+impl RunSpec {
+    /// Derive this cell's concrete config. Pure: same `(self, base)`
+    /// in, same config out — the executor's determinism rests on it.
+    pub fn apply(&self, base: &ExperimentConfig) -> ExperimentConfig {
+        let mut cfg = base.clone();
+        cfg.framework = self.framework;
+        cfg.seed = self.seed;
+        if let Some(s) = &self.scenario {
+            cfg.workload.scenario = s.clone();
+            cfg.workload.trace = None;
+        }
+        self.overrides.apply(&mut cfg);
+        cfg
+    }
+}
+
+/// Derived per-replicate RNG seed: SplitMix64 over the base seed and
+/// the replicate index. Pure and stable — a spec's seed depends only on
+/// its grid coordinates, never on scheduling. Replicate 0 keeps the
+/// base seed itself so single-replicate grids match legacy sweeps
+/// exactly.
+pub fn derive_seed(base: u64, replicate: u64) -> u64 {
+    if replicate == 0 {
+        return base;
+    }
+    let mut z = base
+        .wrapping_add(replicate.wrapping_mul(0x9e37_79b9_7f4a_7c15))
+        .wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// A framework × scenario × seed-replicate grid. Axes left empty
+/// inherit the base config's value (a single-column axis).
+#[derive(Debug, Clone, Default)]
+pub struct RunGrid {
+    pub frameworks: Vec<Framework>,
+    pub scenarios: Vec<String>,
+    /// Seed replicates per cell; 0 or 1 = just the base seed.
+    pub replicates: usize,
+    pub overrides: Overrides,
+}
+
+impl RunGrid {
+    /// The full paper grid: every baseline framework × every scenario
+    /// preset, one replicate.
+    pub fn full() -> RunGrid {
+        RunGrid {
+            frameworks: Framework::all_baselines(),
+            scenarios: scenario::owned_names(),
+            replicates: 1,
+            overrides: Overrides::default(),
+        }
+    }
+
+    /// Expand to specs in deterministic row-major order: framework,
+    /// then scenario, then replicate. This order *is* the output
+    /// order, whatever `jobs` the executor later runs with.
+    pub fn specs(&self, base: &ExperimentConfig) -> Vec<RunSpec> {
+        let fw_axis: Vec<Framework> = if self.frameworks.is_empty() {
+            vec![base.framework]
+        } else {
+            self.frameworks.clone()
+        };
+        let scen_axis: Vec<Option<String>> = if self.scenarios.is_empty() {
+            vec![None]
+        } else {
+            self.scenarios.iter().map(|s| Some(s.clone())).collect()
+        };
+        let reps = self.replicates.max(1);
+        let mut out = Vec::with_capacity(fw_axis.len() * scen_axis.len() * reps);
+        for fw in &fw_axis {
+            for scen in &scen_axis {
+                for r in 0..reps {
+                    out.push(RunSpec {
+                        framework: *fw,
+                        scenario: scen.clone(),
+                        seed: derive_seed(base.seed, r as u64),
+                        overrides: self.overrides.clone(),
+                    });
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Execute every spec against the base config on up to `jobs` worker
+/// threads; results come back in spec order (bit-identical for any
+/// `jobs` — each cell's simulation is self-contained and the pool
+/// collects by input index). Resolution failures (unknown scenario,
+/// bad trace) surface per-cell as `Err`.
+///
+/// Known cost on the rare inherited-trace path: cells with
+/// `scenario: None` over a trace-backed base each re-read and re-parse
+/// the trace file (the PR-2 "parse once" property holds per run, not
+/// per sweep). Scenario axes — every sweep this crate ships — clear
+/// the trace, so no shipped grid pays it.
+pub fn run_specs(
+    base: &ExperimentConfig,
+    opts: &SimOptions,
+    specs: &[RunSpec],
+    jobs: usize,
+) -> Vec<Result<StepReport, String>> {
+    pool::run_ordered(specs, jobs, |_, spec| baselines::try_evaluate(&spec.apply(base), opts))
+}
+
+/// [`run_specs`] with errors promoted to panics — the library-internal
+/// sweep paths whose callers already accept `evaluate`'s panic
+/// semantics.
+pub fn run_specs_or_panic(
+    base: &ExperimentConfig,
+    opts: &SimOptions,
+    specs: &[RunSpec],
+    jobs: usize,
+) -> Vec<StepReport> {
+    run_specs(base, opts, specs, jobs)
+        .into_iter()
+        .map(|r| r.unwrap_or_else(|e| panic!("workload resolution failed: {e}")))
+        .collect()
+}
+
+/// One JSON report for a whole grid. Deliberately excludes job count
+/// and wall time: the document must be byte-identical for any `jobs`
+/// (CI diffs `sweep --jobs 1` against `--jobs 2`). Seeds are emitted
+/// as strings — u64 seeds above 2^53 would be lossy as JSON numbers.
+/// The per-run `scenario` label is taken from the *report* (the
+/// scenario the simulation actually resolved), so inherited axes,
+/// alias spellings, and authoritative trace headers all label
+/// correctly; `base_steps` is the base config's step count (a spec's
+/// `Overrides.steps` shows up in its own report, not here).
+pub fn grid_report(base: &ExperimentConfig, specs: &[RunSpec], reports: &[StepReport]) -> Json {
+    assert_eq!(specs.len(), reports.len(), "one report per spec");
+    let runs = specs.iter().zip(reports).map(|(s, r)| {
+        Json::obj(vec![
+            ("framework", Json::str(s.framework.name)),
+            ("scenario", Json::str(r.scenario.clone())),
+            ("seed", Json::str(s.seed.to_string())),
+            ("report", r.to_json()),
+        ])
+    });
+    Json::obj(vec![
+        ("workload", Json::str(base.workload.name.clone())),
+        ("base_seed", Json::str(base.seed.to_string())),
+        ("base_steps", Json::num(base.steps as f64)),
+        ("runs", Json::arr(runs)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadConfig;
+
+    fn small_base() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::new(WorkloadConfig::ma(), Framework::flexmarl());
+        cfg.workload.queries_per_step = 2;
+        cfg.workload.group_size = 4;
+        cfg.steps = 1;
+        cfg
+    }
+
+    #[test]
+    fn grid_order_is_row_major_and_stable() {
+        let base = small_base();
+        let grid = RunGrid {
+            frameworks: vec![Framework::mas_rl(), Framework::flexmarl()],
+            scenarios: vec!["baseline".into(), "uniform".into()],
+            replicates: 2,
+            overrides: Overrides::default(),
+        };
+        let specs = grid.specs(&base);
+        assert_eq!(specs.len(), 8);
+        assert_eq!(specs[0].framework.name, "MAS-RL");
+        assert_eq!(specs[0].scenario.as_deref(), Some("baseline"));
+        assert_eq!(specs[0].seed, base.seed);
+        assert_eq!(specs[1].seed, derive_seed(base.seed, 1));
+        assert_ne!(specs[1].seed, base.seed);
+        assert_eq!(specs[2].scenario.as_deref(), Some("uniform"));
+        assert_eq!(specs[4].framework.name, "FlexMARL");
+        // Same grid, same base → identical spec list (pure expansion).
+        let again = grid.specs(&base);
+        for (a, b) in specs.iter().zip(&again) {
+            assert_eq!(a.framework.name, b.framework.name);
+            assert_eq!(a.scenario, b.scenario);
+            assert_eq!(a.seed, b.seed);
+        }
+    }
+
+    #[test]
+    fn empty_axes_inherit_base() {
+        let mut base = small_base();
+        base.framework = Framework::marti();
+        base.workload.scenario = "core_skew".into();
+        let specs = RunGrid::default().specs(&base);
+        assert_eq!(specs.len(), 1);
+        assert_eq!(specs[0].framework.name, "MARTI");
+        assert_eq!(specs[0].scenario, None);
+        let cfg = specs[0].apply(&base);
+        assert_eq!(cfg.workload.scenario, "core_skew");
+        assert_eq!(cfg.seed, base.seed);
+    }
+
+    #[test]
+    fn spec_scenario_clears_base_trace() {
+        let mut base = small_base();
+        base.workload.trace = Some("recorded.jsonl".into());
+        let spec = RunSpec {
+            framework: Framework::flexmarl(),
+            scenario: Some("bursty".into()),
+            seed: 7,
+            overrides: Overrides::default(),
+        };
+        let cfg = spec.apply(&base);
+        assert_eq!(cfg.workload.scenario, "bursty");
+        assert_eq!(cfg.workload.trace, None);
+        // Inheriting specs keep the trace source.
+        let inherit = RunSpec { scenario: None, ..spec };
+        assert_eq!(
+            inherit.apply(&base).workload.trace.as_deref(),
+            Some("recorded.jsonl")
+        );
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let base = small_base();
+        let spec = RunSpec {
+            framework: Framework::dist_rl(),
+            scenario: None,
+            seed: base.seed,
+            overrides: Overrides {
+                steps: Some(4),
+                micro_batch: Some(8),
+                delta_threshold: Some(9),
+                queries_per_step: Some(3),
+                group_size: Some(8),
+            },
+        };
+        let cfg = spec.apply(&base);
+        assert_eq!(cfg.steps, 4);
+        assert_eq!(cfg.pipeline.micro_batch, 8);
+        assert_eq!(cfg.pipeline.delta_threshold, 9);
+        assert_eq!(cfg.workload.queries_per_step, 3);
+        assert_eq!(cfg.workload.group_size, 8);
+    }
+
+    #[test]
+    fn derive_seed_is_stable_and_decorrelated() {
+        assert_eq!(derive_seed(2048, 0), 2048);
+        let a = derive_seed(2048, 1);
+        let b = derive_seed(2048, 2);
+        assert_eq!(a, derive_seed(2048, 1));
+        assert_ne!(a, b);
+        assert_ne!(a, 2048);
+    }
+
+    #[test]
+    fn executor_is_thread_count_invariant_on_a_real_grid() {
+        let base = small_base();
+        let grid = RunGrid {
+            frameworks: vec![Framework::flexmarl(), Framework::dist_rl()],
+            scenarios: vec!["baseline".into(), "core_skew".into()],
+            replicates: 1,
+            overrides: Overrides::default(),
+        };
+        let specs = grid.specs(&base);
+        let opts = SimOptions::default();
+        let render = |jobs: usize| {
+            let reports = run_specs_or_panic(&base, &opts, &specs, jobs);
+            grid_report(&base, &specs, &reports).to_pretty()
+        };
+        let one = render(1);
+        assert_eq!(one, render(2));
+        assert_eq!(one, render(4));
+    }
+
+    #[test]
+    fn bad_scenario_surfaces_as_err_in_its_cell_only() {
+        let base = small_base();
+        let specs = vec![
+            RunSpec {
+                framework: Framework::flexmarl(),
+                scenario: Some("baseline".into()),
+                seed: base.seed,
+                overrides: Overrides::default(),
+            },
+            RunSpec {
+                framework: Framework::flexmarl(),
+                scenario: Some("gibberish".into()),
+                seed: base.seed,
+                overrides: Overrides::default(),
+            },
+        ];
+        let out = run_specs(&base, &SimOptions::default(), &specs, 2);
+        assert!(out[0].is_ok());
+        let err = out[1].as_ref().unwrap_err();
+        assert!(err.contains("gibberish"), "{err}");
+    }
+}

@@ -22,6 +22,7 @@
 pub mod baselines;
 pub mod cluster;
 pub mod config;
+pub mod exec;
 pub mod grpo;
 pub mod memstore;
 pub mod metrics;

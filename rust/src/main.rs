@@ -9,16 +9,20 @@
 //!   fig8       — per-agent processed rollout load series (Figs. 8/9)
 //!   fig10      — resource-utilization comparison
 //!   fig11      — training-state swap overhead across model sizes
-//!   scenarios  — list the workload scenario presets
+//!   sweep      — framework × scenario × seed grid on the deterministic
+//!                parallel executor; one JSON report, byte-identical
+//!                for any --jobs
+//!   scenarios  — list the workload scenario presets (--run executes
+//!                the scenario sweep through the executor)
 //!   record     — capture a scenario's workload stream to a JSONL trace
 //!   replay     — re-run a recorded trace (bit-identical workloads)
 //!   inspect    — summarize the AOT artifact manifest
 //!   train      — real end-to-end MARL training via PJRT (see also
-//!                examples/marl_train.rs)
+//!                rust/examples/marl_train.rs)
 //!
 //! Config overrides: --workload MA|CA --framework <name> --steps N
 //! --seed N --micro-batch N --delta N --instances N --json <path>
-//! --scenario <preset> --trace <path>
+//! --scenario <preset> --trace <path> --jobs N (or PALLAS_JOBS)
 
 use flexmarl::baselines::{evaluate, sweep, Framework};
 use flexmarl::config::{framework_by_name, ExperimentConfig, ModelScale, WorkloadConfig};
@@ -40,7 +44,8 @@ fn main() {
         "fig8" => cmd_fig8(&args),
         "fig10" => cmd_fig10(&args),
         "fig11" => cmd_fig11(&args),
-        "scenarios" => cmd_scenarios(),
+        "sweep" => cmd_sweep(&args),
+        "scenarios" => cmd_scenarios(&args),
         "record" => cmd_record(&args),
         "replay" => cmd_replay(&args),
         "inspect" => cmd_inspect(&args),
@@ -55,11 +60,16 @@ fn main() {
 }
 
 const HELP: &str = "flexmarl — rollout-training co-design for LLM-based MARL
-usage: flexmarl <simulate|table2|table3|table4|fig1|fig8|fig10|fig11|scenarios|record|replay|inspect|train> [options]
+usage: flexmarl <simulate|table2|table3|table4|fig1|fig8|fig10|fig11|sweep|scenarios|record|replay|inspect|train> [options]
 options: --workload MA|CA  --framework <name>  --steps N  --seed N
          --micro-batch N  --delta N  --instances N  --json <path>  --quiet
          --scenario <preset>  (see `flexmarl scenarios`)
          --trace <path>       (replay a recorded JSONL trace)
+sweep:   framework × scenario × seed grid on the parallel executor;
+         --jobs N (default PALLAS_JOBS or all cores) --replicates N
+         --framework/--scenario restrict an axis; --json is
+         byte-identical for any --jobs
+scenarios: list presets; --run executes the scenario sweep [--jobs N]
 record:  --scenario <preset> --steps N --seed N --out <path>
 replay:  --trace <path> [--framework <name>]";
 
@@ -302,13 +312,128 @@ fn cmd_fig11(_args: &Args) {
     }
 }
 
-fn cmd_scenarios() {
+/// Grid sweep on the deterministic parallel executor: frameworks ×
+/// scenarios × seed replicates. `--framework`/`--scenario` restrict an
+/// axis to one value; the default grid is all baselines × all presets.
+/// The JSON report is byte-identical for any `--jobs` (CI diffs it).
+fn cmd_sweep(args: &Args) {
+    let cfg = build_cfg(args);
+    // Every grid cell generates its workload fresh (a trace header is
+    // authoritative and would silently override the scenario axis) —
+    // refuse rather than quietly ignore the flag.
+    if args.get("trace").is_some() {
+        eprintln!(
+            "sweep generates every cell fresh; --trace is not supported \
+             (use `simulate --trace` or `replay` for a single recorded run)"
+        );
+        std::process::exit(2);
+    }
+    let opts = build_opts(args);
+    let frameworks = if args.get("framework").is_some() {
+        vec![cfg.framework]
+    } else {
+        Framework::all_baselines()
+    };
+    // build_cfg validated --scenario; canonicalize alias spellings
+    // ("Core-Skew") so the restricted axis carries the registry name.
+    let scenarios = if args.get("scenario").is_some() {
+        let scen = flexmarl::workload::scenario::by_name(&cfg.workload.scenario)
+            .expect("scenario validated by build_cfg");
+        vec![scen.name().to_string()]
+    } else {
+        flexmarl::workload::scenario::owned_names()
+    };
+    let grid = flexmarl::exec::RunGrid {
+        frameworks,
+        scenarios,
+        replicates: args.get_usize("replicates", 1),
+        overrides: flexmarl::exec::Overrides::default(),
+    };
+    let specs = grid.specs(&cfg);
+    let jobs = args.get_usize("jobs", flexmarl::util::pool::default_jobs());
+    // Worker count goes to stderr only: stdout/JSON must not depend
+    // on --jobs.
+    eprintln!("sweep: {} runs, jobs={jobs}", specs.len());
+    let mut reports = Vec::with_capacity(specs.len());
+    for res in flexmarl::exec::run_specs(&cfg, &opts, &specs, jobs) {
+        match res {
+            Ok(r) => reports.push(r),
+            Err(e) => {
+                eprintln!("invalid workload: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
+    println!(
+        "{:<26} {:<13} {:>10} {:>9} {:>10} {:>7} {:>6}",
+        "framework", "scenario", "seed", "e2e", "tps", "util%", "scale"
+    );
+    for (s, r) in specs.iter().zip(&reports) {
+        println!(
+            "{:<26} {:<13} {:>10} {:>8.1}s {:>10.1} {:>7.1} {:>6}",
+            s.framework.name,
+            r.scenario,
+            s.seed,
+            r.e2e_s,
+            r.throughput_tps(),
+            r.utilization() * 100.0,
+            r.scale_ops
+        );
+    }
+    emit_json(args, &flexmarl::exec::grid_report(&cfg, &specs, &reports));
+}
+
+fn cmd_scenarios(args: &Args) {
     println!("== Workload scenario presets (DESIGN.md §2 catalogue) ==");
     println!("{:<14} stresses", "scenario");
     for s in flexmarl::workload::scenario::all() {
         println!("{:<14} {}", s.name(), s.stresses());
     }
+    if args.has_flag("run") {
+        // Execute the scenario sweep through the parallel executor —
+        // the same rows the CI matrix and paper_benches check. Like
+        // `sweep`, every preset row generates fresh, so a --trace
+        // would be silently dropped — refuse it instead.
+        if args.get("trace").is_some() {
+            eprintln!(
+                "scenarios --run generates every preset fresh; --trace is not \
+                 supported (use `simulate --trace` or `replay`)"
+            );
+            std::process::exit(2);
+        }
+        // The preset axis here is always "all seven" — a flag that
+        // would restrict or replicate it belongs to `sweep`, and
+        // dropping it silently is the hazard.
+        if args.get("scenario").is_some() || args.get("replicates").is_some() {
+            eprintln!(
+                "scenarios --run always sweeps every preset; use \
+                 `sweep --scenario <name> [--replicates N]` for a restricted grid"
+            );
+            std::process::exit(2);
+        }
+        let cfg = build_cfg(args);
+        let opts = build_opts(args);
+        let jobs = args.get_usize("jobs", flexmarl::util::pool::default_jobs());
+        eprintln!("scenario sweep: jobs={jobs}");
+        println!(
+            "\n{:<14} {:>9} {:>10} {:>7} {:>6}",
+            "scenario", "e2e", "tps", "util%", "scale"
+        );
+        for r in flexmarl::baselines::scenario_sweep_jobs(&cfg, &opts, jobs) {
+            println!(
+                "{:<14} {:>8.1}s {:>10.1} {:>7.1} {:>6}",
+                r.scenario,
+                r.e2e_s,
+                r.throughput_tps(),
+                r.utilization() * 100.0,
+                r.scale_ops
+            );
+        }
+        return;
+    }
     println!("\nuse: flexmarl simulate --scenario <name>");
+    println!("     flexmarl scenarios --run             (sweep all presets)");
+    println!("     flexmarl sweep --jobs 4 --json g.json (full grid)");
     println!("     flexmarl record --scenario <name> --out t.jsonl");
     println!("     flexmarl replay --trace t.jsonl");
 }

@@ -1,0 +1,108 @@
+//! Metric-key interning: the allocation-free recording hot path
+//! (DESIGN.md §4, "metric-key interning rules").
+//!
+//! Counter keys are interned to dense integer ids **at sim
+//! construction**; the event loop then records by id into a
+//! preallocated `Vec` slot — no `String` construction, hashing, or map
+//! lookup per event. Values flow back out by id at report time.
+//! [`Counters::freeze`] fences the two phases: once the event loop
+//! starts, constructing a new counter key is a bug (it would put
+//! allocation back on the hot path), and `register` debug-asserts it.
+//!
+//! The surface is deliberately minimal — register/freeze/add/get is
+//! everything the engine needs; names live only in the registration
+//! call sites.
+
+/// Dense id of an interned counter key — `Copy`, `Vec`-indexable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MetricId(u32);
+
+/// A set of named `f64` counters with id-indexed recording.
+#[derive(Debug, Default)]
+pub struct Counters {
+    names: Vec<String>,
+    vals: Vec<f64>,
+    frozen: bool,
+}
+
+impl Counters {
+    pub fn new() -> Counters {
+        Counters::default()
+    }
+
+    /// Intern a counter key (construction phase only). After
+    /// [`Counters::freeze`] this debug-panics: a key constructed once
+    /// the event loop has begun is exactly the per-event allocation
+    /// this module exists to eliminate.
+    pub fn register(&mut self, name: &str) -> MetricId {
+        debug_assert!(
+            !self.frozen,
+            "metric key '{name}' constructed after freeze (event loop already started)"
+        );
+        debug_assert!(
+            !self.names.iter().any(|n| n == name),
+            "metric key '{name}' interned twice"
+        );
+        let id = MetricId(self.names.len() as u32);
+        self.names.push(name.to_string());
+        self.vals.push(0.0);
+        id
+    }
+
+    /// Fence between construction and recording: after this, no new
+    /// keys may be interned (debug-asserted in [`Counters::register`]).
+    pub fn freeze(&mut self) {
+        self.frozen = true;
+    }
+
+    /// Record: a plain `Vec` index — allocation-free, branch-free.
+    #[inline]
+    pub fn add(&mut self, id: MetricId, v: f64) {
+        self.vals[id.0 as usize] += v;
+    }
+
+    pub fn get(&self, id: MetricId) -> f64 {
+        self.vals[id.0 as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_record_read() {
+        let mut c = Counters::new();
+        let a = c.register("swap_s");
+        let b = c.register("scale_ops");
+        c.freeze();
+        c.add(a, 1.5);
+        c.add(a, 2.5);
+        c.add(b, 1.0);
+        assert_eq!(c.get(a), 4.0);
+        assert_eq!(c.get(b), 1.0);
+    }
+
+    #[test]
+    #[cfg_attr(not(debug_assertions), ignore = "debug_assert-gated")]
+    fn registering_after_freeze_panics_in_debug() {
+        let mut c = Counters::new();
+        c.register("ok");
+        c.freeze();
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            c.register("late");
+        }));
+        assert!(res.is_err(), "late interning must debug-panic");
+    }
+
+    #[test]
+    #[cfg_attr(not(debug_assertions), ignore = "debug_assert-gated")]
+    fn duplicate_key_panics_in_debug() {
+        let mut c = Counters::new();
+        c.register("x");
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            c.register("x");
+        }));
+        assert!(res.is_err());
+    }
+}

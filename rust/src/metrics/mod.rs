@@ -1,6 +1,14 @@
 //! Evaluation metrics (§8.1): E2E time, speedup, token throughput, agent
 //! rollout load, and hardware utilization — plus the time series behind
 //! Figs. 1b, 8, 9, 10.
+//!
+//! Recording is allocation-free: counter keys are interned to integer
+//! ids before the event loop starts ([`intern`]) and strings are only
+//! rendered here, at report time.
+
+pub mod intern;
+
+pub use intern::{Counters, MetricId};
 
 use crate::util::json::Json;
 use std::collections::BTreeMap;

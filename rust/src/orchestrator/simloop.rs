@@ -19,7 +19,7 @@
 use crate::cluster::DevicePool;
 use crate::config::ExperimentConfig;
 use crate::memstore::TransferModel;
-use crate::metrics::StepReport;
+use crate::metrics::{Counters, MetricId, StepReport};
 use crate::rollout::{
     plan_migration, CallRef, Dispatch, Mode, RequestId, RolloutManager, TrajectoryScheduler,
 };
@@ -31,7 +31,7 @@ use crate::training::{
 use crate::workload::{scenario, StepWorkload, Trace};
 use std::collections::BTreeMap;
 
-/// Engine knobs not fixed by the paper (documented in DESIGN.md §5).
+/// Engine knobs not fixed by the paper (documented in DESIGN.md §6).
 #[derive(Debug, Clone)]
 pub struct SimOptions {
     /// Initial inference instances per agent (uniform — the static
@@ -259,12 +259,19 @@ struct Engine<'a> {
     /// Per-step busy accounting for per-step utilization.
     busy_per_step: Vec<f64>,
     sample_seq: u64,
-    // metrics
+    // metrics — allocation-free on the event path (DESIGN.md §4):
+    // store table keys are rendered once at construction, scalar
+    // counters are interned ids into `counters`, and per-step series
+    // are step-indexed Vecs.
+    /// Per-agent store table keys, rendered once (never per event).
+    agent_keys: Vec<String>,
+    /// Interned scalar counters; frozen before the event loop starts.
+    counters: Counters,
+    m_scale_ops: MetricId,
+    m_swap_s: MetricId,
     processed_series: BTreeMap<usize, Vec<(f64, usize)>>,
     queued_series: BTreeMap<usize, Vec<(f64, usize)>>,
     busy_series: Vec<(f64, usize)>,
-    scale_ops: usize,
-    swap_s_total: f64,
     switch_s_total: Vec<f64>,
     sim_end: f64,
 }
@@ -380,13 +387,21 @@ impl<'a> Engine<'a> {
             }
         }
 
+        // Intern agent table keys and metric counter keys now: the
+        // event loop records by index/id only (no per-event `format!`
+        // or `to_string` — the debug-asserted freeze in `run` enforces
+        // it for counters).
+        let agent_keys: Vec<String> = (0..n_agents).map(|a| format!("agent{a}")).collect();
         let store = ExperienceStore::new();
-        for a in 0..n_agents {
+        for key in &agent_keys {
             store.create_table(
-                &agent_key(a),
+                key,
                 &[("tokens", ColumnType::Float), ("reward", ColumnType::Float)],
             );
         }
+        let mut counters = Counters::new();
+        let m_scale_ops = counters.register("scale_ops");
+        let m_swap_s = counters.register("swap_s");
 
         Engine {
             cfg,
@@ -406,11 +421,13 @@ impl<'a> Engine<'a> {
             pool_devices,
             busy_per_step: vec![0.0; cfg.steps],
             sample_seq: 0,
+            agent_keys,
+            counters,
+            m_scale_ops,
+            m_swap_s,
             processed_series: opts.track_agents.iter().map(|&a| (a, vec![])).collect(),
             queued_series: opts.track_agents.iter().map(|&a| (a, vec![])).collect(),
             busy_series: Vec::new(),
-            scale_ops: 0,
-            swap_s_total: 0.0,
             switch_s_total: vec![0.0; cfg.steps],
             sim_end: 0.0,
         }
@@ -421,16 +438,22 @@ impl<'a> Engine<'a> {
     }
 
     fn run(mut self) -> SimOutcome {
+        // Recording phase begins: no counter key may be constructed
+        // past this point (debug-asserted by the interner).
+        self.counters.freeze();
         self.q.push_at(0.0, Ev::StartStep(0));
         self.q.push_at(self.opts.scaler_poll_s, Ev::Poll);
         let mut guard = 0u64;
-        let mut histo: BTreeMap<&'static str, u64> = BTreeMap::new();
+        // Event histogram by discriminant index — names are only
+        // attached if the budget panic fires.
+        let mut histo = [0u64; EV_KINDS];
         while let Some((t, ev)) = self.q.pop() {
             guard += 1;
-            *histo.entry(ev_name(&ev)).or_insert(0) += 1;
+            histo[ev_idx(&ev)] += 1;
             if guard >= 1_000_000 {
+                let named: Vec<(&str, u64)> = EV_NAMES.iter().copied().zip(histo).collect();
                 panic!(
-                    "event-budget exceeded (livelock?) at t={t}: {histo:?}, \
+                    "event-budget exceeded (livelock?) at t={t}: {named:?}, \
                      tstate={:?}, steps done={:?}",
                     self.tstate,
                     self.steps
@@ -612,7 +635,7 @@ impl<'a> Engine<'a> {
                     }
                 })
                 .collect();
-            self.store.put_rows(&agent_key(info.agent), rows).unwrap();
+            self.store.put_rows(&self.agent_keys[info.agent], rows).unwrap();
             if self.cfg.framework.async_pipeline {
                 self.maybe_train(t, info.agent);
             }
@@ -688,7 +711,7 @@ impl<'a> Engine<'a> {
                 return;
             }
         }
-        let ready = self.store.count_ready(&agent_key(agent), Some(step as u64));
+        let ready = self.store.count_ready(&self.agent_keys[agent], Some(step as u64));
         let micro = self.cfg.pipeline.micro_batch;
         let all_in = self.steps[step].rollout_done;
         let have_work = ready >= micro || (all_in && ready > 0);
@@ -714,7 +737,7 @@ impl<'a> Engine<'a> {
             match self.alloc.activate(agent) {
                 Some((_p, local)) => {
                     let cost = swap_in_cost(model, &self.cfg.cluster, local);
-                    self.swap_s_total += cost.total();
+                    self.counters.add(self.m_swap_s, cost.total());
                     self.tstate[agent] = AgentTrain::SwappingIn;
                     if need_apply {
                         // Rare: resources were released before apply.
@@ -746,9 +769,7 @@ impl<'a> Engine<'a> {
         let micro = self.cfg.pipeline.micro_batch;
         // Fused dispatch+consume: the micro-batch is gradient-processed
         // unconditionally, so take it in one store-lock acquisition.
-        let fetched = self
-            .store
-            .take_batch(&agent_key(agent), Some(step as u64), micro);
+        let fetched = self.store.take_batch(&self.agent_keys[agent], Some(step as u64), micro);
         if fetched.is_empty() {
             // Nothing to compute: either apply or release.
             let st = &self.steps[step];
@@ -785,7 +806,7 @@ impl<'a> Engine<'a> {
             "agent {agent} over-trained"
         );
         // Continue: more micro batches, apply, or release.
-        let ready = self.store.count_ready(&agent_key(agent), Some(step as u64));
+        let ready = self.store.count_ready(&self.agent_keys[agent], Some(step as u64));
         let st = &self.steps[step];
         let micro = self.cfg.pipeline.micro_batch;
         if ready >= micro || (st.rollout_done && ready > 0) {
@@ -824,7 +845,7 @@ impl<'a> Engine<'a> {
         let model = self.cfg.workload.agents[agent].model;
         if self.alloc.release(agent).is_some() {
             let cost = swap_out_cost(model, &self.cfg.cluster);
-            self.swap_s_total += cost.total();
+            self.counters.add(self.m_swap_s, cost.total());
             self.tstate[agent] = AgentTrain::SwappingOut;
             self.q.push_in(cost.total(), Ev::SwapOutDone { agent });
         } else {
@@ -908,7 +929,7 @@ impl<'a> Engine<'a> {
                 }
                 self.agent_busy_scaling[plan.donor] = true;
                 self.agent_busy_scaling[plan.target] = true;
-                self.scale_ops += 1;
+                self.counters.add(self.m_scale_ops, 1.0);
                 // Weight transfer via Set/Get (contiguous buffer, §9).
                 let model = self.cfg.workload.agents[plan.target].model;
                 let lat = crate::rollout::migration_latency(
@@ -967,6 +988,9 @@ impl<'a> Engine<'a> {
         let n_steps = self.steps.len();
         let total_s = self.sim_end;
         let overlap_share = total_s / n_steps as f64;
+        // Interned counters become strings/figures only here, once.
+        let scale_ops_total = self.counters.get(self.m_scale_ops) as usize;
+        let swap_s_total = self.counters.get(self.m_swap_s);
         let mut reports = Vec::with_capacity(n_steps);
         for (s, st) in self.steps.iter().enumerate() {
             let e2e = if self.cfg.framework.one_step_async_rollout {
@@ -1004,30 +1028,43 @@ impl<'a> Engine<'a> {
                 },
                 busy_series: if s == 0 { self.busy_series.clone() } else { vec![] },
                 trajectory_latencies: latencies,
-                scale_ops: self.scale_ops / n_steps.max(1),
-                swap_s: self.swap_s_total / n_steps as f64,
+                scale_ops: scale_ops_total / n_steps.max(1),
+                swap_s: swap_s_total / n_steps as f64,
             });
         }
         SimOutcome { reports, total_s }
     }
 }
 
-fn agent_key(a: usize) -> String {
-    format!("agent{a}")
-}
+/// Event-kind count and names: the run-loop histogram is a plain
+/// `[u64; EV_KINDS]` indexed by [`ev_idx`] — nothing string-keyed on
+/// the event path; names attach only in the livelock panic message.
+const EV_KINDS: usize = 10;
+const EV_NAMES: [&str; EV_KINDS] = [
+    "StartStep",
+    "CallDone",
+    "Poll",
+    "MigrationArrive",
+    "SwitchToTrain",
+    "SwitchToRollout",
+    "SwapInDone",
+    "GradDone",
+    "ApplyDone",
+    "SwapOutDone",
+];
 
-fn ev_name(ev: &Ev) -> &'static str {
+fn ev_idx(ev: &Ev) -> usize {
     match ev {
-        Ev::StartStep(_) => "StartStep",
-        Ev::CallDone(_) => "CallDone",
-        Ev::Poll => "Poll",
-        Ev::MigrationArrive { .. } => "MigrationArrive",
-        Ev::SwitchToTrainDone(_) => "SwitchToTrain",
-        Ev::SwitchToRolloutDone(_) => "SwitchToRollout",
-        Ev::SwapInDone { .. } => "SwapInDone",
-        Ev::GradDone { .. } => "GradDone",
-        Ev::ApplyDone { .. } => "ApplyDone",
-        Ev::SwapOutDone { .. } => "SwapOutDone",
+        Ev::StartStep(_) => 0,
+        Ev::CallDone(_) => 1,
+        Ev::Poll => 2,
+        Ev::MigrationArrive { .. } => 3,
+        Ev::SwitchToTrainDone(_) => 4,
+        Ev::SwitchToRolloutDone(_) => 5,
+        Ev::SwapInDone { .. } => 6,
+        Ev::GradDone { .. } => 7,
+        Ev::ApplyDone { .. } => 8,
+        Ev::SwapOutDone { .. } => 9,
     }
 }
 

@@ -5,7 +5,7 @@
 //!
 //! The manager is pure scheduling state — no clocks, no I/O — so the
 //! discrete-event simulator and the real PJRT mini-cluster drive the
-//! same code (DESIGN.md §4).
+//! same code (DESIGN.md §5).
 
 use super::heap::IndexedMinHeap;
 use crate::util::hash::FastMap;

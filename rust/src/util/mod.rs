@@ -1,11 +1,12 @@
 //! Substrate utilities built from scratch for the offline image:
 //! PRNG + distributions, JSON, CLI parsing, statistics, bench harness,
-//! and a tiny property-testing helper.
+//! a scoped worker pool, and a tiny property-testing helper.
 
 pub mod bench;
 pub mod cli;
 pub mod hash;
 pub mod json;
+pub mod pool;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

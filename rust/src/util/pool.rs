@@ -1,0 +1,163 @@
+//! Hand-rolled scoped worker pool (substrate; `rayon` is not vendored).
+//!
+//! [`run_ordered`] fans a work list out over up to `jobs` OS threads and
+//! collects results **in input order**, whatever order workers finish
+//! in: worker `k` atomically claims the next unclaimed index and writes
+//! its result into that index's dedicated slot, so the output vector is
+//! a pure function of the input list — never of thread scheduling. This
+//! is the determinism substrate under [`crate::exec`] (DESIGN.md §4).
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Worker count when the caller does not pin one: `PALLAS_JOBS` (if set
+/// to a positive integer), else the machine's available parallelism.
+pub fn default_jobs() -> usize {
+    match std::env::var("PALLAS_JOBS").ok().and_then(|v| v.parse::<usize>().ok()) {
+        Some(n) if n > 0 => n,
+        _ => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    }
+}
+
+/// Run `f(index, &item)` for every item on up to `jobs` scoped worker
+/// threads; return the results in input order.
+///
+/// Workers pull indices from a shared atomic counter (dynamic
+/// load balancing — a slow item never strands the queue behind it) and
+/// write each result into its input slot, so:
+///
+/// * output\[i\] is always f(i, &items\[i\]) — input order, regardless
+///   of completion order or `jobs`;
+/// * `jobs == 1` degenerates to a plain in-order sequential loop;
+/// * `f` must be a pure function of its arguments for the *values* to
+///   be thread-count-independent — the pool guarantees only position.
+///
+/// A panicking `f` aborts the run: a stop flag halts further claims
+/// (cells already in flight finish), the worker re-raises its payload,
+/// and the scope then panics in the caller — a long sweep does not
+/// burn wall time after one cell dies.
+pub fn run_ordered<I, T, F>(items: &[I], jobs: usize, f: F) -> Vec<T>
+where
+    I: Sync,
+    T: Send,
+    F: Fn(usize, &I) -> T + Sync,
+{
+    if items.is_empty() {
+        return Vec::new();
+    }
+    let jobs = jobs.clamp(1, items.len());
+    if jobs == 1 {
+        return items.iter().enumerate().map(|(i, x)| f(i, x)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let stop = AtomicBool::new(false);
+    let slots: Vec<Mutex<Option<T>>> = items.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..jobs {
+            s.spawn(|| loop {
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                // AssertUnwindSafe: on Err the payload is re-raised
+                // immediately and the whole scope panics, so no one
+                // ever observes state the unwind may have torn.
+                let out =
+                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i, &items[i])));
+                match out {
+                    Ok(v) => *slots[i].lock().unwrap() = Some(v),
+                    Err(payload) => {
+                        stop.store(true, Ordering::Relaxed);
+                        std::panic::resume_unwind(payload);
+                    }
+                }
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("pool: worker skipped a slot"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_and_parallel_agree() {
+        let items: Vec<u64> = (0..97).collect();
+        let f = |i: usize, x: &u64| x * 3 + i as u64;
+        let seq = run_ordered(&items, 1, f);
+        for jobs in [2, 3, 8, 64, 1000] {
+            assert_eq!(run_ordered(&items, jobs, f), seq, "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn empty_input_is_fine() {
+        let out: Vec<u32> = run_ordered(&[] as &[u8], 8, |_, _| 1);
+        assert!(out.is_empty());
+    }
+
+    /// Satellite: adversarial stub runner in which completion order is
+    /// the exact *reverse* of input order (item i blocks until item
+    /// i+1 finished) — collection must still be input order.
+    #[test]
+    fn order_matches_input_under_reversed_completion() {
+        let n = 8usize;
+        let items: Vec<usize> = (0..n).collect();
+        let done: Vec<AtomicBool> = (0..n).map(|_| AtomicBool::new(false)).collect();
+        let finish_seq = AtomicUsize::new(0);
+        // jobs == n: every item gets its own worker (the shared counter
+        // hands indices out 0..n in claim order), so the reverse chain
+        // cannot deadlock.
+        let out = run_ordered(&items, n, |i, &x| {
+            if i + 1 < n {
+                while !done[i + 1].load(Ordering::Acquire) {
+                    std::thread::yield_now();
+                }
+            }
+            let rank = finish_seq.fetch_add(1, Ordering::SeqCst);
+            done[i].store(true, Ordering::Release);
+            (x * 10, rank)
+        });
+        // Values land in input order...
+        let vals: Vec<usize> = out.iter().map(|&(v, _)| v).collect();
+        assert_eq!(vals, (0..n).map(|x| x * 10).collect::<Vec<_>>());
+        // ...even though completion genuinely happened in reverse.
+        let ranks: Vec<usize> = out.iter().map(|&(_, r)| r).collect();
+        assert_eq!(ranks, (0..n).rev().collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn jobs_zero_and_oversubscription_clamp() {
+        let items = [1u8, 2, 3];
+        assert_eq!(run_ordered(&items, 0, |_, &x| x), vec![1, 2, 3]);
+        assert_eq!(run_ordered(&items, 999, |_, &x| x), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn panicking_item_propagates_and_stops_claims() {
+        let claimed = AtomicUsize::new(0);
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let items: Vec<u64> = (0..64).collect();
+            run_ordered(&items, 2, |i, &x| {
+                claimed.fetch_add(1, Ordering::SeqCst);
+                if i == 0 {
+                    panic!("cell died");
+                }
+                // Give the panicking worker time to raise the stop
+                // flag so the tail of the queue goes unclaimed.
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                x
+            })
+        }));
+        assert!(res.is_err(), "panic must propagate out of the pool");
+        let n = claimed.load(Ordering::SeqCst);
+        assert!(n < 64, "stop flag did not halt claims ({n}/64 ran)");
+    }
+}

@@ -241,6 +241,11 @@ pub fn names() -> Vec<&'static str> {
     all().iter().map(|s| s.name()).collect()
 }
 
+/// Registry keys as owned strings (grid axes, config plumbing).
+pub fn owned_names() -> Vec<String> {
+    names().iter().map(|s| s.to_string()).collect()
+}
+
 /// Lookup, tolerant of `-`/space separators and case.
 pub fn by_name(name: &str) -> Option<Box<dyn Scenario>> {
     let n = name.to_ascii_lowercase().replace(['-', ' '], "_");

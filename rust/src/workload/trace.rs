@@ -124,6 +124,12 @@ impl Trace {
                 .ok_or_else(|| format!("trace line {}: missing 'kind'", lineno + 1))?;
             match kind {
                 "header" => {
+                    // A second header would silently replace the
+                    // provenance (n_agents/seed/scenario) that earlier
+                    // step lines were already validated against.
+                    if header.is_some() {
+                        return Err(format!("trace line {}: duplicate header", lineno + 1));
+                    }
                     let version = j.at(&["version"]).and_then(Json::as_u64).unwrap_or(0);
                     if version != TRACE_VERSION {
                         return Err(format!(
@@ -149,7 +155,19 @@ impl Trace {
                     let Some((_, _, _, n_agents, _)) = &header else {
                         return Err("trace: step line before header".into());
                     };
-                    steps.push(parse_step(&j, *n_agents, lineno)?);
+                    let sw = parse_step(&j, *n_agents, lineno)?;
+                    // Step lines must be contiguous and in record
+                    // order: a duplicated/reordered line would replay
+                    // a different sequence than was recorded, silently.
+                    if sw.step != steps.len() {
+                        return Err(format!(
+                            "trace line {}: step {} out of order (expected {})",
+                            lineno + 1,
+                            sw.step,
+                            steps.len()
+                        ));
+                    }
+                    steps.push(sw);
                 }
                 other => return Err(format!("trace line {}: unknown kind '{other}'", lineno + 1)),
             }
@@ -316,6 +334,26 @@ mod tests {
         // Wrong version.
         let wrong = jsonl.replace("\"version\":1", "\"version\":99");
         assert!(Trace::from_jsonl(&wrong).is_err());
+    }
+
+    #[test]
+    fn out_of_order_step_lines_rejected() {
+        // A duplicated step line keeps the header count right but
+        // replays a different sequence than recorded — must be a
+        // parse error, not a silent divergence.
+        let tr = Trace::record(&small("baseline"), 1, 2).unwrap();
+        let jsonl = tr.to_jsonl();
+        let lines: Vec<&str> = jsonl.lines().collect();
+        assert_eq!(lines.len(), 3, "header + 2 steps");
+        let dup = format!("{}\n{}\n{}\n", lines[0], lines[1], lines[1]);
+        let err = Trace::from_jsonl(&dup).unwrap_err();
+        assert!(err.contains("out of order"), "{err}");
+        let swapped = format!("{}\n{}\n{}\n", lines[0], lines[2], lines[1]);
+        assert!(Trace::from_jsonl(&swapped).is_err());
+        // A second header mid-file must not rebind provenance.
+        let reheader = format!("{}\n{}\n{}\n{}\n", lines[0], lines[1], lines[0], lines[2]);
+        let err = Trace::from_jsonl(&reheader).unwrap_err();
+        assert!(err.contains("duplicate header"), "{err}");
     }
 
     #[test]

@@ -321,6 +321,101 @@ fn scenario_presets_change_system_behaviour() {
     assert!(calls(&tool) > calls(&base), "{} vs {}", calls(&tool), calls(&base));
 }
 
+// ---------------------------------------------------------------------------
+// Deterministic parallel sweep executor (exec + util::pool)
+// ---------------------------------------------------------------------------
+
+/// Satellite: a sweep over all seven scenario presets serializes
+/// bit-identically for jobs ∈ {1, 2, 8} — the executor's whole
+/// contract, asserted as a property over random base seeds and
+/// framework choices.
+#[test]
+fn prop_sweep_serialization_bit_identical_across_job_counts() {
+    use flexmarl::exec::{grid_report, run_specs_or_panic, RunGrid};
+    use flexmarl::util::proptest::forall;
+    use flexmarl::workload::scenario;
+    forall("sweep bit-identical for jobs in {1,2,8}", 3, |rng| {
+        let baselines = Framework::all_baselines();
+        let fw = baselines[rng.below(baselines.len() as u64) as usize];
+        let mut base = ma_cfg(fw, 1);
+        base.workload.queries_per_step = 2;
+        base.workload.group_size = 4;
+        base.seed = rng.below(1u64 << 53);
+        let grid = RunGrid {
+            scenarios: scenario::owned_names(),
+            ..RunGrid::default()
+        };
+        let specs = grid.specs(&base);
+        assert_eq!(specs.len(), 7, "one spec per preset");
+        let opts = SimOptions::default();
+        let render = |jobs: usize| {
+            let reports = run_specs_or_panic(&base, &opts, &specs, jobs);
+            grid_report(&base, &specs, &reports).to_pretty()
+        };
+        let serial = render(1);
+        for jobs in [2, 8] {
+            assert_eq!(serial, render(jobs), "{} jobs={jobs}", fw.name);
+        }
+        // The report covers every preset, in grid order.
+        for name in scenario::names() {
+            assert!(serial.contains(name), "missing preset {name}");
+        }
+    });
+}
+
+#[test]
+fn library_sweeps_match_their_serial_equivalents() {
+    // sweep/scenario_sweep now fan out through the executor; their rows
+    // must equal the old serial evaluate() loops exactly.
+    let mut cfg = ma_cfg(Framework::flexmarl(), 1);
+    cfg.workload.queries_per_step = 2;
+    cfg.workload.group_size = 4;
+    let rows = flexmarl::baselines::sweep_jobs(&cfg, &opts(), 4);
+    for (row, fw) in rows.iter().zip(Framework::all_baselines()) {
+        let mut c = cfg.clone();
+        c.framework = fw;
+        let serial = evaluate(&c, &opts());
+        assert_eq!(row.framework, serial.framework);
+        assert_eq!(row.e2e_s, serial.e2e_s);
+        assert_eq!(row.tokens, serial.tokens);
+        assert_eq!(row.agent_calls, serial.agent_calls);
+        assert_eq!(row.scale_ops, serial.scale_ops);
+    }
+    let scen_rows = flexmarl::baselines::scenario_sweep_jobs(&cfg, &opts(), 4);
+    for (row, name) in scen_rows.iter().zip(flexmarl::workload::scenario::names()) {
+        let mut c = cfg.clone();
+        c.workload.scenario = name.to_string();
+        let serial = evaluate(&c, &opts());
+        assert_eq!(row.scenario, name);
+        assert_eq!(row.e2e_s, serial.e2e_s, "{name}");
+        assert_eq!(row.tokens, serial.tokens, "{name}");
+    }
+}
+
+#[test]
+fn replicate_seeds_are_derived_and_decorrelated() {
+    use flexmarl::exec::{derive_seed, RunGrid};
+    let mut cfg = ma_cfg(Framework::flexmarl(), 1);
+    cfg.workload.queries_per_step = 2;
+    cfg.workload.group_size = 4;
+    let grid = RunGrid {
+        scenarios: vec!["baseline".to_string()],
+        replicates: 3,
+        ..RunGrid::default()
+    };
+    let specs = grid.specs(&cfg);
+    assert_eq!(specs.len(), 3);
+    assert_eq!(specs[0].seed, cfg.seed);
+    assert_eq!(specs[1].seed, derive_seed(cfg.seed, 1));
+    assert_eq!(specs[2].seed, derive_seed(cfg.seed, 2));
+    // Distinct seeds → distinct workloads (replicates genuinely vary).
+    let rows = flexmarl::exec::run_specs_or_panic(&cfg, &opts(), &specs, 2);
+    assert!(
+        rows[0].tokens != rows[1].tokens || rows[1].tokens != rows[2].tokens,
+        "replicates produced identical workloads"
+    );
+}
+
 #[test]
 fn seed_changes_results() {
     let mut cfg = ma_cfg(Framework::flexmarl(), 1);

@@ -15,7 +15,8 @@ use flexmarl::baselines::Framework;
 use flexmarl::config::{ExperimentConfig, WorkloadConfig};
 use flexmarl::exec::{grid_report, run_specs_or_panic, RunGrid};
 use flexmarl::metrics::StepReport;
-use flexmarl::orchestrator::{simulate, SimOptions};
+use flexmarl::orchestrator::{try_simulate, SimOptions};
+use flexmarl::policy::PolicyBundle;
 use flexmarl::rollout::{heap::IndexedMinHeap, RolloutManager};
 use flexmarl::sim::{EventQueue, QueueKind};
 use flexmarl::store::{
@@ -76,6 +77,7 @@ fn main() {
     bench_manager(&mut rec, t);
     bench_store(&mut rec, t);
     bench_json(&mut rec, t);
+    bench_policy_dispatch(&mut rec, t);
     bench_sim_engine(&mut rec, t);
     bench_sweep(smoke);
     if !smoke {
@@ -290,6 +292,50 @@ fn bench_json(rec: &mut Recorder, t: Duration) {
     }
 }
 
+/// The `hotpath` policy group (ISSUE 4 satellite): the simloop's
+/// per-event decision points through the dyn-dispatched
+/// [`PolicyBundle`] vs the same decisions as inlined capability-flag
+/// reads (the retired pre-refactor path, reproduced here as the
+/// reference baseline). Any dispatch overhead lands in
+/// `BENCH_hotpath.json` as the delta between the two entries.
+fn bench_policy_dispatch(rec: &mut Recorder, t: Duration) {
+    let frameworks = Framework::all_baselines();
+    let bundles: Vec<PolicyBundle> = frameworks.iter().map(|f| f.policies()).collect();
+
+    rec.add(bench("policy::inner-step decisions, dyn bundle (4 fw × 10k)", t, || {
+        let mut acc = 0u64;
+        for b in &bundles {
+            for _ in 0..10_000 {
+                // One simulated inner step consults exactly these:
+                // admission (call_done), alternation gate (maybe_train),
+                // pool/contention (submit_call), balancer gate (poll).
+                acc += u64::from(black_box(b.pipeline.admits_during_rollout()));
+                acc += u64::from(black_box(b.pipeline.overlaps_steps()));
+                acc += u64::from(black_box(b.alloc.dedicated_pools()));
+                acc += u64::from(black_box(b.alloc.decode_contention_mult() != 1.0));
+                acc += u64::from(black_box(b.balance.enabled()));
+            }
+        }
+        black_box(acc);
+    }));
+
+    rec.add(bench("policy::inner-step decisions, inlined flags (4 fw × 10k)", t, || {
+        let mut acc = 0u64;
+        for fw in &frameworks {
+            for _ in 0..10_000 {
+                // The retired flag-branch equivalents, kept as the
+                // dispatch-overhead reference.
+                acc += u64::from(black_box(fw.async_pipeline));
+                acc += u64::from(black_box(fw.one_step_async_rollout));
+                acc += u64::from(black_box(fw.disaggregated));
+                acc += u64::from(black_box(!fw.disaggregated));
+                acc += u64::from(black_box(fw.load_balancing));
+            }
+        }
+        black_box(acc);
+    }));
+}
+
 fn bench_sim_engine(rec: &mut Recorder, t: Duration) {
     let cfg = {
         let mut c = ExperimentConfig::new(WorkloadConfig::ma(), Framework::flexmarl());
@@ -306,7 +352,7 @@ fn bench_sim_engine(rec: &mut Recorder, t: Duration) {
             QueueKind::BinaryHeap => "orchestrator::simulate 1 MA step (heap)",
         };
         rec.add(bench(name, t, || {
-            black_box(simulate(&cfg, &opts).total_s);
+            black_box(try_simulate(&cfg, &opts).unwrap().total_s);
         }));
     }
 }

@@ -10,13 +10,24 @@
 //! deterministic parallel executor ([`flexmarl::exec`], DESIGN.md §4) —
 //! rows are bit-identical to a serial run, just faster to regenerate.
 
-use flexmarl::baselines::{evaluate, scenario_sweep, sweep, Framework};
+use flexmarl::baselines::{scenario_sweep, sweep, try_evaluate, Framework};
 use flexmarl::cluster::{DevicePool, PlacementStrategy};
 use flexmarl::config::{ClusterConfig, ExperimentConfig, ModelScale, WorkloadConfig};
 use flexmarl::memstore::{Location, TransferModel};
-use flexmarl::orchestrator::{simulate, SimOptions};
+use flexmarl::metrics::StepReport;
+use flexmarl::orchestrator::{try_simulate, SimOptions, SimOutcome};
 use flexmarl::training::{swap_in_cost, swap_out_cost};
 use flexmarl::util::bench::time_once;
+
+/// The non-panicking entry points, unwrapped (`simulate`/`evaluate`
+/// are deprecated; bench configs are all statically valid).
+fn simulate(cfg: &ExperimentConfig, opts: &SimOptions) -> SimOutcome {
+    try_simulate(cfg, opts).unwrap()
+}
+
+fn evaluate(cfg: &ExperimentConfig, opts: &SimOptions) -> StepReport {
+    try_evaluate(cfg, opts).unwrap()
+}
 
 fn opts() -> SimOptions {
     SimOptions {

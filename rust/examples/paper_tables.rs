@@ -5,10 +5,11 @@
 //!
 //! Run: `cargo run --release --example paper_tables`
 
-use flexmarl::baselines::{evaluate, sweep, Framework};
+use flexmarl::baselines::{sweep, Framework};
 use flexmarl::config::{ClusterConfig, ExperimentConfig, ModelScale, WorkloadConfig};
-use flexmarl::metrics::table_rows;
-use flexmarl::orchestrator::{simulate, SimOptions};
+use flexmarl::experiment::Experiment;
+use flexmarl::metrics::{table_rows, StepReport};
+use flexmarl::orchestrator::{SimOptions, SimOutcome};
 use flexmarl::training::{swap_in_cost, swap_out_cost};
 
 const STEPS: usize = 3;
@@ -24,6 +25,24 @@ fn cfg(wl: WorkloadConfig, fw: Framework) -> ExperimentConfig {
     let mut c = ExperimentConfig::new(wl, fw);
     c.steps = STEPS;
     c
+}
+
+/// All regeneration goes through the typed Experiment builder — the
+/// same single entry point the CLI and sweeps use.
+fn evaluate(cfg: &ExperimentConfig, opts: &SimOptions) -> StepReport {
+    Experiment::new(cfg.clone())
+        .options(opts.clone())
+        .build()
+        .expect("preset configs resolve")
+        .evaluate()
+}
+
+fn simulate(cfg: &ExperimentConfig, opts: &SimOptions) -> SimOutcome {
+    Experiment::new(cfg.clone())
+        .options(opts.clone())
+        .build()
+        .expect("preset configs resolve")
+        .run()
 }
 
 fn main() {

@@ -14,8 +14,8 @@
 //! `--trace <path>` replays a recorded JSONL trace instead.
 
 use flexmarl::config::{ExperimentConfig, Framework, WorkloadConfig};
+use flexmarl::experiment::Experiment;
 use flexmarl::memstore::{Location, MemStore, TransferModel};
-use flexmarl::orchestrator::resolve_workload;
 use flexmarl::rollout::{plan_migration, Dispatch, RolloutManager};
 use flexmarl::util::cli::Args;
 use std::collections::BTreeMap;
@@ -33,18 +33,20 @@ fn main() {
     wl.scenario = args.get_or("scenario", "baseline");
     let delta = args.get_usize("delta", 5);
 
-    // Exactly the simulator's source-selection path: scenario-shaped
-    // generation, or bit-identical replay of a recorded trace (header
-    // authoritative, n_agents validated) — no parallel logic to drift.
+    // Exactly the simulator's source-selection path, through the typed
+    // Experiment builder: scenario-shaped generation, or bit-identical
+    // replay of a recorded trace (header authoritative, n_agents
+    // validated) — no parallel logic to drift.
     if let Some(path) = args.get("trace") {
         wl.trace = Some(path.to_string());
     }
     let mut cfg = ExperimentConfig::new(wl, Framework::flexmarl());
     cfg.seed = args.get_u64("seed", 2048); // steps stays 1: serve step 0
-    let (resolved, mut step_wls) = resolve_workload(&cfg).unwrap_or_else(|e| {
+    let exp = Experiment::new(cfg).build().unwrap_or_else(|e| {
         eprintln!("workload resolution failed: {e}");
         std::process::exit(1)
     });
+    let (resolved, mut step_wls) = exp.into_workloads();
     if step_wls.is_empty() {
         eprintln!("trace has no steps");
         std::process::exit(1)

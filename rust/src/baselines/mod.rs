@@ -18,28 +18,33 @@
 pub use crate::config::{framework_by_name, Framework};
 
 use crate::config::ExperimentConfig;
-use crate::metrics::{aggregate, StepReport};
-use crate::orchestrator::{try_simulate, SimOptions};
+use crate::error::PallasError;
+use crate::experiment::Experiment;
+use crate::metrics::StepReport;
+use crate::orchestrator::SimOptions;
 
 /// Run one framework on a config and aggregate its per-step reports
 /// (the per-sample averages the paper tables quote). Panics on
 /// workload-resolution failure (see [`try_evaluate`]).
+#[deprecated(
+    since = "0.3.0",
+    note = "panics on workload-resolution failure; use `try_evaluate` or \
+            `experiment::Experiment::new(cfg).build()?.evaluate()`"
+)]
 pub fn evaluate(cfg: &ExperimentConfig, opts: &SimOptions) -> StepReport {
     try_evaluate(cfg, opts).unwrap_or_else(|e| panic!("workload resolution failed: {e}"))
 }
 
 /// [`evaluate`] with workload-resolution failures (unknown scenario,
-/// bad trace) surfaced as `Err` — the CLI path, so a bad `--trace`
-/// exits cleanly instead of panicking.
-pub fn try_evaluate(cfg: &ExperimentConfig, opts: &SimOptions) -> Result<StepReport, String> {
-    let out = try_simulate(cfg, opts)?;
-    let mut rep = aggregate(&out.reports);
-    if cfg.framework.one_step_async_rollout {
-        // Overlapped steps: amortized E2E is already per-step. Use the
-        // simulated step count — trace replay can override cfg.steps.
-        rep.e2e_s = out.total_s / out.reports.len().max(1) as f64;
-    }
-    Ok(rep)
+/// bad trace) surfaced as [`PallasError`] — the CLI path, so a bad
+/// `--trace` exits cleanly instead of panicking. Step-overlapping
+/// pipelines (one-step-async) report amortized E2E over the simulated
+/// step count — trace replay can override `cfg.steps`.
+pub fn try_evaluate(cfg: &ExperimentConfig, opts: &SimOptions) -> Result<StepReport, PallasError> {
+    Ok(Experiment::new(cfg.clone())
+        .options(opts.clone())
+        .build()?
+        .evaluate())
 }
 
 /// Table-2 style sweep: all four frameworks on one workload. Runs
@@ -120,6 +125,21 @@ mod tests {
         // The shapes genuinely differ: not all rows can agree on tokens.
         let t0 = rows[0].tokens;
         assert!(rows.iter().any(|r| r.tokens != t0));
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_evaluate_still_matches_try_evaluate() {
+        // Back-compat: the panicking wrapper must keep returning the
+        // exact same report until it is removed.
+        let mut cfg = ExperimentConfig::new(WorkloadConfig::ma(), Framework::marti());
+        cfg.workload.queries_per_step = 2;
+        cfg.workload.group_size = 4;
+        cfg.steps = 2;
+        let opts = SimOptions::default();
+        let a = evaluate(&cfg, &opts);
+        let b = try_evaluate(&cfg, &opts).unwrap();
+        assert_eq!(a.to_json().to_pretty(), b.to_json().to_pretty());
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! lengths, skewed agent invocation), pipeline hyperparameters (batch 64,
 //! micro batch 16, Δ = 5, seed 2048), and framework capability flags.
 
+use crate::error::PallasError;
 use crate::util::json::{parse, Json};
 use std::collections::BTreeMap;
 
@@ -455,22 +456,56 @@ impl ExperimentConfig {
     }
 
     /// Load overrides from a JSON config file onto a preset base.
-    pub fn from_json_file(path: &str) -> Result<Self, String> {
-        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
-        let j = parse(&text).map_err(|e| format!("{path}: {e}"))?;
+    pub fn from_json_file(path: &str) -> Result<Self, PallasError> {
+        let text = std::fs::read_to_string(path).map_err(|e| PallasError::File {
+            path: path.to_string(),
+            error: e.to_string(),
+        })?;
+        let j = parse(&text).map_err(|e| PallasError::File {
+            path: path.to_string(),
+            error: e.to_string(),
+        })?;
         Self::from_json(&j)
     }
 
-    pub fn from_json(j: &Json) -> Result<Self, String> {
+    /// Build a config from a parsed JSON document.
+    ///
+    /// The document's key set is *validated*: a key the parser does not
+    /// read — at the top level or inside the `pipeline` / `cluster` /
+    /// `workload_overrides` sections — is rejected with
+    /// [`PallasError::UnknownKey`] (including a nearest-valid-key
+    /// suggestion), instead of the old behaviour of silently ignoring
+    /// typos like `"scenarrio"`.
+    pub fn from_json(j: &Json) -> Result<Self, PallasError> {
+        let Some(top) = j.as_obj() else {
+            return Err(PallasError::InvalidConfig(
+                "config root must be a JSON object".into(),
+            ));
+        };
+        check_keys(top, TOP_KEYS, "config")?;
+        for (section, valid) in [
+            ("pipeline", PIPELINE_KEYS),
+            ("cluster", CLUSTER_KEYS),
+            ("workload_overrides", OVERRIDE_KEYS),
+        ] {
+            if let Some(sub) = top.get(section) {
+                let Some(obj) = sub.as_obj() else {
+                    return Err(PallasError::InvalidConfig(format!(
+                        "'{section}' must be a JSON object"
+                    )));
+                };
+                check_keys(obj, valid, section)?;
+            }
+        }
         let wl_name = j.at(&["workload"]).and_then(Json::as_str).unwrap_or("MA");
         let workload = match wl_name.to_ascii_uppercase().as_str() {
             "MA" => WorkloadConfig::ma(),
             "CA" => WorkloadConfig::ca(),
-            other => return Err(format!("unknown workload '{other}'")),
+            other => return Err(PallasError::UnknownWorkload(other.to_string())),
         };
         let fw_name = j.at(&["framework"]).and_then(Json::as_str).unwrap_or("FlexMARL");
         let framework = framework_by_name(fw_name)
-            .ok_or_else(|| format!("unknown framework '{fw_name}'"))?;
+            .ok_or_else(|| PallasError::UnknownFramework(fw_name.to_string()))?;
         let mut cfg = ExperimentConfig::new(workload, framework);
         if let Some(v) = j.at(&["seed"]).and_then(Json::as_u64) {
             cfg.seed = v;
@@ -514,22 +549,20 @@ impl ExperimentConfig {
         Ok(cfg)
     }
 
-    pub fn validate(&self) -> Result<(), String> {
+    pub fn validate(&self) -> Result<(), PallasError> {
         if self.workload.agents.is_empty() {
-            return Err("no agents".into());
+            return Err(PallasError::InvalidConfig("no agents".into()));
         }
         if crate::workload::scenario::by_name(&self.workload.scenario).is_none() {
-            return Err(crate::workload::scenario::unknown_error(
-                &self.workload.scenario,
-            ));
+            return Err(PallasError::UnknownScenario(self.workload.scenario.clone()));
         }
         if self.pipeline.micro_batch == 0
             || self.pipeline.global_batch % self.pipeline.micro_batch != 0
         {
-            return Err(format!(
+            return Err(PallasError::InvalidConfig(format!(
                 "global_batch {} must be a positive multiple of micro_batch {}",
                 self.pipeline.global_batch, self.pipeline.micro_batch
-            ));
+            )));
         }
         let need: usize = self
             .workload
@@ -538,14 +571,48 @@ impl ExperimentConfig {
             .map(|a| a.model.instance_devices())
             .sum();
         if need > self.cluster.total_devices() {
-            return Err(format!(
+            return Err(PallasError::InvalidConfig(format!(
                 "cluster too small: {} devices needed for one instance per agent, {} available",
                 need,
                 self.cluster.total_devices()
-            ));
+            )));
         }
         Ok(())
     }
+}
+
+/// Keys [`ExperimentConfig::from_json`] reads at the document root.
+const TOP_KEYS: &[&str] = &[
+    "cluster",
+    "framework",
+    "pipeline",
+    "scenario",
+    "seed",
+    "steps",
+    "trace",
+    "workload",
+    "workload_overrides",
+];
+/// Keys read inside `"pipeline"`.
+const PIPELINE_KEYS: &[&str] = &["delta_threshold", "global_batch", "micro_batch"];
+/// Keys read inside `"cluster"`.
+const CLUSTER_KEYS: &[&str] = &["devices_per_node", "nodes"];
+/// Keys read inside `"workload_overrides"`.
+const OVERRIDE_KEYS: &[&str] = &["group_size", "queries_per_step", "scenario", "trace"];
+
+/// Reject any key of `obj` not in `valid` — typos fail loudly with the
+/// nearest valid key instead of being silently ignored.
+fn check_keys(
+    obj: &BTreeMap<String, Json>,
+    valid: &'static [&'static str],
+    section: &'static str,
+) -> Result<(), PallasError> {
+    for key in obj.keys() {
+        if !valid.contains(&key.as_str()) {
+            return Err(PallasError::unknown_key(key, section, valid));
+        }
+    }
+    Ok(())
 }
 
 pub fn framework_by_name(name: &str) -> Option<Framework> {
@@ -650,7 +717,56 @@ mod tests {
         let mut bad = ExperimentConfig::new(WorkloadConfig::ma(), Framework::flexmarl());
         bad.workload.scenario = "gibberish".into();
         let err = bad.validate().unwrap_err();
-        assert!(err.contains("gibberish"), "{err}");
+        assert_eq!(err, PallasError::UnknownScenario("gibberish".into()));
+        assert!(err.to_string().contains("gibberish"), "{err}");
+    }
+
+    #[test]
+    fn misspelled_key_fails_loudly_with_suggestion() {
+        // Satellite regression: `scenarrio` used to be silently ignored
+        // (the run quietly fell back to "baseline").
+        let j = parse(r#"{"workload": "MA", "scenarrio": "core_skew"}"#).unwrap();
+        let err = ExperimentConfig::from_json(&j).unwrap_err();
+        match &err {
+            PallasError::UnknownKey { key, section, nearest, .. } => {
+                assert_eq!(key, "scenarrio");
+                assert_eq!(*section, "config");
+                assert_eq!(nearest.as_deref(), Some("scenario"));
+            }
+            other => panic!("expected UnknownKey, got {other:?}"),
+        }
+        assert_eq!(
+            err.to_string(),
+            "unknown config key 'scenarrio' (did you mean 'scenario'?)"
+        );
+    }
+
+    #[test]
+    fn unknown_nested_keys_rejected_per_section() {
+        let j = parse(r#"{"pipeline": {"micro_batc": 8}}"#).unwrap();
+        let err = ExperimentConfig::from_json(&j).unwrap_err();
+        assert!(
+            matches!(&err, PallasError::UnknownKey { section: "pipeline", nearest: Some(n), .. }
+                     if n == "micro_batch"),
+            "{err:?}"
+        );
+        let j = parse(r#"{"cluster": {"node": 4}}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+        let j = parse(r#"{"workload_overrides": {"group_sizes": 4}}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
+        // A distant junk key lists the valid set instead of guessing.
+        let j = parse(r#"{"zzz_qqq": 1}"#).unwrap();
+        let msg = ExperimentConfig::from_json(&j).unwrap_err().to_string();
+        assert!(msg.contains("valid:"), "{msg}");
+    }
+
+    #[test]
+    fn non_object_sections_rejected() {
+        let j = parse(r#"{"pipeline": 3}"#).unwrap();
+        let err = ExperimentConfig::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("'pipeline' must be a JSON object"), "{err}");
+        let j = parse("[1,2]").unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
     }
 
     #[test]

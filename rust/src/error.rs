@@ -1,0 +1,232 @@
+//! Structured error type for the engine's public surface.
+//!
+//! Every fallible `pub` function reachable from `lib.rs` returns
+//! [`PallasError`] instead of the bare `Result<_, String>` the crate
+//! grew up with. The enum is `#[non_exhaustive]` so future PRs can add
+//! variants (new policy kinds, new config sections) without a breaking
+//! release, and its `Display` output reproduces the former `String`
+//! messages **byte-for-byte** — the CLI's stderr and the CI byte-diff
+//! jobs observe no change from the typed migration.
+//!
+//! Mapping rules (DESIGN.md §8):
+//!
+//! * a *registry miss* (scenario/framework/workload name nobody knows)
+//!   gets its own variant carrying the offending name;
+//! * a *config-shape* violation is [`PallasError::UnknownKey`] (typos
+//!   rejected with a nearest-valid-key suggestion) or
+//!   [`PallasError::InvalidConfig`] (semantic validation);
+//! * *trace* record/parse violations are [`PallasError::Trace`] with
+//!   the line-tagged message preformatted at the detection site, plus
+//!   the structured [`PallasError::TraceAgentMismatch`] for the one
+//!   replay-compatibility check callers branch on;
+//! * file-system / file-parse failures are [`PallasError::File`],
+//!   rendered `"{path}: {error}"` as before.
+
+use std::fmt;
+
+/// Error type of the engine's public API (config parsing, workload
+/// resolution, trace record/replay, simulation entry points).
+///
+/// `Display` strings are stable: they match the pre-typed `String`
+/// messages exactly, so they are safe to byte-diff in CI.
+#[non_exhaustive]
+#[derive(Debug, Clone, PartialEq)]
+pub enum PallasError {
+    /// A scenario name not present in the preset registry
+    /// ([`crate::workload::scenario`]).
+    UnknownScenario(String),
+    /// A framework name [`crate::config::framework_by_name`] does not
+    /// recognize.
+    UnknownFramework(String),
+    /// A workload preset name other than `MA`/`CA`.
+    UnknownWorkload(String),
+    /// A config JSON key the parser does not understand — rejected
+    /// loudly (with the nearest valid key when one is close) instead
+    /// of the old behaviour of silently ignoring typos.
+    UnknownKey {
+        /// The offending key as written.
+        key: String,
+        /// Which object it appeared in (`"config"`, `"pipeline"`,
+        /// `"cluster"`, `"workload_overrides"`).
+        section: &'static str,
+        /// The keys the section accepts.
+        valid: &'static [&'static str],
+        /// Closest valid key by edit distance, if any is close enough
+        /// to plausibly be a typo.
+        nearest: Option<String>,
+    },
+    /// Trace record/parse violation (zero steps, bad line, version or
+    /// count mismatch, …). The message is preformatted where the
+    /// violation is detected and already carries the line number.
+    Trace(String),
+    /// A trace whose recorded agent count does not match the config it
+    /// is being replayed against.
+    TraceAgentMismatch {
+        /// Path of the trace file.
+        path: String,
+        /// Agent count in the trace header.
+        trace_agents: usize,
+        /// Agent count of the (shaped) config.
+        config_agents: usize,
+    },
+    /// File read/write/parse failure, rendered `"{path}: {error}"`.
+    File {
+        /// The file involved.
+        path: String,
+        /// The underlying error, already rendered.
+        error: String,
+    },
+    /// Semantic config validation failure
+    /// ([`crate::config::ExperimentConfig::validate`]).
+    InvalidConfig(String),
+}
+
+impl fmt::Display for PallasError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PallasError::UnknownScenario(name) => {
+                // Single source of the message: the scenario registry,
+                // so config validation, trace parsing, and resolution
+                // keep reporting it identically.
+                write!(f, "{}", crate::workload::scenario::unknown_error(name))
+            }
+            PallasError::UnknownFramework(name) => write!(f, "unknown framework '{name}'"),
+            PallasError::UnknownWorkload(name) => write!(f, "unknown workload '{name}'"),
+            PallasError::UnknownKey {
+                key,
+                section,
+                valid,
+                nearest,
+            } => match nearest {
+                Some(n) => write!(f, "unknown {section} key '{key}' (did you mean '{n}'?)"),
+                None => write!(f, "unknown {section} key '{key}' (valid: {})", valid.join(", ")),
+            },
+            PallasError::Trace(msg) => write!(f, "{msg}"),
+            PallasError::TraceAgentMismatch {
+                path,
+                trace_agents,
+                config_agents,
+            } => write!(
+                f,
+                "trace {path} has {trace_agents} agents, config has {config_agents}"
+            ),
+            PallasError::File { path, error } => write!(f, "{path}: {error}"),
+            PallasError::InvalidConfig(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for PallasError {}
+
+impl PallasError {
+    /// Build an [`PallasError::UnknownKey`] for `key` in `section`,
+    /// suggesting the nearest valid key when one is within a plausible
+    /// typo distance.
+    pub fn unknown_key(
+        key: &str,
+        section: &'static str,
+        valid: &'static [&'static str],
+    ) -> PallasError {
+        let nearest = valid
+            .iter()
+            .map(|v| (edit_distance(key, v), *v))
+            .min()
+            .filter(|&(d, v)| d <= 2.max(v.len() / 3))
+            .map(|(_, v)| v.to_string());
+        PallasError::UnknownKey {
+            key: key.to_string(),
+            section,
+            valid,
+            nearest,
+        }
+    }
+}
+
+/// Levenshtein edit distance (insert/delete/substitute, unit costs) —
+/// small inputs only (config keys), O(|a|·|b|) with a rolling row.
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_matches_legacy_strings() {
+        // These strings are byte-diffed by CI; they must not drift.
+        assert_eq!(
+            PallasError::UnknownFramework("Zeta".into()).to_string(),
+            "unknown framework 'Zeta'"
+        );
+        assert_eq!(
+            PallasError::UnknownWorkload("MB".into()).to_string(),
+            "unknown workload 'MB'"
+        );
+        assert_eq!(
+            PallasError::File {
+                path: "cfg.json".into(),
+                error: "No such file or directory (os error 2)".into()
+            }
+            .to_string(),
+            "cfg.json: No such file or directory (os error 2)"
+        );
+        assert_eq!(
+            PallasError::TraceAgentMismatch {
+                path: "t.jsonl".into(),
+                trace_agents: 8,
+                config_agents: 6
+            }
+            .to_string(),
+            "trace t.jsonl has 8 agents, config has 6"
+        );
+        assert_eq!(
+            PallasError::Trace("trace: no header line".into()).to_string(),
+            "trace: no header line"
+        );
+        let unk = PallasError::UnknownScenario("gibberish".into()).to_string();
+        assert!(unk.starts_with("unknown scenario 'gibberish'"), "{unk}");
+        assert!(unk.contains("core_skew"), "{unk}");
+    }
+
+    #[test]
+    fn unknown_key_suggests_nearest() {
+        let e = PallasError::unknown_key("scenarrio", "config", &["scenario", "seed", "steps"]);
+        assert_eq!(
+            e.to_string(),
+            "unknown config key 'scenarrio' (did you mean 'scenario'?)"
+        );
+        // Nothing close → list the valid keys instead.
+        let e = PallasError::unknown_key("xyzzy", "pipeline", &["micro_batch", "global_batch"]);
+        let s = e.to_string();
+        assert!(s.contains("valid: micro_batch, global_batch"), "{s}");
+    }
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance("scenario", "scenario"), 0);
+        assert_eq!(edit_distance("scenarrio", "scenario"), 1);
+        assert_eq!(edit_distance("sceanrio", "scenario"), 2);
+        assert_eq!(edit_distance("", "abc"), 3);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
+    }
+
+    #[test]
+    fn error_trait_object() {
+        let e: Box<dyn std::error::Error> =
+            Box::new(PallasError::InvalidConfig("no agents".into()));
+        assert_eq!(e.to_string(), "no agents");
+    }
+}

@@ -20,8 +20,8 @@
 //! `scenario_sweep`, the `sweep` and `scenarios --run` CLI subcommands,
 //! and both bench targets.
 
-use crate::baselines;
 use crate::config::{ExperimentConfig, Framework};
+use crate::error::PallasError;
 use crate::metrics::StepReport;
 use crate::orchestrator::SimOptions;
 use crate::util::json::Json;
@@ -60,28 +60,36 @@ impl Overrides {
 }
 
 /// One cell of a sweep grid: everything needed to derive the cell's
-/// config from a base [`ExperimentConfig`], as a pure value.
-#[derive(Debug, Clone)]
-pub struct RunSpec {
+/// config from a base [`ExperimentConfig`], as a pure `Copy` value.
+///
+/// The scenario label and override block *borrow* from the grid that
+/// expanded the spec (`'g`), so [`RunGrid::specs`] performs no per-spec
+/// allocation — a framework × scenario × replicate expansion is a flat
+/// `Vec` of copies over the grid's own axes, however large the grid.
+#[derive(Debug, Clone, Copy)]
+pub struct RunSpec<'g> {
+    /// Framework of this cell (`Copy` — the flags struct itself).
     pub framework: Framework,
     /// `None` inherits the base config's workload source verbatim
     /// (scenario *and* any trace). `Some(name)` generates fresh under
     /// that preset — a base trace is cleared, because a trace header is
     /// authoritative and would silently override the axis.
-    pub scenario: Option<String>,
+    pub scenario: Option<&'g str>,
+    /// Derived replicate seed ([`derive_seed`]).
     pub seed: u64,
-    pub overrides: Overrides,
+    /// Extra config knobs, shared by every cell of the grid.
+    pub overrides: &'g Overrides,
 }
 
-impl RunSpec {
+impl RunSpec<'_> {
     /// Derive this cell's concrete config. Pure: same `(self, base)`
     /// in, same config out — the executor's determinism rests on it.
     pub fn apply(&self, base: &ExperimentConfig) -> ExperimentConfig {
         let mut cfg = base.clone();
         cfg.framework = self.framework;
         cfg.seed = self.seed;
-        if let Some(s) = &self.scenario {
-            cfg.workload.scenario = s.clone();
+        if let Some(s) = self.scenario {
+            cfg.workload.scenario = s.to_string();
             cfg.workload.trace = None;
         }
         self.overrides.apply(&mut cfg);
@@ -132,27 +140,33 @@ impl RunGrid {
     /// Expand to specs in deterministic row-major order: framework,
     /// then scenario, then replicate. This order *is* the output
     /// order, whatever `jobs` the executor later runs with.
-    pub fn specs(&self, base: &ExperimentConfig) -> Vec<RunSpec> {
-        let fw_axis: Vec<Framework> = if self.frameworks.is_empty() {
-            vec![base.framework]
+    ///
+    /// Specs borrow the grid's axes (scenario strings, the override
+    /// block) rather than cloning them per cell, so expansion is one
+    /// `Vec` allocation plus one tiny axis `Vec` — allocation-free in
+    /// the per-spec loop however many cells the grid has.
+    pub fn specs(&self, base: &ExperimentConfig) -> Vec<RunSpec<'_>> {
+        let base_fw = [base.framework];
+        let fw_axis: &[Framework] = if self.frameworks.is_empty() {
+            &base_fw
         } else {
-            self.frameworks.clone()
+            &self.frameworks
         };
-        let scen_axis: Vec<Option<String>> = if self.scenarios.is_empty() {
+        let scen_axis: Vec<Option<&str>> = if self.scenarios.is_empty() {
             vec![None]
         } else {
-            self.scenarios.iter().map(|s| Some(s.clone())).collect()
+            self.scenarios.iter().map(|s| Some(s.as_str())).collect()
         };
         let reps = self.replicates.max(1);
         let mut out = Vec::with_capacity(fw_axis.len() * scen_axis.len() * reps);
-        for fw in &fw_axis {
-            for scen in &scen_axis {
+        for &fw in fw_axis {
+            for &scen in &scen_axis {
                 for r in 0..reps {
                     out.push(RunSpec {
-                        framework: *fw,
-                        scenario: scen.clone(),
+                        framework: fw,
+                        scenario: scen,
                         seed: derive_seed(base.seed, r as u64),
-                        overrides: self.overrides.clone(),
+                        overrides: &self.overrides,
                     });
                 }
             }
@@ -175,19 +189,28 @@ impl RunGrid {
 pub fn run_specs(
     base: &ExperimentConfig,
     opts: &SimOptions,
-    specs: &[RunSpec],
+    specs: &[RunSpec<'_>],
     jobs: usize,
-) -> Vec<Result<StepReport, String>> {
-    pool::run_ordered(specs, jobs, |_, spec| baselines::try_evaluate(&spec.apply(base), opts))
+) -> Vec<Result<StepReport, PallasError>> {
+    // Feed the owned per-cell config straight into the builder:
+    // `spec.apply` already materializes it, so going through
+    // `try_evaluate` (which clones its borrowed config) would pay a
+    // second full-config copy per cell.
+    pool::run_ordered(specs, jobs, |_, spec| {
+        Ok(crate::experiment::Experiment::new(spec.apply(base))
+            .options(opts.clone())
+            .build()?
+            .evaluate())
+    })
 }
 
 /// [`run_specs`] with errors promoted to panics — the library-internal
-/// sweep paths whose callers already accept `evaluate`'s panic
+/// sweep paths whose callers already accept the panicking `evaluate`
 /// semantics.
 pub fn run_specs_or_panic(
     base: &ExperimentConfig,
     opts: &SimOptions,
-    specs: &[RunSpec],
+    specs: &[RunSpec<'_>],
     jobs: usize,
 ) -> Vec<StepReport> {
     run_specs(base, opts, specs, jobs)
@@ -205,7 +228,11 @@ pub fn run_specs_or_panic(
 /// alias spellings, and authoritative trace headers all label
 /// correctly; `base_steps` is the base config's step count (a spec's
 /// `Overrides.steps` shows up in its own report, not here).
-pub fn grid_report(base: &ExperimentConfig, specs: &[RunSpec], reports: &[StepReport]) -> Json {
+pub fn grid_report(
+    base: &ExperimentConfig,
+    specs: &[RunSpec<'_>],
+    reports: &[StepReport],
+) -> Json {
     assert_eq!(specs.len(), reports.len(), "one report per spec");
     let runs = specs.iter().zip(reports).map(|(s, r)| {
         Json::obj(vec![
@@ -248,11 +275,11 @@ mod tests {
         let specs = grid.specs(&base);
         assert_eq!(specs.len(), 8);
         assert_eq!(specs[0].framework.name, "MAS-RL");
-        assert_eq!(specs[0].scenario.as_deref(), Some("baseline"));
+        assert_eq!(specs[0].scenario, Some("baseline"));
         assert_eq!(specs[0].seed, base.seed);
         assert_eq!(specs[1].seed, derive_seed(base.seed, 1));
         assert_ne!(specs[1].seed, base.seed);
-        assert_eq!(specs[2].scenario.as_deref(), Some("uniform"));
+        assert_eq!(specs[2].scenario, Some("uniform"));
         assert_eq!(specs[4].framework.name, "FlexMARL");
         // Same grid, same base → identical spec list (pure expansion).
         let again = grid.specs(&base);
@@ -268,7 +295,8 @@ mod tests {
         let mut base = small_base();
         base.framework = Framework::marti();
         base.workload.scenario = "core_skew".into();
-        let specs = RunGrid::default().specs(&base);
+        let grid = RunGrid::default();
+        let specs = grid.specs(&base);
         assert_eq!(specs.len(), 1);
         assert_eq!(specs[0].framework.name, "MARTI");
         assert_eq!(specs[0].scenario, None);
@@ -281,11 +309,12 @@ mod tests {
     fn spec_scenario_clears_base_trace() {
         let mut base = small_base();
         base.workload.trace = Some("recorded.jsonl".into());
+        let ov = Overrides::default();
         let spec = RunSpec {
             framework: Framework::flexmarl(),
-            scenario: Some("bursty".into()),
+            scenario: Some("bursty"),
             seed: 7,
-            overrides: Overrides::default(),
+            overrides: &ov,
         };
         let cfg = spec.apply(&base);
         assert_eq!(cfg.workload.scenario, "bursty");
@@ -301,17 +330,18 @@ mod tests {
     #[test]
     fn overrides_apply() {
         let base = small_base();
+        let ov = Overrides {
+            steps: Some(4),
+            micro_batch: Some(8),
+            delta_threshold: Some(9),
+            queries_per_step: Some(3),
+            group_size: Some(8),
+        };
         let spec = RunSpec {
             framework: Framework::dist_rl(),
             scenario: None,
             seed: base.seed,
-            overrides: Overrides {
-                steps: Some(4),
-                micro_batch: Some(8),
-                delta_threshold: Some(9),
-                queries_per_step: Some(3),
-                group_size: Some(8),
-            },
+            overrides: &ov,
         };
         let cfg = spec.apply(&base);
         assert_eq!(cfg.steps, 4);
@@ -354,23 +384,28 @@ mod tests {
     #[test]
     fn bad_scenario_surfaces_as_err_in_its_cell_only() {
         let base = small_base();
+        let ov = Overrides::default();
         let specs = vec![
             RunSpec {
                 framework: Framework::flexmarl(),
-                scenario: Some("baseline".into()),
+                scenario: Some("baseline"),
                 seed: base.seed,
-                overrides: Overrides::default(),
+                overrides: &ov,
             },
             RunSpec {
                 framework: Framework::flexmarl(),
-                scenario: Some("gibberish".into()),
+                scenario: Some("gibberish"),
                 seed: base.seed,
-                overrides: Overrides::default(),
+                overrides: &ov,
             },
         ];
         let out = run_specs(&base, &SimOptions::default(), &specs, 2);
         assert!(out[0].is_ok());
         let err = out[1].as_ref().unwrap_err();
-        assert!(err.contains("gibberish"), "{err}");
+        assert_eq!(
+            *err,
+            crate::error::PallasError::UnknownScenario("gibberish".into())
+        );
+        assert!(err.to_string().contains("gibberish"), "{err}");
     }
 }

@@ -1,0 +1,329 @@
+//! The typed entry point to the engine: an [`Experiment`] builder.
+//!
+//! Replaces the loose `(cfg, opts)` call surface — every driver
+//! (baselines, the sweep executor, the CLI, examples, benches) builds
+//! one of these:
+//!
+//! ```no_run
+//! use flexmarl::config::{ExperimentConfig, Framework, WorkloadConfig};
+//! use flexmarl::experiment::Experiment;
+//!
+//! let cfg = ExperimentConfig::new(WorkloadConfig::ma(), Framework::flexmarl());
+//! let report = Experiment::new(cfg)
+//!     .scenario("core_skew")
+//!     .steps(2)
+//!     .build()?
+//!     .evaluate();
+//! println!("e2e {:.1}s  {:.0} tok/s", report.e2e_s, report.throughput_tps());
+//! # Ok::<(), flexmarl::error::PallasError>(())
+//! ```
+//!
+//! `build()` resolves the workload exactly once (scenario shaping, or
+//! trace replay with the authoritative header — the same
+//! [`crate::orchestrator::resolve_workload`] contract as always) and
+//! derives the framework's [`PolicyBundle`]; failures surface as
+//! [`PallasError`], never a panic. A custom bundle passed via
+//! [`ExperimentBuilder::policies`] registers a framework the capability
+//! flags cannot express — without touching the engine (DESIGN.md §8).
+
+use crate::config::{ExperimentConfig, Framework};
+use crate::error::PallasError;
+use crate::metrics::{aggregate, StepReport};
+use crate::orchestrator::{resolve_workload, SimOptions, SimOutcome};
+use crate::policy::PolicyBundle;
+use crate::workload::StepWorkload;
+
+/// A fully-resolved experiment, ready to run: shaped config, per-step
+/// workloads, engine options, and the policy bundle the engine will
+/// consult. Construct via [`Experiment::new`].
+pub struct Experiment {
+    cfg: ExperimentConfig,
+    opts: SimOptions,
+    policies: PolicyBundle,
+    step_workloads: Vec<StepWorkload>,
+}
+
+/// Builder for [`Experiment`] — see the module docs for the flow.
+pub struct ExperimentBuilder {
+    cfg: ExperimentConfig,
+    opts: SimOptions,
+    policies: Option<PolicyBundle>,
+}
+
+impl Experiment {
+    /// Start building from a base config. The builder's setters refine
+    /// it; [`ExperimentBuilder::build`] resolves it.
+    // `new` is the documented public spelling of the builder entry
+    // (`Experiment::new(cfg).framework(..).build()?`), deliberately not
+    // returning Self.
+    #[allow(clippy::new_ret_no_self)]
+    pub fn new(cfg: ExperimentConfig) -> ExperimentBuilder {
+        ExperimentBuilder {
+            cfg,
+            opts: SimOptions::default(),
+            policies: None,
+        }
+    }
+
+    /// The resolved config: scenario shaped, trace header applied
+    /// (steps/scenario may differ from what was passed in).
+    pub fn config(&self) -> &ExperimentConfig {
+        &self.cfg
+    }
+
+    /// Engine options this experiment will run with.
+    pub fn options(&self) -> &SimOptions {
+        &self.opts
+    }
+
+    /// The policy bundle the engine will consult.
+    pub fn policies(&self) -> &PolicyBundle {
+        &self.policies
+    }
+
+    /// The concrete per-step workloads (generated or replayed); one
+    /// entry per resolved step.
+    pub fn step_workloads(&self) -> &[StepWorkload] {
+        &self.step_workloads
+    }
+
+    /// Consume the experiment into its resolved config and per-step
+    /// workloads — the shape [`resolve_workload`] returns — for callers
+    /// that drive the workloads themselves (e.g. the wall-clock serving
+    /// example) and want ownership without cloning every trajectory.
+    pub fn into_workloads(self) -> (ExperimentConfig, Vec<StepWorkload>) {
+        (self.cfg, self.step_workloads)
+    }
+
+    /// Run the discrete-event simulation, consuming the experiment.
+    pub fn run(self) -> SimOutcome {
+        crate::orchestrator::simloop::run_resolved(
+            &self.cfg,
+            &self.opts,
+            self.step_workloads,
+            &self.policies,
+        )
+    }
+
+    /// Run and aggregate per-step reports into the per-sample averages
+    /// the paper tables quote. For step-overlapping pipelines (MARTI's
+    /// one-step-async) the E2E figure is amortized over the whole run,
+    /// exactly as [`crate::baselines::try_evaluate`] reports it.
+    pub fn evaluate(self) -> StepReport {
+        let overlaps = self.policies.pipeline.overlaps_steps();
+        let out = self.run();
+        let mut rep = aggregate(&out.reports);
+        if overlaps {
+            rep.e2e_s = out.total_s / out.reports.len().max(1) as f64;
+        }
+        rep
+    }
+}
+
+impl ExperimentBuilder {
+    /// Select a named framework: sets the config's framework and (at
+    /// build time) derives its canonical policy bundle. Clears any
+    /// custom bundle set earlier — last selection wins.
+    pub fn framework(mut self, fw: Framework) -> Self {
+        self.cfg.framework = fw;
+        self.policies = None;
+        self
+    }
+
+    /// Run the engine under a custom policy bundle instead of the
+    /// config framework's derived one — this is how a framework that
+    /// does not decompose into [`Framework`]'s capability flags is
+    /// registered. The bundle's name labels the reports.
+    pub fn policies(mut self, bundle: PolicyBundle) -> Self {
+        self.policies = Some(bundle);
+        self
+    }
+
+    /// Select a workload scenario preset ([`crate::workload::scenario`]).
+    pub fn scenario(mut self, name: impl Into<String>) -> Self {
+        self.cfg.workload.scenario = name.into();
+        self
+    }
+
+    /// Replay a recorded JSONL trace instead of generating (the trace
+    /// header is authoritative for scenario and step count).
+    pub fn trace(mut self, path: impl Into<String>) -> Self {
+        self.cfg.workload.trace = Some(path.into());
+        self
+    }
+
+    /// MARL steps to simulate (ignored under a trace, whose header
+    /// wins).
+    pub fn steps(mut self, steps: usize) -> Self {
+        self.cfg.steps = steps;
+        self
+    }
+
+    /// Generator seed.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// Engine knobs (instance counts, poll period, queue backend, …).
+    pub fn options(mut self, opts: SimOptions) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    /// Resolve the workload (scenario shaping or trace replay, exactly
+    /// once) and fix the policy bundle. All resolution failures —
+    /// unknown scenario, unreadable/corrupt/mismatched trace — surface
+    /// here as [`PallasError`].
+    pub fn build(self) -> Result<Experiment, PallasError> {
+        let (cfg, step_workloads) = resolve_workload(&self.cfg)?;
+        let policies = self
+            .policies
+            .unwrap_or_else(|| cfg.framework.policies());
+        Ok(Experiment {
+            cfg,
+            opts: self.opts,
+            policies,
+            step_workloads,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadConfig;
+    use crate::policy::{
+        AgentCentricAlloc, HierarchicalBalance, MicroBatchAsync, ParallelSampling, PolicyBundle,
+    };
+
+    fn small_cfg(fw: Framework) -> ExperimentConfig {
+        let mut wl = WorkloadConfig::ma();
+        wl.queries_per_step = 2;
+        wl.group_size = 4;
+        let mut cfg = ExperimentConfig::new(wl, fw);
+        cfg.steps = 2;
+        cfg
+    }
+
+    #[test]
+    fn builder_matches_direct_try_simulate() {
+        let cfg = small_cfg(Framework::flexmarl());
+        let direct = crate::orchestrator::try_simulate(&cfg, &SimOptions::default()).unwrap();
+        let built = Experiment::new(cfg).build().unwrap().run();
+        assert_eq!(direct.total_s, built.total_s);
+        assert_eq!(direct.reports.len(), built.reports.len());
+        for (a, b) in direct.reports.iter().zip(&built.reports) {
+            assert_eq!(a.to_json().to_pretty(), b.to_json().to_pretty());
+        }
+    }
+
+    #[test]
+    fn builder_setters_shape_the_resolved_config() {
+        let exp = Experiment::new(small_cfg(Framework::mas_rl()))
+            .framework(Framework::dist_rl())
+            .scenario("Core-Skew") // alias spelling canonicalizes
+            .steps(1)
+            .seed(7)
+            .build()
+            .unwrap();
+        assert_eq!(exp.config().framework.name, "DistRL");
+        assert_eq!(exp.config().workload.scenario, "core_skew");
+        assert_eq!(exp.config().steps, 1);
+        assert_eq!(exp.config().seed, 7);
+        assert_eq!(exp.step_workloads().len(), 1);
+        assert_eq!(exp.policies().name, "DistRL");
+        // Ownership hand-off mirrors resolve_workload's return shape.
+        let (resolved, wls) = exp.into_workloads();
+        assert_eq!(resolved.workload.scenario, "core_skew");
+        assert_eq!(wls.len(), 1);
+    }
+
+    #[test]
+    fn build_surfaces_unknown_scenario_as_typed_error() {
+        let err = Experiment::new(small_cfg(Framework::flexmarl()))
+            .scenario("gibberish")
+            .build()
+            .unwrap_err();
+        assert_eq!(err, PallasError::UnknownScenario("gibberish".into()));
+        assert!(err.to_string().contains("gibberish"));
+    }
+
+    #[test]
+    fn evaluate_matches_baselines_try_evaluate() {
+        for fw in [Framework::flexmarl(), Framework::marti()] {
+            let cfg = small_cfg(fw);
+            let opts = SimOptions::default();
+            let via_baselines = crate::baselines::try_evaluate(&cfg, &opts).unwrap();
+            let via_builder = Experiment::new(cfg)
+                .options(opts)
+                .build()
+                .unwrap()
+                .evaluate();
+            assert_eq!(via_baselines.e2e_s, via_builder.e2e_s, "{}", fw.name);
+            assert_eq!(via_baselines.tokens, via_builder.tokens, "{}", fw.name);
+            assert_eq!(
+                via_baselines.to_json().to_pretty(),
+                via_builder.to_json().to_pretty(),
+                "{}",
+                fw.name
+            );
+        }
+    }
+
+    #[test]
+    fn custom_bundle_labels_reports_and_runs() {
+        let bundle = PolicyBundle::new(
+            "CustomRL",
+            Box::new(MicroBatchAsync),
+            Box::new(HierarchicalBalance),
+            Box::new(AgentCentricAlloc),
+            Box::new(ParallelSampling),
+        );
+        let out = Experiment::new(small_cfg(Framework::flexmarl()))
+            .policies(bundle)
+            .build()
+            .unwrap()
+            .run();
+        assert_eq!(out.reports.len(), 2);
+        assert!(out.total_s > 0.0);
+        for r in &out.reports {
+            assert_eq!(r.framework, "CustomRL");
+        }
+    }
+
+    #[test]
+    fn framework_setter_clears_a_custom_bundle() {
+        let bundle = PolicyBundle::new(
+            "CustomRL",
+            Box::new(MicroBatchAsync),
+            Box::new(HierarchicalBalance),
+            Box::new(AgentCentricAlloc),
+            Box::new(ParallelSampling),
+        );
+        let exp = Experiment::new(small_cfg(Framework::flexmarl()))
+            .policies(bundle)
+            .framework(Framework::mas_rl()) // last selection wins
+            .build()
+            .unwrap();
+        assert_eq!(exp.policies().name, "MAS-RL");
+    }
+
+    #[test]
+    fn trace_setter_replays_bit_identically() {
+        let mut cfg = small_cfg(Framework::flexmarl());
+        cfg.workload.scenario = "bursty".into();
+        let generated = Experiment::new(cfg.clone()).build().unwrap().run();
+        let tr = crate::workload::Trace::record(&cfg.workload, cfg.seed, cfg.steps).unwrap();
+        let path = std::env::temp_dir().join("flexmarl_experiment_trace.jsonl");
+        let path = path.to_str().unwrap().to_string();
+        tr.write_file(&path).unwrap();
+        let mut replay_cfg = small_cfg(Framework::flexmarl());
+        replay_cfg.workload.scenario = "baseline".into(); // header wins
+        let exp = Experiment::new(replay_cfg).trace(&path).build().unwrap();
+        assert_eq!(exp.config().workload.scenario, "bursty");
+        let replayed = exp.run();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(generated.total_s, replayed.total_s);
+    }
+}

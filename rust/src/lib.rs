@@ -11,6 +11,10 @@
 //!   heterogeneous object store, baselines, a discrete-event cluster
 //!   simulator for paper-scale experiments, and a PJRT runtime that
 //!   executes the AOT-compiled policy models for the real end-to-end run.
+//!
+//! The engine's public API is the [`experiment::Experiment`] builder
+//! over pluggable framework [`policy`] objects (DESIGN.md §8); every
+//! fallible entry point reports a structured [`error::PallasError`].
 //! * **L2 (python/compile/model.py)** — GRPO policy transformer, lowered
 //!   once to HLO text (`make artifacts`).
 //! * **L1 (python/compile/kernels/)** — Pallas flash-attention and fused
@@ -22,11 +26,14 @@
 pub mod baselines;
 pub mod cluster;
 pub mod config;
+pub mod error;
 pub mod exec;
+pub mod experiment;
 pub mod grpo;
 pub mod memstore;
 pub mod metrics;
 pub mod orchestrator;
+pub mod policy;
 pub mod rollout;
 pub mod runtime;
 pub mod sim;

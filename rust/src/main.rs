@@ -24,8 +24,9 @@
 //! --seed N --micro-batch N --delta N --instances N --json <path>
 //! --scenario <preset> --trace <path> --jobs N (or PALLAS_JOBS)
 
-use flexmarl::baselines::{evaluate, sweep, Framework};
+use flexmarl::baselines::{sweep, Framework};
 use flexmarl::config::{framework_by_name, ExperimentConfig, ModelScale, WorkloadConfig};
+use flexmarl::experiment::Experiment;
 use flexmarl::metrics::{render_table2, table_rows, StepReport};
 use flexmarl::orchestrator::SimOptions;
 use flexmarl::training::{swap_in_cost, swap_out_cost};
@@ -101,22 +102,27 @@ fn build_cfg(args: &Args) -> ExperimentConfig {
     cfg
 }
 
-/// Exit cleanly on workload-resolution failure (bad `--trace`,
-/// unknown trace scenario) instead of panicking, with no redundant
-/// pre-flight parse (`replay` still reads the header separately to
-/// reconstruct the recording config).
+/// Build the [`Experiment`] for a CLI config, exiting cleanly on
+/// workload-resolution failure (bad `--trace`, unknown trace scenario)
+/// instead of panicking, with no redundant pre-flight parse (`replay`
+/// still reads the header separately to reconstruct the recording
+/// config).
+fn build_experiment(cfg: &ExperimentConfig, opts: &SimOptions) -> Experiment {
+    Experiment::new(cfg.clone())
+        .options(opts.clone())
+        .build()
+        .unwrap_or_else(|e| {
+            eprintln!("invalid workload: {e}");
+            std::process::exit(2)
+        })
+}
+
 fn run_eval(cfg: &ExperimentConfig, opts: &SimOptions) -> StepReport {
-    flexmarl::baselines::try_evaluate(cfg, opts).unwrap_or_else(|e| {
-        eprintln!("invalid workload: {e}");
-        std::process::exit(2)
-    })
+    build_experiment(cfg, opts).evaluate()
 }
 
 fn run_sim(cfg: &ExperimentConfig, opts: &SimOptions) -> flexmarl::orchestrator::SimOutcome {
-    flexmarl::orchestrator::try_simulate(cfg, opts).unwrap_or_else(|e| {
-        eprintln!("invalid workload: {e}");
-        std::process::exit(2)
-    })
+    build_experiment(cfg, opts).run()
 }
 
 fn build_opts(args: &Args) -> SimOptions {
@@ -188,7 +194,7 @@ fn cmd_table3(args: &Args) {
         let mas = {
             let mut c = base.clone();
             c.framework = Framework::mas_rl();
-            evaluate(&c, &opts)
+            run_eval(&c, &opts)
         };
         for fw in [
             Framework::flexmarl_no_balancing(),
@@ -197,7 +203,7 @@ fn cmd_table3(args: &Args) {
         ] {
             let mut c = base.clone();
             c.framework = fw;
-            let r = evaluate(&c, &opts);
+            let r = run_eval(&c, &opts);
             println!(
                 "{:<26} E2E {:>7.1}s  speedup {:>4.1}x  throughput {:>7.1}tps",
                 fw.name,
@@ -222,7 +228,7 @@ fn cmd_table4(args: &Args) {
         cfg.steps = args.get_usize("steps", 3);
         cfg.seed = args.get_u64("seed", 2048);
         let opts = build_opts(args);
-        let r = evaluate(&cfg, &opts);
+        let r = run_eval(&cfg, &opts);
         println!(
             "{:<16} rollout {:>7.1}s  training {:>6.1}s  E2E {:>7.1}s  throughput {:>7.1}tps",
             name,

@@ -10,4 +10,6 @@
 
 pub mod simloop;
 
-pub use simloop::{resolve_workload, simulate, try_simulate, SimOptions, SimOutcome};
+#[allow(deprecated)] // re-exported for back-compat until the panicking wrapper is removed
+pub use simloop::simulate;
+pub use simloop::{resolve_workload, try_simulate, SimOptions, SimOutcome};

@@ -4,7 +4,16 @@
 //! the paper's cluster-scale experiments (§8) for every framework
 //! variant of Table 1/§8.1.
 //!
-//! Framework behaviour matrix (all from `config::Framework` flags):
+//! Framework behaviour comes from a [`PolicyBundle`]
+//! ([`crate::policy`], DESIGN.md §8): every decision the engine used to
+//! read off `config::Framework` capability booleans is a call into one
+//! of the four policy objects — [`crate::policy::PipelinePolicy`]
+//! (micro-batch admission, step overlap),
+//! [`crate::policy::BalancePolicy`] (poll-tick migration),
+//! [`crate::policy::AllocPolicy`] (pool layout, binding, colocation
+//! contention), [`crate::policy::SamplePolicy`] (scheduling mode,
+//! instance provisioning). The canonical bundles reproduce the Table 1
+//! baselines:
 //!  * MAS-RL    — colocated pool, serial query processing, full-batch
 //!                sync training, onload/offload phase switches;
 //!  * DistRL    — disaggregated pools, parallel sampling, sync training,
@@ -15,14 +24,17 @@
 //!  * FlexMARL  — disaggregated, parallel sampling, hierarchical load
 //!                balancing, micro-batch async pipeline, agent-centric
 //!                allocation with state swap.
+//!
+//! New frameworks plug in as bundles through
+//! [`crate::experiment::Experiment`] — this file needs no edits.
 
 use crate::cluster::DevicePool;
 use crate::config::ExperimentConfig;
+use crate::error::PallasError;
 use crate::memstore::TransferModel;
 use crate::metrics::{Counters, MetricId, StepReport};
-use crate::rollout::{
-    plan_migration, CallRef, Dispatch, Mode, RequestId, RolloutManager, TrajectoryScheduler,
-};
+use crate::policy::{LoadSnapshot, PolicyBundle};
+use crate::rollout::{CallRef, Dispatch, RequestId, RolloutManager, TrajectoryScheduler};
 use crate::sim::{EventQueue, QueueKind};
 use crate::store::{ColumnType, ExperienceStore, Field, PutRow, SampleId, Value};
 use crate::training::{
@@ -179,16 +191,37 @@ pub struct SimOutcome {
 /// Panics if the config's scenario name is unknown or its trace path
 /// is unreadable/invalid — callers that need a clean error (the CLI
 /// does) use [`try_simulate`], which resolves exactly once.
+#[deprecated(
+    since = "0.3.0",
+    note = "panics on workload-resolution failure; use `try_simulate` or \
+            `experiment::Experiment::new(cfg).build()?.run()`"
+)]
 pub fn simulate(cfg: &ExperimentConfig, opts: &SimOptions) -> SimOutcome {
     try_simulate(cfg, opts).unwrap_or_else(|e| panic!("workload resolution failed: {e}"))
 }
 
 /// [`simulate`], but workload-resolution failures (unknown scenario,
-/// unreadable/corrupt/mismatched trace) surface as `Err` instead of a
-/// panic, and the trace file is read and parsed exactly once.
-pub fn try_simulate(cfg: &ExperimentConfig, opts: &SimOptions) -> Result<SimOutcome, String> {
+/// unreadable/corrupt/mismatched trace) surface as
+/// [`PallasError`] instead of a panic, and the trace file is read and
+/// parsed exactly once.
+pub fn try_simulate(cfg: &ExperimentConfig, opts: &SimOptions) -> Result<SimOutcome, PallasError> {
     let (resolved, step_workloads) = resolve_workload(cfg)?;
-    Ok(Engine::new(&resolved, opts, step_workloads).run())
+    let policies = resolved.framework.policies();
+    Ok(run_resolved(&resolved, opts, step_workloads, &policies))
+}
+
+/// Engine entry over an already-resolved workload and an explicit
+/// policy bundle — the substrate under [`try_simulate`] and
+/// [`crate::experiment::Experiment::run`]. Crate-internal: public
+/// callers go through the `Experiment` builder, which guarantees the
+/// `(config, workloads)` pair came out of [`resolve_workload`].
+pub(crate) fn run_resolved(
+    cfg: &ExperimentConfig,
+    opts: &SimOptions,
+    step_workloads: Vec<crate::workload::StepWorkload>,
+    policies: &PolicyBundle,
+) -> SimOutcome {
+    Engine::new(cfg, opts, step_workloads, policies).run()
 }
 
 /// Resolve the config's scenario/trace into concrete per-step
@@ -206,7 +239,7 @@ pub fn try_simulate(cfg: &ExperimentConfig, opts: &SimOptions) -> Result<SimOutc
 /// metrics bit-for-bit.
 pub fn resolve_workload(
     cfg: &ExperimentConfig,
-) -> Result<(ExperimentConfig, Vec<StepWorkload>), String> {
+) -> Result<(ExperimentConfig, Vec<StepWorkload>), PallasError> {
     let mut base = cfg.workload.clone();
     let trace = match &base.trace {
         Some(path) => Some((path.clone(), Trace::read_file(path)?)),
@@ -220,11 +253,11 @@ pub fn resolve_workload(
     resolved.workload = shaped;
     let step_workloads = if let Some((path, tr)) = trace {
         if tr.n_agents != resolved.workload.agents.len() {
-            return Err(format!(
-                "trace {path} has {} agents, config has {}",
-                tr.n_agents,
-                resolved.workload.agents.len()
-            ));
+            return Err(PallasError::TraceAgentMismatch {
+                path,
+                trace_agents: tr.n_agents,
+                config_agents: resolved.workload.agents.len(),
+            });
         }
         resolved.steps = tr.steps.len();
         tr.steps
@@ -239,6 +272,9 @@ pub fn resolve_workload(
 struct Engine<'a> {
     cfg: &'a ExperimentConfig,
     opts: &'a SimOptions,
+    /// Framework behaviour — every former capability-flag branch is a
+    /// call into one of these four policy objects.
+    policies: &'a PolicyBundle,
     q: EventQueue<Ev>,
     man: RolloutManager,
     store: ExperienceStore,
@@ -281,6 +317,7 @@ impl<'a> Engine<'a> {
         cfg: &'a ExperimentConfig,
         opts: &'a SimOptions,
         step_workloads: Vec<StepWorkload>,
+        policies: &'a PolicyBundle,
     ) -> Self {
         let n_agents = cfg.workload.agents.len();
         assert_eq!(
@@ -288,16 +325,10 @@ impl<'a> Engine<'a> {
             cfg.steps,
             "engine needs one workload per step"
         );
+        let mode = policies.sample.mode(cfg.workload.inter_query);
         let steps: Vec<StepCtl> = step_workloads
             .into_iter()
             .map(|workload| {
-                let mode = if cfg.framework.parallel_sampling {
-                    Mode::Parallel {
-                        inter_query: cfg.workload.inter_query,
-                    }
-                } else {
-                    Mode::SerialQueries
-                };
                 let sched = TrajectoryScheduler::new(&workload, mode);
                 let expected = workload.calls_per_agent(n_agents);
                 let traj_remaining = workload.trajectories.len();
@@ -337,11 +368,9 @@ impl<'a> Engine<'a> {
             .iter()
             .map(|a| a.model.instance_devices())
             .collect();
-        let static_instances = if cfg.framework.parallel_sampling {
-            opts.instances_per_agent
-        } else {
-            1 // MAS-RL: one engine per agent
-        };
+        // MAS-RL's serial policy pins one engine per agent; parallel
+        // policies deploy the uniform static pool the scaler reshapes.
+        let static_instances = policies.sample.instances_per_agent(opts.instances_per_agent);
         let rollout_devices: usize = inst_dev.iter().map(|d| d * static_instances).sum();
         let train_devices: usize = cfg
             .workload
@@ -357,7 +386,7 @@ impl<'a> Engine<'a> {
         // must also hold inference instances and training groups alive
         // simultaneously; only strict alternation (MAS-RL) can truly
         // time-multiplex one pool.
-        let overlap = cfg.framework.disaggregated || cfg.framework.one_step_async_rollout;
+        let overlap = policies.alloc.dedicated_pools() || policies.pipeline.overlaps_steps();
         let pool_devices = if overlap {
             (rollout_nodes + train_nodes) * dpn
         } else {
@@ -406,6 +435,7 @@ impl<'a> Engine<'a> {
         Engine {
             cfg,
             opts,
+            policies,
             q: EventQueue::with_kind(opts.event_queue),
             man,
             store,
@@ -414,7 +444,7 @@ impl<'a> Engine<'a> {
             reqs: ReqSlab::default(),
             tstate: vec![AgentTrain::Idle; n_agents],
             alloc,
-            static_mode: !cfg.framework.agent_centric,
+            static_mode: !policies.alloc.on_demand_binding(),
             agent_busy_scaling: vec![false; n_agents],
             inst_dev,
             inst_agent,
@@ -557,13 +587,14 @@ impl<'a> Engine<'a> {
         // Colocated architectures share HBM/compute between phases: when
         // training overlaps generation on the same pool (MARTI's one-step
         // async), decode pays a memory-contention penalty (§4.1).
-        if !self.cfg.framework.disaggregated
+        let contention = self.policies.alloc.decode_contention_mult();
+        if contention != 1.0
             && self
                 .tstate
                 .iter()
                 .any(|s| matches!(s, AgentTrain::Computing | AgentTrain::Applying))
         {
-            decode_s *= 1.3;
+            decode_s *= contention;
         }
         let rid = self.reqs.alloc(ReqInfo {
             step,
@@ -636,7 +667,7 @@ impl<'a> Engine<'a> {
                 })
                 .collect();
             self.store.put_rows(&self.agent_keys[info.agent], rows).unwrap();
-            if self.cfg.framework.async_pipeline {
+            if self.policies.pipeline.admits_during_rollout() {
                 self.maybe_train(t, info.agent);
             }
         }
@@ -667,8 +698,7 @@ impl<'a> Engine<'a> {
             st.rollout_done = true;
             st.rollout_end_t = t;
         }
-        let fw = self.cfg.framework;
-        if !fw.disaggregated && !fw.one_step_async_rollout {
+        if self.strict_alternation() {
             // MAS-RL: offload inference, onload training states.
             self.q.push_in(self.opts.switch_s, Ev::SwitchToTrainDone(s));
         } else {
@@ -676,14 +706,21 @@ impl<'a> Engine<'a> {
                 self.maybe_train(t, a);
             }
         }
-        if fw.one_step_async_rollout {
+        if let Some(frac) = self.policies.pipeline.next_step_prefetch() {
             // MARTI: next step's rollout starts now with stale params
-            // (a pipelined half-switch to restore instance weights).
+            // (a pipelined partial switch to restore instance weights).
             if s + 1 < self.steps.len() {
-                self.q.push_in(self.opts.switch_s * 0.5, Ev::StartStep(s + 1));
-                self.switch_s_total[s] += self.opts.switch_s * 0.5;
+                self.q.push_in(self.opts.switch_s * frac, Ev::StartStep(s + 1));
+                self.switch_s_total[s] += self.opts.switch_s * frac;
             }
         }
+    }
+
+    /// Strict phase alternation (MAS-RL): one colocated pool whose
+    /// rollout and training phases never coexist — every transition
+    /// pays the onload/offload switch.
+    fn strict_alternation(&self) -> bool {
+        !self.policies.alloc.dedicated_pools() && !self.policies.pipeline.overlaps_steps()
     }
 
     // -----------------------------------------------------------------------
@@ -698,18 +735,15 @@ impl<'a> Engine<'a> {
         let Some(step) = self.train_step_for(agent) else {
             return;
         };
-        let fw = self.cfg.framework;
-        // Sync frameworks only train after the step's rollout concluded
+        // Sync pipelines only train after the step's rollout concluded
         // (and for colocated MAS-RL, after the phase switch — gated by
         // the SwitchToTrainDone event calling back into here).
-        if !fw.async_pipeline && !self.steps[step].rollout_done {
+        if !self.policies.pipeline.admits_during_rollout() && !self.steps[step].rollout_done {
             return;
         }
-        if !fw.disaggregated && !fw.one_step_async_rollout {
+        if self.strict_alternation() && !self.steps[step].rollout_done {
             // MAS-RL: must be past the switch (switch event re-triggers).
-            if !self.steps[step].rollout_done {
-                return;
-            }
+            return;
         }
         let ready = self.store.count_ready(&self.agent_keys[agent], Some(step as u64));
         let micro = self.cfg.pipeline.micro_batch;
@@ -860,13 +894,12 @@ impl<'a> Engine<'a> {
             return;
         }
         self.steps[step].end_t = t;
-        let fw = self.cfg.framework;
-        if fw.one_step_async_rollout {
+        if self.policies.pipeline.overlaps_steps() {
             // Next step already started at rollout boundary.
             return;
         }
         if step + 1 < self.steps.len() {
-            if !fw.disaggregated {
+            if !self.policies.alloc.dedicated_pools() {
                 // MAS-RL: switch back to inference before next rollout.
                 self.q.push_in(self.opts.switch_s, Ev::SwitchToRolloutDone(step));
             } else {
@@ -898,15 +931,15 @@ impl<'a> Engine<'a> {
             + self.alloc.active_devices();
         self.busy_series.push((t, busy_now));
 
-        if self.cfg.framework.load_balancing {
+        if self.policies.balance.enabled() {
             let queue_lens = self.man.queue_lens();
             let counts = self.man.instance_counts();
-            if let Some(plan) = plan_migration(
-                &queue_lens,
-                &counts,
-                self.cfg.pipeline.delta_threshold,
-                &self.agent_busy_scaling,
-            ) {
+            if let Some(plan) = self.policies.balance.plan(&LoadSnapshot {
+                queue_lens: &queue_lens,
+                instance_counts: &counts,
+                delta_threshold: self.cfg.pipeline.delta_threshold,
+                busy_scaling: &self.agent_busy_scaling,
+            }) {
                 // Drain the donor's *idlest* instances (least stranded
                 // work); displaced requests re-queue on its survivors.
                 let donor_insts: Vec<usize> = self
@@ -993,7 +1026,7 @@ impl<'a> Engine<'a> {
         let swap_s_total = self.counters.get(self.m_swap_s);
         let mut reports = Vec::with_capacity(n_steps);
         for (s, st) in self.steps.iter().enumerate() {
-            let e2e = if self.cfg.framework.one_step_async_rollout {
+            let e2e = if self.policies.pipeline.overlaps_steps() {
                 // Overlapped steps: amortized per-step time.
                 overlap_share
             } else {
@@ -1005,7 +1038,7 @@ impl<'a> Engine<'a> {
                 .map(|i| (st.traj_end[i] - st.traj_start[i]).max(0.0))
                 .collect();
             reports.push(StepReport {
-                framework: self.cfg.framework.name.to_string(),
+                framework: self.policies.name.clone(),
                 workload: self.cfg.workload.name.clone(),
                 scenario: self.cfg.workload.scenario.clone(),
                 e2e_s: e2e,
@@ -1082,8 +1115,14 @@ mod tests {
         cfg
     }
 
+    /// `try_simulate` unwrapped — the non-panicking entry all tests
+    /// drive (the deprecated `simulate` keeps one dedicated test).
+    fn sim(cfg: &ExperimentConfig, opts: &SimOptions) -> SimOutcome {
+        try_simulate(cfg, opts).unwrap()
+    }
+
     fn run(fw: Framework) -> SimOutcome {
-        simulate(&small_cfg(fw), &SimOptions::default())
+        sim(&small_cfg(fw), &SimOptions::default())
     }
 
     #[test]
@@ -1126,7 +1165,7 @@ mod tests {
         let t = |fw: Framework| {
             let mut c = cfg.clone();
             c.framework = fw;
-            simulate(&c, &opts).total_s
+            sim(&c, &opts).total_s
         };
         let mas = t(Framework::mas_rl());
         let dist = t(Framework::dist_rl());
@@ -1168,7 +1207,7 @@ mod tests {
             instances_per_agent: 2,
             ..SimOptions::default()
         };
-        let out = simulate(&cfg, &opts);
+        let out = sim(&cfg, &opts);
         assert!(out.reports[0].scale_ops > 0, "no scaling on skewed load");
     }
 
@@ -1184,8 +1223,8 @@ mod tests {
             instances_per_agent: 2,
             ..SimOptions::default()
         };
-        let t_lb = simulate(&base, &opts).total_s;
-        let t_nolb = simulate(&nolb, &opts).total_s;
+        let t_lb = sim(&base, &opts).total_s;
+        let t_nolb = sim(&nolb, &opts).total_s;
         assert!(t_lb < t_nolb, "LB {t_lb} ≥ no-LB {t_nolb}");
     }
 
@@ -1194,7 +1233,7 @@ mod tests {
         for name in crate::workload::scenario::names() {
             let mut cfg = small_cfg(Framework::flexmarl());
             cfg.workload.scenario = name.to_string();
-            let out = simulate(&cfg, &SimOptions::default());
+            let out = sim(&cfg, &SimOptions::default());
             assert_eq!(out.reports.len(), 2, "{name}");
             assert!(out.total_s > 0.0, "{name}");
             assert_eq!(out.reports[0].scenario, name);
@@ -1206,7 +1245,7 @@ mod tests {
     fn trace_replay_reproduces_generated_run() {
         let mut cfg = small_cfg(Framework::flexmarl());
         cfg.workload.scenario = "core_skew".to_string();
-        let generated = simulate(&cfg, &SimOptions::default());
+        let generated = sim(&cfg, &SimOptions::default());
 
         let tr = crate::workload::Trace::record(&cfg.workload, cfg.seed, cfg.steps).unwrap();
         let path = std::env::temp_dir().join("flexmarl_simloop_replay.jsonl");
@@ -1214,7 +1253,7 @@ mod tests {
         tr.write_file(&path).unwrap();
         let mut replay_cfg = cfg.clone();
         replay_cfg.workload.trace = Some(path.clone());
-        let replayed = simulate(&replay_cfg, &SimOptions::default());
+        let replayed = sim(&replay_cfg, &SimOptions::default());
         let _ = std::fs::remove_file(&path);
 
         assert_eq!(generated.total_s, replayed.total_s);
@@ -1235,7 +1274,7 @@ mod tests {
         // trace header wins, and metrics match the recording run.
         let mut cfg = small_cfg(Framework::flexmarl());
         cfg.workload.scenario = "hetero_scale".to_string();
-        let generated = simulate(&cfg, &SimOptions::default());
+        let generated = sim(&cfg, &SimOptions::default());
         let tr = crate::workload::Trace::record(&cfg.workload, cfg.seed, cfg.steps).unwrap();
         let path = std::env::temp_dir().join("flexmarl_simloop_authoritative.jsonl");
         let path = path.to_str().unwrap().to_string();
@@ -1244,7 +1283,7 @@ mod tests {
         let mut replay_cfg = small_cfg(Framework::flexmarl()); // scenario: baseline
         replay_cfg.workload.trace = Some(path.clone());
         let (resolved, _) = resolve_workload(&replay_cfg).unwrap();
-        let replayed = simulate(&replay_cfg, &SimOptions::default());
+        let replayed = sim(&replay_cfg, &SimOptions::default());
         let _ = std::fs::remove_file(&path);
 
         assert_eq!(resolved.workload.scenario, "hetero_scale");
@@ -1269,7 +1308,32 @@ mod tests {
         cfg.workload.trace = Some(path.clone());
         let err = resolve_workload(&cfg).unwrap_err();
         let _ = std::fs::remove_file(&path);
-        assert!(err.contains("agents"), "{err}");
+        assert!(
+            matches!(
+                err,
+                PallasError::TraceAgentMismatch {
+                    trace_agents: 8,
+                    config_agents: 6,
+                    ..
+                }
+            ),
+            "{err:?}"
+        );
+        assert!(err.to_string().contains("agents"), "{err}");
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_simulate_still_matches_try_simulate() {
+        // Back-compat: the panicking wrapper must keep returning the
+        // exact same simulation until it is removed.
+        let cfg = small_cfg(Framework::flexmarl());
+        let a = simulate(&cfg, &SimOptions::default());
+        let b = sim(&cfg, &SimOptions::default());
+        assert_eq!(a.total_s, b.total_s);
+        for (x, y) in a.reports.iter().zip(&b.reports) {
+            assert_eq!(x.to_json().to_pretty(), y.to_json().to_pretty());
+        }
     }
 
     #[test]

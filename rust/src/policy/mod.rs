@@ -1,0 +1,614 @@
+//! Framework policy objects: the engine's pluggable decision points.
+//!
+//! The simloop used to interpret [`Framework`]'s capability booleans
+//! inline — every flag combination was an `if`-branch woven through the
+//! event handlers, and a framework that did not decompose into those
+//! five booleans (LlamaRL's fully-async distributed pipeline, RollArt's
+//! disaggregated multi-task scheduling — see PAPERS.md) had nowhere to
+//! plug in. This module extracts each branch family into a trait, one
+//! per paper mechanism:
+//!
+//! | trait | paper mechanism | decides |
+//! |---|---|---|
+//! | [`PipelinePolicy`] | §4.3 micro-batch async pipeline | when training may consume samples; whether steps overlap |
+//! | [`BalancePolicy`]  | §5.2 hierarchical load balancing | whether a poll tick migrates inference instances |
+//! | [`AllocPolicy`]    | §4.1 disaggregation + §6.1 agent-centric binding | pool layout, binding mode, colocation contention |
+//! | [`SamplePolicy`]   | §5.1 dependency-driven parallel sampling | trajectory scheduling mode, instance provisioning |
+//!
+//! A [`PolicyBundle`] is a named set of one impl per trait — the
+//! engine consumes a bundle and nothing else. [`Framework::policies`]
+//! derives the canonical bundle from the capability flags, so the four
+//! baselines and both ablations keep working unchanged; a *new*
+//! framework is just a new bundle handed to
+//! [`crate::experiment::Experiment`] — no engine edits (DESIGN.md §8
+//! shows a complete registration in under 50 lines).
+//!
+//! **Bit-identity contract:** for every flag combination, the derived
+//! bundle reproduces the retired inline branches exactly — the
+//! golden-grid integration test (`tests/golden_grid.rs`) pins
+//! flag-derived and hand-assembled bundles to byte-identical
+//! [`crate::metrics::StepReport`] JSON across all baselines × scenario
+//! presets.
+//!
+//! (Not to be confused with [`crate::runtime::policy`], the *model*
+//! policy executing on PJRT — these objects govern the system, not the
+//! network.)
+
+use crate::config::Framework;
+use crate::rollout::{plan_migration, MigrationPlan, Mode};
+
+// ---------------------------------------------------------------------------
+// PipelinePolicy (§4.3)
+// ---------------------------------------------------------------------------
+
+/// When may training consume experience, and do MARL steps overlap?
+///
+/// Governs the retired `async_pipeline` / `one_step_async_rollout`
+/// branches: micro-batch admission during rollout, the MARTI-style
+/// stale-parameter prefetch of the next step, and whether reported
+/// per-step E2E time is amortized over overlapped steps.
+pub trait PipelinePolicy: Send + Sync {
+    /// Short impl name (diagnostics, DESIGN.md §8 table).
+    fn name(&self) -> &'static str;
+
+    /// May an agent start gradient work while the step's rollout is
+    /// still in flight (micro-batch asynchronous pipeline, §4.3)?
+    /// `false` = full-batch synchronous training behind the rollout
+    /// barrier.
+    ///
+    /// Cross-trait interaction: a colocated pool
+    /// ([`AllocPolicy::dedicated_pools`] = `false`) that does not
+    /// overlap steps physically cannot train and generate at once —
+    /// the engine's phase-alternation gate then defers training to the
+    /// rollout barrier *regardless* of this flag (same rule the
+    /// capability flags always had). Early admission needs dedicated
+    /// pools or a step-overlapping pipeline.
+    fn admits_during_rollout(&self) -> bool;
+
+    /// Does step *s+1*'s rollout launch at step *s*'s rollout boundary
+    /// with stale parameters (MARTI's one-step-async overlap)? Returns
+    /// the fraction of the colocated phase-switch cost charged for the
+    /// pipelined half-switch that restores instance weights; `None` =
+    /// steps never overlap.
+    fn next_step_prefetch(&self) -> Option<f64>;
+
+    /// Steps overlap in wall time, so per-step E2E must be amortized
+    /// over the whole run (and pool accounting must provision rollout
+    /// and training capacity simultaneously).
+    fn overlaps_steps(&self) -> bool {
+        self.next_step_prefetch().is_some()
+    }
+}
+
+/// Full-batch synchronous training: gradients only after the step's
+/// rollout barrier (MAS-RL, DistRL, the `w/o async` ablation).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SyncPipeline;
+
+impl PipelinePolicy for SyncPipeline {
+    fn name(&self) -> &'static str {
+        "sync"
+    }
+    fn admits_during_rollout(&self) -> bool {
+        false
+    }
+    fn next_step_prefetch(&self) -> Option<f64> {
+        None
+    }
+}
+
+/// Micro-batch asynchronous pipeline (§4.3): training consumes each
+/// micro batch as soon as its GRPO groups land in the store, hiding
+/// gradient time inside the rollout (FlexMARL).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MicroBatchAsync;
+
+impl PipelinePolicy for MicroBatchAsync {
+    fn name(&self) -> &'static str {
+        "micro_batch_async"
+    }
+    fn admits_during_rollout(&self) -> bool {
+        true
+    }
+    fn next_step_prefetch(&self) -> Option<f64> {
+        None
+    }
+}
+
+/// MARTI-style one-step-async rollout: step *s+1* generates with
+/// stale-by-one parameters while step *s* trains; the half phase-switch
+/// restoring instance weights is pipelined into the overlap.
+#[derive(Debug, Clone, Copy)]
+pub struct OneStepAsync {
+    /// Also admit micro batches during the rollout (no named framework
+    /// combines both — kept so every flag combination stays derivable).
+    pub admit_during_rollout: bool,
+    /// Fraction of the phase-switch cost charged for the pipelined
+    /// weight restore (MARTI: 0.5).
+    pub prefetch_switch_frac: f64,
+}
+
+impl Default for OneStepAsync {
+    fn default() -> Self {
+        OneStepAsync {
+            admit_during_rollout: false,
+            prefetch_switch_frac: 0.5,
+        }
+    }
+}
+
+impl PipelinePolicy for OneStepAsync {
+    fn name(&self) -> &'static str {
+        "one_step_async"
+    }
+    fn admits_during_rollout(&self) -> bool {
+        self.admit_during_rollout
+    }
+    fn next_step_prefetch(&self) -> Option<f64> {
+        Some(self.prefetch_switch_frac)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// BalancePolicy (§5.2)
+// ---------------------------------------------------------------------------
+
+/// Per-agent load observed at one scaler poll tick — everything an
+/// inter-agent balancer may consult when deciding to migrate inference
+/// instances.
+#[derive(Debug)]
+pub struct LoadSnapshot<'a> {
+    /// Queued (not yet running) requests per agent.
+    pub queue_lens: &'a [usize],
+    /// Inference instances currently serving each agent.
+    pub instance_counts: &'a [usize],
+    /// The configured disparity threshold Δ (§5.2).
+    pub delta_threshold: usize,
+    /// Agents already mid-migration (donor or target) — excluded from
+    /// new plans to prevent oscillation.
+    pub busy_scaling: &'a [bool],
+}
+
+/// Should this poll tick migrate inference instances between agents?
+///
+/// Governs the retired `load_balancing` branch around
+/// [`plan_migration`] in the simloop's poll handler.
+pub trait BalancePolicy: Send + Sync {
+    /// Short impl name (diagnostics, DESIGN.md §8 table).
+    fn name(&self) -> &'static str;
+
+    /// Whether this policy can ever migrate. The engine skips snapshot
+    /// assembly entirely when `false`, keeping static frameworks'
+    /// poll ticks allocation-free.
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    /// Propose a migration for the observed load, or `None` to leave
+    /// placements alone this tick.
+    fn plan(&self, load: &LoadSnapshot<'_>) -> Option<MigrationPlan>;
+}
+
+/// Hierarchical inter-agent balancing (§5.2): migrate instances from
+/// the least-loaded donor to the most overloaded agent whenever the
+/// queue-length disparity exceeds Δ (FlexMARL).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HierarchicalBalance;
+
+impl BalancePolicy for HierarchicalBalance {
+    fn name(&self) -> &'static str {
+        "hierarchical"
+    }
+    fn plan(&self, load: &LoadSnapshot<'_>) -> Option<MigrationPlan> {
+        plan_migration(
+            load.queue_lens,
+            load.instance_counts,
+            load.delta_threshold,
+            load.busy_scaling,
+        )
+    }
+}
+
+/// No inter-agent balancing: instances stay where they were provisioned
+/// (MAS-RL, DistRL, MARTI, the `w/o balancing` ablation).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StaticPlacement;
+
+impl BalancePolicy for StaticPlacement {
+    fn name(&self) -> &'static str {
+        "static"
+    }
+    fn enabled(&self) -> bool {
+        false
+    }
+    fn plan(&self, _load: &LoadSnapshot<'_>) -> Option<MigrationPlan> {
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AllocPolicy (§4.1 + §6.1)
+// ---------------------------------------------------------------------------
+
+/// How rollout and training share (or don't share) the device pool, and
+/// how training process groups bind to it.
+///
+/// Governs the retired `disaggregated` / `agent_centric` branches: pool
+/// provisioning, phase-switch alternation, the colocated decode
+/// contention penalty, and static-partition vs on-demand binding in
+/// [`crate::training::AgentCentricAllocator`].
+pub trait AllocPolicy: Send + Sync {
+    /// Short impl name (diagnostics, DESIGN.md §8 table).
+    fn name(&self) -> &'static str;
+
+    /// Dedicated rollout and training pools (§4.1 disaggregation) vs a
+    /// single colocated pool time-multiplexed with onload/offload phase
+    /// switches. A colocated pool under a non-overlapping pipeline
+    /// enforces strict phase alternation: training waits for the
+    /// rollout barrier even if the pipeline would admit micro batches
+    /// early (see [`PipelinePolicy::admits_during_rollout`]).
+    fn dedicated_pools(&self) -> bool;
+
+    /// Agent-centric on-demand binding (§6.1): process groups hold
+    /// devices only while they have work (suspend-to-destroy between),
+    /// vs static per-agent partitions held for the whole run.
+    fn on_demand_binding(&self) -> bool;
+
+    /// Decode-time multiplier charged while training shares the pool
+    /// with generation (colocated HBM/compute contention, §4.1);
+    /// `1.0` when pools are dedicated.
+    fn decode_contention_mult(&self) -> f64 {
+        if self.dedicated_pools() {
+            1.0
+        } else {
+            1.3
+        }
+    }
+}
+
+/// FlexMARL's allocation: dedicated pools + agent-centric on-demand
+/// binding with state swap (§6.1).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AgentCentricAlloc;
+
+impl AllocPolicy for AgentCentricAlloc {
+    fn name(&self) -> &'static str {
+        "agent_centric"
+    }
+    fn dedicated_pools(&self) -> bool {
+        true
+    }
+    fn on_demand_binding(&self) -> bool {
+        true
+    }
+}
+
+/// Disaggregated pools with static per-agent training partitions
+/// (DistRL — the Obs. 3 configuration whose utilization collapses).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DisaggregatedStatic;
+
+impl AllocPolicy for DisaggregatedStatic {
+    fn name(&self) -> &'static str {
+        "disaggregated_static"
+    }
+    fn dedicated_pools(&self) -> bool {
+        true
+    }
+    fn on_demand_binding(&self) -> bool {
+        false
+    }
+}
+
+/// One colocated pool, static partitions, onload/offload at each phase
+/// switch (MAS-RL, MARTI).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ColocatedStatic;
+
+impl AllocPolicy for ColocatedStatic {
+    fn name(&self) -> &'static str {
+        "colocated_static"
+    }
+    fn dedicated_pools(&self) -> bool {
+        false
+    }
+    fn on_demand_binding(&self) -> bool {
+        false
+    }
+}
+
+/// Colocated pool with on-demand binding — no named framework ships
+/// it, but the flag square must stay derivable and it is a useful
+/// mixed-bundle ingredient (the golden-grid custom-framework test runs
+/// one).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ColocatedOnDemand;
+
+impl AllocPolicy for ColocatedOnDemand {
+    fn name(&self) -> &'static str {
+        "colocated_on_demand"
+    }
+    fn dedicated_pools(&self) -> bool {
+        false
+    }
+    fn on_demand_binding(&self) -> bool {
+        true
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SamplePolicy (§5.1)
+// ---------------------------------------------------------------------------
+
+/// How trajectory generation is scheduled and how many inference
+/// instances each agent gets at startup.
+///
+/// Governs the retired `parallel_sampling` branches: scheduler
+/// [`Mode`] selection and the MAS-RL one-engine-per-agent provisioning
+/// special case.
+pub trait SamplePolicy: Send + Sync {
+    /// Short impl name (diagnostics, DESIGN.md §8 table).
+    fn name(&self) -> &'static str;
+
+    /// Trajectory-scheduler mode for a step, given the workload's
+    /// configured inter-query concurrency.
+    fn mode(&self, inter_query: usize) -> Mode;
+
+    /// Inference instances provisioned per agent at startup, given the
+    /// engine-knob default ([`crate::orchestrator::SimOptions`]'s
+    /// `instances_per_agent`).
+    fn instances_per_agent(&self, configured: usize) -> usize;
+}
+
+/// Dependency-driven parallel sampling (§5.1): candidates progress
+/// independently, `inter_query` queries concurrently admitted, a
+/// replicated instance pool per agent.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ParallelSampling;
+
+impl SamplePolicy for ParallelSampling {
+    fn name(&self) -> &'static str {
+        "parallel"
+    }
+    fn mode(&self, inter_query: usize) -> Mode {
+        Mode::Parallel { inter_query }
+    }
+    fn instances_per_agent(&self, configured: usize) -> usize {
+        configured
+    }
+}
+
+/// Serial query processing with per-turn barriers (the MAS-RL execution
+/// model): one query at a time, one inference engine per agent.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SerialTurnBarrier;
+
+impl SamplePolicy for SerialTurnBarrier {
+    fn name(&self) -> &'static str {
+        "serial_turn_barrier"
+    }
+    fn mode(&self, _inter_query: usize) -> Mode {
+        Mode::SerialQueries
+    }
+    fn instances_per_agent(&self, _configured: usize) -> usize {
+        1
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PolicyBundle
+// ---------------------------------------------------------------------------
+
+/// A named set of one impl per policy trait — everything the engine
+/// consults about framework behaviour. Derive one from capability flags
+/// with [`Framework::policies`], or assemble one by hand to register a
+/// framework the flags cannot express (DESIGN.md §8).
+pub struct PolicyBundle {
+    /// Label reported as [`crate::metrics::StepReport::framework`].
+    /// Flag-derived bundles carry the framework's name, keeping report
+    /// JSON byte-identical to the retired inline engine.
+    pub name: String,
+    /// §4.3 pipeline behaviour.
+    pub pipeline: Box<dyn PipelinePolicy>,
+    /// §5.2 inter-agent balancing.
+    pub balance: Box<dyn BalancePolicy>,
+    /// §4.1/§6.1 pool layout and binding.
+    pub alloc: Box<dyn AllocPolicy>,
+    /// §5.1 sampling schedule.
+    pub sample: Box<dyn SamplePolicy>,
+}
+
+impl PolicyBundle {
+    /// Assemble a custom bundle. Prefer [`Framework::policies`] for the
+    /// named baselines.
+    pub fn new(
+        name: impl Into<String>,
+        pipeline: Box<dyn PipelinePolicy>,
+        balance: Box<dyn BalancePolicy>,
+        alloc: Box<dyn AllocPolicy>,
+        sample: Box<dyn SamplePolicy>,
+    ) -> PolicyBundle {
+        PolicyBundle {
+            name: name.into(),
+            pipeline,
+            balance,
+            alloc,
+            sample,
+        }
+    }
+
+    /// One-line summary of the bundle's composition (diagnostics).
+    pub fn describe(&self) -> String {
+        format!(
+            "{}: pipeline={} balance={} alloc={} sample={}",
+            self.name,
+            self.pipeline.name(),
+            self.balance.name(),
+            self.alloc.name(),
+            self.sample.name()
+        )
+    }
+}
+
+impl std::fmt::Debug for PolicyBundle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.describe())
+    }
+}
+
+impl Framework {
+    /// Derive the canonical policy bundle for this framework's
+    /// capability flags. Every flag combination maps — including the
+    /// squares no named constructor produces — so hand-tweaked
+    /// [`Framework`] values keep behaving exactly as the retired
+    /// inline branches did.
+    pub fn policies(&self) -> PolicyBundle {
+        let pipeline: Box<dyn PipelinePolicy> = if self.one_step_async_rollout {
+            Box::new(OneStepAsync {
+                admit_during_rollout: self.async_pipeline,
+                ..OneStepAsync::default()
+            })
+        } else if self.async_pipeline {
+            Box::new(MicroBatchAsync)
+        } else {
+            Box::new(SyncPipeline)
+        };
+        let balance: Box<dyn BalancePolicy> = if self.load_balancing {
+            Box::new(HierarchicalBalance)
+        } else {
+            Box::new(StaticPlacement)
+        };
+        let alloc: Box<dyn AllocPolicy> = match (self.disaggregated, self.agent_centric) {
+            (true, true) => Box::new(AgentCentricAlloc),
+            (true, false) => Box::new(DisaggregatedStatic),
+            (false, false) => Box::new(ColocatedStatic),
+            (false, true) => Box::new(ColocatedOnDemand),
+        };
+        let sample: Box<dyn SamplePolicy> = if self.parallel_sampling {
+            Box::new(ParallelSampling)
+        } else {
+            Box::new(SerialTurnBarrier)
+        };
+        PolicyBundle::new(self.name, pipeline, balance, alloc, sample)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Every trait is exercised through a trait *object* — the engine
+    // only ever sees `Box<dyn …>`, so dyn dispatch is what must be
+    // pinned, not the concrete impls.
+
+    #[test]
+    fn pipeline_policy_through_trait_objects() {
+        let sync: Box<dyn PipelinePolicy> = Box::new(SyncPipeline);
+        let asy: Box<dyn PipelinePolicy> = Box::new(MicroBatchAsync);
+        let one: Box<dyn PipelinePolicy> = Box::new(OneStepAsync::default());
+        assert!(!sync.admits_during_rollout() && !sync.overlaps_steps());
+        assert_eq!(sync.next_step_prefetch(), None);
+        assert!(asy.admits_during_rollout() && !asy.overlaps_steps());
+        assert!(!one.admits_during_rollout() && one.overlaps_steps());
+        assert_eq!(one.next_step_prefetch(), Some(0.5));
+    }
+
+    #[test]
+    fn balance_policy_through_trait_objects() {
+        let lb: Box<dyn BalancePolicy> = Box::new(HierarchicalBalance);
+        let none: Box<dyn BalancePolicy> = Box::new(StaticPlacement);
+        // A grossly skewed queue with idle donors must trigger the
+        // hierarchical plan and must not trigger the static one.
+        let queue_lens = [40usize, 0, 0, 0];
+        let counts = [2usize, 2, 2, 2];
+        let busy = [false; 4];
+        let snap = LoadSnapshot {
+            queue_lens: &queue_lens,
+            instance_counts: &counts,
+            delta_threshold: 5,
+            busy_scaling: &busy,
+        };
+        let plan = lb.plan(&snap).expect("skew above delta must migrate");
+        assert_eq!(plan.target, 0);
+        assert!(lb.enabled());
+        assert!(!none.enabled());
+        assert!(none.plan(&snap).is_none());
+        // The hierarchical policy is exactly plan_migration.
+        assert_eq!(
+            lb.plan(&snap),
+            plan_migration(&queue_lens, &counts, 5, &busy)
+        );
+    }
+
+    #[test]
+    fn alloc_policy_through_trait_objects() {
+        let table: [(Box<dyn AllocPolicy>, bool, bool, f64); 4] = [
+            (Box::new(AgentCentricAlloc), true, true, 1.0),
+            (Box::new(DisaggregatedStatic), true, false, 1.0),
+            (Box::new(ColocatedStatic), false, false, 1.3),
+            (Box::new(ColocatedOnDemand), false, true, 1.3),
+        ];
+        for (p, dedicated, on_demand, mult) in table {
+            assert_eq!(p.dedicated_pools(), dedicated, "{}", p.name());
+            assert_eq!(p.on_demand_binding(), on_demand, "{}", p.name());
+            assert_eq!(p.decode_contention_mult(), mult, "{}", p.name());
+        }
+    }
+
+    #[test]
+    fn sample_policy_through_trait_objects() {
+        let par: Box<dyn SamplePolicy> = Box::new(ParallelSampling);
+        let ser: Box<dyn SamplePolicy> = Box::new(SerialTurnBarrier);
+        assert_eq!(par.mode(4), Mode::Parallel { inter_query: 4 });
+        assert_eq!(par.instances_per_agent(2), 2);
+        assert_eq!(ser.mode(4), Mode::SerialQueries);
+        assert_eq!(ser.instances_per_agent(2), 1);
+    }
+
+    #[test]
+    fn derived_bundles_match_the_flag_matrix() {
+        // The derivation must reproduce the retired inline branches for
+        // every baseline: admits == async_pipeline, overlap == one-step,
+        // pools/binding == disaggregated/agent_centric, and so on.
+        for fw in Framework::all_baselines()
+            .into_iter()
+            .chain([Framework::flexmarl_no_balancing(), Framework::flexmarl_no_async()])
+        {
+            let b = fw.policies();
+            assert_eq!(b.name, fw.name);
+            assert_eq!(b.pipeline.admits_during_rollout(), fw.async_pipeline, "{}", fw.name);
+            assert_eq!(b.pipeline.overlaps_steps(), fw.one_step_async_rollout, "{}", fw.name);
+            assert_eq!(b.alloc.dedicated_pools(), fw.disaggregated, "{}", fw.name);
+            assert_eq!(b.alloc.on_demand_binding(), fw.agent_centric, "{}", fw.name);
+            assert_eq!(b.balance.enabled(), fw.load_balancing, "{}", fw.name);
+            let expect_mult = if fw.disaggregated { 1.0 } else { 1.3 };
+            assert_eq!(b.alloc.decode_contention_mult(), expect_mult, "{}", fw.name);
+            match b.sample.mode(7) {
+                Mode::Parallel { inter_query } => {
+                    assert!(fw.parallel_sampling, "{}", fw.name);
+                    assert_eq!(inter_query, 7);
+                }
+                Mode::SerialQueries => assert!(!fw.parallel_sampling, "{}", fw.name),
+            }
+        }
+        // The unreachable-by-constructor squares still derive sanely.
+        let mut odd = Framework::marti();
+        odd.async_pipeline = true;
+        let b = odd.policies();
+        assert!(b.pipeline.admits_during_rollout() && b.pipeline.overlaps_steps());
+        let mut coloc = Framework::flexmarl();
+        coloc.disaggregated = false;
+        let b = coloc.policies();
+        assert!(!b.alloc.dedicated_pools() && b.alloc.on_demand_binding());
+    }
+
+    #[test]
+    fn describe_names_every_axis() {
+        let d = Framework::flexmarl().policies().describe();
+        assert!(d.contains("FlexMARL"), "{d}");
+        assert!(d.contains("micro_batch_async"), "{d}");
+        assert!(d.contains("hierarchical"), "{d}");
+        assert!(d.contains("agent_centric"), "{d}");
+        assert!(d.contains("parallel"), "{d}");
+    }
+}

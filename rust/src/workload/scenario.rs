@@ -15,6 +15,7 @@
 //! DESIGN.md §2.
 
 use crate::config::{ModelScale, WorkloadConfig};
+use crate::error::PallasError;
 use crate::workload::{Generator, StepWorkload};
 
 /// A named traffic shape. `shape` transforms the base config once (per
@@ -252,8 +253,9 @@ pub fn by_name(name: &str) -> Option<Box<dyn Scenario>> {
     all().into_iter().find(|s| s.name() == n)
 }
 
-/// The one unknown-scenario error message (config validation, trace
-/// parsing, and resolution all report it identically).
+/// The one unknown-scenario error message — the `Display` text of
+/// [`PallasError::UnknownScenario`], so config validation, trace
+/// parsing, and resolution all report it identically.
 pub fn unknown_error(name: &str) -> String {
     format!("unknown scenario '{name}' (have: {})", names().join(", "))
 }
@@ -264,8 +266,9 @@ pub fn unknown_error(name: &str) -> String {
 /// so reports and trace headers agree whatever alias spelling
 /// ("Core-Skew", "TOOL HEAVY") the caller used — byte-identical
 /// replay==generate diffs depend on it.
-pub fn resolve(wl: &WorkloadConfig) -> Result<(WorkloadConfig, Box<dyn Scenario>), String> {
-    let scen = by_name(&wl.scenario).ok_or_else(|| unknown_error(&wl.scenario))?;
+pub fn resolve(wl: &WorkloadConfig) -> Result<(WorkloadConfig, Box<dyn Scenario>), PallasError> {
+    let scen = by_name(&wl.scenario)
+        .ok_or_else(|| PallasError::UnknownScenario(wl.scenario.clone()))?;
     let mut shaped = scen.shape(wl);
     shaped.scenario = scen.name().to_string();
     Ok((shaped, scen))
@@ -309,7 +312,11 @@ mod tests {
         let mut wl = base();
         wl.scenario = "gibberish".into();
         let err = resolve(&wl).unwrap_err();
-        assert!(err.contains("gibberish") && err.contains("core_skew"), "{err}");
+        assert_eq!(err, PallasError::UnknownScenario("gibberish".into()));
+        let msg = err.to_string();
+        assert!(msg.contains("gibberish") && msg.contains("core_skew"), "{msg}");
+        // The typed variant renders exactly the registry's message.
+        assert_eq!(msg, unknown_error("gibberish"));
     }
 
     #[test]

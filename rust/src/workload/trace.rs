@@ -21,6 +21,7 @@
 //! carry the full per-call data, so replay never re-generates.
 
 use crate::config::WorkloadConfig;
+use crate::error::PallasError;
 use crate::util::json::{parse, Json};
 use crate::workload::{scenario, CallSpec, StepWorkload, TrajectorySpec};
 
@@ -46,16 +47,18 @@ pub struct Trace {
 impl Trace {
     /// Generate and capture `steps` MARL steps of the scenario named in
     /// `wl.scenario`.
-    pub fn record(wl: &WorkloadConfig, seed: u64, steps: usize) -> Result<Trace, String> {
+    pub fn record(wl: &WorkloadConfig, seed: u64, steps: usize) -> Result<Trace, PallasError> {
         if steps == 0 {
-            return Err("cannot record a zero-step trace (nothing to replay)".into());
+            return Err(PallasError::Trace(
+                "cannot record a zero-step trace (nothing to replay)".into(),
+            ));
         }
         // The header stores the seed as a JSON number (f64): above 2^53
         // it would silently round, breaking the round-trip contract.
         if seed > MAX_SEED {
-            return Err(format!(
+            return Err(PallasError::Trace(format!(
                 "seed {seed} exceeds 2^53 and cannot round-trip through the JSONL header"
-            ));
+            )));
         }
         let (shaped, scen) = scenario::resolve(wl)?;
         let step_wls = (0..steps).map(|s| scen.step(&shaped, seed, s)).collect();
@@ -109,7 +112,7 @@ impl Trace {
         out
     }
 
-    pub fn from_jsonl(text: &str) -> Result<Trace, String> {
+    pub fn from_jsonl(text: &str) -> Result<Trace, PallasError> {
         let mut header: Option<(String, String, u64, usize, usize)> = None;
         let mut steps: Vec<StepWorkload> = Vec::new();
         for (lineno, line) in text.lines().enumerate() {
@@ -117,31 +120,34 @@ impl Trace {
             if line.is_empty() {
                 continue;
             }
-            let j = parse(line).map_err(|e| format!("trace line {}: {e}", lineno + 1))?;
-            let kind = j
-                .at(&["kind"])
-                .and_then(Json::as_str)
-                .ok_or_else(|| format!("trace line {}: missing 'kind'", lineno + 1))?;
+            let j = parse(line)
+                .map_err(|e| PallasError::Trace(format!("trace line {}: {e}", lineno + 1)))?;
+            let kind = j.at(&["kind"]).and_then(Json::as_str).ok_or_else(|| {
+                PallasError::Trace(format!("trace line {}: missing 'kind'", lineno + 1))
+            })?;
             match kind {
                 "header" => {
                     // A second header would silently replace the
                     // provenance (n_agents/seed/scenario) that earlier
                     // step lines were already validated against.
                     if header.is_some() {
-                        return Err(format!("trace line {}: duplicate header", lineno + 1));
+                        return Err(PallasError::Trace(format!(
+                            "trace line {}: duplicate header",
+                            lineno + 1
+                        )));
                     }
                     let version = j.at(&["version"]).and_then(Json::as_u64).unwrap_or(0);
                     if version != TRACE_VERSION {
-                        return Err(format!(
+                        return Err(PallasError::Trace(format!(
                             "unsupported trace version {version} (want {TRACE_VERSION})"
-                        ));
+                        )));
                     }
                     // Replay re-shapes the config from this name, so an
                     // unknown preset (edited file, newer recorder) must
                     // fail here as a parse error, not later as a panic.
                     let scen = req_str(&j, "scenario", lineno)?;
                     if scenario::by_name(&scen).is_none() {
-                        return Err(scenario::unknown_error(&scen));
+                        return Err(PallasError::UnknownScenario(scen));
                     }
                     header = Some((
                         req_str(&j, "workload", lineno)?,
@@ -153,37 +159,44 @@ impl Trace {
                 }
                 "step" => {
                     let Some((_, _, _, n_agents, _)) = &header else {
-                        return Err("trace: step line before header".into());
+                        return Err(PallasError::Trace("trace: step line before header".into()));
                     };
                     let sw = parse_step(&j, *n_agents, lineno)?;
                     // Step lines must be contiguous and in record
                     // order: a duplicated/reordered line would replay
                     // a different sequence than was recorded, silently.
                     if sw.step != steps.len() {
-                        return Err(format!(
+                        return Err(PallasError::Trace(format!(
                             "trace line {}: step {} out of order (expected {})",
                             lineno + 1,
                             sw.step,
                             steps.len()
-                        ));
+                        )));
                     }
                     steps.push(sw);
                 }
-                other => return Err(format!("trace line {}: unknown kind '{other}'", lineno + 1)),
+                other => {
+                    return Err(PallasError::Trace(format!(
+                        "trace line {}: unknown kind '{other}'",
+                        lineno + 1
+                    )))
+                }
             }
         }
         let (workload, scenario, seed, n_agents, n_steps) =
-            header.ok_or("trace: no header line")?;
+            header.ok_or_else(|| PallasError::Trace("trace: no header line".into()))?;
         if steps.len() != n_steps {
-            return Err(format!(
+            return Err(PallasError::Trace(format!(
                 "trace: header says {n_steps} steps, found {}",
                 steps.len()
-            ));
+            )));
         }
         // Mirror the record-side rule: an empty trace has nothing to
         // replay and would index-panic in the engine.
         if steps.is_empty() {
-            return Err("trace has no steps (nothing to replay)".into());
+            return Err(PallasError::Trace(
+                "trace has no steps (nothing to replay)".into(),
+            ));
         }
         Ok(Trace {
             workload,
@@ -194,12 +207,18 @@ impl Trace {
         })
     }
 
-    pub fn write_file(&self, path: &str) -> Result<(), String> {
-        std::fs::write(path, self.to_jsonl()).map_err(|e| format!("{path}: {e}"))
+    pub fn write_file(&self, path: &str) -> Result<(), PallasError> {
+        std::fs::write(path, self.to_jsonl()).map_err(|e| PallasError::File {
+            path: path.to_string(),
+            error: e.to_string(),
+        })
     }
 
-    pub fn read_file(path: &str) -> Result<Trace, String> {
-        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    pub fn read_file(path: &str) -> Result<Trace, PallasError> {
+        let text = std::fs::read_to_string(path).map_err(|e| PallasError::File {
+            path: path.to_string(),
+            error: e.to_string(),
+        })?;
         Self::from_jsonl(&text)
     }
 
@@ -208,25 +227,27 @@ impl Trace {
     }
 }
 
-fn req_str(j: &Json, key: &str, lineno: usize) -> Result<String, String> {
+fn req_str(j: &Json, key: &str, lineno: usize) -> Result<String, PallasError> {
     j.at(&[key])
         .and_then(Json::as_str)
         .map(str::to_string)
-        .ok_or_else(|| format!("trace line {}: missing '{key}'", lineno + 1))
+        .ok_or_else(|| PallasError::Trace(format!("trace line {}: missing '{key}'", lineno + 1)))
 }
 
-fn req_u64(j: &Json, key: &str, lineno: usize) -> Result<u64, String> {
+fn req_u64(j: &Json, key: &str, lineno: usize) -> Result<u64, PallasError> {
     j.at(&[key])
         .and_then(Json::as_u64)
-        .ok_or_else(|| format!("trace line {}: missing '{key}'", lineno + 1))
+        .ok_or_else(|| PallasError::Trace(format!("trace line {}: missing '{key}'", lineno + 1)))
 }
 
-fn parse_step(j: &Json, n_agents: usize, lineno: usize) -> Result<StepWorkload, String> {
+fn parse_step(j: &Json, n_agents: usize, lineno: usize) -> Result<StepWorkload, PallasError> {
     let step = req_u64(j, "step", lineno)? as usize;
     let trajs = j
         .at(&["trajectories"])
         .and_then(Json::as_arr)
-        .ok_or_else(|| format!("trace line {}: missing 'trajectories'", lineno + 1))?;
+        .ok_or_else(|| {
+            PallasError::Trace(format!("trace line {}: missing 'trajectories'", lineno + 1))
+        })?;
     let mut trajectories = Vec::with_capacity(trajs.len());
     for t in trajs {
         let query = req_u64(t, "query", lineno)? as usize;
@@ -234,32 +255,39 @@ fn parse_step(j: &Json, n_agents: usize, lineno: usize) -> Result<StepWorkload, 
         let calls_j = t
             .at(&["calls"])
             .and_then(Json::as_arr)
-            .ok_or_else(|| format!("trace line {}: trajectory missing 'calls'", lineno + 1))?;
+            .ok_or_else(|| {
+                PallasError::Trace(format!(
+                    "trace line {}: trajectory missing 'calls'",
+                    lineno + 1
+                ))
+            })?;
         let mut calls = Vec::with_capacity(calls_j.len());
         for c in calls_j {
             let triple = c.as_arr().filter(|a| a.len() == 3).ok_or_else(|| {
-                format!("trace line {}: call is not [agent,tokens,env_s]", lineno + 1)
+                PallasError::Trace(format!(
+                    "trace line {}: call is not [agent,tokens,env_s]",
+                    lineno + 1
+                ))
             })?;
-            let agent = triple[0]
-                .as_u64()
-                .ok_or_else(|| format!("trace line {}: bad agent", lineno + 1))?
-                as usize;
+            let agent = triple[0].as_u64().ok_or_else(|| {
+                PallasError::Trace(format!("trace line {}: bad agent", lineno + 1))
+            })? as usize;
             // Bound here so a corrupted trace fails as a parse error,
             // not an index panic deep inside the engine.
             if agent >= n_agents {
-                return Err(format!(
+                return Err(PallasError::Trace(format!(
                     "trace line {}: agent {agent} out of range (n_agents {n_agents})",
                     lineno + 1
-                ));
+                )));
             }
             calls.push(CallSpec {
                 agent,
-                tokens: triple[1]
-                    .as_f64()
-                    .ok_or_else(|| format!("trace line {}: bad tokens", lineno + 1))?,
-                env_s: triple[2]
-                    .as_f64()
-                    .ok_or_else(|| format!("trace line {}: bad env_s", lineno + 1))?,
+                tokens: triple[1].as_f64().ok_or_else(|| {
+                    PallasError::Trace(format!("trace line {}: bad tokens", lineno + 1))
+                })?,
+                env_s: triple[2].as_f64().ok_or_else(|| {
+                    PallasError::Trace(format!("trace line {}: bad env_s", lineno + 1))
+                })?,
             });
         }
         trajectories.push(TrajectorySpec {
@@ -347,13 +375,13 @@ mod tests {
         assert_eq!(lines.len(), 3, "header + 2 steps");
         let dup = format!("{}\n{}\n{}\n", lines[0], lines[1], lines[1]);
         let err = Trace::from_jsonl(&dup).unwrap_err();
-        assert!(err.contains("out of order"), "{err}");
+        assert!(err.to_string().contains("out of order"), "{err}");
         let swapped = format!("{}\n{}\n{}\n", lines[0], lines[2], lines[1]);
         assert!(Trace::from_jsonl(&swapped).is_err());
         // A second header mid-file must not rebind provenance.
         let reheader = format!("{}\n{}\n{}\n{}\n", lines[0], lines[1], lines[0], lines[2]);
         let err = Trace::from_jsonl(&reheader).unwrap_err();
-        assert!(err.contains("duplicate header"), "{err}");
+        assert!(err.to_string().contains("duplicate header"), "{err}");
     }
 
     #[test]
@@ -367,7 +395,7 @@ mod tests {
         let bad = jsonl.replacen(&needle, "[99,", 1);
         assert_ne!(bad, jsonl, "test setup: call triple not found");
         let err = Trace::from_jsonl(&bad).unwrap_err();
-        assert!(err.contains("out of range"), "{err}");
+        assert!(err.to_string().contains("out of range"), "{err}");
     }
 
     #[test]
@@ -388,14 +416,15 @@ mod tests {
             .to_jsonl()
             .replace("\"scenario\":\"baseline\"", "\"scenario\":\"from_the_future\"");
         let err = Trace::from_jsonl(&bad).unwrap_err();
-        assert!(err.contains("from_the_future"), "{err}");
+        assert_eq!(err, PallasError::UnknownScenario("from_the_future".into()));
+        assert!(err.to_string().contains("from_the_future"), "{err}");
     }
 
     #[test]
     fn oversized_seed_rejected_at_record() {
         // Seeds above 2^53 cannot round-trip through a JSON number.
         let err = Trace::record(&small("baseline"), MAX_SEED + 1, 1).unwrap_err();
-        assert!(err.contains("2^53"), "{err}");
+        assert!(err.to_string().contains("2^53"), "{err}");
         assert!(Trace::record(&small("baseline"), MAX_SEED, 1).is_ok());
     }
 }

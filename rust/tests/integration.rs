@@ -3,16 +3,27 @@
 //! paper's headline orderings. PJRT-dependent tests are gated on
 //! `artifacts/` existing (run `make artifacts` first; `make test` does).
 
-use flexmarl::baselines::{evaluate, sweep, Framework};
+use flexmarl::baselines::{sweep, try_evaluate, Framework};
 use flexmarl::config::{ExperimentConfig, ModelScale, WorkloadConfig};
 use flexmarl::grpo::{group_advantages, make_row};
-use flexmarl::orchestrator::{simulate, SimOptions};
+use flexmarl::metrics::StepReport;
+use flexmarl::orchestrator::{try_simulate, SimOptions, SimOutcome};
 use flexmarl::training::{swap_in_cost, swap_out_cost};
 
 fn ma_cfg(fw: Framework, steps: usize) -> ExperimentConfig {
     let mut c = ExperimentConfig::new(WorkloadConfig::ma(), fw);
     c.steps = steps;
     c
+}
+
+/// The non-panicking entry points, unwrapped — what every test drives
+/// since `simulate`/`evaluate` were deprecated.
+fn simulate(cfg: &ExperimentConfig, opts: &SimOptions) -> SimOutcome {
+    try_simulate(cfg, opts).unwrap()
+}
+
+fn evaluate(cfg: &ExperimentConfig, opts: &SimOptions) -> StepReport {
+    try_evaluate(cfg, opts).unwrap()
 }
 
 fn opts() -> SimOptions {

@@ -14,8 +14,9 @@
 use flexmarl::baselines::Framework;
 use flexmarl::config::{ExperimentConfig, WorkloadConfig};
 use flexmarl::exec::{grid_report, run_specs_or_panic, RunGrid};
+use flexmarl::experiment::Experiment;
 use flexmarl::metrics::StepReport;
-use flexmarl::orchestrator::{try_simulate, SimOptions};
+use flexmarl::orchestrator::{try_simulate, NullSink, SimOptions};
 use flexmarl::policy::PolicyBundle;
 use flexmarl::rollout::{heap::IndexedMinHeap, RolloutManager};
 use flexmarl::sim::{EventQueue, QueueKind};
@@ -79,6 +80,7 @@ fn main() {
     bench_json(&mut rec, t);
     bench_policy_dispatch(&mut rec, t);
     bench_sim_engine(&mut rec, t);
+    bench_session(&mut rec, t);
     bench_sweep(smoke);
     if !smoke {
         bench_pjrt(&mut rec);
@@ -355,6 +357,57 @@ fn bench_sim_engine(rec: &mut Recorder, t: Duration) {
             black_box(try_simulate(&cfg, &opts).unwrap().total_s);
         }));
     }
+}
+
+/// The `session::` group (ISSUE 5 satellite): observer overhead on the
+/// engine's event path. Three variants of the same 1-step MA
+/// simulation — the monolithic no-sink `run()`, a step-drained session
+/// with no sinks, and a step-drained session with a `NullSink`
+/// attached (every decision point pays the dyn dispatch) — land in
+/// BENCH_hotpath.json so the deltas pin the sink fan-out at ~zero.
+fn bench_session(rec: &mut Recorder, t: Duration) {
+    let cfg = {
+        let mut c = ExperimentConfig::new(WorkloadConfig::ma(), Framework::flexmarl());
+        c.steps = 1;
+        c
+    };
+    let opts = SimOptions::default();
+
+    rec.add(bench("session:: run() 1 MA step, no sinks (inlined loop)", t, || {
+        let out = Experiment::new(cfg.clone())
+            .options(opts.clone())
+            .build()
+            .unwrap()
+            .run();
+        black_box(out.total_s);
+    }));
+
+    rec.add(bench("session:: step()-drain 1 MA step, no sinks", t, || {
+        let mut session = Experiment::new(cfg.clone())
+            .options(opts.clone())
+            .build()
+            .unwrap()
+            .session()
+            .unwrap();
+        while let Some(r) = session.step().unwrap() {
+            black_box(r.e2e_s);
+        }
+        black_box(session.finish().total_s);
+    }));
+
+    rec.add(bench("session:: step()-drain 1 MA step, NullSink attached", t, || {
+        let mut session = Experiment::new(cfg.clone())
+            .options(opts.clone())
+            .build()
+            .unwrap()
+            .session()
+            .unwrap();
+        session.add_sink(Box::new(NullSink));
+        while let Some(r) = session.step().unwrap() {
+            black_box(r.e2e_s);
+        }
+        black_box(session.finish().total_s);
+    }));
 }
 
 fn bench_pjrt(rec: &mut Recorder) {

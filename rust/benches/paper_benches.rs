@@ -120,7 +120,7 @@ fn bench_fig1() {
         println!("    p{:<3} {:>7.1}s", (q * 100.0) as u32, lats[idx]);
     }
     println!("\n── Fig 1(b): queued requests over time (3 agents, DistRL) ──");
-    for (a, s) in &out.reports[0].queued_series {
+    for (a, s) in &out.series.queued {
         let peak = s.iter().map(|&(_, q)| q).max().unwrap_or(0);
         let t_peak = s.iter().max_by_key(|&&(_, q)| q).map(|&(t, _)| t).unwrap_or(0.0);
         println!("    agent {a}: peak queue {peak} @ {t_peak:.0}s");
@@ -132,9 +132,8 @@ fn bench_fig89() {
     for w in ["MA", "CA"] {
         for fw in [Framework::mas_rl(), Framework::dist_rl(), Framework::marti(), Framework::flexmarl()] {
             let out = simulate(&cfg(wl(w), fw, 1), &opts());
-            let r = &out.reports[0];
             print!("    {w} {:<10}", fw.name);
-            for (a, series) in &r.processed_series {
+            for (a, series) in &out.series.processed {
                 let total = series.last().map(|&(_, c)| c).unwrap_or(0);
                 let t_done = series
                     .iter()

@@ -124,16 +124,15 @@ fn fig1_and_89() {
     println!("\n== Fig 1(b) + Figs 8/9: per-agent queue + processed load ==");
     for fw in [Framework::dist_rl(), Framework::marti(), Framework::flexmarl()] {
         let out = simulate(&cfg(WorkloadConfig::ma(), fw), &opts());
-        let r = &out.reports[0];
         print!("    {:<10}", fw.name);
-        for (a, series) in &r.processed_series {
+        for (a, series) in &out.series.processed {
             let total = series.last().map(|&(_, c)| c).unwrap_or(0);
             let t_done = series
                 .iter()
                 .find(|&&(_, c)| c == total && total > 0)
                 .map(|&(t, _)| t)
                 .unwrap_or(0.0);
-            let peak_q = r.queued_series[a].iter().map(|&(_, q)| q).max().unwrap_or(0);
+            let peak_q = out.series.queued[a].iter().map(|&(_, q)| q).max().unwrap_or(0);
             print!("  a{a}: {total} req/{t_done:.0}s (peakQ {peak_q})");
         }
         println!();

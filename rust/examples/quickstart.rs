@@ -2,7 +2,9 @@
 //!
 //! Part 1 needs nothing but the crate: it runs a paper-scale experiment
 //! on the cluster simulator through the [`Experiment`] builder — the
-//! single entry point the CLI, baselines, sweeps, and benches all use.
+//! single entry point the CLI, baselines, sweeps, and benches all use —
+//! then re-runs it through the streaming `Session` API (step-at-a-time
+//! reports, typed event sinks, early stop; DESIGN.md §9).
 //!
 //! Part 2 (skipped gracefully when `artifacts/` is absent) exercises
 //! the real runtime: loads the AOT artifacts (L2 JAX model + L1 Pallas
@@ -16,6 +18,7 @@
 use flexmarl::config::{ExperimentConfig, Framework, WorkloadConfig};
 use flexmarl::experiment::Experiment;
 use flexmarl::grpo::{group_advantages, make_row};
+use flexmarl::orchestrator::BudgetSink;
 use flexmarl::runtime::policy::AgentPolicy;
 use flexmarl::runtime::ModelRuntime;
 use flexmarl::util::rng::Pcg64;
@@ -39,6 +42,35 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         report.throughput_tps(),
         report.utilization() * 100.0,
         report.scale_ops
+    );
+
+    // ---- Part 1b: the same experiment, streamed ------------------------
+    // A Session steps the engine one MARL step at a time; each yielded
+    // report is bit-identical to the batch run's. A budget sink shows
+    // early stop: the run halts mid-flight with a well-formed partial
+    // outcome.
+    println!("\n== Part 1b: streaming Session (step-at-a-time, early stop) ==");
+    let cfg = ExperimentConfig::new(WorkloadConfig::ma(), Framework::flexmarl());
+    let mut session = Experiment::new(cfg)
+        .scenario("core_skew")
+        .steps(3)
+        .build()?
+        .session()?;
+    session.add_sink(Box::new(BudgetSink::new().max_steps(2)));
+    while let Some(step) = session.step()? {
+        println!(
+            "  step done at t={:.1}s: e2e {:.1}s  {:.0} tok/s",
+            session.now(),
+            step.e2e_s,
+            step.throughput_tps()
+        );
+    }
+    let outcome = session.finish();
+    println!(
+        "  stopped early: {} (completed {}/3 steps, t={:.1}s)",
+        outcome.stop.is_some(),
+        outcome.reports.len(),
+        outcome.total_s
     );
 
     // ---- Part 2: real PJRT runtime (optional) ---------------------------

@@ -32,19 +32,25 @@ use crate::orchestrator::SimOptions;
             `experiment::Experiment::new(cfg).build()?.evaluate()`"
 )]
 pub fn evaluate(cfg: &ExperimentConfig, opts: &SimOptions) -> StepReport {
-    try_evaluate(cfg, opts).unwrap_or_else(|e| panic!("workload resolution failed: {e}"))
+    try_evaluate(cfg, opts).unwrap_or_else(|e| match e {
+        // A runtime livelock is not a resolution failure — keep the
+        // budget error's own message, like `orchestrator::simulate`.
+        PallasError::EventBudget { .. } => panic!("{e}"),
+        e => panic!("workload resolution failed: {e}"),
+    })
 }
 
-/// [`evaluate`] with workload-resolution failures (unknown scenario,
-/// bad trace) surfaced as [`PallasError`] — the CLI path, so a bad
-/// `--trace` exits cleanly instead of panicking. Step-overlapping
-/// pipelines (one-step-async) report amortized E2E over the simulated
-/// step count — trace replay can override `cfg.steps`.
+/// [`evaluate`] with failures surfaced as [`PallasError`] — the CLI
+/// path, so a bad `--trace` (workload resolution) or a tripped
+/// run-loop event budget exits cleanly instead of panicking.
+/// Step-overlapping pipelines (one-step-async) report amortized E2E
+/// over the simulated step count — trace replay can override
+/// `cfg.steps`.
 pub fn try_evaluate(cfg: &ExperimentConfig, opts: &SimOptions) -> Result<StepReport, PallasError> {
-    Ok(Experiment::new(cfg.clone())
+    Experiment::new(cfg.clone())
         .options(opts.clone())
         .build()?
-        .evaluate())
+        .try_evaluate()
 }
 
 /// Table-2 style sweep: all four frameworks on one workload. Runs

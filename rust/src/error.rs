@@ -79,6 +79,29 @@ pub enum PallasError {
     /// Semantic config validation failure
     /// ([`crate::config::ExperimentConfig::validate`]).
     InvalidConfig(String),
+    /// The engine's run-loop event budget tripped (a livelock guard:
+    /// no simulation of any shipped scale comes near it). Carries the
+    /// virtual time and the per-kind event histogram at trip time.
+    /// `Display` keeps the retired panic's message prefix and
+    /// histogram rendering (the panic's trailing per-agent
+    /// tstate/steps-done dump is not carried), so the infallible
+    /// wrappers ([`crate::experiment::Experiment::run`], the
+    /// deprecated `simulate`) still panic with the recognizable
+    /// message.
+    EventBudget {
+        /// Virtual time at which the budget tripped.
+        t: f64,
+        /// `(event name, count)` pairs, one per engine event kind.
+        histogram: Vec<(&'static str, u64)>,
+    },
+    /// A run ended with no completed steps to aggregate: a zero-step
+    /// experiment, or an early-stop sink cut the run before the first
+    /// step boundary. Distinct from [`PallasError::InvalidConfig`] —
+    /// the config may be perfectly valid, the *run* was just empty;
+    /// drive a [`crate::orchestrator::Session`] and use
+    /// [`crate::orchestrator::SimOutcome::evaluate`] to handle partial
+    /// outcomes without this error.
+    EmptyRun,
 }
 
 impl fmt::Display for PallasError {
@@ -112,6 +135,15 @@ impl fmt::Display for PallasError {
             ),
             PallasError::File { path, error } => write!(f, "{path}: {error}"),
             PallasError::InvalidConfig(msg) => write!(f, "{msg}"),
+            PallasError::EventBudget { t, histogram } => write!(
+                f,
+                "event-budget exceeded (livelock?) at t={t}: {histogram:?}"
+            ),
+            PallasError::EmptyRun => write!(
+                f,
+                "run completed no steps to evaluate (zero-step experiment, or \
+                 stopped before the first step boundary)"
+            ),
         }
     }
 }
@@ -199,6 +231,23 @@ mod tests {
         let unk = PallasError::UnknownScenario("gibberish".into()).to_string();
         assert!(unk.starts_with("unknown scenario 'gibberish'"), "{unk}");
         assert!(unk.contains("core_skew"), "{unk}");
+    }
+
+    #[test]
+    fn event_budget_keeps_the_panic_text() {
+        // The run loop's livelock guard used to panic with exactly this
+        // prefix and histogram rendering; the typed variant's Display
+        // must keep the words so the infallible wrappers panic
+        // unchanged.
+        let e = PallasError::EventBudget {
+            t: 12.5,
+            histogram: vec![("StartStep", 3), ("Poll", 999_997)],
+        };
+        assert_eq!(
+            e.to_string(),
+            "event-budget exceeded (livelock?) at t=12.5: \
+             [(\"StartStep\", 3), (\"Poll\", 999997)]"
+        );
     }
 
     #[test]

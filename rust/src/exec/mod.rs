@@ -192,15 +192,40 @@ pub fn run_specs(
     specs: &[RunSpec<'_>],
     jobs: usize,
 ) -> Vec<Result<StepReport, PallasError>> {
+    run_specs_streamed(base, opts, specs, jobs, |_, _| {})
+}
+
+/// [`run_specs`] with a per-cell completion callback: `on_cell(i,
+/// &result)` fires from the worker thread the moment cell `i`'s
+/// simulation finishes — in *completion* order, which depends on
+/// scheduling. This is the sweep's streaming surface (`--progress`
+/// per-cell lines, `--emit jsonl` cell streams); each callback's
+/// *content* is still deterministic per cell, and the returned vector
+/// — the only thing the grid report is built from — stays in input
+/// order, byte-identical for any `jobs`.
+///
+/// The callback runs under no lock: serialize shared output
+/// (stdout/stderr) yourself if cells may interleave.
+pub fn run_specs_streamed(
+    base: &ExperimentConfig,
+    opts: &SimOptions,
+    specs: &[RunSpec<'_>],
+    jobs: usize,
+    on_cell: impl Fn(usize, &Result<StepReport, PallasError>) + Sync,
+) -> Vec<Result<StepReport, PallasError>> {
     // Feed the owned per-cell config straight into the builder:
     // `spec.apply` already materializes it, so going through
     // `try_evaluate` (which clones its borrowed config) would pay a
-    // second full-config copy per cell.
-    pool::run_ordered(specs, jobs, |_, spec| {
-        Ok(crate::experiment::Experiment::new(spec.apply(base))
+    // second full-config copy per cell. The typed path all the way
+    // down: a cell that trips the engine's event budget comes back as
+    // that cell's `Err`, not a worker-thread panic.
+    pool::run_ordered(specs, jobs, |i, spec| {
+        let res = crate::experiment::Experiment::new(spec.apply(base))
             .options(opts.clone())
-            .build()?
-            .evaluate())
+            .build()
+            .and_then(crate::experiment::Experiment::try_evaluate);
+        on_cell(i, &res);
+        res
     })
 }
 

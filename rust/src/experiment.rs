@@ -25,22 +25,31 @@
 //! [`PallasError`], never a panic. A custom bundle passed via
 //! [`ExperimentBuilder::policies`] registers a framework the capability
 //! flags cannot express — without touching the engine (DESIGN.md §8).
+//!
+//! Execution is streaming-first (DESIGN.md §9): [`Experiment::session`]
+//! opens the engine at the step boundary —
+//! [`Session::step`] yields each step's report as it
+//! completes, typed [`crate::orchestrator::EngineEvent`]s flow to any
+//! attached [`EventSink`]s, and a sink can stop the run early.
+//! [`Experiment::run`] and [`Experiment::evaluate`] are thin drains
+//! over a session, bit-identical to stepping it by hand.
 
 use crate::config::{ExperimentConfig, Framework};
 use crate::error::PallasError;
-use crate::metrics::{aggregate, StepReport};
-use crate::orchestrator::{resolve_workload, SimOptions, SimOutcome};
+use crate::metrics::StepReport;
+use crate::orchestrator::{resolve_workload, EventSink, Session, SimOptions, SimOutcome};
 use crate::policy::PolicyBundle;
 use crate::workload::StepWorkload;
 
 /// A fully-resolved experiment, ready to run: shaped config, per-step
-/// workloads, engine options, and the policy bundle the engine will
-/// consult. Construct via [`Experiment::new`].
+/// workloads, engine options, attached event sinks, and the policy
+/// bundle the engine will consult. Construct via [`Experiment::new`].
 pub struct Experiment {
     cfg: ExperimentConfig,
     opts: SimOptions,
     policies: PolicyBundle,
     step_workloads: Vec<StepWorkload>,
+    sinks: Vec<Box<dyn EventSink>>,
 }
 
 /// Builder for [`Experiment`] — see the module docs for the flow.
@@ -48,6 +57,7 @@ pub struct ExperimentBuilder {
     cfg: ExperimentConfig,
     opts: SimOptions,
     policies: Option<PolicyBundle>,
+    sinks: Vec<Box<dyn EventSink>>,
 }
 
 impl Experiment {
@@ -62,6 +72,7 @@ impl Experiment {
             cfg,
             opts: SimOptions::default(),
             policies: None,
+            sinks: Vec::new(),
         }
     }
 
@@ -91,32 +102,93 @@ impl Experiment {
     /// workloads — the shape [`resolve_workload`] returns — for callers
     /// that drive the workloads themselves (e.g. the wall-clock serving
     /// example) and want ownership without cloning every trajectory.
+    /// Attached sinks are dropped: there is no engine for them to
+    /// observe.
     pub fn into_workloads(self) -> (ExperimentConfig, Vec<StepWorkload>) {
         (self.cfg, self.step_workloads)
     }
 
-    /// Run the discrete-event simulation, consuming the experiment.
-    pub fn run(self) -> SimOutcome {
-        crate::orchestrator::simloop::run_resolved(
-            &self.cfg,
-            &self.opts,
+    /// Attach an observer ([`crate::orchestrator::EventSink`]) to the
+    /// built experiment; it flows into the session/run. Sinks observe
+    /// and may stop the run early — they cannot perturb it (DESIGN.md
+    /// §9).
+    pub fn with_sink(mut self, sink: Box<dyn EventSink>) -> Self {
+        self.sinks.push(sink);
+        self
+    }
+
+    /// Open the experiment as a resumable [`Session`]: incremental
+    /// stepping ([`Session::step`] yields one finalized
+    /// [`StepReport`] per MARL step), typed event observation, and
+    /// early stop. [`Experiment::run`]/[`Experiment::evaluate`] are
+    /// thin drains over this.
+    pub fn session(self) -> Result<Session, PallasError> {
+        // The builder guarantees this invariant (resolve_workload
+        // produces one workload per resolved step); the typed check
+        // replaces a construction assert for callers that assemble an
+        // Experiment through future non-builder paths.
+        if self.step_workloads.len() != self.cfg.steps {
+            return Err(PallasError::InvalidConfig(format!(
+                "experiment has {} step workloads for {} steps",
+                self.step_workloads.len(),
+                self.cfg.steps
+            )));
+        }
+        let engine = crate::orchestrator::simloop::Engine::new(
+            self.cfg,
+            self.opts,
             self.step_workloads,
-            &self.policies,
-        )
+            self.policies,
+            crate::orchestrator::events::SinkSet::from_sinks(self.sinks),
+        );
+        Ok(Session::from_engine(engine))
+    }
+
+    /// Run the discrete-event simulation to completion, consuming the
+    /// experiment — a drain over [`Experiment::session`]. The one
+    /// runtime failure the engine models — the run loop's livelock
+    /// guard — surfaces as [`PallasError::EventBudget`].
+    pub fn try_run(self) -> Result<SimOutcome, PallasError> {
+        self.session().and_then(Session::run_to_end)
+    }
+
+    /// [`Experiment::try_run`] for callers that accept the panicking
+    /// convenience contract.
+    ///
+    /// # Panics
+    ///
+    /// On a tripped run-loop event budget (livelock guard), with the
+    /// budget error's `Display` text — it keeps the prefix the run
+    /// loop always panicked with.
+    pub fn run(self) -> SimOutcome {
+        self.try_run().unwrap_or_else(|e| panic!("{e}"))
     }
 
     /// Run and aggregate per-step reports into the per-sample averages
     /// the paper tables quote. For step-overlapping pipelines (MARTI's
     /// one-step-async) the E2E figure is amortized over the whole run,
     /// exactly as [`crate::baselines::try_evaluate`] reports it.
-    pub fn evaluate(self) -> StepReport {
+    ///
+    /// Errors on a tripped event budget
+    /// ([`PallasError::EventBudget`]), and with
+    /// [`PallasError::EmptyRun`] on a run that produced no step
+    /// reports — a zero-step experiment, or an attached stop sink
+    /// cutting the run before the first step boundary (drive a session
+    /// and use [`SimOutcome::evaluate`] to handle partial outcomes).
+    pub fn try_evaluate(self) -> Result<StepReport, PallasError> {
         let overlaps = self.policies.pipeline.overlaps_steps();
-        let out = self.run();
-        let mut rep = aggregate(&out.reports);
-        if overlaps {
-            rep.e2e_s = out.total_s / out.reports.len().max(1) as f64;
-        }
-        rep
+        let out = self.try_run()?;
+        out.evaluate(overlaps).ok_or(PallasError::EmptyRun)
+    }
+
+    /// [`Experiment::try_evaluate`] for callers that accept the
+    /// panicking convenience contract.
+    ///
+    /// # Panics
+    ///
+    /// Where [`Experiment::try_evaluate`] errors.
+    pub fn evaluate(self) -> StepReport {
+        self.try_evaluate().unwrap_or_else(|e| panic!("{e}"))
     }
 }
 
@@ -171,6 +243,15 @@ impl ExperimentBuilder {
         self
     }
 
+    /// Attach an observer ([`crate::orchestrator::EventSink`]) — e.g.
+    /// a progress printer, a JSONL streamer, a trace recorder, or an
+    /// early-stop budget. Sinks accumulate; they observe the run in
+    /// attachment order.
+    pub fn sink(mut self, sink: Box<dyn EventSink>) -> Self {
+        self.sinks.push(sink);
+        self
+    }
+
     /// Resolve the workload (scenario shaping or trace replay, exactly
     /// once) and fix the policy bundle. All resolution failures —
     /// unknown scenario, unreadable/corrupt/mismatched trace — surface
@@ -185,6 +266,7 @@ impl ExperimentBuilder {
             opts: self.opts,
             policies,
             step_workloads,
+            sinks: self.sinks,
         })
     }
 }

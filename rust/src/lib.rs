@@ -15,6 +15,11 @@
 //! The engine's public API is the [`experiment::Experiment`] builder
 //! over pluggable framework [`policy`] objects (DESIGN.md §8); every
 //! fallible entry point reports a structured [`error::PallasError`].
+//! Execution is streaming-first (DESIGN.md §9): an
+//! [`orchestrator::Session`] steps the engine one MARL step at a time,
+//! typed [`orchestrator::EngineEvent`]s flow to attached
+//! [`orchestrator::EventSink`]s, and a sink can stop a run early with
+//! a well-formed partial outcome.
 //! * **L2 (python/compile/model.py)** — GRPO policy transformer, lowered
 //!   once to HLO text (`make artifacts`).
 //! * **L1 (python/compile/kernels/)** — Pallas flash-attention and fused

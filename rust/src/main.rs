@@ -23,15 +23,25 @@
 //! Config overrides: --workload MA|CA --framework <name> --steps N
 //! --seed N --micro-batch N --delta N --instances N --json <path>
 //! --scenario <preset> --trace <path> --jobs N (or PALLAS_JOBS)
+//!
+//! Streaming (DESIGN.md §9): `simulate`/`sweep` accept `--progress`
+//! (live progress on stderr; stdout and --json stay byte-identical)
+//! and `--emit jsonl` (per-step / per-cell report lines streamed to
+//! stdout); `simulate` additionally takes `--max-wall-s N` (stop the
+//! run after N real seconds with a well-formed partial result) and
+//! `--emit jsonl-batch` (the same lines from a monolithic run — the
+//! CI reference the streamed variant is byte-diffed against).
 
 use flexmarl::baselines::{sweep, Framework};
 use flexmarl::config::{framework_by_name, ExperimentConfig, ModelScale, WorkloadConfig};
 use flexmarl::experiment::Experiment;
 use flexmarl::metrics::{render_table2, table_rows, StepReport};
-use flexmarl::orchestrator::SimOptions;
+use flexmarl::orchestrator::{JsonlSink, ProgressSink, SimOptions, WallClockSink};
 use flexmarl::training::{swap_in_cost, swap_out_cost};
 use flexmarl::util::cli::Args;
 use flexmarl::util::json::Json;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Duration;
 
 fn main() {
     let args = Args::from_env();
@@ -66,10 +76,15 @@ options: --workload MA|CA  --framework <name>  --steps N  --seed N
          --micro-batch N  --delta N  --instances N  --json <path>  --quiet
          --scenario <preset>  (see `flexmarl scenarios`)
          --trace <path>       (replay a recorded JSONL trace)
+         --progress           (live progress on stderr; stdout unchanged)
+simulate: --emit jsonl        (stream one StepReport JSON line per step)
+         --emit jsonl-batch   (same lines from a monolithic run)
+         --max-wall-s N       (stop after N real seconds, partial result)
 sweep:   framework × scenario × seed grid on the parallel executor;
          --jobs N (default PALLAS_JOBS or all cores) --replicates N
          --framework/--scenario restrict an axis; --json is
-         byte-identical for any --jobs
+         byte-identical for any --jobs; --emit jsonl streams one line
+         per completed cell (completion order)
 scenarios: list presets; --run executes the scenario sweep [--jobs N]
 record:  --scenario <preset> --steps N --seed N --out <path>
 replay:  --trace <path> [--framework <name>]";
@@ -143,9 +158,76 @@ fn emit_json(args: &Args, j: &Json) {
 fn cmd_simulate(args: &Args) {
     let cfg = build_cfg(args);
     let opts = build_opts(args);
-    let rep = run_eval(&cfg, &opts);
-    print_report(&rep);
-    emit_json(args, &rep.to_json());
+    let emit = args.get("emit");
+    let progress = args.has_flag("progress");
+    let max_wall = args.get("max-wall-s").map(|v| {
+        let s = v.parse::<f64>().ok().filter(|s| s.is_finite() && *s >= 0.0);
+        s.unwrap_or_else(|| {
+            eprintln!("--max-wall-s needs a non-negative number of seconds (got '{v}')");
+            std::process::exit(2)
+        })
+    });
+    if emit.is_none() && !progress && max_wall.is_none() {
+        // Classic run-to-completion path — stdout stays byte-for-byte
+        // what it always was.
+        let rep = run_eval(&cfg, &opts);
+        print_report(&rep);
+        emit_json(args, &rep.to_json());
+        return;
+    }
+    match emit {
+        None | Some("jsonl") | Some("jsonl-batch") => {}
+        Some(other) => {
+            eprintln!("unknown --emit mode '{other}' (jsonl | jsonl-batch)");
+            std::process::exit(2);
+        }
+    }
+    let mut exp = build_experiment(&cfg, &opts);
+    let total_steps = exp.config().steps;
+    let overlaps = exp.policies().pipeline.overlaps_steps();
+    if progress {
+        exp = exp.with_sink(Box::new(ProgressSink::stderr(total_steps)));
+    }
+    if let Some(s) = max_wall {
+        exp = exp.with_sink(Box::new(WallClockSink::after(Duration::from_secs_f64(s))));
+    }
+    if emit == Some("jsonl") {
+        // Streamed: one line per step, written the moment it completes.
+        exp = exp.with_sink(Box::new(JsonlSink::stdout()));
+    }
+    let out = exp.try_run().unwrap_or_else(|e| {
+        eprintln!("simulation failed: {e}");
+        std::process::exit(1)
+    });
+    if emit == Some("jsonl-batch") {
+        // Reference batch path: the identical lines, printed after the
+        // run — CI byte-diffs this against the streamed variant.
+        for r in &out.reports {
+            println!("{}", r.to_json().to_string());
+        }
+    }
+    if let Some(stop) = &out.stop {
+        eprintln!(
+            "stopped early at t={:.1}s after {}/{} steps",
+            stop.t, stop.steps_completed, total_steps
+        );
+    }
+    match out.evaluate(overlaps) {
+        Some(rep) => {
+            if emit.is_none() {
+                // jsonl modes keep stdout pure report lines.
+                print_report(&rep);
+            }
+            emit_json(args, &rep.to_json());
+        }
+        None => {
+            // Nothing completed: exit non-zero so a consumer waiting
+            // on stdout/--json (never written) can tell — a stale
+            // r.json from a previous run must not read as success.
+            eprintln!("no steps completed before the stop");
+            std::process::exit(1);
+        }
+    }
 }
 
 fn print_report(r: &StepReport) {
@@ -255,7 +337,7 @@ fn cmd_fig1(args: &Args) {
         println!("  p{:<4} {:>8.1}s", (q * 100.0) as u32, lats[idx]);
     }
     println!("== Fig 1(b): queued requests over time (agents 0..3) ==");
-    for (a, series) in &r.queued_series {
+    for (a, series) in &out.series.queued {
         let peak = series.iter().map(|&(_, q)| q).max().unwrap_or(0);
         println!("  agent {a}: peak queue {peak}, samples {}", series.len());
     }
@@ -271,7 +353,7 @@ fn cmd_fig8(args: &Args) {
         "== Figs 8/9: processed rollout load over time ({}, {}) ==",
         cfg.framework.name, cfg.workload.name
     );
-    for (a, series) in &r.processed_series {
+    for (a, series) in &out.series.processed {
         let total = series.last().map(|&(_, c)| c).unwrap_or(0);
         let t_done = series
             .iter()
@@ -355,13 +437,58 @@ fn cmd_sweep(args: &Args) {
         replicates: args.get_usize("replicates", 1),
         overrides: flexmarl::exec::Overrides::default(),
     };
+    let emit = args.get("emit");
+    match emit {
+        None | Some("jsonl") => {}
+        Some(other) => {
+            eprintln!("unknown --emit mode '{other}' for sweep (jsonl)");
+            std::process::exit(2);
+        }
+    }
+    let progress = args.has_flag("progress");
     let specs = grid.specs(&cfg);
     let jobs = args.get_usize("jobs", flexmarl::util::pool::default_jobs());
     // Worker count goes to stderr only: stdout/JSON must not depend
     // on --jobs.
     eprintln!("sweep: {} runs, jobs={jobs}", specs.len());
+    // Per-cell completion stream: progress lines on stderr, `--emit
+    // jsonl` cell lines on stdout. Cells stream in completion order
+    // (jobs-dependent); each line's content — and the final grid JSON,
+    // which is built from the input-ordered results below — is
+    // byte-identical for any --jobs.
+    let done = AtomicUsize::new(0);
+    let n_cells = specs.len();
+    let results = flexmarl::exec::run_specs_streamed(&cfg, &opts, &specs, jobs, |i, res| {
+        let k = done.fetch_add(1, Ordering::Relaxed) + 1;
+        let spec = &specs[i];
+        match res {
+            Ok(r) => {
+                if progress {
+                    eprintln!(
+                        "sweep: cell {k}/{n_cells} done  {} × {} (seed {})  e2e {:.1}s",
+                        spec.framework.name, r.scenario, spec.seed, r.e2e_s
+                    );
+                }
+                if emit == Some("jsonl") {
+                    let line = Json::obj(vec![
+                        ("cell", Json::num(i as f64)),
+                        ("framework", Json::str(spec.framework.name)),
+                        ("scenario", Json::str(r.scenario.clone())),
+                        ("seed", Json::str(spec.seed.to_string())),
+                        ("report", r.to_json()),
+                    ]);
+                    println!("{}", line.to_string());
+                }
+            }
+            Err(e) => {
+                if progress {
+                    eprintln!("sweep: cell {k}/{n_cells} failed: {e}");
+                }
+            }
+        }
+    });
     let mut reports = Vec::with_capacity(specs.len());
-    for res in flexmarl::exec::run_specs(&cfg, &opts, &specs, jobs) {
+    for res in results {
         match res {
             Ok(r) => reports.push(r),
             Err(e) => {
@@ -370,21 +497,25 @@ fn cmd_sweep(args: &Args) {
             }
         }
     }
-    println!(
-        "{:<26} {:<13} {:>10} {:>9} {:>10} {:>7} {:>6}",
-        "framework", "scenario", "seed", "e2e", "tps", "util%", "scale"
-    );
-    for (s, r) in specs.iter().zip(&reports) {
+    if emit.is_none() {
+        // The table shares stdout with the jsonl stream — suppress it
+        // there so stdout stays pure cell lines.
         println!(
-            "{:<26} {:<13} {:>10} {:>8.1}s {:>10.1} {:>7.1} {:>6}",
-            s.framework.name,
-            r.scenario,
-            s.seed,
-            r.e2e_s,
-            r.throughput_tps(),
-            r.utilization() * 100.0,
-            r.scale_ops
+            "{:<26} {:<13} {:>10} {:>9} {:>10} {:>7} {:>6}",
+            "framework", "scenario", "seed", "e2e", "tps", "util%", "scale"
         );
+        for (s, r) in specs.iter().zip(&reports) {
+            println!(
+                "{:<26} {:<13} {:>10} {:>8.1}s {:>10.1} {:>7.1} {:>6}",
+                s.framework.name,
+                r.scenario,
+                s.seed,
+                r.e2e_s,
+                r.throughput_tps(),
+                r.utilization() * 100.0,
+                r.scale_ops
+            );
+        }
     }
     emit_json(args, &flexmarl::exec::grid_report(&cfg, &specs, &reports));
 }

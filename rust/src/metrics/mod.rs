@@ -14,6 +14,12 @@ use crate::util::json::Json;
 use std::collections::BTreeMap;
 
 /// Result of simulating (or really running) one MARL step.
+///
+/// Every field is finalized the moment the step completes — this is
+/// what lets [`crate::orchestrator::Session::step`] stream a report per
+/// step with no end-of-run pass. Run-wide data (the poll-sampled time
+/// series behind Figs. 1b/8/9/10) lives in [`RunSeries`] on
+/// [`crate::orchestrator::SimOutcome`] instead.
 #[derive(Debug, Clone, Default)]
 pub struct StepReport {
     pub framework: String,
@@ -38,18 +44,31 @@ pub struct StepReport {
     pub pool_devices: usize,
     /// Per-agent processed-call counts.
     pub agent_calls: Vec<usize>,
-    /// (time, processed_calls) series per tracked agent (Figs. 8/9).
-    pub processed_series: BTreeMap<usize, Vec<(f64, usize)>>,
-    /// (time, queued_requests) series per tracked agent (Fig. 1b).
-    pub queued_series: BTreeMap<usize, Vec<(f64, usize)>>,
-    /// (time, busy_devices) series (Fig. 10).
-    pub busy_series: Vec<(f64, usize)>,
     /// Interaction latencies of completed trajectories (Fig. 1a).
     pub trajectory_latencies: Vec<f64>,
-    /// Scaling operations performed (inter-agent LB).
+    /// Scaling operations performed (inter-agent LB) during this step's
+    /// completion window (from the previous step's completion to this
+    /// one's).
     pub scale_ops: usize,
-    /// State swap seconds incurred (training engine).
+    /// State swap seconds incurred (training engine) during this step's
+    /// completion window.
     pub swap_s: f64,
+}
+
+/// Poll-sampled time series covering the whole run — the data behind
+/// Figs. 1b, 8, 9 and 10. These span step boundaries (the scaler keeps
+/// polling across steps), so they belong to the run, not to any one
+/// [`StepReport`]; they come back on
+/// [`crate::orchestrator::SimOutcome::series`] (and keep growing while
+/// a [`crate::orchestrator::Session`] is live).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RunSeries {
+    /// (time, processed_calls) per tracked agent (Figs. 8/9).
+    pub processed: BTreeMap<usize, Vec<(f64, usize)>>,
+    /// (time, queued_requests) per tracked agent (Fig. 1b).
+    pub queued: BTreeMap<usize, Vec<(f64, usize)>>,
+    /// (time, busy_devices) samples (Fig. 10).
+    pub busy: Vec<(f64, usize)>,
 }
 
 impl StepReport {

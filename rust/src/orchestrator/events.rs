@@ -1,0 +1,523 @@
+//! Typed observer API for the step engine (DESIGN.md §9).
+//!
+//! The engine is a streaming system — the micro-batch asynchronous
+//! pipeline moves experience between rollout and training continuously
+//! — and this module is how callers watch it move: an [`EngineEvent`]
+//! is emitted at every named decision point of the run loop, and an
+//! [`EventSink`] receives each one together with the virtual time it
+//! happened at.
+//!
+//! **Sink contract (the determinism rule):** sinks observe, they never
+//! mutate. A sink gets `&EngineEvent` — shared borrows into live engine
+//! state — and its only channel back into the engine is the returned
+//! [`ControlFlow`]: `Stop` asks the run to halt after the current event
+//! is fully handled. Attaching any combination of sinks therefore
+//! cannot change a single bit of the simulation; it can only truncate
+//! it. (`tests/session.rs` pins this.)
+//!
+//! Shipped sinks:
+//!
+//! * [`NullSink`] — ignores everything (dispatch-overhead baseline for
+//!   the `session::` bench group).
+//! * [`ProgressSink`] — human-readable step/migration progress lines,
+//!   stderr by default (`--progress` on the CLI).
+//! * [`JsonlSink`] — one compact [`StepReport`] JSON line per finished
+//!   step, streamed as the run advances (`--emit jsonl`).
+//! * [`TraceSink`] — captures the per-step workloads flowing through
+//!   the engine into a [`Trace`], replacing the old special-cased
+//!   recording path; the recorded trace round-trips bit-for-bit.
+//! * [`BudgetSink`] — early stop on a step, generated-token, or
+//!   virtual-time budget.
+//! * [`WallClockSink`] — early stop on *real* elapsed time
+//!   (`--max-wall-s`); the one shipped sink whose stop point is
+//!   machine-dependent by design.
+
+use crate::config::ExperimentConfig;
+use crate::error::PallasError;
+use crate::metrics::StepReport;
+use crate::workload::{StepWorkload, Trace};
+use std::io::Write;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// What a sink tells the engine after observing an event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ControlFlow {
+    /// Keep running.
+    Continue,
+    /// Halt the run after the current event finishes handling. The
+    /// outcome stays well-formed: every step completed so far keeps its
+    /// report, and [`crate::orchestrator::SimOutcome::stop`] records
+    /// where the run was cut.
+    Stop,
+}
+
+/// One observable decision of the step engine. Borrowed fields point
+/// into live engine state — copy out what you need to keep.
+///
+/// `#[non_exhaustive]`: future PRs may add kinds; sinks must have a
+/// catch-all arm.
+#[non_exhaustive]
+#[derive(Debug)]
+pub enum EngineEvent<'a> {
+    /// A MARL step's rollout began; `workload` is the step's resolved
+    /// per-call workload (what [`TraceSink`] records).
+    StepStarted {
+        step: usize,
+        workload: &'a StepWorkload,
+    },
+    /// A step fully completed (rollout done, every agent's update
+    /// applied); `report` is the step's finalized metrics — the same
+    /// value [`crate::orchestrator::Session::step`] yields.
+    StepFinished {
+        step: usize,
+        report: &'a StepReport,
+    },
+    /// Training admitted a micro batch of `n` samples for `agent`
+    /// (§4.3 pipeline admission).
+    MicroBatchAdmitted {
+        step: usize,
+        agent: usize,
+        n: usize,
+    },
+    /// The balancer decided to migrate `n_instances` inference
+    /// instances from `donor` to `target` (§5.2).
+    MigrationPlanned {
+        donor: usize,
+        target: usize,
+        n_instances: usize,
+    },
+    /// A scaler poll tick concluded; `migrated` says whether this tick
+    /// planned a migration, `busy_devices` is the sampled load.
+    ScalerDecision {
+        migrated: bool,
+        busy_devices: usize,
+    },
+    /// An agent's training state began swapping onto devices (§6.1).
+    SwapIn {
+        agent: usize,
+        step: usize,
+        cost_s: f64,
+    },
+    /// An agent's training state began swapping off (suspend-to-
+    /// destroy).
+    SwapOut { agent: usize, cost_s: f64 },
+    /// A colocated pool began a phase switch for `step` (`to_train`:
+    /// offload inference / onload training, else the reverse).
+    PhaseSwitch { step: usize, to_train: bool },
+}
+
+/// Observer of [`EngineEvent`]s. `t` is virtual simulation time.
+///
+/// Implementations must be `Send` (sweep cells run on worker threads)
+/// and must not assume any event kind arrives: treat the enum as open.
+pub trait EventSink: Send {
+    /// Observe one event; return [`ControlFlow::Stop`] to request an
+    /// early halt.
+    fn on_event(&mut self, t: f64, ev: &EngineEvent<'_>) -> ControlFlow;
+}
+
+/// The engine's sink collection. Empty by default — the no-sink fast
+/// path is one `is_empty` branch per decision point, which the
+/// `session::` hotpath bench group pins at ~zero overhead.
+#[derive(Default)]
+pub(crate) struct SinkSet {
+    sinks: Vec<Box<dyn EventSink>>,
+    stop: bool,
+}
+
+impl SinkSet {
+    pub(crate) fn from_sinks(sinks: Vec<Box<dyn EventSink>>) -> SinkSet {
+        SinkSet { sinks, stop: false }
+    }
+
+    pub(crate) fn push(&mut self, sink: Box<dyn EventSink>) {
+        self.sinks.push(sink);
+    }
+
+    /// Fan one event out to every sink; latch the stop flag if any
+    /// sink requests it (all sinks still see the event).
+    #[inline]
+    pub(crate) fn emit(&mut self, t: f64, ev: &EngineEvent<'_>) {
+        if self.sinks.is_empty() {
+            return;
+        }
+        for s in &mut self.sinks {
+            if s.on_event(t, ev) == ControlFlow::Stop {
+                self.stop = true;
+            }
+        }
+    }
+
+    #[inline]
+    pub(crate) fn stop_requested(&self) -> bool {
+        self.stop
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shipped sinks
+// ---------------------------------------------------------------------------
+
+/// Ignores every event. Exists so the observer dispatch itself can be
+/// benchmarked against the no-sink inlined loop.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NullSink;
+
+impl EventSink for NullSink {
+    fn on_event(&mut self, _t: f64, _ev: &EngineEvent<'_>) -> ControlFlow {
+        ControlFlow::Continue
+    }
+}
+
+/// Human-readable progress lines (step start/finish, migrations).
+/// Writes to stderr by default so stdout stays machine-parseable —
+/// the CLI's `--progress` contract is that stdout and `--json` output
+/// are byte-identical with or without it.
+pub struct ProgressSink {
+    total_steps: usize,
+    w: Box<dyn Write + Send>,
+}
+
+impl ProgressSink {
+    /// Progress to stderr; `total_steps` labels lines as `k/N`.
+    pub fn stderr(total_steps: usize) -> ProgressSink {
+        ProgressSink::new(total_steps, Box::new(std::io::stderr()))
+    }
+
+    pub fn new(total_steps: usize, w: Box<dyn Write + Send>) -> ProgressSink {
+        ProgressSink { total_steps, w }
+    }
+}
+
+impl EventSink for ProgressSink {
+    fn on_event(&mut self, t: f64, ev: &EngineEvent<'_>) -> ControlFlow {
+        // Progress output is best-effort: a closed pipe must not kill
+        // the simulation.
+        let _ = match ev {
+            EngineEvent::StepStarted { step, .. } => writeln!(
+                self.w,
+                "[t={t:9.1}s] step {}/{}: rollout started",
+                step + 1,
+                self.total_steps
+            ),
+            EngineEvent::StepFinished { step, report } => writeln!(
+                self.w,
+                "[t={t:9.1}s] step {}/{}: done  e2e {:.1}s  {:.0} tok/s  \
+                 scale_ops {}",
+                step + 1,
+                self.total_steps,
+                report.e2e_s,
+                report.throughput_tps(),
+                report.scale_ops
+            ),
+            EngineEvent::MigrationPlanned {
+                donor,
+                target,
+                n_instances,
+            } => writeln!(
+                self.w,
+                "[t={t:9.1}s] balancer: {n_instances} instance(s) \
+                 agent{donor} -> agent{target}"
+            ),
+            _ => Ok(()),
+        };
+        ControlFlow::Continue
+    }
+}
+
+/// Streams one compact JSON line per finished step — exactly
+/// [`StepReport::to_json`] — as the run advances. Concatenating the
+/// streamed lines of a session-driven run reproduces, byte for byte,
+/// the per-step reports of a monolithic run (a CI job diffs the two).
+pub struct JsonlSink {
+    w: Box<dyn Write + Send>,
+}
+
+impl JsonlSink {
+    /// Stream to stdout (the CLI's `--emit jsonl`).
+    pub fn stdout() -> JsonlSink {
+        JsonlSink::new(Box::new(std::io::stdout()))
+    }
+
+    pub fn new(w: Box<dyn Write + Send>) -> JsonlSink {
+        JsonlSink { w }
+    }
+}
+
+impl EventSink for JsonlSink {
+    fn on_event(&mut self, _t: f64, ev: &EngineEvent<'_>) -> ControlFlow {
+        if let EngineEvent::StepFinished { report, .. } = ev {
+            // Flush per line: the point of streaming is that a consumer
+            // sees each step as it lands, not at process exit.
+            let _ = writeln!(self.w, "{}", report.to_json().to_string());
+            let _ = self.w.flush();
+        }
+        ControlFlow::Continue
+    }
+}
+
+/// Shared state behind a [`TraceSink`]/[`TraceHandle`] pair.
+struct TraceState {
+    workload: String,
+    scenario: String,
+    seed: u64,
+    n_agents: usize,
+    steps: Vec<StepWorkload>,
+}
+
+/// Records the per-step workloads the engine executes into a
+/// [`Trace`] — trace capture as a plain observer instead of a special
+/// path beside the run loop. Because the engine replays the workloads
+/// [`crate::orchestrator::resolve_workload`] produced, the captured
+/// trace is bit-identical to `Trace::record` on the same resolved
+/// config (pinned in `tests/session.rs`).
+pub struct TraceSink {
+    shared: Arc<Mutex<TraceState>>,
+}
+
+/// Caller-side handle to a [`TraceSink`]'s captured steps: the sink is
+/// boxed away into the engine, the handle stays with you.
+pub struct TraceHandle {
+    shared: Arc<Mutex<TraceState>>,
+}
+
+impl TraceSink {
+    /// Build a recording sink for a *resolved* experiment config (the
+    /// one [`crate::experiment::Experiment::config`] returns — its
+    /// scenario field is already the canonical preset name the trace
+    /// header must carry).
+    pub fn new(cfg: &ExperimentConfig) -> (TraceSink, TraceHandle) {
+        let shared = Arc::new(Mutex::new(TraceState {
+            workload: cfg.workload.name.clone(),
+            scenario: cfg.workload.scenario.clone(),
+            seed: cfg.seed,
+            n_agents: cfg.workload.agents.len(),
+            steps: Vec::new(),
+        }));
+        (
+            TraceSink {
+                shared: Arc::clone(&shared),
+            },
+            TraceHandle { shared },
+        )
+    }
+}
+
+impl EventSink for TraceSink {
+    fn on_event(&mut self, _t: f64, ev: &EngineEvent<'_>) -> ControlFlow {
+        if let EngineEvent::StepStarted { workload, .. } = ev {
+            let mut st = self.shared.lock().unwrap();
+            st.steps.push((*workload).clone());
+        }
+        ControlFlow::Continue
+    }
+}
+
+impl TraceHandle {
+    /// Assemble the captured steps into a [`Trace`]. Mirrors the
+    /// validation `Trace::record` applies: at least one step must have
+    /// been captured and the seed must round-trip through the JSONL
+    /// header.
+    pub fn trace(&self) -> Result<Trace, PallasError> {
+        let st = self.shared.lock().unwrap();
+        if st.steps.is_empty() {
+            return Err(PallasError::Trace(
+                "cannot record a zero-step trace (nothing to replay)".into(),
+            ));
+        }
+        // A sink attached after step 0 started (or mid-run) captured a
+        // suffix, not a replayable trace — steps must be contiguous
+        // from 0, exactly what replay's parser will demand.
+        if st.steps.iter().enumerate().any(|(i, w)| w.step != i) {
+            return Err(PallasError::Trace(
+                "trace capture missed leading steps (sink attached mid-run?)".into(),
+            ));
+        }
+        if st.seed > crate::workload::trace::MAX_SEED {
+            return Err(PallasError::Trace(format!(
+                "seed {} exceeds 2^53 and cannot round-trip through the JSONL header",
+                st.seed
+            )));
+        }
+        Ok(Trace {
+            workload: st.workload.clone(),
+            scenario: st.scenario.clone(),
+            seed: st.seed,
+            n_agents: st.n_agents,
+            steps: st.steps.clone(),
+        })
+    }
+
+    /// Steps captured so far (grows while a session is stepping).
+    pub fn steps_recorded(&self) -> usize {
+        self.shared.lock().unwrap().steps.len()
+    }
+}
+
+/// Early stop on simulation-side budgets: completed steps, generated
+/// tokens, or virtual seconds. Budgets compose — the first one
+/// exceeded stops the run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BudgetSink {
+    max_steps: Option<usize>,
+    max_tokens: Option<f64>,
+    max_sim_s: Option<f64>,
+    steps_done: usize,
+    tokens: f64,
+}
+
+impl BudgetSink {
+    pub fn new() -> BudgetSink {
+        BudgetSink::default()
+    }
+
+    /// Stop after `n` completed steps.
+    pub fn max_steps(mut self, n: usize) -> BudgetSink {
+        self.max_steps = Some(n);
+        self
+    }
+
+    /// Stop once at least `tokens` have been generated (checked at
+    /// step boundaries — the report carries the step's token count).
+    pub fn max_tokens(mut self, tokens: f64) -> BudgetSink {
+        self.max_tokens = Some(tokens);
+        self
+    }
+
+    /// Stop once virtual time reaches `s` seconds.
+    pub fn max_sim_s(mut self, s: f64) -> BudgetSink {
+        self.max_sim_s = Some(s);
+        self
+    }
+}
+
+impl EventSink for BudgetSink {
+    fn on_event(&mut self, t: f64, ev: &EngineEvent<'_>) -> ControlFlow {
+        if let EngineEvent::StepFinished { report, .. } = ev {
+            self.steps_done += 1;
+            self.tokens += report.tokens;
+        }
+        let step_hit = self.max_steps.is_some_and(|m| self.steps_done >= m);
+        let tok_hit = self.max_tokens.is_some_and(|m| self.tokens >= m);
+        let sim_hit = self.max_sim_s.is_some_and(|m| t >= m);
+        if step_hit || tok_hit || sim_hit {
+            ControlFlow::Stop
+        } else {
+            ControlFlow::Continue
+        }
+    }
+}
+
+/// Early stop on *real* elapsed time (the CLI's `--max-wall-s`).
+/// Deliberately nondeterministic: where the run is cut depends on the
+/// machine — completed steps are still bit-exact, there are just fewer
+/// of them on a slower box.
+pub struct WallClockSink {
+    deadline: Instant,
+}
+
+impl WallClockSink {
+    pub fn after(budget: Duration) -> WallClockSink {
+        WallClockSink {
+            deadline: Instant::now() + budget,
+        }
+    }
+}
+
+impl EventSink for WallClockSink {
+    fn on_event(&mut self, _t: f64, _ev: &EngineEvent<'_>) -> ControlFlow {
+        if Instant::now() >= self.deadline {
+            ControlFlow::Stop
+        } else {
+            ControlFlow::Continue
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(tokens: f64) -> StepReport {
+        StepReport {
+            framework: "X".into(),
+            tokens,
+            e2e_s: 10.0,
+            ..StepReport::default()
+        }
+    }
+
+    #[test]
+    fn budget_sink_stops_on_each_axis() {
+        let r = report(100.0);
+        let fin = EngineEvent::StepFinished { step: 0, report: &r };
+
+        let mut by_steps = BudgetSink::new().max_steps(2);
+        assert_eq!(by_steps.on_event(1.0, &fin), ControlFlow::Continue);
+        assert_eq!(by_steps.on_event(2.0, &fin), ControlFlow::Stop);
+
+        let mut by_tokens = BudgetSink::new().max_tokens(150.0);
+        assert_eq!(by_tokens.on_event(1.0, &fin), ControlFlow::Continue);
+        assert_eq!(by_tokens.on_event(2.0, &fin), ControlFlow::Stop);
+
+        let poll = EngineEvent::ScalerDecision { migrated: false, busy_devices: 0 };
+        let mut by_sim = BudgetSink::new().max_sim_s(5.0);
+        assert_eq!(by_sim.on_event(4.9, &poll), ControlFlow::Continue);
+        assert_eq!(by_sim.on_event(5.0, &poll), ControlFlow::Stop);
+    }
+
+    #[test]
+    fn sink_set_latches_stop_but_keeps_fanning_out() {
+        struct Counter(Arc<Mutex<usize>>, ControlFlow);
+        impl EventSink for Counter {
+            fn on_event(&mut self, _t: f64, _ev: &EngineEvent<'_>) -> ControlFlow {
+                *self.0.lock().unwrap() += 1;
+                self.1
+            }
+        }
+        let a = Arc::new(Mutex::new(0));
+        let b = Arc::new(Mutex::new(0));
+        let mut set = SinkSet::from_sinks(vec![
+            Box::new(Counter(Arc::clone(&a), ControlFlow::Stop)),
+            Box::new(Counter(Arc::clone(&b), ControlFlow::Continue)),
+        ]);
+        let r = report(1.0);
+        set.emit(0.0, &EngineEvent::StepFinished { step: 0, report: &r });
+        assert!(set.stop_requested());
+        // The stopping sink did not shadow the later one.
+        assert_eq!(*a.lock().unwrap(), 1);
+        assert_eq!(*b.lock().unwrap(), 1);
+    }
+
+    #[test]
+    fn jsonl_sink_emits_one_line_per_finished_step() {
+        struct Buf(Arc<Mutex<Vec<u8>>>);
+        impl Write for Buf {
+            fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+                self.0.lock().unwrap().extend_from_slice(buf);
+                Ok(buf.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let buf = Arc::new(Mutex::new(Vec::new()));
+        let mut sink = JsonlSink::new(Box::new(Buf(Arc::clone(&buf))));
+        let r = report(42.0);
+        let wl = StepWorkload {
+            step: 0,
+            trajectories: vec![],
+        };
+        sink.on_event(
+            0.0,
+            &EngineEvent::StepStarted {
+                step: 0,
+                workload: &wl,
+            },
+        );
+        sink.on_event(1.0, &EngineEvent::StepFinished { step: 0, report: &r });
+        let text = String::from_utf8(buf.lock().unwrap().clone()).unwrap();
+        assert_eq!(text, format!("{}\n", r.to_json().to_string()));
+    }
+}

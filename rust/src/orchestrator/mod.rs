@@ -7,9 +7,23 @@
 //! the paper-scale experiments; the real PJRT-backed loop lives in
 //! [`crate::runtime::marl`] and `examples/marl_train.rs` — both share
 //! the same store / manager / scaler / allocator code paths.
+//!
+//! Execution is streaming-first (DESIGN.md §9): a [`Session`] advances
+//! the engine one MARL step at a time, typed [`EngineEvent`]s flow to
+//! attached [`EventSink`]s, and a sink can stop the run early with a
+//! well-formed partial [`SimOutcome`]. The run-to-completion entries
+//! ([`try_simulate`], [`crate::experiment::Experiment::run`]) are thin
+//! drains over a session.
 
+pub mod events;
+pub mod session;
 pub mod simloop;
 
+pub use events::{
+    BudgetSink, ControlFlow, EngineEvent, EventSink, JsonlSink, NullSink, ProgressSink,
+    TraceHandle, TraceSink, WallClockSink,
+};
+pub use session::Session;
 #[allow(deprecated)] // re-exported for back-compat until the panicking wrapper is removed
 pub use simloop::simulate;
-pub use simloop::{resolve_workload, try_simulate, SimOptions, SimOutcome};
+pub use simloop::{resolve_workload, try_simulate, SimOptions, SimOutcome, StopInfo};

@@ -1,0 +1,136 @@
+//! Incremental engine stepping (DESIGN.md §9).
+//!
+//! A [`Session`] is the engine opened up at the step boundary: instead
+//! of one opaque `run() -> SimOutcome`, the caller advances the
+//! simulation one MARL step at a time and receives each step's
+//! finalized [`StepReport`] as it completes. Run-to-completion entries
+//! ([`crate::experiment::Experiment::run`],
+//! [`super::try_simulate`]) are thin drains over a session, so a
+//! session-driven run is bit-identical to a monolithic one by
+//! construction — and `tests/session.rs` pins it across the golden
+//! grid anyway.
+//!
+//! Observation and early stop go through the typed sink API
+//! ([`super::events`]): attach sinks before stepping, and any sink
+//! returning [`ControlFlow::Stop`](super::events::ControlFlow::Stop)
+//! cuts the run at the next event boundary with a well-formed partial
+//! outcome.
+
+use super::events::EventSink;
+use super::simloop::{Engine, SimOutcome, StopInfo};
+use crate::config::ExperimentConfig;
+use crate::error::PallasError;
+use crate::metrics::StepReport;
+
+/// A resumable simulation: step it, watch it, stop it.
+///
+/// Obtain one from [`crate::experiment::Experiment::session`]. Typical
+/// shape:
+///
+/// ```no_run
+/// use flexmarl::config::{ExperimentConfig, Framework, WorkloadConfig};
+/// use flexmarl::experiment::Experiment;
+/// use flexmarl::orchestrator::ProgressSink;
+///
+/// let cfg = ExperimentConfig::new(WorkloadConfig::ma(), Framework::flexmarl());
+/// let mut session = Experiment::new(cfg).steps(3).build()?.session()?;
+/// session.add_sink(Box::new(ProgressSink::stderr(3)));
+/// while let Some(report) = session.step()? {
+///     eprintln!("live: {:.0} tok/s", report.throughput_tps());
+/// }
+/// let outcome = session.finish();
+/// # Ok::<(), flexmarl::error::PallasError>(())
+/// ```
+pub struct Session {
+    engine: Engine,
+    /// Every report yielded so far — what [`Session::finish`] hands
+    /// back as the outcome's report list.
+    reports: Vec<StepReport>,
+}
+
+impl Session {
+    pub(crate) fn from_engine(engine: Engine) -> Session {
+        Session {
+            engine,
+            reports: Vec::new(),
+        }
+    }
+
+    /// Attach an observer. Sinks see every event from this point on;
+    /// attach before the first [`Session::step`] to observe the whole
+    /// run. Sinks cannot perturb the simulation (the determinism rule,
+    /// DESIGN.md §9) — only truncate it via
+    /// [`ControlFlow::Stop`](super::events::ControlFlow::Stop).
+    pub fn add_sink(&mut self, sink: Box<dyn EventSink>) {
+        self.engine.add_sink(sink);
+    }
+
+    /// Advance the simulation until exactly one more MARL step
+    /// completes and return its report; `None` once the run is over
+    /// (all steps done, or a sink stopped it). The yielded sequence,
+    /// driven to exhaustion, is bit-identical to
+    /// [`crate::experiment::Experiment::run`]'s report list.
+    ///
+    /// # Errors
+    ///
+    /// [`PallasError::EventBudget`] if the run loop's livelock guard
+    /// trips — yielded once; the session then reports itself done.
+    pub fn step(&mut self) -> Result<Option<StepReport>, PallasError> {
+        match self.engine.pump_step()? {
+            Some(report) => {
+                self.reports.push(report.clone());
+                Ok(Some(report))
+            }
+            None => Ok(None),
+        }
+    }
+
+    /// Consume the session into an outcome over everything that
+    /// completed: the yielded reports, total virtual time, the
+    /// run-wide series, and the stop record if a sink cut the run.
+    /// Valid at any point — mid-run it is a well-formed partial
+    /// outcome.
+    pub fn finish(self) -> SimOutcome {
+        self.engine.into_outcome(self.reports)
+    }
+
+    /// Drain the session to exhaustion and finish — the monolithic
+    /// `run()` expressed over the streaming API. Pumps the engine
+    /// directly into the outcome's report list (no per-step clone —
+    /// that copy exists only for reports [`Session::step`] hands out
+    /// interactively), so a batch drain allocates exactly what the
+    /// retired monolithic loop did.
+    pub fn run_to_end(mut self) -> Result<SimOutcome, PallasError> {
+        while let Some(report) = self.engine.pump_step()? {
+            self.reports.push(report);
+        }
+        Ok(self.finish())
+    }
+
+    /// Steps completed (and yielded) so far.
+    pub fn steps_completed(&self) -> usize {
+        self.reports.len()
+    }
+
+    /// Current virtual time (timestamp of the last handled event).
+    pub fn now(&self) -> f64 {
+        self.engine.now()
+    }
+
+    /// `true` once [`Session::step`] can only return `None`: every
+    /// step reported, a sink stopped the run, or the event budget
+    /// tripped.
+    pub fn is_done(&self) -> bool {
+        self.engine.is_done()
+    }
+
+    /// The early-stop record, once a sink has requested one.
+    pub fn stop_info(&self) -> Option<&StopInfo> {
+        self.engine.stop_info()
+    }
+
+    /// The resolved config this session is simulating.
+    pub fn config(&self) -> &ExperimentConfig {
+        self.engine.config()
+    }
+}

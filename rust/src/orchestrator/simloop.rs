@@ -27,12 +27,22 @@
 //!
 //! New frameworks plug in as bundles through
 //! [`crate::experiment::Experiment`] — this file needs no edits.
+//!
+//! The run loop is cut at the MARL-step boundary: the crate-internal
+//! engine advances events until the next step completes and yields its
+//! finalized [`StepReport`] (every report input freezes at step
+//! completion — DESIGN.md §9). [`super::session::Session`] exposes that
+//! incrementally; the run-to-completion entries drain it, so streamed
+//! and monolithic runs are bit-identical by construction. Typed
+//! [`super::events::EngineEvent`]s fan out to attached sinks at every
+//! named decision point.
 
+use super::events::{EngineEvent, SinkSet};
 use crate::cluster::DevicePool;
 use crate::config::ExperimentConfig;
 use crate::error::PallasError;
 use crate::memstore::TransferModel;
-use crate::metrics::{Counters, MetricId, StepReport};
+use crate::metrics::{Counters, MetricId, RunSeries, StepReport};
 use crate::policy::{LoadSnapshot, PolicyBundle};
 use crate::rollout::{CallRef, Dispatch, RequestId, RolloutManager, TrajectoryScheduler};
 use crate::sim::{EventQueue, QueueKind};
@@ -41,7 +51,7 @@ use crate::training::{
     apply_update_s, grad_compute_s, swap_in_cost, swap_out_cost, AgentCentricAllocator,
 };
 use crate::workload::{scenario, StepWorkload, Trace};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 
 /// Engine knobs not fixed by the paper (documented in DESIGN.md §6).
 #[derive(Debug, Clone)]
@@ -178,10 +188,56 @@ struct StepCtl {
     group_pending: BTreeMap<(usize, usize), (usize, Vec<f64>)>,
 }
 
+/// Where and why a run was cut short by an
+/// [`EventSink`](super::events::EventSink) requesting
+/// [`ControlFlow::Stop`](super::events::ControlFlow::Stop).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StopInfo {
+    /// Virtual time at which the stop took effect (the last handled
+    /// event's timestamp).
+    pub t: f64,
+    /// MARL steps that fully completed — and therefore have reports —
+    /// before the stop.
+    pub steps_completed: usize,
+}
+
+/// Outcome of a simulation — complete, or partial when a sink stopped
+/// it early (`stop` is `Some` and `reports` covers only the completed
+/// steps; every completed step's report is bit-identical to the full
+/// run's).
 pub struct SimOutcome {
     pub reports: Vec<StepReport>,
-    /// Overall wall time of the whole simulated run.
+    /// Overall wall time of the simulated run (virtual seconds; on an
+    /// early stop, the time the run was cut).
     pub total_s: f64,
+    /// Run-wide poll-sampled time series (Figs. 1b/8/9/10) — these span
+    /// step boundaries, so they live here rather than on any one
+    /// [`StepReport`].
+    pub series: RunSeries,
+    /// `Some` when a sink requested an early stop.
+    pub stop: Option<StopInfo>,
+}
+
+impl SimOutcome {
+    /// Aggregate per-step reports into the per-sample averages the
+    /// paper tables quote ([`crate::metrics::aggregate`]); for
+    /// step-overlapping pipelines pass `overlaps = true` so E2E is
+    /// amortized over the run — `other_s` is then recomputed against
+    /// the amortized figure so the breakdown stays coherent
+    /// (`e2e ≈ rollout + train + other`; per-step reports carry actual
+    /// spans, DESIGN.md §9). `None` when no step completed (an early
+    /// stop before the first step boundary).
+    pub fn evaluate(&self, overlaps: bool) -> Option<StepReport> {
+        if self.reports.is_empty() {
+            return None;
+        }
+        let mut rep = crate::metrics::aggregate(&self.reports);
+        if overlaps {
+            rep.e2e_s = self.total_s / self.reports.len() as f64;
+            rep.other_s = (rep.e2e_s - rep.rollout_s - rep.train_s).max(0.0);
+        }
+        Some(rep)
+    }
 }
 
 /// Run the discrete-event simulation.
@@ -190,38 +246,31 @@ pub struct SimOutcome {
 ///
 /// Panics if the config's scenario name is unknown or its trace path
 /// is unreadable/invalid — callers that need a clean error (the CLI
-/// does) use [`try_simulate`], which resolves exactly once.
+/// does) use [`try_simulate`], which resolves exactly once — and on a
+/// tripped run-loop event budget (with the budget error's `Display`
+/// text, which keeps the old panic's message prefix).
 #[deprecated(
     since = "0.3.0",
     note = "panics on workload-resolution failure; use `try_simulate` or \
             `experiment::Experiment::new(cfg).build()?.run()`"
 )]
 pub fn simulate(cfg: &ExperimentConfig, opts: &SimOptions) -> SimOutcome {
-    try_simulate(cfg, opts).unwrap_or_else(|e| panic!("workload resolution failed: {e}"))
+    try_simulate(cfg, opts).unwrap_or_else(|e| match e {
+        PallasError::EventBudget { .. } => panic!("{e}"),
+        e => panic!("workload resolution failed: {e}"),
+    })
 }
 
-/// [`simulate`], but workload-resolution failures (unknown scenario,
-/// unreadable/corrupt/mismatched trace) surface as
-/// [`PallasError`] instead of a panic, and the trace file is read and
-/// parsed exactly once.
+/// [`simulate`], but failures surface as [`PallasError`] instead of a
+/// panic: workload resolution (unknown scenario, unreadable/corrupt/
+/// mismatched trace — the trace file is read and parsed exactly once)
+/// and the run loop's livelock guard
+/// ([`PallasError::EventBudget`]).
 pub fn try_simulate(cfg: &ExperimentConfig, opts: &SimOptions) -> Result<SimOutcome, PallasError> {
     let (resolved, step_workloads) = resolve_workload(cfg)?;
     let policies = resolved.framework.policies();
-    Ok(run_resolved(&resolved, opts, step_workloads, &policies))
-}
-
-/// Engine entry over an already-resolved workload and an explicit
-/// policy bundle — the substrate under [`try_simulate`] and
-/// [`crate::experiment::Experiment::run`]. Crate-internal: public
-/// callers go through the `Experiment` builder, which guarantees the
-/// `(config, workloads)` pair came out of [`resolve_workload`].
-pub(crate) fn run_resolved(
-    cfg: &ExperimentConfig,
-    opts: &SimOptions,
-    step_workloads: Vec<crate::workload::StepWorkload>,
-    policies: &PolicyBundle,
-) -> SimOutcome {
-    Engine::new(cfg, opts, step_workloads, policies).run()
+    let engine = Engine::new(resolved, opts.clone(), step_workloads, policies, SinkSet::default());
+    super::session::Session::from_engine(engine).run_to_end()
 }
 
 /// Resolve the config's scenario/trace into concrete per-step
@@ -269,12 +318,19 @@ pub fn resolve_workload(
     Ok((resolved, step_workloads))
 }
 
-struct Engine<'a> {
-    cfg: &'a ExperimentConfig,
-    opts: &'a SimOptions,
+/// The step engine. Owns its resolved inputs (so a
+/// [`Session`](super::session::Session) can hold it across calls) and
+/// advances through [`Engine::pump_step`] — the run-to-completion
+/// entries ([`try_simulate`], [`crate::experiment::Experiment::run`])
+/// are thin drains over it.
+pub(crate) struct Engine {
+    cfg: ExperimentConfig,
+    opts: SimOptions,
     /// Framework behaviour — every former capability-flag branch is a
     /// call into one of these four policy objects.
-    policies: &'a PolicyBundle,
+    policies: PolicyBundle,
+    /// Observers ([`super::events`]); empty on the no-sink fast path.
+    sinks: SinkSet,
     q: EventQueue<Ev>,
     man: RolloutManager,
     store: ExperienceStore,
@@ -309,15 +365,40 @@ struct Engine<'a> {
     queued_series: BTreeMap<usize, Vec<(f64, usize)>>,
     busy_series: Vec<(f64, usize)>,
     switch_s_total: Vec<f64>,
-    sim_end: f64,
+    // ---- run-loop state (was locals of the retired monolithic run) --
+    /// Event-budget guard (livelock detector), cumulative over the run.
+    guard: u64,
+    /// Event histogram by discriminant index — names are only attached
+    /// if the budget error fires.
+    histo: [u64; EV_KINDS],
+    /// Timestamp of the last handled event (== total wall time once the
+    /// run completes).
+    now: f64,
+    /// Every step completed and reported.
+    done: bool,
+    /// The event budget tripped; the engine is poisoned (steps return
+    /// `None` after the error was yielded once).
+    failed: bool,
+    /// A sink requested an early stop.
+    stop: Option<StopInfo>,
+    /// First step index not yet finalized into a report.
+    next_report: usize,
+    /// Finalized reports not yet handed to the caller (normally ≤ 1;
+    /// degenerate workloads can complete several steps on one event).
+    pending: VecDeque<StepReport>,
+    /// Counter snapshots at the last finalized step — per-step reports
+    /// carry deltas, so they are complete the moment the step is.
+    prev_scale_ops: f64,
+    prev_swap_s: f64,
 }
 
-impl<'a> Engine<'a> {
-    fn new(
-        cfg: &'a ExperimentConfig,
-        opts: &'a SimOptions,
+impl Engine {
+    pub(crate) fn new(
+        cfg: ExperimentConfig,
+        opts: SimOptions,
         step_workloads: Vec<StepWorkload>,
-        policies: &'a PolicyBundle,
+        policies: PolicyBundle,
+        sinks: SinkSet,
     ) -> Self {
         let n_agents = cfg.workload.agents.len();
         assert_eq!(
@@ -418,8 +499,8 @@ impl<'a> Engine<'a> {
 
         // Intern agent table keys and metric counter keys now: the
         // event loop records by index/id only (no per-event `format!`
-        // or `to_string` — the debug-asserted freeze in `run` enforces
-        // it for counters).
+        // or `to_string` — the debug-asserted freeze below enforces it
+        // for counters).
         let agent_keys: Vec<String> = (0..n_agents).map(|a| format!("agent{a}")).collect();
         let store = ExperienceStore::new();
         for key in &agent_keys {
@@ -432,10 +513,10 @@ impl<'a> Engine<'a> {
         let m_scale_ops = counters.register("scale_ops");
         let m_swap_s = counters.register("swap_s");
 
-        Engine {
-            cfg,
-            opts,
-            policies,
+        // Recording phase begins: no counter key may be constructed
+        // past this point (debug-asserted by the interner).
+        counters.freeze();
+        let mut engine = Engine {
             q: EventQueue::with_kind(opts.event_queue),
             man,
             store,
@@ -459,52 +540,177 @@ impl<'a> Engine<'a> {
             queued_series: opts.track_agents.iter().map(|&a| (a, vec![])).collect(),
             busy_series: Vec::new(),
             switch_s_total: vec![0.0; cfg.steps],
-            sim_end: 0.0,
+            guard: 0,
+            histo: [0u64; EV_KINDS],
+            now: 0.0,
+            done: false,
+            failed: false,
+            stop: None,
+            next_report: 0,
+            pending: VecDeque::new(),
+            prev_scale_ops: 0.0,
+            prev_swap_s: 0.0,
+            cfg,
+            opts,
+            policies,
+            sinks,
+        };
+        // A zero-step experiment has nothing to schedule: leaving the
+        // queue empty makes the first pump report the run as done
+        // (instead of the old StartStep(0) index panic).
+        if !engine.steps.is_empty() {
+            engine.q.push_at(0.0, Ev::StartStep(0));
+            engine.q.push_at(engine.opts.scaler_poll_s, Ev::Poll);
         }
+        engine
     }
 
     fn n_agents(&self) -> usize {
         self.cfg.workload.agents.len()
     }
 
-    fn run(mut self) -> SimOutcome {
-        // Recording phase begins: no counter key may be constructed
-        // past this point (debug-asserted by the interner).
-        self.counters.freeze();
-        self.q.push_at(0.0, Ev::StartStep(0));
-        self.q.push_at(self.opts.scaler_poll_s, Ev::Poll);
-        let mut guard = 0u64;
-        // Event histogram by discriminant index — names are only
-        // attached if the budget panic fires.
-        let mut histo = [0u64; EV_KINDS];
-        while let Some((t, ev)) = self.q.pop() {
-            guard += 1;
-            histo[ev_idx(&ev)] += 1;
-            if guard >= 1_000_000 {
-                let named: Vec<(&str, u64)> = EV_NAMES.iter().copied().zip(histo).collect();
-                panic!(
-                    "event-budget exceeded (livelock?) at t={t}: {named:?}, \
-                     tstate={:?}, steps done={:?}",
-                    self.tstate,
-                    self.steps
-                        .iter()
-                        .map(|s| (s.started, s.rollout_done, s.applied.clone()))
-                        .collect::<Vec<_>>()
-                );
+    pub(crate) fn add_sink(&mut self, sink: Box<dyn super::events::EventSink>) {
+        self.sinks.push(sink);
+    }
+
+    pub(crate) fn config(&self) -> &ExperimentConfig {
+        &self.cfg
+    }
+
+    pub(crate) fn now(&self) -> f64 {
+        self.now
+    }
+
+    pub(crate) fn is_done(&self) -> bool {
+        self.done || self.failed || self.stop.is_some()
+    }
+
+    pub(crate) fn stop_info(&self) -> Option<&StopInfo> {
+        self.stop.as_ref()
+    }
+
+    /// Advance the event loop until the next MARL step completes and
+    /// return its finalized report; `Ok(None)` once the run is over —
+    /// all steps reported, a sink stopped it, or (after the error was
+    /// yielded once) the event budget tripped.
+    ///
+    /// This is the run loop, re-cut at the step boundary: a monolithic
+    /// run is exactly `while pump_step()? is Some {}` — same events,
+    /// same order, same floats.
+    pub(crate) fn pump_step(&mut self) -> Result<Option<StepReport>, PallasError> {
+        loop {
+            if let Some(r) = self.pending.pop_front() {
+                return Ok(Some(r));
+            }
+            if self.is_done() {
+                return Ok(None);
+            }
+            let Some((t, ev)) = self.q.pop() else {
+                // Queue exhausted without completion — nothing more can
+                // happen; treat the run as over.
+                self.done = true;
+                return Ok(None);
+            };
+            self.now = t;
+            self.guard += 1;
+            self.histo[ev_idx(&ev)] += 1;
+            if self.guard >= 1_000_000 {
+                self.failed = true;
+                return Err(PallasError::EventBudget {
+                    t,
+                    histogram: EV_NAMES.iter().copied().zip(self.histo).collect(),
+                });
             }
             self.handle(t, ev);
+            self.collect_completed(t);
             if self.all_done() {
-                self.sim_end = t;
-                break;
+                self.done = true;
+            } else if self.sinks.stop_requested() && self.stop.is_none() {
+                // Stop takes effect after the event was fully handled:
+                // reports already finalized still drain to the caller,
+                // unprocessed queue events are abandoned.
+                self.stop = Some(StopInfo { t, steps_completed: self.next_report });
             }
         }
-        self.build_reports()
+    }
+
+    /// Finalize every newly-completed step, in step order, into
+    /// `pending`. Completion is monotonic in the step index (an agent
+    /// only trains step *s+1* after applying *s*), so a single forward
+    /// cursor suffices; the loop handles degenerate workloads where one
+    /// event completes several steps at once.
+    fn collect_completed(&mut self, t: f64) {
+        while self.next_report < self.steps.len() && self.step_complete(self.next_report) {
+            let s = self.next_report;
+            self.next_report += 1;
+            let report = self.finalize_step(s);
+            self.sinks.emit(t, &EngineEvent::StepFinished { step: s, report: &report });
+            self.pending.push_back(report);
+        }
+    }
+
+    fn step_complete(&self, s: usize) -> bool {
+        let st = &self.steps[s];
+        st.started && st.rollout_done && st.applied.iter().all(|&x| x)
+    }
+
+    /// Build step `s`'s report from per-step state — every input is
+    /// frozen by the time the step completes (decode busy lands before
+    /// `rollout_done`, grad/apply busy at dispatch, and the to-rollout
+    /// phase switch is charged at schedule time in
+    /// [`Engine::check_step_complete`]), so streaming a report per step
+    /// is bit-identical to batch reporting. Counter-backed fields
+    /// (`scale_ops`, `swap_s`) are deltas since the previous step's
+    /// completion.
+    fn finalize_step(&mut self, s: usize) -> StepReport {
+        let n_agents = self.n_agents();
+        let st = &self.steps[s];
+        let e2e = st.end_t - st.start_t;
+        let rollout_s = st.rollout_end_t - st.start_t;
+        let train_s = (st.end_t - st.rollout_end_t - self.switch_s_total[s]).max(0.0);
+        let latencies: Vec<f64> = (0..st.workload.trajectories.len())
+            .map(|i| (st.traj_end[i] - st.traj_start[i]).max(0.0))
+            .collect();
+        let scale_now = self.counters.get(self.m_scale_ops);
+        let swap_now = self.counters.get(self.m_swap_s);
+        let report = StepReport {
+            framework: self.policies.name.clone(),
+            workload: self.cfg.workload.name.clone(),
+            scenario: self.cfg.workload.scenario.clone(),
+            e2e_s: e2e,
+            rollout_s,
+            train_s,
+            other_s: (e2e - rollout_s - train_s).max(0.0),
+            tokens: st.workload.total_tokens(),
+            busy_device_s: self.busy_per_step[s],
+            pool_devices: self.pool_devices,
+            agent_calls: st.workload.calls_per_agent(n_agents),
+            trajectory_latencies: latencies,
+            scale_ops: (scale_now - self.prev_scale_ops) as usize,
+            swap_s: swap_now - self.prev_swap_s,
+        };
+        self.prev_scale_ops = scale_now;
+        self.prev_swap_s = swap_now;
+        report
+    }
+
+    /// Consume the engine into an outcome over the reports the caller
+    /// drained from it.
+    pub(crate) fn into_outcome(self, reports: Vec<StepReport>) -> SimOutcome {
+        SimOutcome {
+            reports,
+            total_s: self.now,
+            series: RunSeries {
+                processed: self.processed_series,
+                queued: self.queued_series,
+                busy: self.busy_series,
+            },
+            stop: self.stop,
+        }
     }
 
     fn all_done(&self) -> bool {
-        self.steps
-            .iter()
-            .all(|s| s.started && s.rollout_done && s.applied.iter().all(|&x| x))
+        (0..self.steps.len()).all(|s| self.step_complete(s))
     }
 
     // -----------------------------------------------------------------------
@@ -526,7 +732,10 @@ impl<'a> Engine<'a> {
                 }
             }
             Ev::SwitchToRolloutDone(s) => {
-                self.switch_s_total[s] += self.opts.switch_s;
+                // The switch cost was charged at schedule time
+                // (check_step_complete): it belongs to step `s`'s
+                // budget, whose report freezes at step completion —
+                // before this event lands.
                 if s + 1 < self.steps.len() {
                     self.q.push_at(t, Ev::StartStep(s + 1));
                 }
@@ -568,6 +777,8 @@ impl<'a> Engine<'a> {
                 }
             }
         }
+        let ev = EngineEvent::StepStarted { step: s, workload: &self.steps[s].workload };
+        self.sinks.emit(t, &ev);
         let ready = self.steps[s].sched.start();
         for c in ready {
             self.submit_call(t, s, c);
@@ -700,6 +911,7 @@ impl<'a> Engine<'a> {
         }
         if self.strict_alternation() {
             // MAS-RL: offload inference, onload training states.
+            self.sinks.emit(t, &EngineEvent::PhaseSwitch { step: s, to_train: true });
             self.q.push_in(self.opts.switch_s, Ev::SwitchToTrainDone(s));
         } else {
             for a in 0..self.n_agents() {
@@ -772,6 +984,8 @@ impl<'a> Engine<'a> {
                 Some((_p, local)) => {
                     let cost = swap_in_cost(model, &self.cfg.cluster, local);
                     self.counters.add(self.m_swap_s, cost.total());
+                    let ev = EngineEvent::SwapIn { agent, step, cost_s: cost.total() };
+                    self.sinks.emit(t, &ev);
                     self.tstate[agent] = AgentTrain::SwappingIn;
                     if need_apply {
                         // Rare: resources were released before apply.
@@ -818,6 +1032,7 @@ impl<'a> Engine<'a> {
             return;
         }
         let n = fetched.len();
+        self.sinks.emit(t, &EngineEvent::MicroBatchAdmitted { step, agent, n });
         let tokens: f64 = fetched
             .iter()
             .map(|f| {
@@ -830,7 +1045,6 @@ impl<'a> Engine<'a> {
         let gdev = model.train_group_devices() as f64;
         self.busy_per_step[step] += dur * gdev;
         self.q.push_in(dur, Ev::GradDone { agent, step, n });
-        let _ = t;
     }
 
     fn grad_done(&mut self, t: f64, agent: usize, step: usize, n: usize) {
@@ -880,17 +1094,17 @@ impl<'a> Engine<'a> {
         if self.alloc.release(agent).is_some() {
             let cost = swap_out_cost(model, &self.cfg.cluster);
             self.counters.add(self.m_swap_s, cost.total());
+            let ev = EngineEvent::SwapOut { agent, cost_s: cost.total() };
+            self.sinks.emit(t, &ev);
             self.tstate[agent] = AgentTrain::SwappingOut;
             self.q.push_in(cost.total(), Ev::SwapOutDone { agent });
         } else {
             self.tstate[agent] = AgentTrain::Idle;
         }
-        let _ = t;
     }
 
     fn check_step_complete(&mut self, t: f64, step: usize) {
-        let st = &self.steps[step];
-        if !(st.rollout_done && st.applied.iter().all(|&x| x)) {
+        if !self.step_complete(step) {
             return;
         }
         self.steps[step].end_t = t;
@@ -901,6 +1115,11 @@ impl<'a> Engine<'a> {
         if step + 1 < self.steps.len() {
             if !self.policies.alloc.dedicated_pools() {
                 // MAS-RL: switch back to inference before next rollout.
+                // Charge the switch to this step's budget *now* — it
+                // belongs to the step, but the completion event (and
+                // the step's report) fires before the switch lands.
+                self.switch_s_total[step] += self.opts.switch_s;
+                self.sinks.emit(t, &EngineEvent::PhaseSwitch { step, to_train: false });
                 self.q.push_in(self.opts.switch_s, Ev::SwitchToRolloutDone(step));
             } else {
                 self.q.push_at(t, Ev::StartStep(step + 1));
@@ -931,6 +1150,7 @@ impl<'a> Engine<'a> {
             + self.alloc.active_devices();
         self.busy_series.push((t, busy_now));
 
+        let mut migrated = false;
         if self.policies.balance.enabled() {
             let queue_lens = self.man.queue_lens();
             let counts = self.man.instance_counts();
@@ -940,6 +1160,15 @@ impl<'a> Engine<'a> {
                 delta_threshold: self.cfg.pipeline.delta_threshold,
                 busy_scaling: &self.agent_busy_scaling,
             }) {
+                migrated = true;
+                self.sinks.emit(
+                    t,
+                    &EngineEvent::MigrationPlanned {
+                        donor: plan.donor,
+                        target: plan.target,
+                        n_instances: plan.n_instances,
+                    },
+                );
                 // Drain the donor's *idlest* instances (least stranded
                 // work); displaced requests re-queue on its survivors.
                 let donor_insts: Vec<usize> = self
@@ -981,6 +1210,8 @@ impl<'a> Engine<'a> {
                 );
             }
         }
+        let ev = EngineEvent::ScalerDecision { migrated, busy_devices: busy_now };
+        self.sinks.emit(t, &ev);
         if !self.all_done() {
             self.q.push_in(self.opts.scaler_poll_s, Ev::Poll);
         }
@@ -1012,66 +1243,12 @@ impl<'a> Engine<'a> {
         self.agent_busy_scaling[target] = false;
         let _ = t;
     }
-
-    // -----------------------------------------------------------------------
-    // Reports
-    // -----------------------------------------------------------------------
-
-    fn build_reports(self) -> SimOutcome {
-        let n_steps = self.steps.len();
-        let total_s = self.sim_end;
-        let overlap_share = total_s / n_steps as f64;
-        // Interned counters become strings/figures only here, once.
-        let scale_ops_total = self.counters.get(self.m_scale_ops) as usize;
-        let swap_s_total = self.counters.get(self.m_swap_s);
-        let mut reports = Vec::with_capacity(n_steps);
-        for (s, st) in self.steps.iter().enumerate() {
-            let e2e = if self.policies.pipeline.overlaps_steps() {
-                // Overlapped steps: amortized per-step time.
-                overlap_share
-            } else {
-                st.end_t - st.start_t
-            };
-            let rollout_s = st.rollout_end_t - st.start_t;
-            let train_s = (st.end_t - st.rollout_end_t - self.switch_s_total[s]).max(0.0);
-            let latencies: Vec<f64> = (0..st.workload.trajectories.len())
-                .map(|i| (st.traj_end[i] - st.traj_start[i]).max(0.0))
-                .collect();
-            reports.push(StepReport {
-                framework: self.policies.name.clone(),
-                workload: self.cfg.workload.name.clone(),
-                scenario: self.cfg.workload.scenario.clone(),
-                e2e_s: e2e,
-                rollout_s,
-                train_s,
-                other_s: (e2e - rollout_s - train_s).max(0.0),
-                tokens: st.workload.total_tokens(),
-                busy_device_s: self.busy_per_step[s],
-                pool_devices: self.pool_devices,
-                agent_calls: st.workload.calls_per_agent(self.n_agents()),
-                processed_series: if s == 0 {
-                    self.processed_series.clone()
-                } else {
-                    BTreeMap::new()
-                },
-                queued_series: if s == 0 {
-                    self.queued_series.clone()
-                } else {
-                    BTreeMap::new()
-                },
-                busy_series: if s == 0 { self.busy_series.clone() } else { vec![] },
-                trajectory_latencies: latencies,
-                scale_ops: scale_ops_total / n_steps.max(1),
-                swap_s: swap_s_total / n_steps as f64,
-            });
-        }
-        SimOutcome { reports, total_s }
-    }
 }
 
 /// Event-kind count and names: the run-loop histogram is a plain
 /// `[u64; EV_KINDS]` indexed by [`ev_idx`] — nothing string-keyed on
-/// the event path; names attach only in the livelock panic message.
+/// the event path; names attach only if the livelock guard fires
+/// ([`PallasError::EventBudget`]).
 const EV_KINDS: usize = 10;
 const EV_NAMES: [&str; EV_KINDS] = [
     "StartStep",

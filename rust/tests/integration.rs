@@ -85,7 +85,7 @@ fn fig89_flexmarl_drains_core_agent_faster() {
             ..SimOptions::default()
         };
         let out = simulate(&ma_cfg(fw, 1), &o);
-        let series = &out.reports[0].processed_series[&core];
+        let series = &out.series.processed[&core];
         let total = series.last().unwrap().1;
         series
             .iter()
@@ -186,10 +186,9 @@ fn event_queue_backends_bit_identical() {
             assert_eq!(x.scale_ops, y.scale_ops);
             assert_eq!(x.swap_s, y.swap_s);
             assert_eq!(x.trajectory_latencies, y.trajectory_latencies);
-            assert_eq!(x.busy_series, y.busy_series);
-            assert_eq!(x.processed_series, y.processed_series);
-            assert_eq!(x.queued_series, y.queued_series);
         }
+        // Run-wide poll series must agree sample-for-sample too.
+        assert_eq!(heap.series, cal.series, "{}", cfg.framework.name);
     }
 }
 

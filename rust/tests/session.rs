@@ -1,0 +1,476 @@
+//! Streaming Session API acceptance tests (ISSUE 5).
+//!
+//! The contracts pinned here:
+//!
+//! * **Golden-grid byte identity** — driving `Session::step()` to
+//!   exhaustion serializes StepReports byte-identical to
+//!   `Experiment::run()` for all 7 scenario presets × 4 baseline
+//!   frameworks at the paper seed.
+//! * **Observation is free of side effects** — attaching sinks cannot
+//!   change a bit of the simulation.
+//! * **Early stop** — a budget sink halts mid-run with a well-formed,
+//!   typed partial `SimOutcome` (no panics on any public path).
+//! * **TraceSink round-trip** — trace capture through the observer API
+//!   reproduces `Trace::record` bit-for-bit and replays bit-identically.
+//! * **JsonlSink streaming** — the streamed lines equal the batch
+//!   reports' JSON, line for line.
+
+use flexmarl::config::{ExperimentConfig, Framework, WorkloadConfig};
+use flexmarl::error::PallasError;
+use flexmarl::experiment::Experiment;
+use flexmarl::metrics::StepReport;
+use flexmarl::orchestrator::{
+    BudgetSink, ControlFlow, EngineEvent, EventSink, JsonlSink, NullSink, ProgressSink,
+    SimOptions, TraceSink,
+};
+use flexmarl::workload::scenario;
+use std::io::Write;
+use std::sync::{Arc, Mutex};
+
+fn small_cfg(fw: Framework, preset: &str) -> ExperimentConfig {
+    let mut wl = WorkloadConfig::ma();
+    wl.queries_per_step = 2;
+    wl.group_size = 4;
+    wl.scenario = preset.to_string();
+    let mut cfg = ExperimentConfig::new(wl, fw);
+    cfg.steps = 2;
+    cfg.seed = 2048; // paper §8.1
+    cfg
+}
+
+fn report_json(reports: &[StepReport]) -> String {
+    reports
+        .iter()
+        .map(|r| r.to_json().to_pretty())
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+fn drain(cfg: &ExperimentConfig, opts: &SimOptions) -> flexmarl::orchestrator::SimOutcome {
+    let mut session = Experiment::new(cfg.clone())
+        .options(opts.clone())
+        .build()
+        .unwrap()
+        .session()
+        .unwrap();
+    while session.step().unwrap().is_some() {}
+    session.finish()
+}
+
+// ---------------------------------------------------------------------------
+// Golden grid: session-driven == monolithic, byte for byte
+// ---------------------------------------------------------------------------
+
+#[test]
+fn session_drain_is_byte_identical_to_run_across_golden_grid() {
+    // 4 baselines × 7 presets at the paper seed: the streamed report
+    // sequence, the total time, and the run series must all match the
+    // batch run exactly.
+    let opts = SimOptions {
+        track_agents: vec![0, 1],
+        ..SimOptions::default()
+    };
+    for fw in Framework::all_baselines() {
+        for preset in scenario::names() {
+            let cfg = small_cfg(fw, preset);
+            let batch = Experiment::new(cfg.clone())
+                .options(opts.clone())
+                .build()
+                .unwrap()
+                .run();
+            let streamed = drain(&cfg, &opts);
+            assert_eq!(
+                report_json(&batch.reports),
+                report_json(&streamed.reports),
+                "{} / {preset}: session reports diverged from run()",
+                fw.name
+            );
+            assert_eq!(batch.total_s, streamed.total_s, "{} / {preset}", fw.name);
+            assert_eq!(batch.series, streamed.series, "{} / {preset}", fw.name);
+            assert!(streamed.stop.is_none(), "{} / {preset}", fw.name);
+        }
+    }
+}
+
+#[test]
+fn session_yields_reports_incrementally_and_in_order() {
+    let cfg = small_cfg(Framework::flexmarl(), "baseline");
+    let mut session = Experiment::new(cfg).build().unwrap().session().unwrap();
+    assert_eq!(session.steps_completed(), 0);
+    assert!(!session.is_done());
+
+    let r0 = session.step().unwrap().expect("step 0");
+    assert_eq!(session.steps_completed(), 1);
+    let t_after_first = session.now();
+    assert!(t_after_first > 0.0);
+
+    let r1 = session.step().unwrap().expect("step 1");
+    assert!(session.now() >= t_after_first, "virtual time ran backwards");
+    assert!(r0.e2e_s > 0.0 && r1.e2e_s > 0.0);
+
+    assert!(session.step().unwrap().is_none(), "only two steps exist");
+    assert!(session.is_done());
+    assert!(session.step().unwrap().is_none(), "None is sticky");
+    let out = session.finish();
+    assert_eq!(out.reports.len(), 2);
+    assert!(out.stop.is_none());
+}
+
+#[test]
+fn evaluate_matches_session_drain_aggregation() {
+    // The paper-table aggregate computed from a drained session equals
+    // Experiment::evaluate — including MARTI, whose E2E is amortized
+    // over the run.
+    for fw in [Framework::flexmarl(), Framework::marti(), Framework::mas_rl()] {
+        let cfg = small_cfg(fw, "core_skew");
+        let via_evaluate = Experiment::new(cfg.clone()).build().unwrap().evaluate();
+        let exp = Experiment::new(cfg).build().unwrap();
+        let overlaps = exp.policies().pipeline.overlaps_steps();
+        let mut session = exp.session().unwrap();
+        while session.step().unwrap().is_some() {}
+        let via_session = session.finish().evaluate(overlaps).unwrap();
+        assert_eq!(
+            via_evaluate.to_json().to_pretty(),
+            via_session.to_json().to_pretty(),
+            "{}",
+            fw.name
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sinks observe but never perturb
+// ---------------------------------------------------------------------------
+
+/// A sink that subscribes to everything and counts what it saw.
+#[derive(Default)]
+struct CountingSink {
+    started: usize,
+    finished: usize,
+    micro_batches: usize,
+    migrations: usize,
+    scaler_polls: usize,
+    swaps: usize,
+    phase_switches: usize,
+}
+
+struct SharedCounting(Arc<Mutex<CountingSink>>);
+
+impl EventSink for SharedCounting {
+    fn on_event(&mut self, _t: f64, ev: &EngineEvent<'_>) -> ControlFlow {
+        let mut c = self.0.lock().unwrap();
+        match ev {
+            EngineEvent::StepStarted { .. } => c.started += 1,
+            EngineEvent::StepFinished { .. } => c.finished += 1,
+            EngineEvent::MicroBatchAdmitted { .. } => c.micro_batches += 1,
+            EngineEvent::MigrationPlanned { .. } => c.migrations += 1,
+            EngineEvent::ScalerDecision { .. } => c.scaler_polls += 1,
+            EngineEvent::SwapIn { .. } | EngineEvent::SwapOut { .. } => c.swaps += 1,
+            EngineEvent::PhaseSwitch { .. } => c.phase_switches += 1,
+            _ => {}
+        }
+        ControlFlow::Continue
+    }
+}
+
+#[test]
+fn sinks_observe_without_perturbing_the_simulation() {
+    // NullSink + ProgressSink (buffered) + a counting sink attached:
+    // the outcome must be byte-identical to the bare run, and the
+    // counters prove the events actually flowed.
+    struct VecWriter(Arc<Mutex<Vec<u8>>>);
+    impl Write for VecWriter {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+    let cfg = small_cfg(Framework::flexmarl(), "core_skew");
+    let bare = Experiment::new(cfg.clone()).build().unwrap().run();
+
+    let counts = Arc::new(Mutex::new(CountingSink::default()));
+    let progress_buf = Arc::new(Mutex::new(Vec::new()));
+    let observed = Experiment::new(cfg.clone())
+        .sink(Box::new(NullSink))
+        .sink(Box::new(ProgressSink::new(
+            cfg.steps,
+            Box::new(VecWriter(Arc::clone(&progress_buf))),
+        )))
+        .sink(Box::new(SharedCounting(Arc::clone(&counts))))
+        .build()
+        .unwrap()
+        .run();
+
+    assert_eq!(report_json(&bare.reports), report_json(&observed.reports));
+    assert_eq!(bare.total_s, observed.total_s);
+    assert_eq!(bare.series, observed.series);
+
+    let c = counts.lock().unwrap();
+    assert_eq!(c.started, 2, "one StepStarted per step");
+    assert_eq!(c.finished, 2, "one StepFinished per step");
+    assert!(c.micro_batches > 0, "pipeline admitted no micro batches");
+    assert!(c.scaler_polls > 0, "scaler never polled");
+    // Every counted scale op corresponds to one observed
+    // MigrationPlanned event — the observer saw exactly what the
+    // metrics recorded.
+    let scale_ops_total: usize = bare.reports.iter().map(|r| r.scale_ops).sum();
+    assert_eq!(c.migrations, scale_ops_total, "migration events != scale_ops");
+    assert!(c.swaps > 0, "agent-centric allocation should swap");
+    let progress = String::from_utf8(progress_buf.lock().unwrap().clone()).unwrap();
+    assert!(progress.contains("step 1/2"), "{progress}");
+    assert!(progress.contains("step 2/2"), "{progress}");
+}
+
+#[test]
+fn phase_switch_events_fire_for_colocated_alternation() {
+    // MAS-RL: offload/onload at every phase boundary — both directions
+    // must be observable.
+    struct Phases(Arc<Mutex<Vec<(usize, bool)>>>);
+    impl EventSink for Phases {
+        fn on_event(&mut self, _t: f64, ev: &EngineEvent<'_>) -> ControlFlow {
+            if let EngineEvent::PhaseSwitch { step, to_train } = ev {
+                self.0.lock().unwrap().push((*step, *to_train));
+            }
+            ControlFlow::Continue
+        }
+    }
+    let cfg = small_cfg(Framework::mas_rl(), "baseline");
+    let seen = Arc::new(Mutex::new(Vec::new()));
+    let out = Experiment::new(cfg)
+        .sink(Box::new(Phases(Arc::clone(&seen))))
+        .build()
+        .unwrap()
+        .run();
+    assert_eq!(out.reports.len(), 2);
+    let seen = seen.lock().unwrap();
+    // Step 0: to-train and (because a step follows) to-rollout; step 1
+    // is last, so only its to-train switch fires.
+    assert_eq!(*seen, vec![(0, true), (0, false), (1, true)]);
+}
+
+// ---------------------------------------------------------------------------
+// Early stop
+// ---------------------------------------------------------------------------
+
+#[test]
+fn budget_sink_halts_mid_run_with_well_formed_partial_outcome() {
+    let cfg = {
+        let mut c = small_cfg(Framework::flexmarl(), "baseline");
+        c.steps = 3;
+        c
+    };
+    let full = Experiment::new(cfg.clone()).build().unwrap().run();
+    assert_eq!(full.reports.len(), 3);
+
+    let mut session = Experiment::new(cfg.clone())
+        .sink(Box::new(BudgetSink::new().max_steps(1)))
+        .build()
+        .unwrap()
+        .session()
+        .unwrap();
+    let first = session.step().unwrap().expect("first step completes");
+    assert!(session.step().unwrap().is_none(), "budget cut the run");
+    let stop = session.stop_info().expect("stop recorded").clone();
+    assert_eq!(stop.steps_completed, 1);
+    assert!(stop.t > 0.0);
+    let partial = session.finish();
+    assert_eq!(partial.reports.len(), 1);
+    assert_eq!(partial.stop, Some(stop));
+    assert!(partial.total_s > 0.0);
+    assert!(partial.total_s < full.total_s, "stopped run ran to the end");
+    // The completed step is bit-identical to the full run's first step.
+    assert_eq!(
+        first.to_json().to_pretty(),
+        full.reports[0].to_json().to_pretty()
+    );
+    // Partial outcomes aggregate cleanly too.
+    assert!(partial.evaluate(false).is_some());
+}
+
+#[test]
+fn sim_time_budget_stops_before_first_step_without_panicking() {
+    // Stop almost immediately: no step completes; the outcome is empty
+    // but typed — no panic on any public session path.
+    let cfg = small_cfg(Framework::flexmarl(), "baseline");
+    let mut session = Experiment::new(cfg.clone())
+        .sink(Box::new(BudgetSink::new().max_sim_s(0.5)))
+        .build()
+        .unwrap()
+        .session()
+        .unwrap();
+    assert!(session.step().unwrap().is_none());
+    let out = session.finish();
+    assert_eq!(out.reports.len(), 0);
+    let stop = out.stop.expect("stop recorded");
+    assert_eq!(stop.steps_completed, 0);
+    assert!(out.evaluate(false).is_none(), "nothing to aggregate");
+
+    // The evaluate convenience reports the same condition as a typed
+    // EmptyRun (NOT InvalidConfig: the config is fine, the run was
+    // merely truncated).
+    let err = Experiment::new(cfg)
+        .sink(Box::new(BudgetSink::new().max_sim_s(0.5)))
+        .build()
+        .unwrap()
+        .try_evaluate()
+        .unwrap_err();
+    assert_eq!(err, PallasError::EmptyRun);
+    assert!(err.to_string().contains("no steps"), "{err}");
+}
+
+#[test]
+fn token_budget_stops_after_enough_generation() {
+    let cfg = {
+        let mut c = small_cfg(Framework::flexmarl(), "baseline");
+        c.steps = 3;
+        c
+    };
+    let full = Experiment::new(cfg.clone()).build().unwrap().run();
+    let step_tokens = full.reports[0].tokens;
+    // Budget = just over one step's tokens → stops after step 1's
+    // report lands (token counts are checked at step boundaries).
+    let mut session = Experiment::new(cfg)
+        .sink(Box::new(BudgetSink::new().max_tokens(step_tokens + 1.0)))
+        .build()
+        .unwrap()
+        .session()
+        .unwrap();
+    let mut n = 0;
+    while session.step().unwrap().is_some() {
+        n += 1;
+    }
+    assert_eq!(n, 2, "token budget should bite after the second step");
+    assert!(session.stop_info().is_some());
+}
+
+// ---------------------------------------------------------------------------
+// TraceSink: recording as an observer, bit-for-bit
+// ---------------------------------------------------------------------------
+
+#[test]
+fn trace_sink_matches_trace_record_bit_for_bit() {
+    use flexmarl::workload::Trace;
+    for preset in scenario::names() {
+        let cfg = small_cfg(Framework::flexmarl(), preset);
+        let exp = Experiment::new(cfg.clone()).build().unwrap();
+        // TraceSink is built against the *resolved* config (canonical
+        // scenario name, shaped agents).
+        let (sink, handle) = TraceSink::new(exp.config());
+        let resolved_workload = exp.config().workload.clone();
+        let out = exp.with_sink(Box::new(sink)).run();
+        assert_eq!(out.reports.len(), 2, "{preset}");
+
+        let captured = handle.trace().unwrap();
+        let direct = Trace::record(&resolved_workload, cfg.seed, cfg.steps).unwrap();
+        // PartialEq on f64 fields is exact: bit-for-bit, not approx.
+        assert_eq!(captured, direct, "{preset}: TraceSink drifted from Trace::record");
+        assert_eq!(captured.to_jsonl(), direct.to_jsonl(), "{preset}");
+
+        // And the captured trace replays bit-identically.
+        let path = std::env::temp_dir().join(format!("flexmarl_sink_trace_{preset}.jsonl"));
+        let path = path.to_str().unwrap().to_string();
+        captured.write_file(&path).unwrap();
+        let mut replay_cfg = cfg.clone();
+        replay_cfg.workload.trace = Some(path.clone());
+        let replayed = Experiment::new(replay_cfg).build().unwrap().run();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(out.total_s, replayed.total_s, "{preset}");
+        assert_eq!(
+            report_json(&out.reports),
+            report_json(&replayed.reports),
+            "{preset}"
+        );
+    }
+}
+
+#[test]
+fn trace_sink_on_a_stopped_run_captures_only_started_steps() {
+    let cfg = {
+        let mut c = small_cfg(Framework::flexmarl(), "baseline");
+        c.steps = 3;
+        c
+    };
+    let exp = Experiment::new(cfg).build().unwrap();
+    let (sink, handle) = TraceSink::new(exp.config());
+    let out = exp
+        .with_sink(Box::new(sink))
+        .with_sink(Box::new(BudgetSink::new().max_steps(1)))
+        .run();
+    assert_eq!(out.reports.len(), 1);
+    // FlexMARL starts step s+1 only after step s completes, so at most
+    // the next step began before the stop landed.
+    let n = handle.steps_recorded();
+    assert!((1..=2).contains(&n), "captured {n} steps");
+    // Partial capture is still a valid (replayable) trace prefix.
+    let tr = handle.trace().unwrap();
+    assert_eq!(tr.steps.len(), n);
+}
+
+// ---------------------------------------------------------------------------
+// JsonlSink: streamed lines == batch reports
+// ---------------------------------------------------------------------------
+
+#[test]
+fn jsonl_sink_streams_exactly_the_batch_report_lines() {
+    struct VecWriter(Arc<Mutex<Vec<u8>>>);
+    impl Write for VecWriter {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+    for preset in ["core_skew", "bursty"] {
+        let cfg = small_cfg(Framework::flexmarl(), preset);
+        let batch = Experiment::new(cfg.clone()).build().unwrap().run();
+        let expected: String = batch
+            .reports
+            .iter()
+            .map(|r| format!("{}\n", r.to_json().to_string()))
+            .collect();
+        let buf = Arc::new(Mutex::new(Vec::new()));
+        let _ = Experiment::new(cfg)
+            .sink(Box::new(JsonlSink::new(Box::new(VecWriter(Arc::clone(&buf))))))
+            .build()
+            .unwrap()
+            .run();
+        let streamed = String::from_utf8(buf.lock().unwrap().clone()).unwrap();
+        assert_eq!(streamed, expected, "{preset}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Typed errors on the session surface
+// ---------------------------------------------------------------------------
+
+#[test]
+fn session_surfaces_build_errors_typed() {
+    let err = Experiment::new(small_cfg(Framework::flexmarl(), "no_such_preset"))
+        .build()
+        .unwrap_err();
+    assert_eq!(err, PallasError::UnknownScenario("no_such_preset".into()));
+}
+
+#[test]
+fn event_budget_error_is_typed_and_displays_like_the_old_panic() {
+    // The livelock guard itself needs ~1M events to trip — far beyond
+    // test scale — so pin the typed variant's shape and Display here
+    // (simloop can only construct it through the same formatter).
+    let e = PallasError::EventBudget {
+        t: 3.25,
+        histogram: vec![("StartStep", 1), ("CallDone", 999_999)],
+    };
+    let msg = e.to_string();
+    assert!(
+        msg.starts_with("event-budget exceeded (livelock?) at t=3.25:"),
+        "{msg}"
+    );
+    assert!(msg.contains("CallDone"), "{msg}");
+    // It is a std error like every other PallasError.
+    let _: &dyn std::error::Error = &e;
+}

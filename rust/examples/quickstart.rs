@@ -18,7 +18,7 @@
 use flexmarl::config::{ExperimentConfig, Framework, WorkloadConfig};
 use flexmarl::experiment::Experiment;
 use flexmarl::grpo::{group_advantages, make_row};
-use flexmarl::orchestrator::BudgetSink;
+use flexmarl::orchestrator::{BudgetSink, ProgressSink};
 use flexmarl::runtime::policy::AgentPolicy;
 use flexmarl::runtime::ModelRuntime;
 use flexmarl::util::rng::Pcg64;
@@ -72,6 +72,31 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         outcome.reports.len(),
         outcome.total_s
     );
+
+    // ---- Part 1c: chaos — faults, recovery, live progress ---------------
+    // The fault plane (DESIGN.md §10) injects failures as ordinary timed
+    // simulator events: the run stays fully deterministic, and the
+    // bundle's RecoveryPolicy (here retry-with-backoff, via the preset's
+    // override) re-dispatches the displaced work. A ProgressSink narrates
+    // the strikes and recoveries on stderr.
+    println!("\n== Part 1c: fault injection + recovery (chaos) ==");
+    let mut cfg = ExperimentConfig::new(WorkloadConfig::ma(), Framework::flexmarl());
+    cfg.faults = flexmarl::fault::preset("preemption_retry").expect("shipped preset");
+    let mut session = Experiment::new(cfg)
+        .scenario("core_skew")
+        .steps(2)
+        .build()?
+        .session()?;
+    session.add_sink(Box::new(ProgressSink::stderr(2)));
+    while let Some(step) = session.step()? {
+        println!(
+            "  step done: e2e {:.1}s  retries {}  lost {:.0} tok  \
+             recovery {:.1}s  degraded {:.1}s",
+            step.e2e_s, step.retries, step.lost_tokens, step.recovery_s, step.degraded_s
+        );
+    }
+    let outcome = session.finish();
+    println!("  faulted run completed {} steps, t={:.1}s", outcome.reports.len(), outcome.total_s);
 
     // ---- Part 2: real PJRT runtime (optional) ---------------------------
     // Only the *default* location skips silently; an explicitly passed

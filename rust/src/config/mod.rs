@@ -441,6 +441,10 @@ pub struct ExperimentConfig {
     /// MARL steps to simulate.
     pub steps: usize,
     pub seed: u64,
+    /// Fault-injection plan (DESIGN.md §10). Empty by default: a config
+    /// that never mentions faults simulates byte-identically to one
+    /// with `"faults": {}`.
+    pub faults: crate::fault::FaultConfig,
 }
 
 impl ExperimentConfig {
@@ -452,6 +456,7 @@ impl ExperimentConfig {
             framework,
             steps: 1,
             seed: 2048, // paper §8.1
+            faults: crate::fault::FaultConfig::default(),
         }
     }
 
@@ -546,6 +551,11 @@ impl ExperimentConfig {
                 cfg.workload.trace = Some(v.to_string());
             }
         }
+        // The faults section has its own schema (and its own unknown-key
+        // rejection) in `crate::fault`; it also rejects non-objects.
+        if let Some(sub) = top.get("faults") {
+            cfg.faults = crate::fault::FaultConfig::from_json(sub)?;
+        }
         Ok(cfg)
     }
 
@@ -577,6 +587,7 @@ impl ExperimentConfig {
                 self.cluster.total_devices()
             )));
         }
+        self.faults.validate()?;
         Ok(())
     }
 }
@@ -584,6 +595,7 @@ impl ExperimentConfig {
 /// Keys [`ExperimentConfig::from_json`] reads at the document root.
 const TOP_KEYS: &[&str] = &[
     "cluster",
+    "faults",
     "framework",
     "pipeline",
     "scenario",
@@ -774,6 +786,49 @@ mod tests {
         let mut cfg = ExperimentConfig::new(WorkloadConfig::ma(), Framework::flexmarl());
         cfg.pipeline.micro_batch = 7;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn faults_section_parsed_from_json() {
+        // A config with no faults section carries the empty plan.
+        let j = parse(r#"{"workload": "MA"}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        assert!(cfg.faults.is_empty());
+        // Preset base + field overlays, like every other section.
+        let j = parse(
+            r#"{"faults": {"preset": "chaos", "crashes": 3,
+                           "recovery": "retry", "seed": 99}}"#,
+        )
+        .unwrap();
+        let cfg = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.faults.crashes, 3);
+        assert_eq!(cfg.faults.seed, Some(99));
+        assert_eq!(cfg.faults.recovery.as_deref(), Some("retry"));
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn faults_unknown_key_rejected_with_suggestion() {
+        let j = parse(r#"{"faults": {"crashs": 2, "horizon_s": 60}}"#).unwrap();
+        let err = ExperimentConfig::from_json(&j).unwrap_err();
+        assert!(
+            matches!(&err, PallasError::UnknownKey { section: "faults", nearest: Some(n), .. }
+                     if n == "crashes"),
+            "{err:?}"
+        );
+        // Non-object section rejected like pipeline/cluster.
+        let j = parse(r#"{"faults": 3}"#).unwrap();
+        let msg = ExperimentConfig::from_json(&j).unwrap_err().to_string();
+        assert!(msg.contains("'faults' must be a JSON object"), "{msg}");
+    }
+
+    #[test]
+    fn faults_validation_runs_under_config_validate() {
+        let mut cfg = ExperimentConfig::new(WorkloadConfig::ma(), Framework::flexmarl());
+        cfg.faults.crashes = 2; // generators without a horizon
+        assert!(cfg.validate().is_err());
+        cfg.faults.horizon_s = 60.0;
+        cfg.validate().unwrap();
     }
 
     #[test]

@@ -94,6 +94,18 @@ pub enum PallasError {
         /// `(event name, count)` pairs, one per engine event kind.
         histogram: Vec<(&'static str, u64)>,
     },
+    /// An inference instance was lost to fault injection while the
+    /// bundle's recovery policy is fail-fast
+    /// ([`crate::policy::FailFast`]): the run aborts instead of
+    /// re-dispatching the displaced work (DESIGN.md §10).
+    InstanceLost {
+        /// Virtual time of the fatal fault.
+        t: f64,
+        /// Agent the lost instance was serving.
+        agent: usize,
+        /// The lost instance's id.
+        instance: usize,
+    },
     /// A run ended with no completed steps to aggregate: a zero-step
     /// experiment, or an early-stop sink cut the run before the first
     /// step boundary. Distinct from [`PallasError::InvalidConfig`] —
@@ -138,6 +150,11 @@ impl fmt::Display for PallasError {
             PallasError::EventBudget { t, histogram } => write!(
                 f,
                 "event-budget exceeded (livelock?) at t={t}: {histogram:?}"
+            ),
+            PallasError::InstanceLost { t, agent, instance } => write!(
+                f,
+                "instance {instance} (agent {agent}) lost at t={t} \
+                 (fail-fast recovery policy)"
             ),
             PallasError::EmptyRun => write!(
                 f,
@@ -247,6 +264,19 @@ mod tests {
             e.to_string(),
             "event-budget exceeded (livelock?) at t=12.5: \
              [(\"StartStep\", 3), (\"Poll\", 999997)]"
+        );
+    }
+
+    #[test]
+    fn instance_lost_names_the_casualty() {
+        let e = PallasError::InstanceLost {
+            t: 5.5,
+            agent: 2,
+            instance: 7,
+        };
+        assert_eq!(
+            e.to_string(),
+            "instance 7 (agent 2) lost at t=5.5 (fail-fast recovery policy)"
         );
     }
 

@@ -1,0 +1,689 @@
+//! Deterministic fault plane: injected failures for the step engine.
+//!
+//! The ROADMAP's elasticity experiments (worker preemption, stragglers,
+//! mid-run cluster resize) need a fault model that keeps the PR 3
+//! determinism contract: same seed + same plan ⇒ byte-identical output
+//! for any `--jobs N`. This module provides the *plan* side of that
+//! contract — a [`FaultConfig`] is resolved **up front** into a flat,
+//! time-sorted [`FaultSpec`] list ([`FaultConfig::resolve`]), purely
+//! from `(seed, config)`, and the engine injects each spec as a
+//! first-class event in [`crate::sim::EventQueue`]. Nothing about fault
+//! timing depends on engine state, thread count, or wall clock.
+//!
+//! What happens *after* a fault strikes is the recovery side, owned by
+//! [`crate::policy::RecoveryPolicy`] (the fifth member of
+//! [`crate::policy::PolicyBundle`]); the taxonomy here only describes
+//! the failures themselves (DESIGN.md §10):
+//!
+//! | kind              | effect                                         |
+//! |-------------------|------------------------------------------------|
+//! | `InstanceCrash`   | one agent's idlest live instance dies now      |
+//! | `NodePreemption`  | the `n` idlest instances across agents die     |
+//! | `Straggler`       | one agent's decode slows `slowdown`× for a while |
+//! | `SwapLinkFlap`    | swap transfers pay `added_s` extra for a while |
+//! | `ClusterResize`   | instances are added / gracefully drained       |
+//!
+//! Liveness rule: destructive faults (crash/preemption, negative
+//! resize) never remove an agent's *last* live instance — every
+//! recovery policy can then still drive the run to completion (or, for
+//! fail-fast, abort it deliberately).
+
+use crate::error::PallasError;
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+
+/// What goes wrong. Parameters are the fault's own magnitude; *which*
+/// concrete instance dies is decided deterministically at strike time
+/// by the engine (idlest-first, lowest-id tie-break).
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultKind {
+    /// Kill `agent`'s idlest live instance (skipped if it has one).
+    InstanceCrash { agent: usize },
+    /// Kill the `n` idlest instances across agents (a node going
+    /// away), spread over the agents with the most replicas first.
+    NodePreemption { n: usize },
+    /// Degrade `agent`: decode of calls submitted during the window
+    /// runs `slowdown`× slower.
+    Straggler {
+        agent: usize,
+        slowdown: f64,
+        duration_s: f64,
+    },
+    /// Swap-link congestion: every swap-in/out started during the
+    /// window pays `added_s` extra seconds.
+    SwapLinkFlap { added_s: f64, duration_s: f64 },
+    /// Mid-run cluster resize: `delta > 0` adds instances (thinnest
+    /// agent pools first), `delta < 0` gracefully drains the idlest
+    /// instances of the fattest pools (displaced requests re-queue;
+    /// planned resizes lose no work).
+    ClusterResize { delta: i64 },
+}
+
+impl FaultKind {
+    /// Stable kind label (config `kind` field, event/report tagging).
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::InstanceCrash { .. } => "instance_crash",
+            FaultKind::NodePreemption { .. } => "node_preemption",
+            FaultKind::Straggler { .. } => "straggler",
+            FaultKind::SwapLinkFlap { .. } => "swap_link_flap",
+            FaultKind::ClusterResize { .. } => "cluster_resize",
+        }
+    }
+
+    /// Agent index this fault targets, if it targets one.
+    pub fn agent(&self) -> Option<usize> {
+        match self {
+            FaultKind::InstanceCrash { agent } | FaultKind::Straggler { agent, .. } => Some(*agent),
+            _ => None,
+        }
+    }
+
+    /// Fold an out-of-range agent index into range. Scenario presets
+    /// can reshape the ensemble (e.g. `hetero_scale`), so an explicit
+    /// spec written against the base agent list stays total.
+    fn clamp_agent(&mut self, n_agents: usize) {
+        if n_agents == 0 {
+            return;
+        }
+        match self {
+            FaultKind::InstanceCrash { agent } | FaultKind::Straggler { agent, .. } => {
+                *agent %= n_agents;
+            }
+            _ => {}
+        }
+    }
+}
+
+/// One timed fault: at virtual time `t`, `kind` strikes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    pub t: f64,
+    pub kind: FaultKind,
+}
+
+/// The `faults` config section: explicit timed specs plus seeded
+/// stochastic generators. `Default` is the empty plan — byte-identical
+/// to a build that never heard of faults.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultConfig {
+    /// Explicit timed faults, injected verbatim (after agent clamping).
+    pub specs: Vec<FaultSpec>,
+    /// Stochastic generator counts; each kind draws its strike times
+    /// and parameters from its own decorrelated PRNG stream, so adding
+    /// stragglers cannot move where the crashes land.
+    pub crashes: usize,
+    pub preemptions: usize,
+    pub stragglers: usize,
+    pub flaps: usize,
+    pub resizes: usize,
+    /// Virtual-time horizon generated strike times are drawn from;
+    /// required (> 0) when any generator count is set, and an upper
+    /// bound on explicit spec times when set.
+    pub horizon_s: f64,
+    /// Generator seed override; `None` uses the experiment seed.
+    pub seed: Option<u64>,
+    /// Recovery-policy override by name (`fail_fast` / `retry` /
+    /// `degrade`); `None` keeps the framework's derived policy.
+    pub recovery: Option<String>,
+}
+
+// Decorrelated PRNG stream ids, one per generator kind.
+const STREAM_CRASH: u64 = 0xfa01;
+const STREAM_PREEMPT: u64 = 0xfa02;
+const STREAM_STRAGGLE: u64 = 0xfa03;
+const STREAM_FLAP: u64 = 0xfa04;
+const STREAM_RESIZE: u64 = 0xfa05;
+
+/// Keys the `faults` config section accepts (sorted).
+pub const FAULT_KEYS: &[&str] = &[
+    "crashes",
+    "flaps",
+    "horizon_s",
+    "preemptions",
+    "preset",
+    "recovery",
+    "resizes",
+    "seed",
+    "specs",
+    "stragglers",
+];
+/// Keys an explicit fault-spec object accepts (sorted).
+pub const SPEC_KEYS: &[&str] = &[
+    "added_s",
+    "agent",
+    "delta",
+    "duration_s",
+    "kind",
+    "n",
+    "slowdown",
+    "t",
+];
+
+impl FaultConfig {
+    /// No faults configured at all — the engine skips plan resolution
+    /// and injects nothing (the no-fault fast path).
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+            && self.crashes + self.preemptions + self.stragglers + self.flaps + self.resizes == 0
+    }
+
+    /// Resolve the full fault plan for one run: explicit specs (agents
+    /// clamped into `[0, n_agents)`) plus generated faults, sorted by
+    /// strike time (stable — equal times keep spec order, and the
+    /// engine's event queue breaks remaining ties by push order). Pure
+    /// in `(self, cfg_seed, n_agents)`.
+    pub fn resolve(&self, cfg_seed: u64, n_agents: usize) -> Vec<FaultSpec> {
+        let mut plan = self.specs.clone();
+        for s in &mut plan {
+            s.kind.clamp_agent(n_agents);
+        }
+        let seed = self.seed.unwrap_or(cfg_seed);
+        let h = self.horizon_s;
+        if n_agents > 0 && h > 0.0 {
+            let mut rng = Pcg64::with_stream(seed, STREAM_CRASH);
+            for _ in 0..self.crashes {
+                plan.push(FaultSpec {
+                    t: rng.range_f64(0.0, h),
+                    kind: FaultKind::InstanceCrash {
+                        agent: rng.below(n_agents as u64) as usize,
+                    },
+                });
+            }
+            let mut rng = Pcg64::with_stream(seed, STREAM_PREEMPT);
+            for _ in 0..self.preemptions {
+                plan.push(FaultSpec {
+                    t: rng.range_f64(0.0, h),
+                    kind: FaultKind::NodePreemption {
+                        n: 1 + rng.below(2) as usize,
+                    },
+                });
+            }
+            let mut rng = Pcg64::with_stream(seed, STREAM_STRAGGLE);
+            for _ in 0..self.stragglers {
+                plan.push(FaultSpec {
+                    t: rng.range_f64(0.0, h),
+                    kind: FaultKind::Straggler {
+                        agent: rng.below(n_agents as u64) as usize,
+                        slowdown: rng.range_f64(1.5, 4.0),
+                        duration_s: rng.range_f64(10.0, 60.0),
+                    },
+                });
+            }
+            let mut rng = Pcg64::with_stream(seed, STREAM_FLAP);
+            for _ in 0..self.flaps {
+                plan.push(FaultSpec {
+                    t: rng.range_f64(0.0, h),
+                    kind: FaultKind::SwapLinkFlap {
+                        added_s: rng.range_f64(0.2, 2.0),
+                        duration_s: rng.range_f64(5.0, 30.0),
+                    },
+                });
+            }
+            let mut rng = Pcg64::with_stream(seed, STREAM_RESIZE);
+            for _ in 0..self.resizes {
+                let delta = if rng.below(2) == 0 { 1 } else { -1 };
+                plan.push(FaultSpec {
+                    t: rng.range_f64(0.0, h),
+                    kind: FaultKind::ClusterResize { delta },
+                });
+            }
+        }
+        plan.sort_by(|a, b| a.t.partial_cmp(&b.t).expect("fault times are finite"));
+        plan
+    }
+
+    /// Parse the `faults` config section. A `preset` key seeds the
+    /// config from [`preset`]; every other key then overrides it.
+    /// Unknown keys fail loudly with the nearest-valid suggestion, like
+    /// the rest of the config surface.
+    pub fn from_json(j: &Json) -> Result<FaultConfig, PallasError> {
+        let Some(obj) = j.as_obj() else {
+            return Err(PallasError::InvalidConfig(
+                "'faults' must be a JSON object".into(),
+            ));
+        };
+        for key in obj.keys() {
+            if !FAULT_KEYS.contains(&key.as_str()) {
+                return Err(PallasError::unknown_key(key, "faults", FAULT_KEYS));
+            }
+        }
+        let mut cfg = match j.at(&["preset"]).and_then(Json::as_str) {
+            Some(p) => preset(p).ok_or_else(|| {
+                PallasError::InvalidConfig(format!(
+                    "unknown fault preset '{p}' (valid: {})",
+                    preset_names().join(", ")
+                ))
+            })?,
+            None => FaultConfig::default(),
+        };
+        if let Some(v) = j.at(&["crashes"]).and_then(Json::as_usize) {
+            cfg.crashes = v;
+        }
+        if let Some(v) = j.at(&["preemptions"]).and_then(Json::as_usize) {
+            cfg.preemptions = v;
+        }
+        if let Some(v) = j.at(&["stragglers"]).and_then(Json::as_usize) {
+            cfg.stragglers = v;
+        }
+        if let Some(v) = j.at(&["flaps"]).and_then(Json::as_usize) {
+            cfg.flaps = v;
+        }
+        if let Some(v) = j.at(&["resizes"]).and_then(Json::as_usize) {
+            cfg.resizes = v;
+        }
+        if let Some(v) = j.at(&["horizon_s"]).and_then(Json::as_f64) {
+            cfg.horizon_s = v;
+        }
+        if let Some(v) = j.at(&["seed"]).and_then(Json::as_u64) {
+            cfg.seed = Some(v);
+        }
+        if let Some(v) = j.at(&["recovery"]).and_then(Json::as_str) {
+            cfg.recovery = Some(v.to_string());
+        }
+        if let Some(arr) = j.at(&["specs"]).and_then(Json::as_arr) {
+            cfg.specs = arr.iter().map(spec_from_json).collect::<Result<_, _>>()?;
+        }
+        Ok(cfg)
+    }
+
+    /// Semantic validation (wired into
+    /// [`crate::config::ExperimentConfig::validate`]): rates, delays
+    /// and strike times must be finite and non-negative; generators
+    /// need a positive horizon; explicit times stay within the horizon
+    /// when one is set; a recovery override must name a known policy.
+    pub fn validate(&self) -> Result<(), PallasError> {
+        if !self.horizon_s.is_finite() || self.horizon_s < 0.0 {
+            return Err(PallasError::InvalidConfig(format!(
+                "faults.horizon_s must be finite and non-negative, got {}",
+                self.horizon_s
+            )));
+        }
+        let generated =
+            self.crashes + self.preemptions + self.stragglers + self.flaps + self.resizes;
+        if generated > 0 && self.horizon_s <= 0.0 {
+            return Err(PallasError::InvalidConfig(
+                "faults.horizon_s must be > 0 when stochastic fault generators are set".into(),
+            ));
+        }
+        if let Some(name) = &self.recovery {
+            if crate::policy::recovery_by_name(name).is_none() {
+                return Err(PallasError::InvalidConfig(format!(
+                    "unknown recovery policy '{name}' (valid: fail_fast, retry, degrade)"
+                )));
+            }
+        }
+        for (i, s) in self.specs.iter().enumerate() {
+            if !s.t.is_finite() || s.t < 0.0 {
+                return Err(PallasError::InvalidConfig(format!(
+                    "fault spec {i}: time {} must be finite and non-negative",
+                    s.t
+                )));
+            }
+            if self.horizon_s > 0.0 && s.t > self.horizon_s {
+                return Err(PallasError::InvalidConfig(format!(
+                    "fault spec {i}: time {} is beyond faults.horizon_s {}",
+                    s.t, self.horizon_s
+                )));
+            }
+            match &s.kind {
+                FaultKind::Straggler {
+                    slowdown,
+                    duration_s,
+                    ..
+                } => {
+                    if !slowdown.is_finite() || *slowdown < 1.0 {
+                        return Err(PallasError::InvalidConfig(format!(
+                            "fault spec {i}: slowdown {slowdown} must be finite and >= 1"
+                        )));
+                    }
+                    if !duration_s.is_finite() || *duration_s < 0.0 {
+                        return Err(PallasError::InvalidConfig(format!(
+                            "fault spec {i}: duration_s {duration_s} must be finite and \
+                             non-negative"
+                        )));
+                    }
+                }
+                FaultKind::SwapLinkFlap { added_s, duration_s } => {
+                    if !added_s.is_finite() || *added_s < 0.0 {
+                        return Err(PallasError::InvalidConfig(format!(
+                            "fault spec {i}: added_s {added_s} must be finite and non-negative"
+                        )));
+                    }
+                    if !duration_s.is_finite() || *duration_s < 0.0 {
+                        return Err(PallasError::InvalidConfig(format!(
+                            "fault spec {i}: duration_s {duration_s} must be finite and \
+                             non-negative"
+                        )));
+                    }
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+}
+
+fn spec_from_json(j: &Json) -> Result<FaultSpec, PallasError> {
+    let Some(obj) = j.as_obj() else {
+        return Err(PallasError::InvalidConfig(
+            "each fault spec must be a JSON object".into(),
+        ));
+    };
+    for key in obj.keys() {
+        if !SPEC_KEYS.contains(&key.as_str()) {
+            return Err(PallasError::unknown_key(key, "faults.specs", SPEC_KEYS));
+        }
+    }
+    let t = j
+        .at(&["t"])
+        .and_then(Json::as_f64)
+        .ok_or_else(|| PallasError::InvalidConfig("fault spec missing 't'".into()))?;
+    let kind_s = j
+        .at(&["kind"])
+        .and_then(Json::as_str)
+        .ok_or_else(|| PallasError::InvalidConfig("fault spec missing 'kind'".into()))?;
+    let agent = j.at(&["agent"]).and_then(Json::as_usize).unwrap_or(0);
+    let kind = match kind_s {
+        "instance_crash" => FaultKind::InstanceCrash { agent },
+        "node_preemption" => FaultKind::NodePreemption {
+            n: j.at(&["n"]).and_then(Json::as_usize).unwrap_or(1),
+        },
+        "straggler" => FaultKind::Straggler {
+            agent,
+            slowdown: j.at(&["slowdown"]).and_then(Json::as_f64).unwrap_or(2.0),
+            duration_s: j.at(&["duration_s"]).and_then(Json::as_f64).unwrap_or(30.0),
+        },
+        "swap_link_flap" => FaultKind::SwapLinkFlap {
+            added_s: j.at(&["added_s"]).and_then(Json::as_f64).unwrap_or(0.5),
+            duration_s: j.at(&["duration_s"]).and_then(Json::as_f64).unwrap_or(30.0),
+        },
+        "cluster_resize" => FaultKind::ClusterResize {
+            delta: j.at(&["delta"]).and_then(Json::as_f64).unwrap_or(1.0) as i64,
+        },
+        other => {
+            return Err(PallasError::InvalidConfig(format!(
+                "unknown fault kind '{other}' (valid: instance_crash, node_preemption, \
+                 straggler, swap_link_flap, cluster_resize)"
+            )))
+        }
+    };
+    Ok(FaultSpec { t, kind })
+}
+
+/// Named fault presets (the CLI's `--faults <preset>`).
+pub fn preset_names() -> Vec<&'static str> {
+    vec![
+        "preemption",
+        "preemption_retry",
+        "preemption_degrade",
+        "preemption_failfast",
+        "flaky",
+        "flaky_failfast",
+        "chaos",
+    ]
+}
+
+/// Look up a fault preset by name. The `preemption*` family is the
+/// recovery-policy proving ground (same strikes, different recovery);
+/// `flaky` is non-fatal degradation only (no instance losses — safe
+/// even under fail-fast); `chaos` exercises every stochastic generator.
+pub fn preset(name: &str) -> Option<FaultConfig> {
+    let n = name.to_ascii_lowercase().replace('-', "_");
+    let preemption = |recovery: Option<&str>| FaultConfig {
+        specs: vec![
+            FaultSpec {
+                t: 5.0,
+                kind: FaultKind::NodePreemption { n: 1 },
+            },
+            FaultSpec {
+                t: 9.0,
+                kind: FaultKind::InstanceCrash { agent: 1 },
+            },
+        ],
+        recovery: recovery.map(str::to_string),
+        ..FaultConfig::default()
+    };
+    let flaky = |recovery: Option<&str>| FaultConfig {
+        specs: vec![
+            FaultSpec {
+                t: 3.0,
+                kind: FaultKind::Straggler {
+                    agent: 1,
+                    slowdown: 2.0,
+                    duration_s: 40.0,
+                },
+            },
+            FaultSpec {
+                t: 6.0,
+                kind: FaultKind::SwapLinkFlap {
+                    added_s: 0.5,
+                    duration_s: 30.0,
+                },
+            },
+            FaultSpec {
+                t: 12.0,
+                kind: FaultKind::ClusterResize { delta: 2 },
+            },
+        ],
+        recovery: recovery.map(str::to_string),
+        ..FaultConfig::default()
+    };
+    Some(match n.as_str() {
+        "preemption" => preemption(None),
+        "preemption_retry" => preemption(Some("retry")),
+        "preemption_degrade" => preemption(Some("degrade")),
+        "preemption_failfast" => preemption(Some("fail_fast")),
+        "flaky" => flaky(None),
+        "flaky_failfast" => flaky(Some("fail_fast")),
+        "chaos" => FaultConfig {
+            crashes: 1,
+            preemptions: 1,
+            stragglers: 2,
+            flaps: 1,
+            resizes: 1,
+            horizon_s: 120.0,
+            ..FaultConfig::default()
+        },
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    #[test]
+    fn empty_config_resolves_to_empty_plan() {
+        let cfg = FaultConfig::default();
+        assert!(cfg.is_empty());
+        assert!(cfg.resolve(2048, 8).is_empty());
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn resolve_is_pure_and_sorted() {
+        let cfg = preset("chaos").unwrap();
+        let a = cfg.resolve(2048, 8);
+        let b = cfg.resolve(2048, 8);
+        assert_eq!(a, b, "same seed must resolve the same plan");
+        assert!(!a.is_empty());
+        assert!(a.windows(2).all(|w| w[0].t <= w[1].t), "plan sorted by t");
+        let c = cfg.resolve(7, 8);
+        assert_ne!(a, c, "different seed, different plan");
+    }
+
+    #[test]
+    fn generator_streams_are_decorrelated() {
+        // Adding stragglers must not move where the crashes land.
+        let mut just_crashes = preset("chaos").unwrap();
+        just_crashes.preemptions = 0;
+        just_crashes.stragglers = 0;
+        just_crashes.flaps = 0;
+        just_crashes.resizes = 0;
+        let mut with_stragglers = just_crashes.clone();
+        with_stragglers.stragglers = 3;
+        let crashes_of = |plan: &[FaultSpec]| {
+            plan.iter()
+                .filter(|s| matches!(s.kind, FaultKind::InstanceCrash { .. }))
+                .cloned()
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(
+            crashes_of(&just_crashes.resolve(2048, 8)),
+            crashes_of(&with_stragglers.resolve(2048, 8))
+        );
+    }
+
+    #[test]
+    fn generated_agents_in_range() {
+        let mut cfg = FaultConfig::default();
+        cfg.crashes = 16;
+        cfg.stragglers = 16;
+        cfg.horizon_s = 100.0;
+        for n_agents in [1usize, 3, 8] {
+            for s in cfg.resolve(2048, n_agents) {
+                if let Some(a) = s.kind.agent() {
+                    assert!(a < n_agents, "agent {a} out of range for {n_agents}");
+                }
+                assert!(s.t >= 0.0 && s.t <= 100.0);
+            }
+        }
+    }
+
+    #[test]
+    fn explicit_agents_clamped_into_range() {
+        let cfg = FaultConfig {
+            specs: vec![FaultSpec {
+                t: 1.0,
+                kind: FaultKind::InstanceCrash { agent: 11 },
+            }],
+            ..FaultConfig::default()
+        };
+        let plan = cfg.resolve(0, 8);
+        assert_eq!(plan[0].kind, FaultKind::InstanceCrash { agent: 3 });
+    }
+
+    #[test]
+    fn presets_resolve_and_validate() {
+        for name in preset_names() {
+            let cfg = preset(name).unwrap_or_else(|| panic!("preset {name}"));
+            cfg.validate().unwrap();
+            assert!(!cfg.is_empty(), "{name} must configure faults");
+            assert!(!cfg.resolve(2048, 8).is_empty(), "{name} resolves empty");
+        }
+        assert!(preset("nope").is_none());
+        // Spelling variants normalize.
+        assert_eq!(preset("preemption-retry"), preset("preemption_retry"));
+    }
+
+    #[test]
+    fn validation_rejects_nan_and_negatives() {
+        let mut cfg = FaultConfig::default();
+        cfg.horizon_s = f64::NAN;
+        assert!(cfg.validate().is_err());
+        cfg.horizon_s = -1.0;
+        assert!(cfg.validate().is_err());
+        cfg.horizon_s = 0.0;
+        cfg.crashes = 1; // generator without a horizon
+        assert!(cfg.validate().is_err());
+        cfg.horizon_s = 50.0;
+        cfg.validate().unwrap();
+
+        let bad_slow = FaultConfig {
+            specs: vec![FaultSpec {
+                t: 1.0,
+                kind: FaultKind::Straggler {
+                    agent: 0,
+                    slowdown: 0.5,
+                    duration_s: 10.0,
+                },
+            }],
+            ..FaultConfig::default()
+        };
+        assert!(bad_slow.validate().is_err());
+        let bad_t = FaultConfig {
+            specs: vec![FaultSpec {
+                t: -3.0,
+                kind: FaultKind::NodePreemption { n: 1 },
+            }],
+            ..FaultConfig::default()
+        };
+        assert!(bad_t.validate().is_err());
+        let beyond = FaultConfig {
+            horizon_s: 10.0,
+            specs: vec![FaultSpec {
+                t: 11.0,
+                kind: FaultKind::NodePreemption { n: 1 },
+            }],
+            ..FaultConfig::default()
+        };
+        let err = beyond.validate().unwrap_err();
+        assert!(err.to_string().contains("beyond"), "{err}");
+        let bad_recovery = FaultConfig {
+            recovery: Some("yolo".into()),
+            ..FaultConfig::default()
+        };
+        assert!(bad_recovery.validate().is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_and_unknown_keys() {
+        let j = parse(
+            r#"{"preset": "preemption", "recovery": "degrade",
+                "crashes": 2, "horizon_s": 60.0, "seed": 9}"#,
+        )
+        .unwrap();
+        let cfg = FaultConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.specs.len(), 2, "preset specs kept");
+        assert_eq!(cfg.recovery.as_deref(), Some("degrade"), "override wins");
+        assert_eq!(cfg.crashes, 2);
+        assert_eq!(cfg.horizon_s, 60.0);
+        assert_eq!(cfg.seed, Some(9));
+        cfg.validate().unwrap();
+
+        // Typo'd key → did-you-mean suggestion, like the rest of config.
+        let j = parse(r#"{"recoverry": "retry"}"#).unwrap();
+        let err = FaultConfig::from_json(&j).unwrap_err();
+        match &err {
+            PallasError::UnknownKey { section, nearest, .. } => {
+                assert_eq!(*section, "faults");
+                assert_eq!(nearest.as_deref(), Some("recovery"));
+            }
+            other => panic!("expected UnknownKey, got {other:?}"),
+        }
+        // Bad preset / non-object / unknown kind.
+        let j = parse(r#"{"preset": "zzz"}"#).unwrap();
+        assert!(FaultConfig::from_json(&j).is_err());
+        assert!(FaultConfig::from_json(&parse("[1]").unwrap()).is_err());
+        let j = parse(r#"{"specs": [{"t": 1.0, "kind": "meteor"}]}"#).unwrap();
+        assert!(FaultConfig::from_json(&j).is_err());
+        let j = parse(r#"{"specs": [{"t": 1.0, "kind": "straggler", "agnet": 1}]}"#).unwrap();
+        assert!(matches!(
+            FaultConfig::from_json(&j).unwrap_err(),
+            PallasError::UnknownKey { section: "faults.specs", .. }
+        ));
+    }
+
+    #[test]
+    fn explicit_specs_parse_every_kind() {
+        let j = parse(
+            r#"{"specs": [
+                {"t": 1.0, "kind": "instance_crash", "agent": 2},
+                {"t": 2.0, "kind": "node_preemption", "n": 3},
+                {"t": 3.0, "kind": "straggler", "agent": 1, "slowdown": 3.0,
+                 "duration_s": 20.0},
+                {"t": 4.0, "kind": "swap_link_flap", "added_s": 1.5, "duration_s": 10.0},
+                {"t": 5.0, "kind": "cluster_resize", "delta": -2}
+            ]}"#,
+        )
+        .unwrap();
+        let cfg = FaultConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.specs.len(), 5);
+        assert_eq!(cfg.specs[0].kind, FaultKind::InstanceCrash { agent: 2 });
+        assert_eq!(cfg.specs[1].kind, FaultKind::NodePreemption { n: 3 });
+        assert_eq!(cfg.specs[4].kind, FaultKind::ClusterResize { delta: -2 });
+        cfg.validate().unwrap();
+    }
+}

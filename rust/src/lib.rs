@@ -34,6 +34,7 @@ pub mod config;
 pub mod error;
 pub mod exec;
 pub mod experiment;
+pub mod fault;
 pub mod grpo;
 pub mod memstore;
 pub mod metrics;

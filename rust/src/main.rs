@@ -22,7 +22,8 @@
 //!
 //! Config overrides: --workload MA|CA --framework <name> --steps N
 //! --seed N --micro-batch N --delta N --instances N --json <path>
-//! --scenario <preset> --trace <path> --jobs N (or PALLAS_JOBS)
+//! --scenario <preset> --trace <path> --faults off|<preset>
+//! --jobs N (or PALLAS_JOBS)
 //!
 //! Streaming (DESIGN.md §9): `simulate`/`sweep` accept `--progress`
 //! (live progress on stderr; stdout and --json stay byte-identical)
@@ -76,6 +77,8 @@ options: --workload MA|CA  --framework <name>  --steps N  --seed N
          --micro-batch N  --delta N  --instances N  --json <path>  --quiet
          --scenario <preset>  (see `flexmarl scenarios`)
          --trace <path>       (replay a recorded JSONL trace)
+         --faults off|<preset> (fault-injection plan; `flexmarl simulate
+                               --faults chaos`; see DESIGN.md §10)
          --progress           (live progress on stderr; stdout unchanged)
 simulate: --emit jsonl        (stream one StepReport JSON line per step)
          --emit jsonl-batch   (same lines from a monolithic run)
@@ -110,6 +113,20 @@ fn build_cfg(args: &Args) -> ExperimentConfig {
     if let Some(t) = args.get("trace") {
         cfg.workload.trace = Some(t.to_string());
     }
+    // `--faults off` is an explicit no-plan spelling: it must leave the
+    // config bit-identical to never passing the flag (CI byte-diffs the
+    // two), so it simply keeps the default empty FaultConfig.
+    if let Some(f) = args.get("faults") {
+        if f != "off" {
+            cfg.faults = flexmarl::fault::preset(f).unwrap_or_else(|| {
+                eprintln!(
+                    "unknown fault preset '{f}' (valid: off, {})",
+                    flexmarl::fault::preset_names().join(", ")
+                );
+                std::process::exit(2)
+            });
+        }
+    }
     cfg.validate().unwrap_or_else(|e| {
         eprintln!("invalid config: {e}");
         std::process::exit(2)
@@ -132,12 +149,21 @@ fn build_experiment(cfg: &ExperimentConfig, opts: &SimOptions) -> Experiment {
         })
 }
 
+// Typed failure path: a fail-fast recovery abort (`--faults
+// preemption_failfast`) or a tripped event budget exits 1 with the
+// error's message, never a panic.
 fn run_eval(cfg: &ExperimentConfig, opts: &SimOptions) -> StepReport {
-    build_experiment(cfg, opts).evaluate()
+    build_experiment(cfg, opts).try_evaluate().unwrap_or_else(|e| {
+        eprintln!("simulation failed: {e}");
+        std::process::exit(1)
+    })
 }
 
 fn run_sim(cfg: &ExperimentConfig, opts: &SimOptions) -> flexmarl::orchestrator::SimOutcome {
-    build_experiment(cfg, opts).run()
+    build_experiment(cfg, opts).try_run().unwrap_or_else(|e| {
+        eprintln!("simulation failed: {e}");
+        std::process::exit(1)
+    })
 }
 
 fn build_opts(args: &Args) -> SimOptions {

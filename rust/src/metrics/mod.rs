@@ -53,6 +53,18 @@ pub struct StepReport {
     /// State swap seconds incurred (training engine) during this step's
     /// completion window.
     pub swap_s: f64,
+    /// Fault-plane recovery accounting (DESIGN.md §10) — all zero on a
+    /// fault-free run. Requests re-dispatched by the retry recovery
+    /// policy during this step's completion window.
+    pub retries: usize,
+    /// Generated tokens discarded because their instance died mid-
+    /// decode (the work is re-done from scratch on retry/degrade).
+    pub lost_tokens: f64,
+    /// Backoff seconds the retry policy scheduled before re-dispatch.
+    pub recovery_s: f64,
+    /// Virtual seconds of degraded capacity (instance lost, replacement
+    /// not yet re-provisioned) charged by the degrade policy.
+    pub degraded_s: f64,
 }
 
 /// Poll-sampled time series covering the whole run — the data behind
@@ -102,6 +114,10 @@ impl StepReport {
             ("utilization", Json::num(self.utilization())),
             ("scale_ops", Json::num(self.scale_ops as f64)),
             ("swap_s", Json::num(self.swap_s)),
+            ("retries", Json::num(self.retries as f64)),
+            ("lost_tokens", Json::num(self.lost_tokens)),
+            ("recovery_s", Json::num(self.recovery_s)),
+            ("degraded_s", Json::num(self.degraded_s)),
             (
                 "agent_calls",
                 Json::arr(self.agent_calls.iter().map(|&c| Json::num(c as f64))),
@@ -127,6 +143,10 @@ pub fn aggregate(reports: &[StepReport]) -> StepReport {
     out.busy_device_s = reports.iter().map(|r| r.busy_device_s).sum::<f64>() / n;
     out.swap_s = reports.iter().map(|r| r.swap_s).sum::<f64>() / n;
     out.scale_ops = (reports.iter().map(|r| r.scale_ops).sum::<usize>() as f64 / n) as usize;
+    out.retries = (reports.iter().map(|r| r.retries).sum::<usize>() as f64 / n) as usize;
+    out.lost_tokens = reports.iter().map(|r| r.lost_tokens).sum::<f64>() / n;
+    out.recovery_s = reports.iter().map(|r| r.recovery_s).sum::<f64>() / n;
+    out.degraded_s = reports.iter().map(|r| r.degraded_s).sum::<f64>() / n;
     let n_agents = out.agent_calls.len();
     out.agent_calls = (0..n_agents)
         .map(|i| {
@@ -219,5 +239,30 @@ mod tests {
         let j = mk("X", 10.0, 100.0).to_json();
         let parsed = crate::util::json::parse(&j.to_string()).unwrap();
         assert_eq!(parsed.at(&["framework"]).unwrap().as_str(), Some("X"));
+    }
+
+    #[test]
+    fn recovery_accounting_serializes_and_aggregates() {
+        // Fault-free reports carry the recovery fields zeroed (the
+        // schema is unconditional so faulted and fault-free grids stay
+        // comparable).
+        let j = mk("X", 10.0, 100.0).to_json();
+        let parsed = crate::util::json::parse(&j.to_string()).unwrap();
+        for key in ["retries", "lost_tokens", "recovery_s", "degraded_s"] {
+            assert_eq!(parsed.at(&[key]).and_then(Json::as_f64), Some(0.0), "{key}");
+        }
+        let mut a = mk("X", 100.0, 1000.0);
+        a.retries = 3;
+        a.lost_tokens = 400.0;
+        a.recovery_s = 1.5;
+        a.degraded_s = 30.0;
+        let mut b = mk("X", 100.0, 1000.0);
+        b.retries = 2;
+        b.lost_tokens = 100.0;
+        let agg = aggregate(&[a, b]);
+        assert_eq!(agg.retries, 2, "floor-mean like scale_ops");
+        assert!((agg.lost_tokens - 250.0).abs() < 1e-9);
+        assert!((agg.recovery_s - 0.75).abs() < 1e-9);
+        assert!((agg.degraded_s - 15.0).abs() < 1e-9);
     }
 }

@@ -105,6 +105,23 @@ pub enum EngineEvent<'a> {
     /// A colocated pool began a phase switch for `step` (`to_train`:
     /// offload inference / onload training, else the reverse).
     PhaseSwitch { step: usize, to_train: bool },
+    /// A planned fault struck (DESIGN.md §10). `kind` is the
+    /// [`crate::fault::FaultKind`] name; `agent` is set for faults that
+    /// target one agent.
+    FaultInjected {
+        kind: &'static str,
+        agent: Option<usize>,
+    },
+    /// A request displaced by an instance loss was re-dispatched by the
+    /// retry recovery policy; `attempt` counts this request's retries
+    /// (1-based at first re-dispatch).
+    RequestRetried { agent: usize, attempt: u32 },
+    /// The degrade recovery policy re-provisioned a replacement
+    /// instance for `agent` after its recovery delay.
+    InstanceRecovered { agent: usize, instance: usize },
+    /// A mid-run cluster resize was applied: `delta` requested change,
+    /// `instances` actually added (or drained, for negative `delta`).
+    ClusterResized { delta: i64, instances: usize },
 }
 
 /// Observer of [`EngineEvent`]s. `t` is virtual simulation time.
@@ -219,6 +236,18 @@ impl EventSink for ProgressSink {
                 self.w,
                 "[t={t:9.1}s] balancer: {n_instances} instance(s) \
                  agent{donor} -> agent{target}"
+            ),
+            EngineEvent::FaultInjected { kind, agent } => match agent {
+                Some(a) => writeln!(self.w, "[t={t:9.1}s] fault: {kind} (agent{a})"),
+                None => writeln!(self.w, "[t={t:9.1}s] fault: {kind}"),
+            },
+            EngineEvent::InstanceRecovered { agent, .. } => writeln!(
+                self.w,
+                "[t={t:9.1}s] recovery: agent{agent} re-provisioned"
+            ),
+            EngineEvent::ClusterResized { delta, instances } => writeln!(
+                self.w,
+                "[t={t:9.1}s] resize: delta {delta:+} -> {instances} instance(s) changed"
             ),
             _ => Ok(()),
         };

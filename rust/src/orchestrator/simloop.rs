@@ -41,9 +41,10 @@ use super::events::{EngineEvent, SinkSet};
 use crate::cluster::DevicePool;
 use crate::config::ExperimentConfig;
 use crate::error::PallasError;
+use crate::fault::{FaultKind, FaultSpec};
 use crate::memstore::TransferModel;
 use crate::metrics::{Counters, MetricId, RunSeries, StepReport};
-use crate::policy::{LoadSnapshot, PolicyBundle};
+use crate::policy::{LoadSnapshot, PolicyBundle, RecoveryAction};
 use crate::rollout::{CallRef, Dispatch, RequestId, RolloutManager, TrajectoryScheduler};
 use crate::sim::{EventQueue, QueueKind};
 use crate::store::{ColumnType, ExperienceStore, Field, PutRow, SampleId, Value};
@@ -51,7 +52,7 @@ use crate::training::{
     apply_update_s, grad_compute_s, swap_in_cost, swap_out_cost, AgentCentricAllocator,
 };
 use crate::workload::{scenario, StepWorkload, Trace};
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
 /// Engine knobs not fixed by the paper (documented in DESIGN.md §6).
 #[derive(Debug, Clone)]
@@ -112,6 +113,15 @@ enum Ev {
     GradDone { agent: usize, step: usize, n: usize },
     ApplyDone { agent: usize, step: usize },
     SwapOutDone { agent: usize },
+    /// Fault `fault_plan[i]` strikes (DESIGN.md §10). Plan events are
+    /// queued at construction, so fault ordering follows the queue's
+    /// `(time, seq)` rule like every other event — bit-identical for
+    /// any `--jobs N`.
+    FaultStrike(usize),
+    /// Backoff expired for `retry_parked[i]`: re-dispatch it.
+    RetryDue(usize),
+    /// Degrade recovery: re-provision a replacement instance.
+    Recover { agent: usize },
 }
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -123,6 +133,12 @@ enum AgentTrain {
     SwappingOut,
 }
 
+/// `Clone` so fault recovery can re-dispatch a displaced request as a
+/// fresh slab entry (the dead entry is tombstoned until its stale
+/// completion event drains). `decode_s` is *not* re-priced on retry:
+/// the re-dispatch costs what the original dispatch cost, keeping
+/// faulted runs deterministic.
+#[derive(Clone)]
 struct ReqInfo {
     step: usize,
     call: CallRef,
@@ -131,6 +147,9 @@ struct ReqInfo {
     /// Env/tool seconds appended after decode.
     env_s: f64,
     agent: usize,
+    /// Times this logical call was re-dispatched after an instance
+    /// loss (fault plane; 0 on first dispatch).
+    attempt: u32,
 }
 
 /// Slab of in-flight request metadata: `RequestId`s are slot indices
@@ -390,6 +409,37 @@ pub(crate) struct Engine {
     /// carry deltas, so they are complete the moment the step is.
     prev_scale_ops: f64,
     prev_swap_s: f64,
+    // ---- fault plane (DESIGN.md §10) --------------------------------
+    /// Resolved fault plan, indexed by `Ev::FaultStrike`. Empty on
+    /// fault-free runs (no events queued, no per-event overhead).
+    fault_plan: Vec<FaultSpec>,
+    /// Requests whose instance died with the completion event already
+    /// in flight: the stale `CallDone` is swallowed when it lands (the
+    /// slab slot stays allocated until then, so ids cannot collide).
+    dead_reqs: BTreeSet<RequestId>,
+    /// Displaced requests waiting out a retry backoff, indexed by
+    /// `Ev::RetryDue`.
+    retry_parked: Vec<Option<ReqInfo>>,
+    /// Straggler windows: calls submitted to `agent` before
+    /// `slow_until[agent]` decode `slow_mult[agent]`× slower.
+    slow_until: Vec<f64>,
+    slow_mult: Vec<f64>,
+    /// Swap-link flap window: swaps started before `flap_until` pay
+    /// `flap_added_s` extra (zero-cost guard when no flap: `t < 0.0`).
+    flap_until: f64,
+    flap_added_s: f64,
+    /// Fail-fast recovery latched an abort; surfaced (once) by
+    /// `pump_step` after the current event finishes handling, exactly
+    /// like the event-budget guard.
+    pending_error: Option<PallasError>,
+    m_retries: MetricId,
+    m_lost_tokens: MetricId,
+    m_recovery_s: MetricId,
+    m_degraded_s: MetricId,
+    prev_retries: f64,
+    prev_lost_tokens: f64,
+    prev_recovery_s: f64,
+    prev_degraded_s: f64,
 }
 
 impl Engine {
@@ -397,10 +447,23 @@ impl Engine {
         cfg: ExperimentConfig,
         opts: SimOptions,
         step_workloads: Vec<StepWorkload>,
-        policies: PolicyBundle,
+        mut policies: PolicyBundle,
         sinks: SinkSet,
     ) -> Self {
         let n_agents = cfg.workload.agents.len();
+        // Config-level recovery override (`faults.recovery`): applied
+        // here so every entry point — CLI, Experiment builder, exec
+        // sweeps — honours it identically. Names are validated by
+        // `ExperimentConfig::validate`; a hand-built config with a bad
+        // name fails loudly.
+        if let Some(name) = &cfg.faults.recovery {
+            policies.recovery = crate::policy::recovery_by_name(name)
+                .unwrap_or_else(|| panic!("unknown recovery policy '{name}'"));
+        }
+        // The fault plan resolves purely from (config, seed) before the
+        // event loop exists — nothing about fault timing can observe
+        // engine state (the determinism contract, DESIGN.md §10).
+        let fault_plan = cfg.faults.resolve(cfg.seed, n_agents);
         assert_eq!(
             step_workloads.len(),
             cfg.steps,
@@ -512,6 +575,10 @@ impl Engine {
         let mut counters = Counters::new();
         let m_scale_ops = counters.register("scale_ops");
         let m_swap_s = counters.register("swap_s");
+        let m_retries = counters.register("retries");
+        let m_lost_tokens = counters.register("lost_tokens");
+        let m_recovery_s = counters.register("recovery_s");
+        let m_degraded_s = counters.register("degraded_s");
 
         // Recording phase begins: no counter key may be constructed
         // past this point (debug-asserted by the interner).
@@ -550,6 +617,22 @@ impl Engine {
             pending: VecDeque::new(),
             prev_scale_ops: 0.0,
             prev_swap_s: 0.0,
+            fault_plan,
+            dead_reqs: BTreeSet::new(),
+            retry_parked: Vec::new(),
+            slow_until: vec![0.0; n_agents],
+            slow_mult: vec![1.0; n_agents],
+            flap_until: 0.0,
+            flap_added_s: 0.0,
+            pending_error: None,
+            m_retries,
+            m_lost_tokens,
+            m_recovery_s,
+            m_degraded_s,
+            prev_retries: 0.0,
+            prev_lost_tokens: 0.0,
+            prev_recovery_s: 0.0,
+            prev_degraded_s: 0.0,
             cfg,
             opts,
             policies,
@@ -561,6 +644,15 @@ impl Engine {
         if !engine.steps.is_empty() {
             engine.q.push_at(0.0, Ev::StartStep(0));
             engine.q.push_at(engine.opts.scaler_poll_s, Ev::Poll);
+            // Inject the fault plan as first-class events. Plan order
+            // (time-sorted, stable) becomes push order, so equal-time
+            // faults strike in plan order via the queue's FIFO
+            // tie-break; strikes beyond the run's end are abandoned
+            // with the rest of the queue.
+            for i in 0..engine.fault_plan.len() {
+                let strike_t = engine.fault_plan[i].t;
+                engine.q.push_at(strike_t, Ev::FaultStrike(i));
+            }
         }
         engine
     }
@@ -622,6 +714,13 @@ impl Engine {
                 });
             }
             self.handle(t, ev);
+            if let Some(e) = self.pending_error.take() {
+                // Fail-fast recovery latched an abort during handling:
+                // poison the engine like the event-budget guard does
+                // (the error is yielded once, then the run is over).
+                self.failed = true;
+                return Err(e);
+            }
             self.collect_completed(t);
             if self.all_done() {
                 self.done = true;
@@ -673,6 +772,10 @@ impl Engine {
             .collect();
         let scale_now = self.counters.get(self.m_scale_ops);
         let swap_now = self.counters.get(self.m_swap_s);
+        let retries_now = self.counters.get(self.m_retries);
+        let lost_now = self.counters.get(self.m_lost_tokens);
+        let recovery_now = self.counters.get(self.m_recovery_s);
+        let degraded_now = self.counters.get(self.m_degraded_s);
         let report = StepReport {
             framework: self.policies.name.clone(),
             workload: self.cfg.workload.name.clone(),
@@ -688,9 +791,17 @@ impl Engine {
             trajectory_latencies: latencies,
             scale_ops: (scale_now - self.prev_scale_ops) as usize,
             swap_s: swap_now - self.prev_swap_s,
+            retries: (retries_now - self.prev_retries) as usize,
+            lost_tokens: lost_now - self.prev_lost_tokens,
+            recovery_s: recovery_now - self.prev_recovery_s,
+            degraded_s: degraded_now - self.prev_degraded_s,
         };
         self.prev_scale_ops = scale_now;
         self.prev_swap_s = swap_now;
+        self.prev_retries = retries_now;
+        self.prev_lost_tokens = lost_now;
+        self.prev_recovery_s = recovery_now;
+        self.prev_degraded_s = degraded_now;
         report
     }
 
@@ -760,6 +871,9 @@ impl Engine {
                 // out (e.g., the rollout finished meanwhile).
                 self.maybe_train(t, agent);
             }
+            Ev::FaultStrike(i) => self.fault_strike(t, i),
+            Ev::RetryDue(i) => self.retry_due(t, i),
+            Ev::Recover { agent } => self.recover(t, agent),
         }
     }
 
@@ -795,6 +909,11 @@ impl Engine {
             self.steps[step].traj_start[c.traj] = t;
         }
         let mut decode_s = spec.tokens / self.cfg.workload.agents[spec.agent].model.decode_tps();
+        // Straggler fault window: calls submitted while the agent is
+        // degraded decode slower (no-fault guard is `t < 0.0` — free).
+        if t < self.slow_until[spec.agent] {
+            decode_s *= self.slow_mult[spec.agent];
+        }
         // Colocated architectures share HBM/compute between phases: when
         // training overlaps generation on the same pool (MARTI's one-step
         // async), decode pays a memory-contention penalty (§4.1).
@@ -813,6 +932,7 @@ impl Engine {
             decode_s,
             env_s: spec.env_s,
             agent: spec.agent,
+            attempt: 0,
         });
         match self.man.submit(rid, spec.agent) {
             Dispatch::Started(_) => {
@@ -824,6 +944,13 @@ impl Engine {
     }
 
     fn call_done(&mut self, t: f64, rid: RequestId) {
+        // Stale completion of a request whose instance died mid-decode:
+        // the work was already re-dispatched (or discarded) by the
+        // recovery policy — free the tombstoned slab slot and move on.
+        if self.dead_reqs.remove(&rid) {
+            self.reqs.remove(rid);
+            return;
+        }
         let info = self.reqs.remove(rid);
         // Device-busy: decode seconds × the slot's device share.
         let dev = self.inst_dev[info.agent] as f64;
@@ -983,16 +1110,22 @@ impl Engine {
             match self.alloc.activate(agent) {
                 Some((_p, local)) => {
                     let cost = swap_in_cost(model, &self.cfg.cluster, local);
-                    self.counters.add(self.m_swap_s, cost.total());
-                    let ev = EngineEvent::SwapIn { agent, step, cost_s: cost.total() };
+                    // Swap-link flap window: transfers started while the
+                    // link is congested pay the added latency.
+                    let mut cost_s = cost.total();
+                    if t < self.flap_until {
+                        cost_s += self.flap_added_s;
+                    }
+                    self.counters.add(self.m_swap_s, cost_s);
+                    let ev = EngineEvent::SwapIn { agent, step, cost_s };
                     self.sinks.emit(t, &ev);
                     self.tstate[agent] = AgentTrain::SwappingIn;
                     if need_apply {
                         // Rare: resources were released before apply.
                         self.tstate[agent] = AgentTrain::Computing;
-                        self.q.push_in(cost.total(), Ev::GradDone { agent, step, n: 0 });
+                        self.q.push_in(cost_s, Ev::GradDone { agent, step, n: 0 });
                     } else {
-                        self.q.push_in(cost.total(), Ev::SwapInDone { agent, step });
+                        self.q.push_in(cost_s, Ev::SwapInDone { agent, step });
                     }
                 }
                 None => { /* queued on the allocator; retried on release */ }
@@ -1093,11 +1226,15 @@ impl Engine {
         let model = self.cfg.workload.agents[agent].model;
         if self.alloc.release(agent).is_some() {
             let cost = swap_out_cost(model, &self.cfg.cluster);
-            self.counters.add(self.m_swap_s, cost.total());
-            let ev = EngineEvent::SwapOut { agent, cost_s: cost.total() };
+            let mut cost_s = cost.total();
+            if t < self.flap_until {
+                cost_s += self.flap_added_s;
+            }
+            self.counters.add(self.m_swap_s, cost_s);
+            let ev = EngineEvent::SwapOut { agent, cost_s };
             self.sinks.emit(t, &ev);
             self.tstate[agent] = AgentTrain::SwappingOut;
-            self.q.push_in(cost.total(), Ev::SwapOutDone { agent });
+            self.q.push_in(cost_s, Ev::SwapOutDone { agent });
         } else {
             self.tstate[agent] = AgentTrain::Idle;
         }
@@ -1150,71 +1287,81 @@ impl Engine {
             + self.alloc.active_devices();
         self.busy_series.push((t, busy_now));
 
-        let mut migrated = false;
-        if self.policies.balance.enabled() {
-            let queue_lens = self.man.queue_lens();
-            let counts = self.man.instance_counts();
-            if let Some(plan) = self.policies.balance.plan(&LoadSnapshot {
-                queue_lens: &queue_lens,
-                instance_counts: &counts,
-                delta_threshold: self.cfg.pipeline.delta_threshold,
-                busy_scaling: &self.agent_busy_scaling,
-            }) {
-                migrated = true;
-                self.sinks.emit(
-                    t,
-                    &EngineEvent::MigrationPlanned {
-                        donor: plan.donor,
-                        target: plan.target,
-                        n_instances: plan.n_instances,
-                    },
-                );
-                // Drain the donor's *idlest* instances (least stranded
-                // work); displaced requests re-queue on its survivors.
-                let donor_insts: Vec<usize> = self
-                    .man
-                    .instances_by_load(plan.donor)
-                    .into_iter()
-                    .take(plan.n_instances)
-                    .collect();
-                let mut displaced = Vec::new();
-                for &iid in &donor_insts {
-                    displaced.extend(self.man.drain_instance(iid));
-                }
-                for rid in displaced {
-                    let agent = self.reqs.get(rid).agent;
-                    if let Dispatch::Started(_) = self.man.submit(rid, agent) {
-                        let info = self.reqs.get(rid);
-                        self.q
-                            .push_in(info.decode_s + info.env_s, Ev::CallDone(rid));
-                    }
-                }
-                self.agent_busy_scaling[plan.donor] = true;
-                self.agent_busy_scaling[plan.target] = true;
-                self.counters.add(self.m_scale_ops, 1.0);
-                // Weight transfer via Set/Get (contiguous buffer, §9).
-                let model = self.cfg.workload.agents[plan.target].model;
-                let lat = crate::rollout::migration_latency(
-                    model,
-                    &self.transfer,
-                    0,
-                    self.cfg.cluster.devices_per_node, // cross-node typical
-                    self.opts.reinit_s,
-                );
-                self.q.push_in(
-                    lat,
-                    Ev::MigrationArrive {
-                        donor_insts,
-                        target: plan.target,
-                    },
-                );
-            }
-        }
+        let migrated = self.try_rebalance(t);
         let ev = EngineEvent::ScalerDecision { migrated, busy_devices: busy_now };
         self.sinks.emit(t, &ev);
         if !self.all_done() {
             self.q.push_in(self.opts.scaler_poll_s, Ev::Poll);
         }
+    }
+
+    /// One balancing decision (the poll tick's migration logic; also
+    /// invoked by degrade-and-rebalance recovery right after an
+    /// instance loss, so surviving capacity re-plans around the hole
+    /// without waiting for the next poll). Returns whether a migration
+    /// was planned. No-op for policies with balancing disabled.
+    fn try_rebalance(&mut self, t: f64) -> bool {
+        if !self.policies.balance.enabled() {
+            return false;
+        }
+        let queue_lens = self.man.queue_lens();
+        let counts = self.man.instance_counts();
+        let Some(plan) = self.policies.balance.plan(&LoadSnapshot {
+            queue_lens: &queue_lens,
+            instance_counts: &counts,
+            delta_threshold: self.cfg.pipeline.delta_threshold,
+            busy_scaling: &self.agent_busy_scaling,
+        }) else {
+            return false;
+        };
+        self.sinks.emit(
+            t,
+            &EngineEvent::MigrationPlanned {
+                donor: plan.donor,
+                target: plan.target,
+                n_instances: plan.n_instances,
+            },
+        );
+        // Drain the donor's *idlest* instances (least stranded
+        // work); displaced requests re-queue on its survivors.
+        let donor_insts: Vec<usize> = self
+            .man
+            .instances_by_load(plan.donor)
+            .into_iter()
+            .take(plan.n_instances)
+            .collect();
+        let mut displaced = Vec::new();
+        for &iid in &donor_insts {
+            displaced.extend(self.man.drain_instance(iid));
+        }
+        for rid in displaced {
+            let agent = self.reqs.get(rid).agent;
+            if let Dispatch::Started(_) = self.man.submit(rid, agent) {
+                let info = self.reqs.get(rid);
+                self.q
+                    .push_in(info.decode_s + info.env_s, Ev::CallDone(rid));
+            }
+        }
+        self.agent_busy_scaling[plan.donor] = true;
+        self.agent_busy_scaling[plan.target] = true;
+        self.counters.add(self.m_scale_ops, 1.0);
+        // Weight transfer via Set/Get (contiguous buffer, §9).
+        let model = self.cfg.workload.agents[plan.target].model;
+        let lat = crate::rollout::migration_latency(
+            model,
+            &self.transfer,
+            0,
+            self.cfg.cluster.devices_per_node, // cross-node typical
+            self.opts.reinit_s,
+        );
+        self.q.push_in(
+            lat,
+            Ev::MigrationArrive {
+                donor_insts,
+                target: plan.target,
+            },
+        );
+        true
     }
 
     fn migration_arrive(&mut self, t: f64, donor_insts: Vec<usize>, target: usize) {
@@ -1243,13 +1390,248 @@ impl Engine {
         self.agent_busy_scaling[target] = false;
         let _ = t;
     }
+
+    // -----------------------------------------------------------------------
+    // Fault plane (DESIGN.md §10)
+    // -----------------------------------------------------------------------
+
+    /// Execute `fault_plan[idx]`. Victim selection is deterministic —
+    /// idlest-first within an agent ([`RolloutManager::instances_by_load`],
+    /// load then lowest id) and fattest-agent-first across agents — and
+    /// obeys the liveness rule: destructive faults never remove an
+    /// agent's *last* live instance, so every recovery policy can still
+    /// drive the run to completion (fail-fast aborts deliberately, not
+    /// by starvation).
+    fn fault_strike(&mut self, t: f64, idx: usize) {
+        let kind = self.fault_plan[idx].kind.clone();
+        let ev = EngineEvent::FaultInjected { kind: kind.name(), agent: kind.agent() };
+        self.sinks.emit(t, &ev);
+        match kind {
+            FaultKind::InstanceCrash { agent } => {
+                if self.man.instance_count(agent) >= 2 {
+                    let victim = self.man.instances_by_load(agent)[0];
+                    self.lose_instances(t, vec![victim]);
+                }
+            }
+            FaultKind::NodePreemption { n } => {
+                // A node going away takes the idlest instance of the
+                // fattest pool, n times (tie → lowest agent id).
+                let mut counts: Vec<usize> =
+                    (0..self.n_agents()).map(|a| self.man.instance_count(a)).collect();
+                let mut victims: Vec<usize> = Vec::new();
+                for _ in 0..n {
+                    let Some(agent) = (0..counts.len())
+                        .filter(|&a| counts[a] >= 2)
+                        .max_by_key(|&a| (counts[a], std::cmp::Reverse(a)))
+                    else {
+                        break;
+                    };
+                    let Some(victim) = self
+                        .man
+                        .instances_by_load(agent)
+                        .into_iter()
+                        .find(|i| !victims.contains(i))
+                    else {
+                        break;
+                    };
+                    victims.push(victim);
+                    counts[agent] -= 1;
+                }
+                self.lose_instances(t, victims);
+            }
+            FaultKind::Straggler { agent, slowdown, duration_s } => {
+                self.slow_until[agent] = self.slow_until[agent].max(t + duration_s);
+                self.slow_mult[agent] = slowdown;
+            }
+            FaultKind::SwapLinkFlap { added_s, duration_s } => {
+                self.flap_until = self.flap_until.max(t + duration_s);
+                self.flap_added_s = added_s;
+            }
+            FaultKind::ClusterResize { delta } => self.cluster_resize(t, delta),
+        }
+    }
+
+    /// Generated tokens of the call behind `info` — the lost-work
+    /// accounting for a request killed mid-decode.
+    fn call_tokens(&self, info: &ReqInfo) -> f64 {
+        self.steps[info.step].workload.trajectories[info.call.traj].calls[info.call.call].tokens
+    }
+
+    /// Kill `victims` and route their displaced work through the
+    /// bundle's [`crate::policy::RecoveryPolicy`].
+    ///
+    /// Store invalidation: rows below the agent's oldest unapplied step
+    /// are genuinely stale (their step's update already applied) and
+    /// are evicted defensively; the *displaced* requests themselves
+    /// never reached the store — GRPO samples only enter at group
+    /// completion — so re-dispatch alone restores consistency.
+    fn lose_instances(&mut self, t: f64, victims: Vec<usize>) {
+        for iid in victims {
+            let Some(&agent) = self.inst_agent.get(&iid) else {
+                continue;
+            };
+            self.inst_agent.remove(&iid);
+            let (active, queued) = self.man.fail_instance(iid);
+            if let Some(s) = self.train_step_for(agent) {
+                self.store.evict_stale(&self.agent_keys[agent], s as u64);
+            }
+            match self.policies.recovery.on_instance_lost(t, agent, iid) {
+                RecoveryAction::Abort => {
+                    for rid in active {
+                        self.dead_reqs.insert(rid);
+                    }
+                    for rid in queued {
+                        self.reqs.remove(rid);
+                    }
+                    if self.pending_error.is_none() {
+                        self.pending_error =
+                            Some(PallasError::InstanceLost { t, agent, instance: iid });
+                    }
+                }
+                RecoveryAction::Retry => {
+                    for rid in active {
+                        // Mid-decode work is lost and re-done from
+                        // scratch; the in-flight CallDone is tombstoned.
+                        let info = self.reqs.get(rid).clone();
+                        let lost = self.call_tokens(&info);
+                        self.counters.add(self.m_lost_tokens, lost);
+                        self.dead_reqs.insert(rid);
+                        self.park_retry(t, info);
+                    }
+                    for rid in queued {
+                        // Queued work hadn't started: nothing lost, but
+                        // it still waits out the backoff.
+                        let info = self.reqs.remove(rid);
+                        self.park_retry(t, info);
+                    }
+                }
+                RecoveryAction::Reprovision { delay_s } => {
+                    // Graceful degradation: displaced work re-plans
+                    // immediately onto survivors (no backoff), the
+                    // balancer re-plans around the hole, and a
+                    // replacement comes up after the recovery delay.
+                    for rid in active {
+                        let info = self.reqs.get(rid).clone();
+                        let lost = self.call_tokens(&info);
+                        self.counters.add(self.m_lost_tokens, lost);
+                        self.dead_reqs.insert(rid);
+                        self.resubmit(info);
+                    }
+                    for rid in queued {
+                        let info = self.reqs.remove(rid);
+                        self.resubmit(info);
+                    }
+                    self.counters.add(self.m_degraded_s, delay_s);
+                    self.try_rebalance(t);
+                    self.q.push_at(t + delay_s, Ev::Recover { agent });
+                }
+            }
+        }
+    }
+
+    /// Park a displaced request for its policy backoff, then re-dispatch
+    /// via [`Ev::RetryDue`].
+    fn park_retry(&mut self, t: f64, info: ReqInfo) {
+        let backoff = self.policies.recovery.backoff_s(info.attempt);
+        self.counters.add(self.m_recovery_s, backoff);
+        let idx = self.retry_parked.len();
+        self.retry_parked.push(Some(info));
+        self.q.push_at(t + backoff, Ev::RetryDue(idx));
+    }
+
+    fn retry_due(&mut self, t: f64, idx: usize) {
+        let Some(mut info) = self.retry_parked[idx].take() else {
+            return;
+        };
+        info.attempt += 1;
+        self.counters.add(self.m_retries, 1.0);
+        let ev = EngineEvent::RequestRetried { agent: info.agent, attempt: info.attempt };
+        self.sinks.emit(t, &ev);
+        self.resubmit(info);
+    }
+
+    /// Re-dispatch a displaced request as a fresh slab entry (new id —
+    /// the dead id stays tombstoned until its stale completion drains).
+    /// Decode is not re-priced: determinism over realism.
+    fn resubmit(&mut self, info: ReqInfo) {
+        let agent = info.agent;
+        let rid = self.reqs.alloc(info);
+        match self.man.submit(rid, agent) {
+            Dispatch::Started(_) => {
+                let i = self.reqs.get(rid);
+                self.q.push_in(i.decode_s + i.env_s, Ev::CallDone(rid));
+            }
+            Dispatch::Enqueued(_) | Dispatch::Parked => {}
+        }
+    }
+
+    /// Degrade recovery's delayed re-provision: bring a replacement
+    /// instance up for `agent`.
+    fn recover(&mut self, t: f64, agent: usize) {
+        let (iid, started) = self.man.add_instance(agent, self.opts.concurrency);
+        self.inst_agent.insert(iid, agent);
+        let ev = EngineEvent::InstanceRecovered { agent, instance: iid };
+        self.sinks.emit(t, &ev);
+        for rid in started {
+            let info = self.reqs.get(rid);
+            self.q.push_in(info.decode_s + info.env_s, Ev::CallDone(rid));
+        }
+    }
+
+    /// Mid-run cluster resize. Scale-up adds instances to the thinnest
+    /// pools (tie → lowest agent id); scale-down *gracefully drains*
+    /// the idlest instance of the fattest pools — a planned resize
+    /// loses no work, unlike a crash. The drained carcass finishes its
+    /// active requests and is never re-used (the dispatch heap already
+    /// excludes it); it is left in place rather than garbage-collected.
+    fn cluster_resize(&mut self, t: f64, delta: i64) {
+        let mut changed = 0usize;
+        if delta > 0 {
+            for _ in 0..delta {
+                let Some(agent) = (0..self.n_agents())
+                    .min_by_key(|&a| (self.man.instance_count(a), a))
+                else {
+                    break;
+                };
+                let (iid, started) = self.man.add_instance(agent, self.opts.concurrency);
+                self.inst_agent.insert(iid, agent);
+                for rid in started {
+                    let info = self.reqs.get(rid);
+                    self.q.push_in(info.decode_s + info.env_s, Ev::CallDone(rid));
+                }
+                changed += 1;
+            }
+        } else {
+            for _ in 0..(-delta) {
+                let Some(agent) = (0..self.n_agents())
+                    .filter(|&a| self.man.instance_count(a) >= 2)
+                    .max_by_key(|&a| (self.man.instance_count(a), std::cmp::Reverse(a)))
+                else {
+                    break;
+                };
+                let iid = self.man.instances_by_load(agent)[0];
+                let displaced = self.man.drain_instance(iid);
+                self.inst_agent.remove(&iid);
+                for rid in displaced {
+                    let r_agent = self.reqs.get(rid).agent;
+                    if let Dispatch::Started(_) = self.man.submit(rid, r_agent) {
+                        let info = self.reqs.get(rid);
+                        self.q.push_in(info.decode_s + info.env_s, Ev::CallDone(rid));
+                    }
+                }
+                changed += 1;
+            }
+        }
+        let ev = EngineEvent::ClusterResized { delta, instances: changed };
+        self.sinks.emit(t, &ev);
+    }
 }
 
 /// Event-kind count and names: the run-loop histogram is a plain
 /// `[u64; EV_KINDS]` indexed by [`ev_idx`] — nothing string-keyed on
 /// the event path; names attach only if the livelock guard fires
 /// ([`PallasError::EventBudget`]).
-const EV_KINDS: usize = 10;
+const EV_KINDS: usize = 13;
 const EV_NAMES: [&str; EV_KINDS] = [
     "StartStep",
     "CallDone",
@@ -1261,6 +1643,9 @@ const EV_NAMES: [&str; EV_KINDS] = [
     "GradDone",
     "ApplyDone",
     "SwapOutDone",
+    "FaultStrike",
+    "RetryDue",
+    "Recover",
 ];
 
 fn ev_idx(ev: &Ev) -> usize {
@@ -1275,6 +1660,9 @@ fn ev_idx(ev: &Ev) -> usize {
         Ev::GradDone { .. } => 7,
         Ev::ApplyDone { .. } => 8,
         Ev::SwapOutDone { .. } => 9,
+        Ev::FaultStrike(_) => 10,
+        Ev::RetryDue(_) => 11,
+        Ev::Recover { .. } => 12,
     }
 }
 

@@ -14,6 +14,7 @@
 //! | [`BalancePolicy`]  | §5.2 hierarchical load balancing | whether a poll tick migrates inference instances |
 //! | [`AllocPolicy`]    | §4.1 disaggregation + §6.1 agent-centric binding | pool layout, binding mode, colocation contention |
 //! | [`SamplePolicy`]   | §5.1 dependency-driven parallel sampling | trajectory scheduling mode, instance provisioning |
+//! | [`RecoveryPolicy`] | fault plane (DESIGN.md §10) | what happens when an inference instance is lost |
 //!
 //! A [`PolicyBundle`] is a named set of one impl per trait — the
 //! engine consumes a bundle and nothing else. [`Framework::policies`]
@@ -396,6 +397,146 @@ impl SamplePolicy for SerialTurnBarrier {
 }
 
 // ---------------------------------------------------------------------------
+// RecoveryPolicy (fault plane, DESIGN.md §10)
+// ---------------------------------------------------------------------------
+
+/// What the engine does with the work an instance loss displaced.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RecoveryAction {
+    /// Abort the run with a typed
+    /// [`crate::error::PallasError::InstanceLost`].
+    Abort,
+    /// Re-dispatch the displaced requests onto surviving instances,
+    /// each after [`RecoveryPolicy::backoff_s`] for its attempt count.
+    Retry,
+    /// Degrade gracefully: re-dispatch displaced requests immediately
+    /// onto surviving capacity (re-planned via [`BalancePolicy`] when
+    /// enabled), then re-provision a replacement instance after
+    /// `delay_s` of degraded capacity.
+    Reprovision { delay_s: f64 },
+}
+
+/// How a framework reacts when fault injection kills an inference
+/// instance (DESIGN.md §10).
+///
+/// The engine consults this once per lost instance, *after* it has
+/// already extracted the displaced requests from the
+/// [`crate::rollout::RolloutManager`] and invalidated genuinely stale
+/// experience-store rows — the policy only decides the fate of the
+/// displaced work and of the lost capacity. Implementations must be
+/// pure functions of their inputs (the determinism contract: recovery
+/// decisions may not depend on wall clock, thread count, or ambient
+/// randomness).
+pub trait RecoveryPolicy: Send + Sync {
+    /// Short impl name (diagnostics, DESIGN.md §8/§10 tables).
+    fn name(&self) -> &'static str;
+
+    /// Decide the fate of `instance` (serving `agent`), lost at virtual
+    /// time `t`.
+    fn on_instance_lost(&self, t: f64, agent: usize, instance: usize) -> RecoveryAction;
+
+    /// Backoff before re-dispatching a request on its `attempt`-th
+    /// retry (0-based). Only consulted for [`RecoveryAction::Retry`].
+    fn backoff_s(&self, attempt: u32) -> f64 {
+        let _ = attempt;
+        0.0
+    }
+}
+
+/// Abort on the first instance loss (strict reproducibility runs: a
+/// faulted run is not the run you asked for).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FailFast;
+
+impl RecoveryPolicy for FailFast {
+    fn name(&self) -> &'static str {
+        "fail_fast"
+    }
+    fn on_instance_lost(&self, _t: f64, _agent: usize, _instance: usize) -> RecoveryAction {
+        RecoveryAction::Abort
+    }
+}
+
+/// Re-dispatch displaced requests with capped exponential backoff —
+/// lost in-flight decode work is re-done from scratch on surviving
+/// instances.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryBackoff {
+    /// First-retry delay; attempt `k` waits `base * 2^k`, capped.
+    pub base_delay_s: f64,
+    /// Upper bound on any single backoff.
+    pub cap_s: f64,
+}
+
+impl Default for RetryBackoff {
+    fn default() -> Self {
+        RetryBackoff {
+            base_delay_s: 0.5,
+            cap_s: 8.0,
+        }
+    }
+}
+
+impl RecoveryPolicy for RetryBackoff {
+    fn name(&self) -> &'static str {
+        "retry_backoff"
+    }
+    fn on_instance_lost(&self, _t: f64, _agent: usize, _instance: usize) -> RecoveryAction {
+        RecoveryAction::Retry
+    }
+    fn backoff_s(&self, attempt: u32) -> f64 {
+        (self.base_delay_s * f64::powi(2.0, attempt.min(16) as i32)).min(self.cap_s)
+    }
+}
+
+/// Graceful degradation: displaced work re-plans immediately onto
+/// surviving instances (the [`BalancePolicy`] re-balances around the
+/// hole when enabled), and a replacement instance is re-provisioned
+/// after a configurable recovery delay.
+#[derive(Debug, Clone, Copy)]
+pub struct DegradeRebalance {
+    /// Virtual seconds of degraded capacity before the replacement
+    /// instance comes up.
+    pub recovery_delay_s: f64,
+}
+
+impl Default for DegradeRebalance {
+    fn default() -> Self {
+        DegradeRebalance {
+            recovery_delay_s: 30.0,
+        }
+    }
+}
+
+impl RecoveryPolicy for DegradeRebalance {
+    fn name(&self) -> &'static str {
+        "degrade_rebalance"
+    }
+    fn on_instance_lost(&self, _t: f64, _agent: usize, _instance: usize) -> RecoveryAction {
+        RecoveryAction::Reprovision {
+            delay_s: self.recovery_delay_s,
+        }
+    }
+}
+
+/// Look up a canonical recovery policy by name (the config section's
+/// `faults.recovery` key). Accepts the same spelling normalization as
+/// [`crate::config::framework_by_name`].
+pub fn recovery_by_name(name: &str) -> Option<Box<dyn RecoveryPolicy>> {
+    let n: String = name
+        .to_ascii_lowercase()
+        .chars()
+        .filter(|c| !['-', '_', ' '].contains(c))
+        .collect();
+    Some(match n.as_str() {
+        "failfast" | "abort" => Box::new(FailFast),
+        "retry" | "retrybackoff" => Box::new(RetryBackoff::default()),
+        "degrade" | "degraderebalance" => Box::new(DegradeRebalance::default()),
+        _ => return None,
+    })
+}
+
+// ---------------------------------------------------------------------------
 // PolicyBundle
 // ---------------------------------------------------------------------------
 
@@ -416,6 +557,10 @@ pub struct PolicyBundle {
     pub alloc: Box<dyn AllocPolicy>,
     /// §5.1 sampling schedule.
     pub sample: Box<dyn SamplePolicy>,
+    /// Fault-plane recovery (DESIGN.md §10). Defaults to
+    /// [`RetryBackoff`] — only consulted when a fault plan actually
+    /// loses an instance, so fault-free runs never observe it.
+    pub recovery: Box<dyn RecoveryPolicy>,
 }
 
 impl PolicyBundle {
@@ -434,18 +579,26 @@ impl PolicyBundle {
             balance,
             alloc,
             sample,
+            recovery: Box::new(RetryBackoff::default()),
         }
+    }
+
+    /// Replace the fault-recovery policy (builder style).
+    pub fn with_recovery(mut self, recovery: Box<dyn RecoveryPolicy>) -> PolicyBundle {
+        self.recovery = recovery;
+        self
     }
 
     /// One-line summary of the bundle's composition (diagnostics).
     pub fn describe(&self) -> String {
         format!(
-            "{}: pipeline={} balance={} alloc={} sample={}",
+            "{}: pipeline={} balance={} alloc={} sample={} recovery={}",
             self.name,
             self.pipeline.name(),
             self.balance.name(),
             self.alloc.name(),
-            self.sample.name()
+            self.sample.name(),
+            self.recovery.name()
         )
     }
 }
@@ -489,7 +642,15 @@ impl Framework {
         } else {
             Box::new(SerialTurnBarrier)
         };
-        PolicyBundle::new(self.name, pipeline, balance, alloc, sample)
+        // Canonical recovery default: a framework that can re-balance
+        // load around a hole degrades gracefully; everything else
+        // retries with backoff. Fail-fast is only ever explicit.
+        let recovery: Box<dyn RecoveryPolicy> = if self.load_balancing {
+            Box::new(DegradeRebalance::default())
+        } else {
+            Box::new(RetryBackoff::default())
+        };
+        PolicyBundle::new(self.name, pipeline, balance, alloc, sample).with_recovery(recovery)
     }
 }
 
@@ -610,5 +771,65 @@ mod tests {
         assert!(d.contains("hierarchical"), "{d}");
         assert!(d.contains("agent_centric"), "{d}");
         assert!(d.contains("parallel"), "{d}");
+        assert!(d.contains("recovery=degrade_rebalance"), "{d}");
+    }
+
+    #[test]
+    fn recovery_policy_through_trait_objects() {
+        let ff: Box<dyn RecoveryPolicy> = Box::new(FailFast);
+        let rb: Box<dyn RecoveryPolicy> = Box::new(RetryBackoff::default());
+        let dg: Box<dyn RecoveryPolicy> = Box::new(DegradeRebalance::default());
+        assert_eq!(ff.on_instance_lost(1.0, 0, 3), RecoveryAction::Abort);
+        assert_eq!(rb.on_instance_lost(1.0, 0, 3), RecoveryAction::Retry);
+        assert_eq!(
+            dg.on_instance_lost(1.0, 0, 3),
+            RecoveryAction::Reprovision { delay_s: 30.0 }
+        );
+        // Capped exponential backoff: 0.5, 1, 2, 4, 8, 8, … and the
+        // attempt exponent itself saturates (no pow overflow).
+        assert_eq!(rb.backoff_s(0), 0.5);
+        assert_eq!(rb.backoff_s(1), 1.0);
+        assert_eq!(rb.backoff_s(3), 4.0);
+        assert_eq!(rb.backoff_s(4), 8.0);
+        assert_eq!(rb.backoff_s(40), 8.0);
+        assert_eq!(rb.backoff_s(u32::MAX), 8.0);
+        // Abort/Retry never consult backoff, but the default is 0.
+        assert_eq!(ff.backoff_s(5), 0.0);
+    }
+
+    #[test]
+    fn recovery_by_name_normalizes_spellings() {
+        for (spelling, want) in [
+            ("fail_fast", "fail_fast"),
+            ("FailFast", "fail_fast"),
+            ("abort", "fail_fast"),
+            ("retry", "retry_backoff"),
+            ("retry-backoff", "retry_backoff"),
+            ("degrade", "degrade_rebalance"),
+            ("Degrade Rebalance", "degrade_rebalance"),
+        ] {
+            let p = recovery_by_name(spelling)
+                .unwrap_or_else(|| panic!("'{spelling}' should resolve"));
+            assert_eq!(p.name(), want, "{spelling}");
+        }
+        assert!(recovery_by_name("crash_only_the_good_ones").is_none());
+    }
+
+    #[test]
+    fn derived_recovery_defaults_follow_load_balancing() {
+        // Load-balancing frameworks can re-plan around a hole, so they
+        // degrade gracefully; static-placement frameworks retry.
+        for fw in Framework::all_baselines() {
+            let want = if fw.load_balancing {
+                "degrade_rebalance"
+            } else {
+                "retry_backoff"
+            };
+            assert_eq!(fw.policies().recovery.name(), want, "{}", fw.name);
+        }
+        // Hand-assembled bundles default to retry and can override.
+        let b = Framework::mas_rl().policies();
+        let b = b.with_recovery(Box::new(FailFast));
+        assert_eq!(b.recovery.name(), "fail_fast");
     }
 }

@@ -130,6 +130,26 @@ impl RolloutManager {
         self.instances[iid] = None;
     }
 
+    /// Hard failure (fault injection): the instance dies *now*. Returns
+    /// its `(active, queued)` requests for the caller's recovery policy
+    /// to re-dispatch or discard; nothing keeps running. Unlike
+    /// [`RolloutManager::drain_instance`], the slot is gone immediately.
+    pub fn fail_instance(&mut self, iid: InstanceId) -> (Vec<RequestId>, Vec<RequestId>) {
+        let inst = self.instances[iid].as_mut().expect("no such instance");
+        let agent = inst.agent;
+        let was_draining = inst.draining;
+        let active: Vec<RequestId> = inst.active.drain(..).collect();
+        let queued: Vec<RequestId> = inst.queue.drain(..).collect();
+        for rid in active.iter().chain(queued.iter()) {
+            self.requests.remove(rid);
+        }
+        if !was_draining {
+            self.heaps[agent].remove(iid);
+        }
+        self.instances[iid] = None;
+        (active, queued)
+    }
+
     pub fn instances_of(&self, agent: AgentId) -> Vec<InstanceId> {
         self.heaps[agent].ids().collect()
     }
@@ -365,6 +385,48 @@ mod tests {
         assert!(m.is_drained(i0));
         m.remove_instance(i0);
         assert_eq!(m.instance_count(0), 1);
+    }
+
+    #[test]
+    fn fail_instance_surrenders_all_work_immediately() {
+        let mut m = RolloutManager::new(1);
+        let (i0, _) = m.add_instance(0, 1);
+        let (i1, _) = m.add_instance(0, 1);
+        m.submit(1, 0); // active on i0
+        m.submit(2, 0); // active on i1
+        m.submit(3, 0); // queued on i0
+        let (active, queued) = m.fail_instance(i0);
+        assert_eq!(active, vec![1]);
+        assert_eq!(queued, vec![3]);
+        // The slot is gone now — not draining, gone: dispatch only sees
+        // the survivor, and the displaced rids can immediately re-submit.
+        assert_eq!(m.instance_count(0), 1);
+        assert_eq!(m.outstanding(0), 1); // request 2 on i1
+        assert_eq!(m.submit(1, 0), Dispatch::Enqueued(i1));
+        assert_eq!(m.submit(3, 0), Dispatch::Enqueued(i1));
+        assert_eq!(m.complete(2), Some(1));
+        assert_eq!(m.complete(1), Some(3));
+        assert_eq!(m.complete(3), None);
+        assert_eq!(m.completed_per_agent[0], 3);
+    }
+
+    #[test]
+    fn fail_instance_on_draining_instance_is_clean() {
+        // A fault can hit an instance mid-migration (already off the
+        // heap); failing it must not double-remove the heap entry.
+        let mut m = RolloutManager::new(1);
+        let (i0, _) = m.add_instance(0, 1);
+        m.add_instance(0, 1);
+        m.submit(1, 0);
+        m.submit(2, 0);
+        m.submit(3, 0); // queued on i0
+        let displaced = m.drain_instance(i0);
+        assert_eq!(displaced, vec![3]);
+        let (active, queued) = m.fail_instance(i0);
+        assert_eq!(active, vec![1]);
+        assert!(queued.is_empty());
+        assert_eq!(m.instance_count(0), 1);
+        assert_eq!(m.complete(2), None);
     }
 
     #[test]

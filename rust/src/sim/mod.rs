@@ -351,12 +351,6 @@ impl<E> EventQueue<E> {
     }
 }
 
-impl<E> Default for EventQueue<E> {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
 /// Accumulates busy device-seconds over a set of devices — the hardware
 /// utilization metric of RQ3 ("percentage of time AI cores remain active").
 #[derive(Debug, Clone, Default)]

@@ -160,4 +160,40 @@ mod tests {
         let n = claimed.load(Ordering::SeqCst);
         assert!(n < 64, "stop flag did not halt claims ({n}/64 ran)");
     }
+
+    /// Satellite (fault-plane PR): with more workers than items every
+    /// surplus worker claims an out-of-range index and exits cleanly —
+    /// results are complete, in order, and each item ran exactly once.
+    #[test]
+    fn more_jobs_than_items_runs_each_item_exactly_once() {
+        let items: Vec<usize> = (0..3).collect();
+        let runs: Vec<AtomicUsize> = items.iter().map(|_| AtomicUsize::new(0)).collect();
+        for jobs in [4, 7, 64] {
+            let out = run_ordered(&items, jobs, |i, &x| {
+                runs[i].fetch_add(1, Ordering::SeqCst);
+                x * 2
+            });
+            assert_eq!(out, vec![0, 2, 4], "jobs={jobs}");
+        }
+        for (i, r) in runs.iter().enumerate() {
+            assert_eq!(r.load(Ordering::SeqCst), 3, "item {i} re-ran under oversubscription");
+        }
+    }
+
+    /// Satellite (fault-plane PR): a panic still propagates when the
+    /// pool is oversubscribed — the stop flag and the unwind must not
+    /// race the surplus workers' immediate exit.
+    #[test]
+    fn panic_propagates_with_more_jobs_than_items() {
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let items = [1u8, 2];
+            run_ordered(&items, 16, |i, &x| {
+                if i == 1 {
+                    panic!("cell died");
+                }
+                x
+            })
+        }));
+        assert!(res.is_err());
+    }
 }

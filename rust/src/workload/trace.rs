@@ -115,13 +115,28 @@ impl Trace {
     pub fn from_jsonl(text: &str) -> Result<Trace, PallasError> {
         let mut header: Option<(String, String, u64, usize, usize)> = None;
         let mut steps: Vec<StepWorkload> = Vec::new();
+        // A final line that fails to parse AND lacks the trailing
+        // newline the recorder always writes is almost certainly a
+        // truncated copy (interrupted download, partial write). Name
+        // that specifically instead of the generic parse error.
+        let n_lines = text.lines().count();
+        let missing_final_newline = !text.is_empty() && !text.ends_with('\n');
         for (lineno, line) in text.lines().enumerate() {
             let line = line.trim();
             if line.is_empty() {
                 continue;
             }
-            let j = parse(line)
-                .map_err(|e| PallasError::Trace(format!("trace line {}: {e}", lineno + 1)))?;
+            let j = parse(line).map_err(|e| {
+                if lineno + 1 == n_lines && missing_final_newline {
+                    PallasError::Trace(format!(
+                        "trace line {}: truncated final record (file ends mid-line; \
+                         re-record or re-copy the trace)",
+                        lineno + 1
+                    ))
+                } else {
+                    PallasError::Trace(format!("trace line {}: {e}", lineno + 1))
+                }
+            })?;
             let kind = j.at(&["kind"]).and_then(Json::as_str).ok_or_else(|| {
                 PallasError::Trace(format!("trace line {}: missing 'kind'", lineno + 1))
             })?;
@@ -418,6 +433,40 @@ mod tests {
         let err = Trace::from_jsonl(&bad).unwrap_err();
         assert_eq!(err, PallasError::UnknownScenario("from_the_future".into()));
         assert!(err.to_string().contains("from_the_future"), "{err}");
+    }
+
+    #[test]
+    fn truncated_final_line_named_specifically() {
+        // Regression (DESIGN.md §10 hardening): a trace cut mid-write
+        // (partial copy, interrupted download) used to surface as an
+        // opaque JSON parse error; it must name the truncation and the
+        // line it happened on.
+        let tr = Trace::record(&small("baseline"), 1, 2).unwrap();
+        let jsonl = tr.to_jsonl();
+        // Chop the file mid-way through the final record (drop the
+        // trailing newline and the last 10 bytes).
+        let cut = &jsonl[..jsonl.trim_end().len() - 10];
+        assert!(!cut.ends_with('\n'), "test setup: cut must end mid-line");
+        let err = Trace::from_jsonl(cut).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("truncated final record"), "{msg}");
+        assert!(msg.contains("trace line 3"), "{msg}");
+        assert!(matches!(err, PallasError::Trace(_)), "{err:?}");
+    }
+
+    #[test]
+    fn corrupt_but_complete_final_line_keeps_generic_error() {
+        // The truncation diagnosis requires the missing trailing
+        // newline; a complete-but-corrupt last line is still reported
+        // as the parse error it is.
+        let tr = Trace::record(&small("baseline"), 1, 1).unwrap();
+        let jsonl = tr.to_jsonl();
+        let bad = jsonl.replace("\"trajectories\":", "\"trajectories\"~");
+        assert!(bad.ends_with('\n'), "test setup: newline must survive");
+        let err = Trace::from_jsonl(&bad).unwrap_err();
+        let msg = err.to_string();
+        assert!(!msg.contains("truncated"), "{msg}");
+        assert!(msg.contains("trace line 2"), "{msg}");
     }
 
     #[test]

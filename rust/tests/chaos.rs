@@ -1,0 +1,271 @@
+//! Determinism-under-chaos acceptance tests (ISSUE 6).
+//!
+//! The contracts pinned here:
+//!
+//! * **Empty plan = no-fault path** — a config that never mentions
+//!   faults, one with an explicit empty `faults` section, and one with
+//!   an empty plan but a non-default generator seed all serialize
+//!   byte-identical StepReport JSON across the 4-baseline × 7-preset
+//!   golden grid, with every recovery-accounting field zero.
+//! * **Thread-count invariance under chaos** — a stochastic `FaultPlan`
+//!   (random seeds × frameworks × presets) produces byte-identical grid
+//!   JSON for `jobs ∈ {1, 2, 8}`, extending the PR 3 contract.
+//! * **Streamed = monolithic under faults** — driving a `Session` to
+//!   exhaustion under a fault preset matches `Experiment::run()` byte
+//!   for byte.
+//! * **Recovery policies diverge visibly** — fail-fast, retry-with-
+//!   backoff and degrade-and-rebalance produce distinguishable recovery
+//!   accounting on the same preemption plan, with fail-fast surfacing
+//!   the typed `PallasError::InstanceLost`.
+
+use flexmarl::config::{ExperimentConfig, Framework, WorkloadConfig};
+use flexmarl::error::PallasError;
+use flexmarl::exec::{grid_report, run_specs_or_panic, Overrides, RunGrid};
+use flexmarl::experiment::Experiment;
+use flexmarl::fault::{preset, FaultConfig};
+use flexmarl::metrics::StepReport;
+use flexmarl::orchestrator::{try_simulate, SimOptions};
+use flexmarl::workload::scenario;
+
+fn small_cfg(fw: Framework, preset: &str) -> ExperimentConfig {
+    let mut wl = WorkloadConfig::ma();
+    wl.queries_per_step = 2;
+    wl.group_size = 4;
+    wl.scenario = preset.to_string();
+    let mut cfg = ExperimentConfig::new(wl, fw);
+    cfg.steps = 2;
+    cfg.seed = 2048; // paper §8.1
+    cfg
+}
+
+fn report_json(reports: &[StepReport]) -> String {
+    reports
+        .iter()
+        .map(|r| r.to_json().to_pretty())
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+fn drain_session(cfg: &ExperimentConfig, opts: &SimOptions) -> flexmarl::orchestrator::SimOutcome {
+    let mut session = Experiment::new(cfg.clone())
+        .options(opts.clone())
+        .build()
+        .unwrap()
+        .session()
+        .unwrap();
+    while session.step().unwrap().is_some() {}
+    session.finish()
+}
+
+// ---------------------------------------------------------------------------
+// Empty plan == no-fault path (golden grid)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn empty_plan_is_byte_identical_to_no_fault_path_on_golden_grid() {
+    // 4 baselines × 7 presets at the paper seed. Three spellings of
+    // "no faults" must be bit-equal: the default config, an empty
+    // FaultConfig carrying a generator seed (plan resolution must not
+    // consume entropy or inject anything when every source is empty),
+    // and an empty plan with a recovery override (the policy is inert
+    // when no fault ever fires).
+    let opts = SimOptions::default();
+    for fw in Framework::all_baselines() {
+        for name in scenario::names() {
+            let base = small_cfg(fw, name);
+            let absent = try_simulate(&base, &opts).unwrap();
+            for r in &absent.reports {
+                assert_eq!(r.retries, 0, "{} / {name}", fw.name);
+                assert_eq!(r.lost_tokens, 0.0, "{} / {name}", fw.name);
+                assert_eq!(r.recovery_s, 0.0, "{} / {name}", fw.name);
+                assert_eq!(r.degraded_s, 0.0, "{} / {name}", fw.name);
+            }
+            let mut seeded = base.clone();
+            seeded.faults = FaultConfig {
+                seed: Some(7),
+                ..FaultConfig::default()
+            };
+            assert!(seeded.faults.is_empty());
+            let mut overridden = base.clone();
+            overridden.faults = FaultConfig {
+                recovery: Some("retry".into()),
+                ..FaultConfig::default()
+            };
+            for variant in [&seeded, &overridden] {
+                let out = try_simulate(variant, &opts).unwrap();
+                assert_eq!(out.total_s, absent.total_s, "{} / {name}", fw.name);
+                assert_eq!(
+                    report_json(&out.reports),
+                    report_json(&absent.reports),
+                    "{} / {name}: empty fault plan perturbed the run",
+                    fw.name
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Thread-count invariance under chaos
+// ---------------------------------------------------------------------------
+
+#[test]
+fn random_fault_plans_are_byte_identical_across_jobs() {
+    // Stochastic plans from three generator seeds, swept over a
+    // frameworks × scenarios grid (framework defaults pick different
+    // recovery policies: FlexMARL degrades, the others retry) — the
+    // grid JSON must not depend on --jobs.
+    let opts = SimOptions::default();
+    for fault_seed in [7u64, 99, 424242] {
+        let mut base = small_cfg(Framework::flexmarl(), "baseline");
+        base.faults = FaultConfig {
+            crashes: 1,
+            preemptions: 1,
+            stragglers: 2,
+            flaps: 1,
+            resizes: 1,
+            horizon_s: 120.0,
+            seed: Some(fault_seed),
+            ..FaultConfig::default()
+        };
+        base.validate().unwrap();
+        let grid = RunGrid {
+            frameworks: vec![Framework::flexmarl(), Framework::dist_rl(), Framework::marti()],
+            scenarios: vec!["baseline".into(), "core_skew".into()],
+            replicates: 1,
+            overrides: Overrides::default(),
+        };
+        let specs = grid.specs(&base);
+        let render = |jobs: usize| {
+            let reports = run_specs_or_panic(&base, &opts, &specs, jobs);
+            grid_report(&base, &specs, &reports).to_pretty()
+        };
+        let one = render(1);
+        assert_eq!(one, render(2), "fault_seed={fault_seed} jobs=2 diverged");
+        assert_eq!(one, render(8), "fault_seed={fault_seed} jobs=8 diverged");
+        // The plan genuinely did something: at least one cell accounts
+        // for recovery (a silent no-op plan would vacuously pass).
+        let reports = run_specs_or_panic(&base, &opts, &specs, 1);
+        assert!(
+            reports
+                .iter()
+                .any(|r| r.retries > 0 || r.lost_tokens > 0.0 || r.degraded_s > 0.0),
+            "fault_seed={fault_seed}: no cell shows any recovery accounting"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Streamed == monolithic under faults
+// ---------------------------------------------------------------------------
+
+#[test]
+fn faulted_session_stream_matches_monolithic_run() {
+    let opts = SimOptions {
+        track_agents: vec![0, 1],
+        ..SimOptions::default()
+    };
+    for name in ["preemption_retry", "preemption_degrade", "flaky", "chaos"] {
+        let mut cfg = small_cfg(Framework::flexmarl(), "core_skew");
+        cfg.faults = preset(name).unwrap();
+        let batch = Experiment::new(cfg.clone())
+            .options(opts.clone())
+            .build()
+            .unwrap()
+            .run();
+        let streamed = drain_session(&cfg, &opts);
+        assert_eq!(batch.total_s, streamed.total_s, "{name}");
+        assert_eq!(
+            report_json(&batch.reports),
+            report_json(&streamed.reports),
+            "{name}: streamed reports diverged from monolithic"
+        );
+        assert_eq!(batch.series, streamed.series, "{name}: run series diverged");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Recovery policies diverge visibly (acceptance criterion)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn recovery_policies_diverge_visibly_on_the_preemption_plan() {
+    let opts = SimOptions::default();
+    let run = |preset_name: &str| -> Vec<StepReport> {
+        let mut cfg = small_cfg(Framework::flexmarl(), "core_skew");
+        cfg.faults = preset(preset_name).unwrap();
+        try_simulate(&cfg, &opts).unwrap().reports
+    };
+
+    // Retry-with-backoff: displaced requests wait out the backoff and
+    // re-dispatch — retries and recovery time accrue, no degraded
+    // window is ever charged.
+    let retry: StepReport = flexmarl::metrics::aggregate(&run("preemption_retry"));
+    let retries_total: usize = run("preemption_retry").iter().map(|r| r.retries).sum();
+    assert!(retries_total > 0, "retry policy never re-dispatched");
+    assert!(retry.recovery_s > 0.0, "retry policy charged no backoff");
+    assert_eq!(retry.degraded_s, 0.0, "retry policy must not degrade");
+
+    // Degrade-and-rebalance: survivors absorb the work immediately
+    // (no retries, no backoff) and a degraded-capacity window is
+    // charged until the replacement comes up.
+    let degrade_reports = run("preemption_degrade");
+    let degrade = flexmarl::metrics::aggregate(&degrade_reports);
+    assert!(degrade.degraded_s > 0.0, "degrade policy charged no window");
+    let degrade_retries: usize = degrade_reports.iter().map(|r| r.retries).sum();
+    assert_eq!(degrade_retries, 0, "degrade policy must not retry");
+    assert_eq!(degrade.recovery_s, 0.0, "degrade policy has no backoff");
+
+    // Both lose the mid-decode work of the killed instances.
+    let lost: f64 = run("preemption_retry").iter().map(|r| r.lost_tokens).sum::<f64>()
+        + degrade_reports.iter().map(|r| r.lost_tokens).sum::<f64>();
+    assert!(lost > 0.0, "no policy accounted any lost work");
+
+    // The two recovering policies are visibly different end to end.
+    assert_ne!(
+        report_json(&run("preemption_retry")),
+        report_json(&degrade_reports),
+        "retry and degrade produced identical reports"
+    );
+
+    // Fail-fast: the same plan aborts with the typed error instead.
+    let mut cfg = small_cfg(Framework::flexmarl(), "core_skew");
+    cfg.faults = preset("preemption_failfast").unwrap();
+    let err = Experiment::new(cfg)
+        .options(opts.clone())
+        .build()
+        .unwrap()
+        .try_run()
+        .unwrap_err();
+    assert!(
+        matches!(err, PallasError::InstanceLost { .. }),
+        "expected InstanceLost, got {err:?}"
+    );
+    assert!(err.to_string().contains("fail-fast"), "{err}");
+}
+
+// ---------------------------------------------------------------------------
+// Determinism of a single faulted run (same seed, same bytes)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn same_seed_same_plan_same_bytes() {
+    let opts = SimOptions::default();
+    for name in ["preemption_retry", "flaky", "chaos"] {
+        let mut cfg = small_cfg(Framework::flexmarl(), "baseline");
+        cfg.faults = preset(name).unwrap();
+        let a = try_simulate(&cfg, &opts).unwrap();
+        let b = try_simulate(&cfg, &opts).unwrap();
+        assert_eq!(a.total_s, b.total_s, "{name}");
+        assert_eq!(report_json(&a.reports), report_json(&b.reports), "{name}");
+        // And a different experiment seed genuinely moves the run.
+        let mut other = cfg.clone();
+        other.seed = 7;
+        let c = try_simulate(&other, &opts).unwrap();
+        assert_ne!(
+            report_json(&a.reports),
+            report_json(&c.reports),
+            "{name}: seed change had no effect"
+        );
+    }
+}

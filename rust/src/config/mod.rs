@@ -432,6 +432,32 @@ impl Default for PipelineConfig {
 // Top-level experiment config
 // ---------------------------------------------------------------------------
 
+/// How per-step workloads are resolved (DESIGN.md §11). A routing
+/// choice, never a semantic one: both modes produce byte-identical
+/// runs (the lazy-equivalence contract, enforced in CI).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WorkloadMode {
+    /// Materialize every step up front (the classic path; memory scales
+    /// with `steps`). The golden reference for equivalence diffs.
+    #[default]
+    Eager,
+    /// Stream steps through a [`crate::workload::WorkloadSource`] —
+    /// generated or trace-parsed on demand, peak memory O(one step).
+    Lazy,
+}
+
+impl WorkloadMode {
+    /// Parse a config/CLI spelling (`"eager"` / `"lazy"`,
+    /// case-insensitive).
+    pub fn from_name(name: &str) -> Option<WorkloadMode> {
+        match name.to_ascii_lowercase().as_str() {
+            "eager" => Some(WorkloadMode::Eager),
+            "lazy" => Some(WorkloadMode::Lazy),
+            _ => None,
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
     pub cluster: ClusterConfig,
@@ -445,6 +471,9 @@ pub struct ExperimentConfig {
     /// that never mentions faults simulates byte-identically to one
     /// with `"faults": {}`.
     pub faults: crate::fault::FaultConfig,
+    /// Workload resolution mode (`--workload-mode`): eager
+    /// materialization (default) or the lazy streaming plane.
+    pub workload_mode: WorkloadMode,
 }
 
 impl ExperimentConfig {
@@ -457,6 +486,7 @@ impl ExperimentConfig {
             steps: 1,
             seed: 2048, // paper §8.1
             faults: crate::fault::FaultConfig::default(),
+            workload_mode: WorkloadMode::default(),
         }
     }
 
@@ -551,6 +581,13 @@ impl ExperimentConfig {
                 cfg.workload.trace = Some(v.to_string());
             }
         }
+        if let Some(v) = j.at(&["workload_mode"]).and_then(Json::as_str) {
+            cfg.workload_mode = WorkloadMode::from_name(v).ok_or_else(|| {
+                PallasError::InvalidConfig(format!(
+                    "unknown workload_mode '{v}' (want 'eager' or 'lazy')"
+                ))
+            })?;
+        }
         // The faults section has its own schema (and its own unknown-key
         // rejection) in `crate::fault`; it also rejects non-objects.
         if let Some(sub) = top.get("faults") {
@@ -603,6 +640,7 @@ const TOP_KEYS: &[&str] = &[
     "steps",
     "trace",
     "workload",
+    "workload_mode",
     "workload_overrides",
 ];
 /// Keys read inside `"pipeline"`.
@@ -708,6 +746,20 @@ mod tests {
         assert_eq!(cfg.seed, 7);
         assert_eq!(cfg.pipeline.micro_batch, 8);
         assert_eq!(cfg.steps, 3);
+    }
+
+    #[test]
+    fn workload_mode_parsed_and_defaulted() {
+        let cfg = ExperimentConfig::new(WorkloadConfig::ma(), Framework::flexmarl());
+        assert_eq!(cfg.workload_mode, WorkloadMode::Eager);
+        let j = parse(r#"{"workload": "MA", "workload_mode": "lazy"}"#).unwrap();
+        assert_eq!(ExperimentConfig::from_json(&j).unwrap().workload_mode, WorkloadMode::Lazy);
+        let j = parse(r#"{"workload_mode": "Eager"}"#).unwrap(); // case-insensitive
+        assert_eq!(ExperimentConfig::from_json(&j).unwrap().workload_mode, WorkloadMode::Eager);
+        let j = parse(r#"{"workload_mode": "greedy"}"#).unwrap();
+        let err = ExperimentConfig::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("unknown workload_mode 'greedy'"), "{err}");
+        assert!(WorkloadMode::from_name("LAZY") == Some(WorkloadMode::Lazy));
     }
 
     #[test]

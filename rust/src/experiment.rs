@@ -22,7 +22,10 @@
 //! trace replay with the authoritative header — the same
 //! [`crate::orchestrator::resolve_workload`] contract as always) and
 //! derives the framework's [`PolicyBundle`]; failures surface as
-//! [`PallasError`], never a panic. A custom bundle passed via
+//! [`PallasError`], never a panic. `cfg.workload_mode` picks the
+//! resolution shape: eager materialization, or the lazy streaming
+//! plane (DESIGN.md §11) whose runs are byte-identical to eager ones.
+//! A custom bundle passed via
 //! [`ExperimentBuilder::policies`] registers a framework the capability
 //! flags cannot express — without touching the engine (DESIGN.md §8).
 //!
@@ -34,21 +37,43 @@
 //! [`Experiment::run`] and [`Experiment::evaluate`] are thin drains
 //! over a session, bit-identical to stepping it by hand.
 
-use crate::config::{ExperimentConfig, Framework};
+use crate::config::{ExperimentConfig, Framework, WorkloadMode};
 use crate::error::PallasError;
 use crate::metrics::StepReport;
-use crate::orchestrator::{resolve_workload, EventSink, Session, SimOptions, SimOutcome};
+use crate::orchestrator::{
+    resolve_workload, resolve_workload_source, EventSink, Session, SimOptions, SimOutcome,
+};
 use crate::policy::PolicyBundle;
-use crate::workload::StepWorkload;
+use crate::workload::{LenHint, StepWorkload, VecSource, WorkloadSource};
 
-/// A fully-resolved experiment, ready to run: shaped config, per-step
-/// workloads, engine options, attached event sinks, and the policy
-/// bundle the engine will consult. Construct via [`Experiment::new`].
+/// The resolved workload, in whichever shape `cfg.workload_mode`
+/// selected: a materialized vector (eager — the golden reference) or a
+/// streaming [`WorkloadSource`] (lazy, DESIGN.md §11). Both feed the
+/// engine through the same source interface and produce byte-identical
+/// runs.
+enum WorkloadPlan {
+    Eager(Vec<StepWorkload>),
+    Lazy(Box<dyn WorkloadSource>),
+}
+
+impl WorkloadPlan {
+    fn len_hint(&self) -> LenHint {
+        match self {
+            WorkloadPlan::Eager(v) => LenHint::Exact(v.len()),
+            WorkloadPlan::Lazy(src) => src.len_hint(),
+        }
+    }
+}
+
+/// A fully-resolved experiment, ready to run: shaped config, workload
+/// plan (eager vector or lazy source), engine options, attached event
+/// sinks, and the policy bundle the engine will consult. Construct via
+/// [`Experiment::new`].
 pub struct Experiment {
     cfg: ExperimentConfig,
     opts: SimOptions,
     policies: PolicyBundle,
-    step_workloads: Vec<StepWorkload>,
+    plan: WorkloadPlan,
     sinks: Vec<Box<dyn EventSink>>,
 }
 
@@ -93,19 +118,37 @@ impl Experiment {
     }
 
     /// The concrete per-step workloads (generated or replayed); one
-    /// entry per resolved step.
+    /// entry per resolved step. Under [`WorkloadMode::Lazy`] nothing is
+    /// materialized and this returns the empty slice — use
+    /// [`Experiment::into_workloads`] to drain a lazy plan into a
+    /// vector.
     pub fn step_workloads(&self) -> &[StepWorkload] {
-        &self.step_workloads
+        match &self.plan {
+            WorkloadPlan::Eager(v) => v,
+            WorkloadPlan::Lazy(_) => &[],
+        }
     }
 
     /// Consume the experiment into its resolved config and per-step
     /// workloads — the shape [`resolve_workload`] returns — for callers
     /// that drive the workloads themselves (e.g. the wall-clock serving
     /// example) and want ownership without cloning every trajectory.
+    /// A lazy plan is drained to a vector here (sources are
+    /// deterministic, so the result is identical to eager resolution).
     /// Attached sinks are dropped: there is no engine for them to
     /// observe.
     pub fn into_workloads(self) -> (ExperimentConfig, Vec<StepWorkload>) {
-        (self.cfg, self.step_workloads)
+        let wls = match self.plan {
+            WorkloadPlan::Eager(v) => v,
+            WorkloadPlan::Lazy(mut src) => {
+                let mut v = Vec::new();
+                while let Some(w) = src.next_step() {
+                    v.push(w);
+                }
+                v
+            }
+        };
+        (self.cfg, wls)
     }
 
     /// Attach an observer ([`crate::orchestrator::EventSink`]) to the
@@ -123,21 +166,28 @@ impl Experiment {
     /// early stop. [`Experiment::run`]/[`Experiment::evaluate`] are
     /// thin drains over this.
     pub fn session(self) -> Result<Session, PallasError> {
-        // The builder guarantees this invariant (resolve_workload
-        // produces one workload per resolved step); the typed check
+        // The builder guarantees this invariant (both resolvers produce
+        // exactly one workload per resolved step); the typed check
         // replaces a construction assert for callers that assemble an
-        // Experiment through future non-builder paths.
-        if self.step_workloads.len() != self.cfg.steps {
-            return Err(PallasError::InvalidConfig(format!(
-                "experiment has {} step workloads for {} steps",
-                self.step_workloads.len(),
-                self.cfg.steps
-            )));
+        // Experiment through future non-builder paths. Only an exact
+        // hint is checkable up front — a lazy `AtLeast` feed that runs
+        // dry instead fails at the engine's pull site.
+        if let Some(n) = self.plan.len_hint().exact() {
+            if n != self.cfg.steps {
+                return Err(PallasError::InvalidConfig(format!(
+                    "experiment has {n} step workloads for {} steps",
+                    self.cfg.steps
+                )));
+            }
         }
+        let source: Box<dyn WorkloadSource> = match self.plan {
+            WorkloadPlan::Eager(v) => Box::new(VecSource::new(v)),
+            WorkloadPlan::Lazy(src) => src,
+        };
         let engine = crate::orchestrator::simloop::Engine::new(
             self.cfg,
             self.opts,
-            self.step_workloads,
+            source,
             self.policies,
             crate::orchestrator::events::SinkSet::from_sinks(self.sinks),
         );
@@ -237,6 +287,14 @@ impl ExperimentBuilder {
         self
     }
 
+    /// Workload resolution mode: eager materialization (default) or
+    /// the lazy streaming plane (`--workload-mode lazy`, DESIGN.md
+    /// §11). Outcomes are byte-identical either way.
+    pub fn workload_mode(mut self, mode: WorkloadMode) -> Self {
+        self.cfg.workload_mode = mode;
+        self
+    }
+
     /// Engine knobs (instance counts, poll period, queue backend, …).
     pub fn options(mut self, opts: SimOptions) -> Self {
         self.opts = opts;
@@ -255,9 +313,21 @@ impl ExperimentBuilder {
     /// Resolve the workload (scenario shaping or trace replay, exactly
     /// once) and fix the policy bundle. All resolution failures —
     /// unknown scenario, unreadable/corrupt/mismatched trace — surface
-    /// here as [`PallasError`].
+    /// here as [`PallasError`]. Under [`WorkloadMode::Lazy`] nothing is
+    /// materialized: the plan holds a streaming source and corrupt
+    /// trace *steps* (the header is still validated here) surface
+    /// mid-run instead.
     pub fn build(self) -> Result<Experiment, PallasError> {
-        let (cfg, step_workloads) = resolve_workload(&self.cfg)?;
+        let (cfg, plan) = match self.cfg.workload_mode {
+            WorkloadMode::Eager => {
+                let (cfg, wls) = resolve_workload(&self.cfg)?;
+                (cfg, WorkloadPlan::Eager(wls))
+            }
+            WorkloadMode::Lazy => {
+                let (cfg, src) = resolve_workload_source(&self.cfg)?;
+                (cfg, WorkloadPlan::Lazy(src))
+            }
+        };
         let policies = self
             .policies
             .unwrap_or_else(|| cfg.framework.policies());
@@ -265,7 +335,7 @@ impl ExperimentBuilder {
             cfg,
             opts: self.opts,
             policies,
-            step_workloads,
+            plan,
             sinks: self.sinks,
         })
     }
@@ -319,6 +389,40 @@ mod tests {
         let (resolved, wls) = exp.into_workloads();
         assert_eq!(resolved.workload.scenario, "core_skew");
         assert_eq!(wls.len(), 1);
+    }
+
+    #[test]
+    fn lazy_mode_runs_byte_identical_to_eager() {
+        for fw in [Framework::mas_rl(), Framework::marti(), Framework::flexmarl()] {
+            let cfg = small_cfg(fw);
+            let eager = Experiment::new(cfg.clone()).build().unwrap().run();
+            let lazy = Experiment::new(cfg)
+                .workload_mode(crate::config::WorkloadMode::Lazy)
+                .build()
+                .unwrap()
+                .run();
+            assert_eq!(eager.total_s, lazy.total_s);
+            assert_eq!(eager.reports.len(), lazy.reports.len());
+            for (a, b) in eager.reports.iter().zip(&lazy.reports) {
+                assert_eq!(a.to_json().to_pretty(), b.to_json().to_pretty());
+            }
+        }
+    }
+
+    #[test]
+    fn lazy_plan_materializes_nothing_until_drained() {
+        let exp = Experiment::new(small_cfg(Framework::flexmarl()))
+            .workload_mode(crate::config::WorkloadMode::Lazy)
+            .build()
+            .unwrap();
+        assert!(exp.step_workloads().is_empty(), "lazy plan must stay unmaterialized");
+        let (cfg, wls) = exp.into_workloads();
+        assert_eq!(wls.len(), cfg.steps, "draining a lazy plan yields every step");
+        let eager = Experiment::new(cfg)
+            .workload_mode(crate::config::WorkloadMode::Eager)
+            .build()
+            .unwrap();
+        assert_eq!(eager.step_workloads(), &wls[..], "drained lazy == eager materialization");
     }
 
     #[test]

@@ -79,6 +79,8 @@ options: --workload MA|CA  --framework <name>  --steps N  --seed N
          --trace <path>       (replay a recorded JSONL trace)
          --faults off|<preset> (fault-injection plan; `flexmarl simulate
                                --faults chaos`; see DESIGN.md §10)
+         --workload-mode eager|lazy (lazy streams steps on demand —
+                               byte-identical output; DESIGN.md §11)
          --progress           (live progress on stderr; stdout unchanged)
 simulate: --emit jsonl        (stream one StepReport JSON line per step)
          --emit jsonl-batch   (same lines from a monolithic run)
@@ -112,6 +114,12 @@ fn build_cfg(args: &Args) -> ExperimentConfig {
     }
     if let Some(t) = args.get("trace") {
         cfg.workload.trace = Some(t.to_string());
+    }
+    if let Some(m) = args.get("workload-mode") {
+        cfg.workload_mode = flexmarl::config::WorkloadMode::from_name(m).unwrap_or_else(|| {
+            eprintln!("unknown workload mode '{m}' (want eager or lazy)");
+            std::process::exit(2)
+        });
     }
     // `--faults off` is an explicit no-plan spelling: it must leave the
     // config bit-identical to never passing the flag (CI byte-diffs the
@@ -662,6 +670,12 @@ fn cmd_replay(args: &Args) {
     // with --micro-batch/--delta silently diverges from its recording.
     cfg.pipeline.micro_batch = args.get_usize("micro-batch", cfg.pipeline.micro_batch);
     cfg.pipeline.delta_threshold = args.get_usize("delta", cfg.pipeline.delta_threshold);
+    if let Some(m) = args.get("workload-mode") {
+        cfg.workload_mode = flexmarl::config::WorkloadMode::from_name(m).unwrap_or_else(|| {
+            eprintln!("unknown workload mode '{m}' (want eager or lazy)");
+            std::process::exit(2)
+        });
+    }
     let rep = run_eval(&cfg, &build_opts(args));
     print_report(&rep);
     emit_json(args, &rep.to_json());

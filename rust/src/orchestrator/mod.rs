@@ -14,6 +14,13 @@
 //! well-formed partial [`SimOutcome`]. The run-to-completion entries
 //! ([`try_simulate`], [`crate::experiment::Experiment::run`]) are thin
 //! drains over a session.
+//!
+//! Workload input is streaming too (DESIGN.md §11): the engine pulls
+//! one step at a time from a [`crate::workload::WorkloadSource`] —
+//! [`resolve_workload_source`] is the lazy counterpart of
+//! [`resolve_workload`] — and retires each step's control block as its
+//! report finalizes, so peak memory is O(live steps) regardless of run
+//! length. Lazy and eager runs are byte-identical.
 
 pub mod events;
 pub mod session;
@@ -26,4 +33,6 @@ pub use events::{
 pub use session::Session;
 #[allow(deprecated)] // re-exported for back-compat until the panicking wrapper is removed
 pub use simloop::simulate;
-pub use simloop::{resolve_workload, try_simulate, SimOptions, SimOutcome, StopInfo};
+pub use simloop::{
+    resolve_workload, resolve_workload_source, try_simulate, SimOptions, SimOutcome, StopInfo,
+};

@@ -45,13 +45,16 @@ use crate::fault::{FaultKind, FaultSpec};
 use crate::memstore::TransferModel;
 use crate::metrics::{Counters, MetricId, RunSeries, StepReport};
 use crate::policy::{LoadSnapshot, PolicyBundle, RecoveryAction};
-use crate::rollout::{CallRef, Dispatch, RequestId, RolloutManager, TrajectoryScheduler};
+use crate::rollout::{CallRef, Dispatch, Mode, RequestId, RolloutManager, TrajectoryScheduler};
 use crate::sim::{EventQueue, QueueKind};
 use crate::store::{ColumnType, ExperienceStore, Field, PutRow, SampleId, Value};
 use crate::training::{
     apply_update_s, grad_compute_s, swap_in_cost, swap_out_cost, AgentCentricAllocator,
 };
-use crate::workload::{scenario, StepWorkload, Trace};
+use crate::workload::{
+    scenario, LenHint, ScenarioSource, StepWorkload, Trace, TraceReader, TraceSource,
+    WorkloadSource,
+};
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
 /// Engine knobs not fixed by the paper (documented in DESIGN.md §6).
@@ -205,6 +208,10 @@ struct StepCtl {
     /// GRPO groups become ready together: advantages need the whole
     /// group's rewards, so samples enter the store at group completion.
     group_pending: BTreeMap<(usize, usize), (usize, Vec<f64>)>,
+    /// Device-busy seconds charged to this step (rollout + training).
+    busy_s: f64,
+    /// Phase-switch seconds charged to this step.
+    switch_s_total: f64,
 }
 
 /// Where and why a run was cut short by an
@@ -282,14 +289,16 @@ pub fn simulate(cfg: &ExperimentConfig, opts: &SimOptions) -> SimOutcome {
 
 /// [`simulate`], but failures surface as [`PallasError`] instead of a
 /// panic: workload resolution (unknown scenario, unreadable/corrupt/
-/// mismatched trace — the trace file is read and parsed exactly once)
-/// and the run loop's livelock guard
+/// mismatched trace) and the run loop's livelock guard
 /// ([`PallasError::EventBudget`]).
+///
+/// Honors `cfg.workload_mode`: `eager` materializes every step up
+/// front ([`resolve_workload`]); `lazy` streams steps through a
+/// [`WorkloadSource`] ([`resolve_workload_source`]). The two are
+/// byte-identical end to end — this is a routing choice, not a
+/// semantic one.
 pub fn try_simulate(cfg: &ExperimentConfig, opts: &SimOptions) -> Result<SimOutcome, PallasError> {
-    let (resolved, step_workloads) = resolve_workload(cfg)?;
-    let policies = resolved.framework.policies();
-    let engine = Engine::new(resolved, opts.clone(), step_workloads, policies, SinkSet::default());
-    super::session::Session::from_engine(engine).run_to_end()
+    crate::experiment::Experiment::new(cfg.clone()).options(opts.clone()).build()?.try_run()
 }
 
 /// Resolve the config's scenario/trace into concrete per-step
@@ -337,6 +346,51 @@ pub fn resolve_workload(
     Ok((resolved, step_workloads))
 }
 
+/// [`resolve_workload`], but lazy (DESIGN.md §11): the same shaping and
+/// validation, returning a streaming [`WorkloadSource`] instead of a
+/// materialized `Vec`. Scenario steps generate on demand; traces stream
+/// through a [`TraceReader`] — the header is read and validated here,
+/// step lines parse one at a time as the engine pulls them. Peak
+/// memory becomes O(one step), not O(steps).
+///
+/// The source yields exactly the sequence [`resolve_workload`] would
+/// materialize, so lazy and eager runs are byte-identical end to end
+/// (the lazy-equivalence contract, enforced in CI). The one observable
+/// difference is *when* a corrupt trace fails: eager resolution rejects
+/// the file up front, while the streaming reader surfaces the same
+/// typed [`PallasError`] mid-run, at the first bad step line.
+pub fn resolve_workload_source(
+    cfg: &ExperimentConfig,
+) -> Result<(ExperimentConfig, Box<dyn WorkloadSource>), PallasError> {
+    let mut base = cfg.workload.clone();
+    let trace_path = base.trace.clone();
+    if let Some(path) = trace_path {
+        let reader = TraceReader::open(&path)?;
+        // The trace is authoritative about what it recorded (see
+        // `resolve_workload`): shape from its header's scenario.
+        base.scenario = reader.scenario().to_string();
+        let (shaped, _scen) = scenario::resolve(&base)?;
+        let mut resolved = cfg.clone();
+        resolved.workload = shaped;
+        if reader.n_agents() != resolved.workload.agents.len() {
+            return Err(PallasError::TraceAgentMismatch {
+                path,
+                trace_agents: reader.n_agents(),
+                config_agents: resolved.workload.agents.len(),
+            });
+        }
+        resolved.steps = reader.steps();
+        Ok((resolved, Box::new(TraceSource::new(reader))))
+    } else {
+        let (shaped, scen) = scenario::resolve(&base)?;
+        let mut resolved = cfg.clone();
+        resolved.workload = shaped;
+        let src =
+            ScenarioSource::new(resolved.workload.clone(), scen, resolved.seed, resolved.steps);
+        Ok((resolved, Box::new(src)))
+    }
+}
+
 /// The step engine. Owns its resolved inputs (so a
 /// [`Session`](super::session::Session) can hold it across calls) and
 /// advances through [`Engine::pump_step`] — the run-to-completion
@@ -354,7 +408,22 @@ pub(crate) struct Engine {
     man: RolloutManager,
     store: ExperienceStore,
     transfer: TransferModel,
-    steps: Vec<StepCtl>,
+    /// The *live window* of step control blocks (DESIGN.md §11):
+    /// `steps[i]` is MARL step `window_base + i`. Steps materialize
+    /// from `source` when their `StartStep` fires and retire as their
+    /// report is finalized, so the window holds only in-flight steps —
+    /// peak memory is O(overlap depth), independent of `total_steps`.
+    steps: VecDeque<StepCtl>,
+    /// Index of the first step still in the window (== `next_report`;
+    /// both advance in lockstep in `collect_completed`).
+    window_base: usize,
+    /// Run length (`cfg.steps`); the former `steps.len()`.
+    total_steps: usize,
+    /// Pull-based workload feed; `ensure_step` draws from it.
+    source: Box<dyn WorkloadSource>,
+    /// Scheduling mode (from the sample policy), applied to each step's
+    /// trajectory scheduler as it materializes.
+    sched_mode: Mode,
     reqs: ReqSlab,
     /// Training state machine per agent.
     tstate: Vec<AgentTrain>,
@@ -367,8 +436,6 @@ pub(crate) struct Engine {
     /// instance id → agent it belongs to now.
     inst_agent: BTreeMap<usize, usize>,
     pool_devices: usize,
-    /// Per-step busy accounting for per-step utilization.
-    busy_per_step: Vec<f64>,
     sample_seq: u64,
     // metrics — allocation-free on the event path (DESIGN.md §4):
     // store table keys are rendered once at construction, scalar
@@ -383,10 +450,12 @@ pub(crate) struct Engine {
     processed_series: BTreeMap<usize, Vec<(f64, usize)>>,
     queued_series: BTreeMap<usize, Vec<(f64, usize)>>,
     busy_series: Vec<(f64, usize)>,
-    switch_s_total: Vec<f64>,
     // ---- run-loop state (was locals of the retired monolithic run) --
     /// Event-budget guard (livelock detector), cumulative over the run.
     guard: u64,
+    /// Budget the guard trips at: scaled to the run length so long
+    /// streamed runs don't hit the old fixed 1M-event ceiling.
+    event_budget: u64,
     /// Event histogram by discriminant index — names are only attached
     /// if the budget error fires.
     histo: [u64; EV_KINDS],
@@ -446,7 +515,7 @@ impl Engine {
     pub(crate) fn new(
         cfg: ExperimentConfig,
         opts: SimOptions,
-        step_workloads: Vec<StepWorkload>,
+        source: Box<dyn WorkloadSource>,
         mut policies: PolicyBundle,
         sinks: SinkSet,
     ) -> Self {
@@ -464,46 +533,18 @@ impl Engine {
         // event loop exists — nothing about fault timing can observe
         // engine state (the determinism contract, DESIGN.md §10).
         let fault_plan = cfg.faults.resolve(cfg.seed, n_agents);
-        assert_eq!(
-            step_workloads.len(),
-            cfg.steps,
-            "engine needs one workload per step"
-        );
+        // The source must cover exactly the configured run. Only an
+        // exact hint is checkable up front (every in-repo source is
+        // Exact); an `AtLeast` feed that runs dry mid-run fails at the
+        // pull site in `ensure_step` instead.
+        if let LenHint::Exact(n) = source.len_hint() {
+            assert_eq!(n, cfg.steps, "engine needs one workload per step");
+        }
         let mode = policies.sample.mode(cfg.workload.inter_query);
-        let steps: Vec<StepCtl> = step_workloads
-            .into_iter()
-            .map(|workload| {
-                let sched = TrajectoryScheduler::new(&workload, mode);
-                let expected = workload.calls_per_agent(n_agents);
-                let traj_remaining = workload.trajectories.len();
-                let mut group_pending: BTreeMap<(usize, usize), (usize, Vec<f64>)> =
-                    BTreeMap::new();
-                for t in &workload.trajectories {
-                    for (ci, _) in t.calls.iter().enumerate() {
-                        group_pending
-                            .entry((t.query, ci))
-                            .or_insert_with(|| (0, Vec::new()))
-                            .0 += 1;
-                    }
-                }
-                StepCtl {
-                    traj_start: vec![0.0; workload.trajectories.len()],
-                    traj_end: vec![0.0; workload.trajectories.len()],
-                    workload,
-                    sched,
-                    started: false,
-                    rollout_done: false,
-                    start_t: 0.0,
-                    rollout_end_t: 0.0,
-                    end_t: 0.0,
-                    expected,
-                    grads_done: vec![0; n_agents],
-                    applied: vec![false; n_agents],
-                    traj_remaining,
-                    group_pending,
-                }
-            })
-            .collect();
+        // Livelock guard budget: ~100k events per step is ~35× the MA
+        // default's actual event count; the 1M floor preserves the
+        // historical fixed budget for short runs.
+        let event_budget = 1_000_000u64.max((cfg.steps as u64).saturating_mul(100_000));
 
         // ---- pools -------------------------------------------------------
         let inst_dev: Vec<usize> = cfg
@@ -588,7 +629,11 @@ impl Engine {
             man,
             store,
             transfer: TransferModel::new(cfg.cluster),
-            steps,
+            steps: VecDeque::new(),
+            window_base: 0,
+            total_steps: cfg.steps,
+            source,
+            sched_mode: mode,
             reqs: ReqSlab::default(),
             tstate: vec![AgentTrain::Idle; n_agents],
             alloc,
@@ -597,7 +642,6 @@ impl Engine {
             inst_dev,
             inst_agent,
             pool_devices,
-            busy_per_step: vec![0.0; cfg.steps],
             sample_seq: 0,
             agent_keys,
             counters,
@@ -606,8 +650,8 @@ impl Engine {
             processed_series: opts.track_agents.iter().map(|&a| (a, vec![])).collect(),
             queued_series: opts.track_agents.iter().map(|&a| (a, vec![])).collect(),
             busy_series: Vec::new(),
-            switch_s_total: vec![0.0; cfg.steps],
             guard: 0,
+            event_budget,
             histo: [0u64; EV_KINDS],
             now: 0.0,
             done: false,
@@ -641,7 +685,7 @@ impl Engine {
         // A zero-step experiment has nothing to schedule: leaving the
         // queue empty makes the first pump report the run as done
         // (instead of the old StartStep(0) index panic).
-        if !engine.steps.is_empty() {
+        if engine.total_steps > 0 {
             engine.q.push_at(0.0, Ev::StartStep(0));
             engine.q.push_at(engine.opts.scaler_poll_s, Ev::Poll);
             // Inject the fault plan as first-class events. Plan order
@@ -659,6 +703,82 @@ impl Engine {
 
     fn n_agents(&self) -> usize {
         self.cfg.workload.agents.len()
+    }
+
+    /// Live-window accessor: step `s` must be materialized and not yet
+    /// retired. Every handler upholds this — events only ever reference
+    /// steps between `window_base` and the newest started step.
+    fn st(&self, s: usize) -> &StepCtl {
+        &self.steps[s - self.window_base]
+    }
+
+    fn st_mut(&mut self, s: usize) -> &mut StepCtl {
+        let i = s - self.window_base;
+        &mut self.steps[i]
+    }
+
+    /// Materialize step `s` (and any unpulled predecessors) from the
+    /// workload source. Returns `false` — with `pending_error` set, so
+    /// `pump_step` poisons the run after the current event — if the
+    /// source fails or runs dry before `total_steps`.
+    fn ensure_step(&mut self, s: usize) -> bool {
+        debug_assert!(s >= self.window_base, "step {s} already retired");
+        while self.window_base + self.steps.len() <= s {
+            let pulled = self.window_base + self.steps.len();
+            match self.source.next_step() {
+                Some(w) => {
+                    debug_assert_eq!(w.step, pulled, "source yielded steps out of order");
+                    let ctl = Self::build_ctl(w, self.sched_mode, self.n_agents());
+                    self.steps.push_back(ctl);
+                }
+                None => {
+                    let e = self.source.take_error().unwrap_or_else(|| {
+                        PallasError::InvalidConfig(format!(
+                            "workload source exhausted at step {pulled} (config says {} steps)",
+                            self.total_steps
+                        ))
+                    });
+                    if self.pending_error.is_none() {
+                        self.pending_error = Some(e);
+                    }
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Build the control block for a freshly pulled step workload —
+    /// exactly the per-step construction the eager path used to run
+    /// over the whole `Vec` up front.
+    fn build_ctl(workload: StepWorkload, mode: Mode, n_agents: usize) -> StepCtl {
+        let sched = TrajectoryScheduler::new(&workload, mode);
+        let expected = workload.calls_per_agent(n_agents);
+        let traj_remaining = workload.trajectories.len();
+        let mut group_pending: BTreeMap<(usize, usize), (usize, Vec<f64>)> = BTreeMap::new();
+        for t in &workload.trajectories {
+            for (ci, _) in t.calls.iter().enumerate() {
+                group_pending.entry((t.query, ci)).or_insert_with(|| (0, Vec::new())).0 += 1;
+            }
+        }
+        StepCtl {
+            traj_start: vec![0.0; workload.trajectories.len()],
+            traj_end: vec![0.0; workload.trajectories.len()],
+            workload,
+            sched,
+            started: false,
+            rollout_done: false,
+            start_t: 0.0,
+            rollout_end_t: 0.0,
+            end_t: 0.0,
+            expected,
+            grads_done: vec![0; n_agents],
+            applied: vec![false; n_agents],
+            traj_remaining,
+            group_pending,
+            busy_s: 0.0,
+            switch_s_total: 0.0,
+        }
     }
 
     pub(crate) fn add_sink(&mut self, sink: Box<dyn super::events::EventSink>) {
@@ -706,7 +826,7 @@ impl Engine {
             self.now = t;
             self.guard += 1;
             self.histo[ev_idx(&ev)] += 1;
-            if self.guard >= 1_000_000 {
+            if self.guard >= self.event_budget {
                 self.failed = true;
                 return Err(PallasError::EventBudget {
                     t,
@@ -739,18 +859,32 @@ impl Engine {
     /// cursor suffices; the loop handles degenerate workloads where one
     /// event completes several steps at once.
     fn collect_completed(&mut self, t: f64) {
-        while self.next_report < self.steps.len() && self.step_complete(self.next_report) {
+        while self.next_report < self.total_steps && self.step_complete(self.next_report) {
             let s = self.next_report;
             self.next_report += 1;
             let report = self.finalize_step(s);
             self.sinks.emit(t, &EngineEvent::StepFinished { step: s, report: &report });
             self.pending.push_back(report);
+            // Retire the finalized control block: every report input
+            // froze at completion and no handler touches a completed
+            // step again, so the window slides forward and memory stays
+            // O(live steps) regardless of run length.
+            debug_assert_eq!(s, self.window_base);
+            self.steps.pop_front();
+            self.window_base += 1;
         }
     }
 
     fn step_complete(&self, s: usize) -> bool {
-        let st = &self.steps[s];
-        st.started && st.rollout_done && st.applied.iter().all(|&x| x)
+        if s < self.window_base {
+            // Retired: the step finalized and left the window.
+            return true;
+        }
+        match self.steps.get(s - self.window_base) {
+            Some(st) => st.started && st.rollout_done && st.applied.iter().all(|&x| x),
+            // Not yet materialized ⇒ not yet started.
+            None => false,
+        }
     }
 
     /// Build step `s`'s report from per-step state — every input is
@@ -763,10 +897,10 @@ impl Engine {
     /// completion.
     fn finalize_step(&mut self, s: usize) -> StepReport {
         let n_agents = self.n_agents();
-        let st = &self.steps[s];
+        let st = self.st(s);
         let e2e = st.end_t - st.start_t;
         let rollout_s = st.rollout_end_t - st.start_t;
-        let train_s = (st.end_t - st.rollout_end_t - self.switch_s_total[s]).max(0.0);
+        let train_s = (st.end_t - st.rollout_end_t - st.switch_s_total).max(0.0);
         let latencies: Vec<f64> = (0..st.workload.trajectories.len())
             .map(|i| (st.traj_end[i] - st.traj_start[i]).max(0.0))
             .collect();
@@ -785,7 +919,7 @@ impl Engine {
             train_s,
             other_s: (e2e - rollout_s - train_s).max(0.0),
             tokens: st.workload.total_tokens(),
-            busy_device_s: self.busy_per_step[s],
+            busy_device_s: st.busy_s,
             pool_devices: self.pool_devices,
             agent_calls: st.workload.calls_per_agent(n_agents),
             trajectory_latencies: latencies,
@@ -821,7 +955,11 @@ impl Engine {
     }
 
     fn all_done(&self) -> bool {
-        (0..self.steps.len()).all(|s| self.step_complete(s))
+        // Completion is monotone in the step index and the report
+        // cursor advances the moment a step completes (every caller
+        // runs after `collect_completed`, and polls never complete
+        // steps), so "every step reported" == the old full scan.
+        self.next_report == self.total_steps
     }
 
     // -----------------------------------------------------------------------
@@ -837,7 +975,8 @@ impl Engine {
                 self.migration_arrive(t, donor_insts, target)
             }
             Ev::SwitchToTrainDone(s) => {
-                self.switch_s_total[s] += self.opts.switch_s;
+                let sw = self.opts.switch_s;
+                self.st_mut(s).switch_s_total += sw;
                 for a in 0..self.n_agents() {
                     self.maybe_train(t, a);
                 }
@@ -846,8 +985,9 @@ impl Engine {
                 // The switch cost was charged at schedule time
                 // (check_step_complete): it belongs to step `s`'s
                 // budget, whose report freezes at step completion —
-                // before this event lands.
-                if s + 1 < self.steps.len() {
+                // before this event lands (step `s` has already left
+                // the window; this arm must not touch its ctl block).
+                if s + 1 < self.total_steps {
                     self.q.push_at(t, Ev::StartStep(s + 1));
                 }
             }
@@ -878,9 +1018,14 @@ impl Engine {
     }
 
     fn start_step(&mut self, t: f64, s: usize) {
+        if !self.ensure_step(s) {
+            // The source failed or ran dry: `pending_error` is set and
+            // `pump_step` poisons the run after this event.
+            return;
+        }
         let n_agents = self.n_agents();
         {
-            let st = &mut self.steps[s];
+            let st = self.st_mut(s);
             debug_assert!(!st.started);
             st.started = true;
             st.start_t = t;
@@ -891,22 +1036,27 @@ impl Engine {
                 }
             }
         }
-        let ev = EngineEvent::StepStarted { step: s, workload: &self.steps[s].workload };
+        // Direct window indexing: the borrow must stay on the `steps`
+        // field alone so `sinks.emit` (&mut self.sinks) can run.
+        let ev = EngineEvent::StepStarted {
+            step: s,
+            workload: &self.steps[s - self.window_base].workload,
+        };
         self.sinks.emit(t, &ev);
-        let ready = self.steps[s].sched.start();
+        let ready = self.st_mut(s).sched.start();
         for c in ready {
             self.submit_call(t, s, c);
         }
         // Degenerate workload (no trajectories).
-        if self.steps[s].traj_remaining == 0 {
+        if self.st(s).traj_remaining == 0 {
             self.rollout_finished(t, s);
         }
     }
 
     fn submit_call(&mut self, t: f64, step: usize, c: CallRef) {
-        let spec = self.steps[step].workload.trajectories[c.traj].calls[c.call].clone();
+        let spec = self.st(step).workload.trajectories[c.traj].calls[c.call].clone();
         if c.call == 0 {
-            self.steps[step].traj_start[c.traj] = t;
+            self.st_mut(step).traj_start[c.traj] = t;
         }
         let mut decode_s = spec.tokens / self.cfg.workload.agents[spec.agent].model.decode_tps();
         // Straggler fault window: calls submitted while the agent is
@@ -955,7 +1105,7 @@ impl Engine {
         // Device-busy: decode seconds × the slot's device share.
         let dev = self.inst_dev[info.agent] as f64;
         let busy = info.decode_s * dev / self.opts.concurrency as f64;
-        self.busy_per_step[info.step] += busy;
+        self.st_mut(info.step).busy_s += busy;
 
         if let Some(promoted) = self.man.complete(rid) {
             let p = self.reqs.get(promoted);
@@ -965,18 +1115,12 @@ impl Engine {
         // Record the call's sample; GRPO groups become ready together
         // (the advantage of each candidate needs the group's rewards).
         let step = info.step;
-        let tokens = self.steps[step].workload.trajectories[info.call.traj].calls
-            [info.call.call]
-            .tokens;
-        let key = (
-            self.steps[step].workload.trajectories[info.call.traj].query,
-            info.call.call,
-        );
+        let tokens =
+            self.st(step).workload.trajectories[info.call.traj].calls[info.call.call].tokens;
+        let key = (self.st(step).workload.trajectories[info.call.traj].query, info.call.call);
         let ready_group = {
-            let entry = self.steps[step]
-                .group_pending
-                .get_mut(&key)
-                .expect("group bookkeeping");
+            let entry =
+                self.st_mut(step).group_pending.get_mut(&key).expect("group bookkeeping");
             entry.0 -= 1;
             entry.1.push(tokens);
             if entry.0 == 0 {
@@ -1011,20 +1155,18 @@ impl Engine {
         }
 
         // Per-trajectory completion time (Fig. 1a interaction latency).
-        if info.call.call + 1
-            == self.steps[step].workload.trajectories[info.call.traj].calls.len()
-        {
-            self.steps[step].traj_end[info.call.traj] = t;
+        if info.call.call + 1 == self.st(step).workload.trajectories[info.call.traj].calls.len() {
+            self.st_mut(step).traj_end[info.call.traj] = t;
         }
 
         // Advance the dependency DAG.
-        let ready = self.steps[step].sched.complete(info.call);
+        let ready = self.st_mut(step).sched.complete(info.call);
         for c in ready {
             self.submit_call(t, step, c);
         }
 
         // Trajectory / rollout completion bookkeeping.
-        let st = &mut self.steps[step];
+        let st = self.st(step);
         if st.sched.is_done() && !st.rollout_done {
             self.rollout_finished(t, step);
         }
@@ -1032,7 +1174,7 @@ impl Engine {
 
     fn rollout_finished(&mut self, t: f64, s: usize) {
         {
-            let st = &mut self.steps[s];
+            let st = self.st_mut(s);
             st.rollout_done = true;
             st.rollout_end_t = t;
         }
@@ -1048,9 +1190,10 @@ impl Engine {
         if let Some(frac) = self.policies.pipeline.next_step_prefetch() {
             // MARTI: next step's rollout starts now with stale params
             // (a pipelined partial switch to restore instance weights).
-            if s + 1 < self.steps.len() {
-                self.q.push_in(self.opts.switch_s * frac, Ev::StartStep(s + 1));
-                self.switch_s_total[s] += self.opts.switch_s * frac;
+            if s + 1 < self.total_steps {
+                let charge = self.opts.switch_s * frac;
+                self.q.push_in(charge, Ev::StartStep(s + 1));
+                self.st_mut(s).switch_s_total += charge;
             }
         }
     }
@@ -1077,21 +1220,22 @@ impl Engine {
         // Sync pipelines only train after the step's rollout concluded
         // (and for colocated MAS-RL, after the phase switch — gated by
         // the SwitchToTrainDone event calling back into here).
-        if !self.policies.pipeline.admits_during_rollout() && !self.steps[step].rollout_done {
+        if !self.policies.pipeline.admits_during_rollout() && !self.st(step).rollout_done {
             return;
         }
-        if self.strict_alternation() && !self.steps[step].rollout_done {
+        if self.strict_alternation() && !self.st(step).rollout_done {
             // MAS-RL: must be past the switch (switch event re-triggers).
             return;
         }
         let ready = self.store.count_ready(&self.agent_keys[agent], Some(step as u64));
         let micro = self.cfg.pipeline.micro_batch;
-        let all_in = self.steps[step].rollout_done;
+        let st = self.st(step);
+        let all_in = st.rollout_done;
         let have_work = ready >= micro || (all_in && ready > 0);
         let need_apply = all_in
             && ready == 0
-            && self.steps[step].grads_done[agent] == self.steps[step].expected[agent]
-            && !self.steps[step].applied[agent];
+            && st.grads_done[agent] == st.expected[agent]
+            && !st.applied[agent];
         if !have_work && !need_apply {
             return;
         }
@@ -1134,13 +1278,16 @@ impl Engine {
     }
 
     /// Earliest step with outstanding training work for `agent`.
+    /// Scanning the live window is equivalent to the old scan from
+    /// step 0: retired steps are started *and* fully applied, so they
+    /// could neither match nor break the loop early.
     fn train_step_for(&self, agent: usize) -> Option<usize> {
-        for (s, st) in self.steps.iter().enumerate() {
+        for (i, st) in self.steps.iter().enumerate() {
             if !st.started {
                 break;
             }
             if !st.applied[agent] {
-                return Some(s);
+                return Some(self.window_base + i);
             }
         }
         None
@@ -1153,7 +1300,7 @@ impl Engine {
         let fetched = self.store.take_batch(&self.agent_keys[agent], Some(step as u64), micro);
         if fetched.is_empty() {
             // Nothing to compute: either apply or release.
-            let st = &self.steps[step];
+            let st = self.st(step);
             if st.rollout_done
                 && st.grads_done[agent] == st.expected[agent]
                 && !st.applied[agent]
@@ -1176,19 +1323,19 @@ impl Engine {
         let model = self.cfg.workload.agents[agent].model;
         let dur = grad_compute_s(model, tokens);
         let gdev = model.train_group_devices() as f64;
-        self.busy_per_step[step] += dur * gdev;
+        self.st_mut(step).busy_s += dur * gdev;
         self.q.push_in(dur, Ev::GradDone { agent, step, n });
     }
 
     fn grad_done(&mut self, t: f64, agent: usize, step: usize, n: usize) {
-        self.steps[step].grads_done[agent] += n;
+        self.st_mut(step).grads_done[agent] += n;
         debug_assert!(
-            self.steps[step].grads_done[agent] <= self.steps[step].expected[agent],
+            self.st(step).grads_done[agent] <= self.st(step).expected[agent],
             "agent {agent} over-trained"
         );
         // Continue: more micro batches, apply, or release.
         let ready = self.store.count_ready(&self.agent_keys[agent], Some(step as u64));
-        let st = &self.steps[step];
+        let st = self.st(step);
         let micro = self.cfg.pipeline.micro_batch;
         if ready >= micro || (st.rollout_done && ready > 0) {
             self.dispatch_grad(t, agent, step);
@@ -1205,13 +1352,13 @@ impl Engine {
         let model = self.cfg.workload.agents[agent].model;
         let dur = apply_update_s(model) + self.opts.sync_s;
         let gdev = model.train_group_devices() as f64;
-        self.busy_per_step[step] += apply_update_s(model) * gdev;
+        self.st_mut(step).busy_s += apply_update_s(model) * gdev;
         self.q.push_in(dur, Ev::ApplyDone { agent, step });
         let _ = t;
     }
 
     fn apply_done(&mut self, t: f64, agent: usize, step: usize) {
-        self.steps[step].applied[agent] = true;
+        self.st_mut(step).applied[agent] = true;
         self.release_training(t, agent);
         self.check_step_complete(t, step);
         // The agent may have next-step samples waiting (MARTI overlap).
@@ -1244,20 +1391,21 @@ impl Engine {
         if !self.step_complete(step) {
             return;
         }
-        self.steps[step].end_t = t;
+        self.st_mut(step).end_t = t;
         if self.policies.pipeline.overlaps_steps() {
             // Next step already started at rollout boundary.
             return;
         }
-        if step + 1 < self.steps.len() {
+        if step + 1 < self.total_steps {
             if !self.policies.alloc.dedicated_pools() {
                 // MAS-RL: switch back to inference before next rollout.
                 // Charge the switch to this step's budget *now* — it
                 // belongs to the step, but the completion event (and
                 // the step's report) fires before the switch lands.
-                self.switch_s_total[step] += self.opts.switch_s;
+                let sw = self.opts.switch_s;
+                self.st_mut(step).switch_s_total += sw;
                 self.sinks.emit(t, &EngineEvent::PhaseSwitch { step, to_train: false });
-                self.q.push_in(self.opts.switch_s, Ev::SwitchToRolloutDone(step));
+                self.q.push_in(sw, Ev::SwitchToRolloutDone(step));
             } else {
                 self.q.push_at(t, Ev::StartStep(step + 1));
             }
@@ -1454,7 +1602,7 @@ impl Engine {
     /// Generated tokens of the call behind `info` — the lost-work
     /// accounting for a request killed mid-decode.
     fn call_tokens(&self, info: &ReqInfo) -> f64 {
-        self.steps[info.step].workload.trajectories[info.call.traj].calls[info.call.call].tokens
+        self.st(info.step).workload.trajectories[info.call.traj].calls[info.call.call].tokens
     }
 
     /// Kill `victims` and route their displaced work through the

@@ -1,0 +1,312 @@
+//! Open-loop arrival processes: modeled user-traffic generators.
+//!
+//! The seven original scenario presets are *closed-loop*: every step
+//! serves exactly `queries_per_step` queries (scaled by a fixed
+//! multiplier), as if a benchmark harness fed the cluster at a constant
+//! rate. Real serving pressure is *open-loop* — requests arrive whether
+//! or not the system is keeping up. This module models that arrival
+//! side: a per-step query count drawn from a seeded stochastic process,
+//! consumed by the `poisson` / `diurnal` / `flash_crowd` scenario
+//! presets ([`crate::workload::scenario`]).
+//!
+//! # Determinism & decorrelation
+//!
+//! Each component draws from its **own** decorrelated [`Pcg64`] stream,
+//! keyed by the step index (the same idiom as the fault plane's
+//! per-kind streams, DESIGN.md §10):
+//!
+//! | component   | stream                                       |
+//! |-------------|----------------------------------------------|
+//! | Poisson     | `Pcg64::with_stream(seed ^ STREAM_POISSON, step)` |
+//! | diurnal     | `Pcg64::with_stream(seed ^ STREAM_DIURNAL, step)` |
+//! | flash crowd | `Pcg64::with_stream(seed ^ STREAM_FLASH, step)`   |
+//!
+//! Consequences, all pinned by tests:
+//!
+//! - same (config, seed, step) → bit-identical [`Arrivals`];
+//! - changing the seed moves the draws (seed sensitivity);
+//! - enabling or tuning one component cannot move another's draws
+//!   (decorrelation) — adding a diurnal swell never reshuffles the
+//!   Poisson base, so A/B comparisons across arrival shapes share the
+//!   same base traffic;
+//! - every step is randomly accessible: `arrivals(seed, s)` never
+//!   depends on having computed step `s - 1`, which is what lets the
+//!   lazy streaming plane (DESIGN.md §11) generate steps on demand.
+//!
+//! The total is clamped to `[1, max]` where `max = ceil(base_rate *
+//! max_mult)` — the per-step budget bound that keeps a flash crowd from
+//! materializing an unbounded step.
+
+use crate::util::rng::Pcg64;
+
+/// Stream selectors for the per-component RNGs (`seed ^ STREAM_*`,
+/// step index as the stream key). Disjoint from the fault-plane
+/// constants (`0xfa01..=0xfa05`) and the generator's per-query /
+/// per-candidate XOR constants (`0x5157`, `0xca4d`).
+pub const STREAM_POISSON: u64 = 0x0a71;
+pub const STREAM_DIURNAL: u64 = 0x0a72;
+pub const STREAM_FLASH: u64 = 0x0a73;
+
+/// An open-loop arrival process: a Poisson base, plus optional diurnal
+/// and flash-crowd components, all additive.
+///
+/// `base_rate` is the mean arrivals per step of the Poisson floor;
+/// presets derive it from the workload's `queries_per_step` so the
+/// open-loop scenarios stay comparable to the closed-loop ones.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ArrivalProcess {
+    /// Mean arrivals per step of the Poisson base component.
+    pub base_rate: f64,
+    /// Peak diurnal extra load as a multiple of `base_rate`
+    /// (0 disables the component).
+    pub diurnal_amp: f64,
+    /// Diurnal cycle length in steps.
+    pub diurnal_period: usize,
+    /// Per-step probability that a flash crowd ignites
+    /// (0 disables the component).
+    pub flash_prob: f64,
+    /// Flash-crowd peak as a multiple of `base_rate`.
+    pub flash_mult: f64,
+    /// Steps a flash crowd takes to decay (halving per step).
+    pub flash_decay_steps: usize,
+    /// Per-step budget bound: total arrivals are clamped to
+    /// `ceil(base_rate * max_mult)`.
+    pub max_mult: f64,
+}
+
+impl ArrivalProcess {
+    /// A pure Poisson process with the given mean rate and the default
+    /// 8x budget bound.
+    pub fn poisson(base_rate: f64) -> Self {
+        ArrivalProcess {
+            base_rate,
+            diurnal_amp: 0.0,
+            diurnal_period: 1,
+            flash_prob: 0.0,
+            flash_mult: 0.0,
+            flash_decay_steps: 0,
+            max_mult: 8.0,
+        }
+    }
+
+    /// Add a diurnal component: extra Poisson load whose rate swells
+    /// from 0 to `amp * base_rate` and back over `period` steps.
+    pub fn with_diurnal(mut self, amp: f64, period: usize) -> Self {
+        self.diurnal_amp = amp;
+        self.diurnal_period = period.max(1);
+        self
+    }
+
+    /// Add a flash-crowd component: each step ignites with probability
+    /// `prob` a spike of roughly `mult * base_rate` arrivals that
+    /// halves over each of the next `decay_steps` steps.
+    pub fn with_flash(mut self, prob: f64, mult: f64, decay_steps: usize) -> Self {
+        self.flash_prob = prob;
+        self.flash_mult = mult;
+        self.flash_decay_steps = decay_steps;
+        self
+    }
+
+    /// The hard per-step budget: `ceil(base_rate * max_mult)`, at
+    /// least 1.
+    pub fn max_arrivals(&self) -> usize {
+        (self.base_rate * self.max_mult).ceil().max(1.0) as usize
+    }
+
+    /// Diurnal rate multiplier at `step`: a raised cosine in `[0, 1]`,
+    /// 0 at the cycle start, 1 at mid-cycle.
+    fn diurnal_phase(&self, step: usize) -> f64 {
+        let frac = (step % self.diurnal_period) as f64 / self.diurnal_period as f64;
+        0.5 * (1.0 - (std::f64::consts::TAU * frac).cos())
+    }
+
+    /// Flash-crowd arrivals contributed *to* `step` by an ignition *at*
+    /// `step - age` (random access: re-draws that step's ignition from
+    /// its own stream, so the answer never depends on iteration order).
+    fn flash_from(&self, seed: u64, ignition_step: usize, age: usize) -> usize {
+        let mut rng = Pcg64::with_stream(seed ^ STREAM_FLASH, ignition_step as u64);
+        if rng.f64() >= self.flash_prob {
+            return 0;
+        }
+        // Spike amplitude in [0.5, 1.5) of the nominal flash size,
+        // halving per step of age.
+        let amp = 0.5 + rng.f64();
+        let peak = self.flash_mult * self.base_rate * amp;
+        (peak * 0.5f64.powi(age as i32)).round() as usize
+    }
+
+    /// Draw the arrival breakdown for `step`. Deterministic in
+    /// `(self, seed, step)` and randomly accessible per step.
+    pub fn arrivals(&self, seed: u64, step: usize) -> Arrivals {
+        let poisson = {
+            let mut rng = Pcg64::with_stream(seed ^ STREAM_POISSON, step as u64);
+            poisson_draw(&mut rng, self.base_rate)
+        };
+        let diurnal = if self.diurnal_amp > 0.0 {
+            let lambda = self.diurnal_amp * self.base_rate * self.diurnal_phase(step);
+            let mut rng = Pcg64::with_stream(seed ^ STREAM_DIURNAL, step as u64);
+            poisson_draw(&mut rng, lambda)
+        } else {
+            0
+        };
+        let flash = if self.flash_prob > 0.0 {
+            (0..=self.flash_decay_steps)
+                .filter(|age| *age <= step)
+                .map(|age| self.flash_from(seed, step - age, age))
+                .sum()
+        } else {
+            0
+        };
+        let total = (poisson + diurnal + flash).clamp(1, self.max_arrivals());
+        Arrivals {
+            poisson,
+            diurnal,
+            flash,
+            total,
+        }
+    }
+}
+
+/// One step's arrival draw, broken down by component.
+///
+/// `total` is the clamped sum actually served; the components are the
+/// raw (unclamped) draws so tests can assert decorrelation directly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Arrivals {
+    pub poisson: usize,
+    pub diurnal: usize,
+    pub flash: usize,
+    /// `(poisson + diurnal + flash).clamp(1, max_arrivals)`.
+    pub total: usize,
+}
+
+/// Knuth's Poisson sampler: count uniform draws until their product
+/// falls below `e^-lambda`. Exact for the rates used here (the
+/// per-step budget bound keeps lambda small); the rate is capped at
+/// 512 so the loop stays short even for absurd configs.
+fn poisson_draw(rng: &mut Pcg64, lambda: f64) -> usize {
+    let lambda = lambda.min(512.0);
+    if lambda <= 0.0 {
+        return 0;
+    }
+    let limit = (-lambda).exp();
+    let mut k = 0usize;
+    let mut p = rng.f64();
+    while p > limit {
+        k += 1;
+        p *= rng.f64();
+    }
+    k
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn full() -> ArrivalProcess {
+        ArrivalProcess::poisson(6.0)
+            .with_diurnal(1.5, 8)
+            .with_flash(0.25, 3.0, 2)
+    }
+
+    #[test]
+    fn same_seed_same_step_is_bit_identical() {
+        let p = full();
+        for step in 0..64 {
+            assert_eq!(p.arrivals(7, step), p.arrivals(7, step));
+        }
+    }
+
+    #[test]
+    fn seed_moves_the_arrival_sequence() {
+        let p = full();
+        let a: Vec<usize> = (0..64).map(|s| p.arrivals(7, s).total).collect();
+        let b: Vec<usize> = (0..64).map(|s| p.arrivals(2048, s).total).collect();
+        assert_ne!(a, b, "different seeds must move arrival draws");
+    }
+
+    #[test]
+    fn steps_are_randomly_accessible() {
+        // Querying step 9 cold must match querying it after 0..9.
+        let p = full();
+        let cold = p.arrivals(42, 9);
+        for s in 0..9 {
+            let _ = p.arrivals(42, s);
+        }
+        assert_eq!(cold, p.arrivals(42, 9));
+    }
+
+    #[test]
+    fn components_are_decorrelated() {
+        // Adding (or retuning) diurnal and flash components must not
+        // move the Poisson base draws, and vice versa — each component
+        // owns its stream.
+        let plain = ArrivalProcess::poisson(6.0);
+        let loaded = full();
+        for step in 0..64 {
+            assert_eq!(
+                plain.arrivals(7, step).poisson,
+                loaded.arrivals(7, step).poisson,
+                "diurnal/flash components moved the Poisson base at step {step}"
+            );
+        }
+        let d1 = ArrivalProcess::poisson(6.0).with_diurnal(1.5, 8);
+        let d2 = full(); // same diurnal, flash added
+        for step in 0..64 {
+            assert_eq!(
+                d1.arrivals(7, step).diurnal,
+                d2.arrivals(7, step).diurnal,
+                "flash component moved the diurnal draws at step {step}"
+            );
+        }
+    }
+
+    #[test]
+    fn totals_respect_the_per_step_budget() {
+        let p = ArrivalProcess::poisson(4.0).with_flash(0.9, 6.0, 3);
+        let cap = p.max_arrivals();
+        for seed in [1u64, 7, 2048] {
+            for step in 0..256 {
+                let a = p.arrivals(seed, step);
+                assert!(a.total >= 1, "step must serve at least one query");
+                assert!(a.total <= cap, "step {step} drew {} > budget {cap}", a.total);
+            }
+        }
+    }
+
+    #[test]
+    fn diurnal_phase_peaks_mid_cycle() {
+        let p = ArrivalProcess::poisson(6.0).with_diurnal(2.0, 8);
+        assert!(p.diurnal_phase(0) < 1e-12);
+        assert!((p.diurnal_phase(4) - 1.0).abs() < 1e-12);
+        // Mean diurnal extra over many cycles tracks amp/2.
+        let n = 4096usize;
+        let mean: f64 = (0..n).map(|s| p.arrivals(7, s).diurnal as f64).sum::<f64>() / n as f64;
+        let expect = 0.5 * 2.0 * 6.0;
+        assert!((mean - expect).abs() < 0.5, "diurnal mean {mean} far from {expect}");
+    }
+
+    #[test]
+    fn flash_crowds_decay_across_steps() {
+        let p = ArrivalProcess::poisson(4.0).with_flash(1.0, 4.0, 2);
+        // prob 1.0 → every step ignites; contributions stack but the
+        // age-0 spike dominates and later steps carry halved echoes.
+        let a = p.arrivals(7, 5);
+        assert!(a.flash > 0, "guaranteed ignition must contribute");
+        // An ignition at step s contributes half as much at s+1.
+        let at_ignition = p.flash_from(7, 5, 0);
+        let one_later = p.flash_from(7, 5, 1);
+        assert!(one_later <= at_ignition.div_ceil(2) + 1);
+    }
+
+    #[test]
+    fn poisson_draw_tracks_lambda() {
+        let mut rng = Pcg64::with_stream(99, 0);
+        let n = 8192usize;
+        let sum: f64 = (0..n).map(|_| poisson_draw(&mut rng, 6.0) as f64).sum();
+        let mean = sum / n as f64;
+        assert!((mean - 6.0).abs() < 0.2, "poisson mean {mean} far from 6");
+        let mut rng = Pcg64::with_stream(99, 1);
+        assert_eq!(poisson_draw(&mut rng, 0.0), 0);
+    }
+}

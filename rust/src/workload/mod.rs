@@ -12,12 +12,16 @@
 //! The generator is deterministic in (seed, step): both the simulator
 //! and the real mini-cluster replay identical workloads.
 
+pub mod arrival;
 pub mod corpus;
 pub mod scenario;
+pub mod source;
 pub mod trace;
 
+pub use arrival::{ArrivalProcess, Arrivals};
 pub use scenario::Scenario;
-pub use trace::Trace;
+pub use source::{LenHint, ScenarioSource, TraceSource, VecSource, WorkloadSource};
+pub use trace::{Trace, TraceReader};
 
 use crate::config::WorkloadConfig;
 use crate::util::rng::Pcg64;

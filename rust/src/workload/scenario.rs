@@ -16,6 +16,7 @@
 
 use crate::config::{ModelScale, WorkloadConfig};
 use crate::error::PallasError;
+use crate::workload::arrival::ArrivalProcess;
 use crate::workload::{Generator, StepWorkload};
 
 /// A named traffic shape. `shape` transforms the base config once (per
@@ -23,7 +24,11 @@ use crate::workload::{Generator, StepWorkload};
 /// default `step` delegates to the standard [`Generator`], optionally
 /// modulated by [`Scenario::arrival_mult`] — only presets that need a
 /// fundamentally different generation process override it.
-pub trait Scenario {
+///
+/// `Send` is a supertrait so a resolved scenario can live inside a
+/// [`crate::workload::WorkloadSource`] handed across sweep-executor
+/// threads; presets are stateless, so this costs implementors nothing.
+pub trait Scenario: Send {
     /// Registry key (lower_snake_case).
     fn name(&self) -> &'static str;
 
@@ -220,11 +225,100 @@ impl Scenario for Straggler {
     }
 }
 
+/// Open-loop arrival presets (DESIGN.md §11): the per-step query count
+/// is *drawn* from a seeded [`ArrivalProcess`] instead of fixed at
+/// `queries_per_step` — load is driven by modeled user arrivals, not by
+/// the closed-loop step clock. `queries_per_step` becomes the mean
+/// arrival rate, so open-loop runs stay comparable to closed-loop ones.
+///
+/// Per-query generator streams are keyed by `(seed, step, q)`, so
+/// resizing the arrival count keeps a shared query prefix rather than
+/// reshuffling the step — the same property that makes `arrival_mult`
+/// presets replayable makes these recordable/replayable through the
+/// existing trace machinery unchanged.
+struct OpenLoop {
+    name: &'static str,
+    stresses: &'static str,
+    /// `(amp, period)` of the diurnal component, if any.
+    diurnal: Option<(f64, usize)>,
+    /// `(prob, mult, decay_steps)` of the flash-crowd component, if any.
+    flash: Option<(f64, f64, usize)>,
+}
+
+impl OpenLoop {
+    /// Memoryless Poisson arrivals around the configured mean rate.
+    fn poisson() -> OpenLoop {
+        OpenLoop {
+            name: "poisson",
+            stresses: "open-loop floor: memoryless Poisson arrivals replace fixed load",
+            diurnal: None,
+            flash: None,
+        }
+    }
+
+    /// Poisson base plus a raised-cosine day/night swell.
+    fn diurnal() -> OpenLoop {
+        OpenLoop {
+            name: "diurnal",
+            stresses: "open-loop day cycle: raised-cosine swell over the Poisson base",
+            diurnal: Some((1.5, 8)),
+            flash: None,
+        }
+    }
+
+    /// Poisson base plus randomly igniting, geometrically decaying
+    /// traffic spikes.
+    fn flash_crowd() -> OpenLoop {
+        OpenLoop {
+            name: "flash_crowd",
+            stresses: "open-loop spikes: flash crowds ignite at random and decay",
+            diurnal: None,
+            flash: Some((0.25, 3.0, 2)),
+        }
+    }
+
+    fn process(&self, wl: &WorkloadConfig) -> ArrivalProcess {
+        let mut p = ArrivalProcess::poisson(wl.queries_per_step as f64);
+        if let Some((amp, period)) = self.diurnal {
+            p = p.with_diurnal(amp, period);
+        }
+        if let Some((prob, mult, decay)) = self.flash {
+            p = p.with_flash(prob, mult, decay);
+        }
+        p
+    }
+}
+
+impl Scenario for OpenLoop {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+    fn stresses(&self) -> &'static str {
+        self.stresses
+    }
+    fn shape(&self, base: &WorkloadConfig) -> WorkloadConfig {
+        base.clone()
+    }
+    fn step(&self, wl: &WorkloadConfig, seed: u64, step: usize) -> StepWorkload {
+        let n = self.process(wl).arrivals(seed, step).total;
+        if n == wl.queries_per_step {
+            return Generator::new(wl, seed).step(step);
+        }
+        // Same prefix property as `arrival_mult` modulation: per-query
+        // streams are keyed by (seed, step, q), so the drawn count only
+        // truncates or extends the step, never reshuffles it.
+        let mut open = wl.clone();
+        open.queries_per_step = n;
+        Generator::new(&open, seed).step(step)
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Registry
 // ---------------------------------------------------------------------------
 
-/// All presets, in catalogue order (DESIGN.md §2).
+/// All presets, in catalogue order (DESIGN.md §2; open-loop arrival
+/// presets in §11).
 pub fn all() -> Vec<Box<dyn Scenario>> {
     vec![
         Box::new(Baseline),
@@ -234,6 +328,9 @@ pub fn all() -> Vec<Box<dyn Scenario>> {
         Box::new(ToolHeavy),
         Box::new(HeteroScale),
         Box::new(Straggler),
+        Box::new(OpenLoop::poisson()),
+        Box::new(OpenLoop::diurnal()),
+        Box::new(OpenLoop::flash_crowd()),
     ]
 }
 
@@ -459,5 +556,46 @@ mod tests {
             plain += capped(&Generator::new(&base(), 2048).step(s), base().max_tokens);
         }
         assert!(strag > 2 * plain.max(1), "capped calls {strag} vs {plain}");
+    }
+
+    #[test]
+    fn open_loop_presets_vary_query_counts_within_budget() {
+        for name in ["poisson", "diurnal", "flash_crowd"] {
+            let mut w = base();
+            w.scenario = name.into();
+            let (shaped, scen) = resolve(&w).unwrap();
+            let cap = (shaped.queries_per_step as f64 * 8.0).ceil() as usize;
+            let queries: Vec<usize> = (0..32)
+                .map(|s| scen.step(&shaped, 2048, s).trajectories.len() / shaped.group_size)
+                .collect();
+            assert!(
+                queries.iter().any(|&q| q != shaped.queries_per_step),
+                "{name} never deviates from the closed-loop count: {queries:?}"
+            );
+            assert!(
+                queries.iter().all(|&q| (1..=cap).contains(&q)),
+                "{name} broke the per-step budget: {queries:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn open_loop_steps_share_a_query_prefix_with_closed_loop() {
+        // The drawn arrival count truncates or extends a step; it never
+        // reshuffles it — this is what lets the trace machinery record
+        // and replay open-loop runs unchanged.
+        let mut w = base();
+        w.scenario = "flash_crowd".into();
+        let (shaped, scen) = resolve(&w).unwrap();
+        for step in 0..8 {
+            let open = scen.step(&shaped, 2048, step);
+            let closed = Generator::new(&shaped, 2048).step(step);
+            let shared = open.trajectories.len().min(closed.trajectories.len());
+            assert_eq!(
+                open.trajectories[..shared],
+                closed.trajectories[..shared],
+                "step {step} reshuffled instead of resizing"
+            );
+        }
     }
 }

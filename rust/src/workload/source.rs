@@ -1,0 +1,286 @@
+//! The lazy workload plane (DESIGN.md §11): pull-based step sources.
+//!
+//! Eager resolution materializes `Vec<StepWorkload>` up front, so
+//! memory scales as steps × agents. A [`WorkloadSource`] instead hands
+//! the engine one [`StepWorkload`] per pull, generated or parsed on
+//! demand — peak memory becomes O(live window), independent of run
+//! length. Three adapters cover every resolution path:
+//!
+//! - [`VecSource`] — wraps an eagerly materialized vector; the golden
+//!   reference the lazy plane is byte-diffed against in CI;
+//! - [`ScenarioSource`] — generates each step on demand from a resolved
+//!   [`Scenario`] (possible because generation is deterministic in
+//!   `(seed, step)` — no step depends on its predecessor);
+//! - [`TraceSource`] — streams a recorded trace through
+//!   [`TraceReader`], one line per step.
+//!
+//! # Determinism contract
+//!
+//! A source must yield the *same* step sequence the eager path would
+//! materialize — lazy vs eager runs are byte-identical end to end
+//! (metrics JSON, JSONL event streams, trace round-trips), enforced by
+//! the `lazy-equivalence` CI job and the property tests in
+//! `tests/lazy.rs`.
+//!
+//! # Error discipline
+//!
+//! `next_step` is a plain pull (`Option`, not `Result`) so trivial
+//! sources stay trivial; a source that can fail mid-stream (trace
+//! parse errors surface lazily) stores the error and reports `None`,
+//! and the engine retrieves the cause via [`WorkloadSource::take_error`]
+//! before deciding whether exhaustion was expected.
+
+use crate::config::WorkloadConfig;
+use crate::error::PallasError;
+use crate::workload::{trace::TraceReader, Scenario, StepWorkload};
+
+/// How many steps a source still has to yield.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LenHint {
+    /// Exactly this many steps remain (all in-repo sources).
+    Exact(usize),
+    /// At least this many steps remain (unbounded/external feeds).
+    AtLeast(usize),
+}
+
+impl LenHint {
+    /// The guaranteed floor on remaining steps.
+    pub fn lower_bound(self) -> usize {
+        match self {
+            LenHint::Exact(n) | LenHint::AtLeast(n) => n,
+        }
+    }
+
+    /// The remaining count, when known exactly.
+    pub fn exact(self) -> Option<usize> {
+        match self {
+            LenHint::Exact(n) => Some(n),
+            LenHint::AtLeast(_) => None,
+        }
+    }
+}
+
+/// A pull-iterator of per-step workloads, consumed by the engine one
+/// step at a time through `Session::pump_step`.
+///
+/// `Send` because resolved experiments cross sweep-executor threads.
+pub trait WorkloadSource: Send {
+    /// Yield the next step's workload, or `None` when exhausted (or
+    /// failed — see [`WorkloadSource::take_error`]).
+    fn next_step(&mut self) -> Option<StepWorkload>;
+
+    /// Exact-or-lower-bound count of steps *remaining* (not total).
+    fn len_hint(&self) -> LenHint;
+
+    /// If the previous `None` was a failure rather than clean
+    /// exhaustion, surface the typed cause (takes it; idempotent
+    /// afterwards). Default: infallible source.
+    fn take_error(&mut self) -> Option<PallasError> {
+        None
+    }
+}
+
+/// Eager adapter: a pre-materialized `Vec<StepWorkload>`, yielded in
+/// order. This is the classic path and the golden reference for every
+/// lazy-equivalence diff.
+#[derive(Debug)]
+pub struct VecSource {
+    steps: std::vec::IntoIter<StepWorkload>,
+}
+
+impl VecSource {
+    pub fn new(steps: Vec<StepWorkload>) -> VecSource {
+        VecSource {
+            steps: steps.into_iter(),
+        }
+    }
+}
+
+impl WorkloadSource for VecSource {
+    fn next_step(&mut self) -> Option<StepWorkload> {
+        self.steps.next()
+    }
+
+    fn len_hint(&self) -> LenHint {
+        LenHint::Exact(self.steps.len())
+    }
+}
+
+/// Lazy generator adapter: produces step `s` on demand via
+/// [`Scenario::step`] over an already-shaped config. Identical output
+/// to eager materialization because generation is deterministic in
+/// `(seed, step)`.
+pub struct ScenarioSource {
+    shaped: WorkloadConfig,
+    scen: Box<dyn Scenario>,
+    seed: u64,
+    next: usize,
+    total: usize,
+}
+
+impl ScenarioSource {
+    /// `shaped` must already be the scenario-shaped, canonically named
+    /// config (the output of `scenario::resolve`).
+    pub fn new(
+        shaped: WorkloadConfig,
+        scen: Box<dyn Scenario>,
+        seed: u64,
+        total: usize,
+    ) -> ScenarioSource {
+        ScenarioSource {
+            shaped,
+            scen,
+            seed,
+            next: 0,
+            total,
+        }
+    }
+}
+
+impl WorkloadSource for ScenarioSource {
+    fn next_step(&mut self) -> Option<StepWorkload> {
+        if self.next >= self.total {
+            return None;
+        }
+        let s = self.next;
+        self.next += 1;
+        Some(self.scen.step(&self.shaped, self.seed, s))
+    }
+
+    fn len_hint(&self) -> LenHint {
+        LenHint::Exact(self.total - self.next)
+    }
+}
+
+impl std::fmt::Debug for ScenarioSource {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ScenarioSource")
+            .field("scenario", &self.scen.name())
+            .field("seed", &self.seed)
+            .field("next", &self.next)
+            .field("total", &self.total)
+            .finish()
+    }
+}
+
+/// Streaming replay adapter: pulls steps out of a [`TraceReader`] one
+/// JSONL line at a time. Parse errors surface lazily — the source
+/// reports `None` and hands the typed error to the engine through
+/// [`WorkloadSource::take_error`].
+#[derive(Debug)]
+pub struct TraceSource {
+    reader: TraceReader,
+    error: Option<PallasError>,
+}
+
+impl TraceSource {
+    /// Wrap an opened reader (header already validated).
+    pub fn new(reader: TraceReader) -> TraceSource {
+        TraceSource {
+            reader,
+            error: None,
+        }
+    }
+}
+
+impl WorkloadSource for TraceSource {
+    fn next_step(&mut self) -> Option<StepWorkload> {
+        match self.reader.next_step() {
+            Ok(w) => w,
+            Err(e) => {
+                self.error = Some(e);
+                None
+            }
+        }
+    }
+
+    fn len_hint(&self) -> LenHint {
+        LenHint::Exact(self.reader.steps() - self.reader.steps_yielded())
+    }
+
+    fn take_error(&mut self) -> Option<PallasError> {
+        self.error.take()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WorkloadConfig;
+    use crate::workload::{scenario, Trace};
+
+    fn small(name: &str) -> WorkloadConfig {
+        let mut wl = WorkloadConfig::ma();
+        wl.queries_per_step = 2;
+        wl.group_size = 2;
+        wl.scenario = name.to_string();
+        wl
+    }
+
+    fn drain(src: &mut dyn WorkloadSource) -> Vec<StepWorkload> {
+        let mut out = Vec::new();
+        while let Some(w) = src.next_step() {
+            out.push(w);
+        }
+        out
+    }
+
+    #[test]
+    fn vec_source_yields_in_order_with_exact_hints() {
+        let tr = Trace::record(&small("baseline"), 7, 3).unwrap();
+        let mut src = VecSource::new(tr.steps.clone());
+        assert_eq!(src.len_hint(), LenHint::Exact(3));
+        assert_eq!(src.next_step().unwrap(), tr.steps[0]);
+        assert_eq!(src.len_hint(), LenHint::Exact(2));
+        assert_eq!(drain(&mut src), &tr.steps[1..]);
+        assert_eq!(src.len_hint(), LenHint::Exact(0));
+        assert!(src.next_step().is_none());
+        assert!(src.take_error().is_none());
+    }
+
+    #[test]
+    fn scenario_source_matches_eager_materialization_for_every_preset() {
+        for name in scenario::names() {
+            let (shaped, scen) = scenario::resolve(&small(name)).unwrap();
+            let eager: Vec<StepWorkload> = (0..4).map(|s| scen.step(&shaped, 2048, s)).collect();
+            let (shaped2, scen2) = scenario::resolve(&small(name)).unwrap();
+            let mut src = ScenarioSource::new(shaped2, scen2, 2048, 4);
+            assert_eq!(src.len_hint(), LenHint::Exact(4));
+            assert_eq!(drain(&mut src), eager, "{name} lazy != eager");
+            assert_eq!(src.len_hint(), LenHint::Exact(0));
+        }
+    }
+
+    #[test]
+    fn trace_source_streams_the_recorded_steps() {
+        let tr = Trace::record(&small("flash_crowd"), 2048, 3).unwrap();
+        let reader = crate::workload::TraceReader::from_text(&tr.to_jsonl()).unwrap();
+        let mut src = TraceSource::new(reader);
+        assert_eq!(src.len_hint(), LenHint::Exact(3));
+        assert_eq!(drain(&mut src), tr.steps);
+        assert!(src.take_error().is_none(), "clean exhaustion");
+    }
+
+    #[test]
+    fn trace_source_surfaces_parse_errors_via_take_error() {
+        let tr = Trace::record(&small("baseline"), 1, 2).unwrap();
+        let jsonl = tr.to_jsonl();
+        let lines: Vec<&str> = jsonl.lines().collect();
+        let dup = format!("{}\n{}\n{}\n", lines[0], lines[1], lines[1]);
+        let reader = crate::workload::TraceReader::from_text(&dup).unwrap();
+        let mut src = TraceSource::new(reader);
+        assert!(src.next_step().is_some());
+        assert!(src.next_step().is_none(), "error must read as exhaustion");
+        let err = src.take_error().expect("typed cause must be retrievable");
+        assert!(err.to_string().contains("out of order"), "{err}");
+        assert!(src.take_error().is_none(), "take_error is take-once");
+    }
+
+    #[test]
+    fn len_hint_accessors() {
+        assert_eq!(LenHint::Exact(5).lower_bound(), 5);
+        assert_eq!(LenHint::Exact(5).exact(), Some(5));
+        assert_eq!(LenHint::AtLeast(2).lower_bound(), 2);
+        assert_eq!(LenHint::AtLeast(2).exact(), None);
+    }
+}

@@ -24,6 +24,7 @@ use crate::config::WorkloadConfig;
 use crate::error::PallasError;
 use crate::util::json::{parse, Json};
 use crate::workload::{scenario, CallSpec, StepWorkload, TrajectorySpec};
+use std::io::BufRead;
 
 pub const TRACE_VERSION: u64 = 1;
 
@@ -314,6 +315,249 @@ fn parse_step(j: &Json, n_agents: usize, lineno: usize) -> Result<StepWorkload, 
     Ok(StepWorkload { step, trajectories })
 }
 
+// ---------------------------------------------------------------------------
+// Streaming reader
+// ---------------------------------------------------------------------------
+
+/// Streaming trace reader: one step per pull, O(one step) in memory.
+///
+/// [`Trace::from_jsonl`] parses the whole file eagerly — fine for
+/// tooling, impossible at streaming-plane scale (DESIGN.md §11), where
+/// a replay source must hand the engine one [`StepWorkload`] at a time.
+/// `TraceReader` validates the header up front (same checks, same typed
+/// [`PallasError`] messages as the eager parser, byte for byte — pinned
+/// by tests) and then reads one line per [`TraceReader::next_step`]
+/// call, preserving the truncated-final-line diagnosis: a line the
+/// underlying reader returns without a trailing newline is by
+/// construction the file's last.
+///
+/// One documented divergence, reachable only on already-invalid files:
+/// after the header's promised step count has been delivered the reader
+/// returns `Ok(None)` without scanning trailing lines (laziness is the
+/// point), whereas the eager parser — which always sees the whole file
+/// — reports trailing garbage as a parse error.
+pub struct TraceReader {
+    src: Box<dyn BufRead + Send>,
+    workload: String,
+    scenario: String,
+    seed: u64,
+    n_agents: usize,
+    n_steps: usize,
+    /// Lines consumed from `src` so far (0-based index of the next).
+    lineno: usize,
+    yielded: usize,
+    done: bool,
+}
+
+impl TraceReader {
+    /// Open a trace file and validate its header. File errors surface
+    /// as [`PallasError::File`], header problems exactly as in
+    /// [`Trace::from_jsonl`].
+    pub fn open(path: &str) -> Result<TraceReader, PallasError> {
+        let f = std::fs::File::open(path).map_err(|e| PallasError::File {
+            path: path.to_string(),
+            error: e.to_string(),
+        })?;
+        Self::start(Box::new(std::io::BufReader::new(f)))
+    }
+
+    /// Read from an in-memory JSONL string (tests, equivalence checks).
+    pub fn from_text(text: &str) -> Result<TraceReader, PallasError> {
+        Self::start(Box::new(std::io::Cursor::new(text.as_bytes().to_vec())))
+    }
+
+    fn start(mut src: Box<dyn BufRead + Send>) -> Result<TraceReader, PallasError> {
+        let mut lineno = 0usize;
+        let Some((n, line, complete)) = next_record_line(&mut src, &mut lineno)? else {
+            return Err(PallasError::Trace("trace: no header line".into()));
+        };
+        let j = parse_record(&line, n, complete)?;
+        match record_kind(&j, n)?.as_str() {
+            "header" => {
+                let version = j.at(&["version"]).and_then(Json::as_u64).unwrap_or(0);
+                if version != TRACE_VERSION {
+                    return Err(PallasError::Trace(format!(
+                        "unsupported trace version {version} (want {TRACE_VERSION})"
+                    )));
+                }
+                let scen = req_str(&j, "scenario", n)?;
+                if scenario::by_name(&scen).is_none() {
+                    return Err(PallasError::UnknownScenario(scen));
+                }
+                let workload = req_str(&j, "workload", n)?;
+                let seed = req_u64(&j, "seed", n)?;
+                let n_agents = req_u64(&j, "n_agents", n)? as usize;
+                let n_steps = req_u64(&j, "steps", n)? as usize;
+                if n_steps == 0 {
+                    return Err(PallasError::Trace(
+                        "trace has no steps (nothing to replay)".into(),
+                    ));
+                }
+                Ok(TraceReader {
+                    src,
+                    workload,
+                    scenario: scen,
+                    seed,
+                    n_agents,
+                    n_steps,
+                    lineno,
+                    yielded: 0,
+                    done: false,
+                })
+            }
+            "step" => Err(PallasError::Trace("trace: step line before header".into())),
+            other => Err(PallasError::Trace(format!(
+                "trace line {}: unknown kind '{other}'",
+                n + 1
+            ))),
+        }
+    }
+
+    /// Base workload name from the header ("MA"/"CA"/custom).
+    pub fn workload(&self) -> &str {
+        &self.workload
+    }
+
+    /// Scenario preset the trace was generated under (validated known).
+    pub fn scenario(&self) -> &str {
+        &self.scenario
+    }
+
+    /// Generator seed at record time.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Agent count of the shaped config (replay sanity check).
+    pub fn n_agents(&self) -> usize {
+        self.n_agents
+    }
+
+    /// Total steps the header promises.
+    pub fn steps(&self) -> usize {
+        self.n_steps
+    }
+
+    /// Steps already yielded by [`TraceReader::next_step`].
+    pub fn steps_yielded(&self) -> usize {
+        self.yielded
+    }
+
+    /// Pull the next step. `Ok(None)` once the header's step count has
+    /// been delivered; any error poisons the reader (subsequent calls
+    /// return `Ok(None)`).
+    pub fn next_step(&mut self) -> Result<Option<StepWorkload>, PallasError> {
+        if self.done {
+            return Ok(None);
+        }
+        let r = self.next_step_inner();
+        if !matches!(r, Ok(Some(_))) {
+            self.done = true;
+        }
+        r
+    }
+
+    fn next_step_inner(&mut self) -> Result<Option<StepWorkload>, PallasError> {
+        if self.yielded == self.n_steps {
+            return Ok(None);
+        }
+        let rec = next_record_line(&mut self.src, &mut self.lineno)?;
+        let Some((n, line, complete)) = rec else {
+            return Err(PallasError::Trace(format!(
+                "trace: header says {} steps, found {}",
+                self.n_steps, self.yielded
+            )));
+        };
+        let j = parse_record(&line, n, complete)?;
+        match record_kind(&j, n)?.as_str() {
+            "header" => Err(PallasError::Trace(format!(
+                "trace line {}: duplicate header",
+                n + 1
+            ))),
+            "step" => {
+                let sw = parse_step(&j, self.n_agents, n)?;
+                if sw.step != self.yielded {
+                    return Err(PallasError::Trace(format!(
+                        "trace line {}: step {} out of order (expected {})",
+                        n + 1,
+                        sw.step,
+                        self.yielded
+                    )));
+                }
+                self.yielded += 1;
+                Ok(Some(sw))
+            }
+            other => Err(PallasError::Trace(format!(
+                "trace line {}: unknown kind '{other}'",
+                n + 1
+            ))),
+        }
+    }
+}
+
+impl std::fmt::Debug for TraceReader {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TraceReader")
+            .field("workload", &self.workload)
+            .field("scenario", &self.scenario)
+            .field("seed", &self.seed)
+            .field("n_agents", &self.n_agents)
+            .field("n_steps", &self.n_steps)
+            .field("yielded", &self.yielded)
+            .finish_non_exhaustive()
+    }
+}
+
+/// Next non-blank line as `(0-based index, trimmed text, had trailing
+/// newline)`. A line without a trailing newline is necessarily the
+/// file's last — the signal behind the truncated-final-record message.
+fn next_record_line(
+    src: &mut impl BufRead,
+    lineno: &mut usize,
+) -> Result<Option<(usize, String, bool)>, PallasError> {
+    loop {
+        let mut buf = String::new();
+        let n = src
+            .read_line(&mut buf)
+            .map_err(|e| PallasError::Trace(format!("trace line {}: {e}", *lineno + 1)))?;
+        if n == 0 {
+            return Ok(None);
+        }
+        let idx = *lineno;
+        *lineno += 1;
+        let complete = buf.ends_with('\n');
+        let line = buf.trim();
+        if line.is_empty() {
+            continue;
+        }
+        return Ok(Some((idx, line.to_string(), complete)));
+    }
+}
+
+/// Parse one record line with the eager parser's exact error texts:
+/// mid-line EOF → the truncated-final-record diagnosis, anything else →
+/// the generic parse error.
+fn parse_record(line: &str, lineno: usize, complete: bool) -> Result<Json, PallasError> {
+    parse(line).map_err(|e| {
+        if !complete {
+            PallasError::Trace(format!(
+                "trace line {}: truncated final record (file ends mid-line; \
+                 re-record or re-copy the trace)",
+                lineno + 1
+            ))
+        } else {
+            PallasError::Trace(format!("trace line {}: {e}", lineno + 1))
+        }
+    })
+}
+
+fn record_kind(j: &Json, lineno: usize) -> Result<String, PallasError> {
+    j.at(&["kind"])
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| PallasError::Trace(format!("trace line {}: missing 'kind'", lineno + 1)))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -475,5 +719,116 @@ mod tests {
         let err = Trace::record(&small("baseline"), MAX_SEED + 1, 1).unwrap_err();
         assert!(err.to_string().contains("2^53"), "{err}");
         assert!(Trace::record(&small("baseline"), MAX_SEED, 1).is_ok());
+    }
+
+    fn drain(reader: &mut TraceReader) -> Result<Vec<StepWorkload>, PallasError> {
+        let mut out = Vec::new();
+        while let Some(w) = reader.next_step()? {
+            out.push(w);
+        }
+        Ok(out)
+    }
+
+    #[test]
+    fn streaming_reader_matches_eager_parse_for_every_preset() {
+        for name in scenario::names() {
+            let tr = Trace::record(&small(name), 2048, 2).unwrap();
+            let jsonl = tr.to_jsonl();
+            let mut r = TraceReader::from_text(&jsonl).unwrap();
+            assert_eq!(r.workload(), tr.workload);
+            assert_eq!(r.scenario(), tr.scenario);
+            assert_eq!(r.seed(), tr.seed);
+            assert_eq!(r.n_agents(), tr.n_agents);
+            assert_eq!(r.steps(), tr.steps.len());
+            assert_eq!(r.steps_yielded(), 0);
+            let steps = drain(&mut r).unwrap();
+            assert_eq!(steps, tr.steps, "{name} streamed parse drifted");
+            assert_eq!(r.steps_yielded(), tr.steps.len());
+            assert!(r.next_step().unwrap().is_none(), "reader must stay exhausted");
+        }
+    }
+
+    #[test]
+    fn streaming_reader_errors_match_eager_parser_byte_for_byte() {
+        // Every single-corruption case must surface through the reader
+        // with the exact message the eager parser emits — the streaming
+        // plane may not regress a single diagnostic.
+        let tr = Trace::record(&small("baseline"), 1, 2).unwrap();
+        let jsonl = tr.to_jsonl();
+        let lines: Vec<&str> = jsonl.lines().collect();
+
+        let stream_err = |text: &str| -> PallasError {
+            match TraceReader::from_text(text) {
+                Err(e) => e,
+                Ok(mut r) => loop {
+                    match r.next_step() {
+                        Err(e) => break e,
+                        Ok(Some(_)) => continue,
+                        Ok(None) => panic!("expected an error for {text:?}"),
+                    }
+                },
+            }
+        };
+
+        let cases: Vec<String> = vec![
+            String::new(),                                          // no header
+            "not json\n".to_string(),                               // bad first line
+            r#"{"kind":"step","step":0,"trajectories":[]}"#.into(), // step before header
+            jsonl.replace("\"header\"", "\"headerz\""),             // unknown kind
+            format!("{}\n", lines[0]),                              // count mismatch
+            jsonl.replace("\"version\":1", "\"version\":99"),       // bad version
+            jsonl.replace("\"scenario\":\"baseline\"", "\"scenario\":\"from_the_future\""),
+            format!("{}\n{}\n{}\n", lines[0], lines[1], lines[1]), // out of order
+            format!("{}\n{}\n{}\n{}\n", lines[0], lines[1], lines[0], lines[2]), // dup header
+            jsonl[..jsonl.trim_end().len() - 10].to_string(),      // truncated final line
+            jsonl.replace("\"trajectories\":", "\"trajectories\"~"), // corrupt, complete
+        ];
+        for case in &cases {
+            let eager = Trace::from_jsonl(case).unwrap_err();
+            let streamed = stream_err(case);
+            assert_eq!(
+                streamed.to_string(),
+                eager.to_string(),
+                "reader diverged on {case:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn streaming_reader_stops_after_promised_steps() {
+        // Documented divergence from the eager parser: once the
+        // header's step count has been delivered, the reader returns
+        // None without scanning trailing lines — only already-invalid
+        // files can tell the difference.
+        let tr = Trace::record(&small("baseline"), 1, 1).unwrap();
+        let with_garbage = format!("{}garbage after the last step\n", tr.to_jsonl());
+        assert!(Trace::from_jsonl(&with_garbage).is_err());
+        let mut r = TraceReader::from_text(&with_garbage).unwrap();
+        assert_eq!(drain(&mut r).unwrap(), tr.steps);
+    }
+
+    #[test]
+    fn streaming_reader_poisons_after_an_error() {
+        let tr = Trace::record(&small("baseline"), 1, 2).unwrap();
+        let jsonl = tr.to_jsonl();
+        let lines: Vec<&str> = jsonl.lines().collect();
+        let dup = format!("{}\n{}\n{}\n", lines[0], lines[1], lines[1]);
+        let mut r = TraceReader::from_text(&dup).unwrap();
+        assert!(r.next_step().unwrap().is_some());
+        assert!(r.next_step().is_err());
+        assert!(r.next_step().unwrap().is_none(), "poisoned reader must stop");
+    }
+
+    #[test]
+    fn streaming_reader_file_roundtrip_and_missing_file() {
+        let tr = Trace::record(&small("bursty"), 2048, 2).unwrap();
+        let path = std::env::temp_dir().join("flexmarl_trace_reader_test.jsonl");
+        let path = path.to_str().unwrap().to_string();
+        tr.write_file(&path).unwrap();
+        let mut r = TraceReader::open(&path).unwrap();
+        assert_eq!(drain(&mut r).unwrap(), tr.steps);
+        let _ = std::fs::remove_file(&path);
+        let err = TraceReader::open(&path).unwrap_err();
+        assert!(matches!(err, PallasError::File { .. }), "{err:?}");
     }
 }

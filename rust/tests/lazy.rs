@@ -1,0 +1,195 @@
+//! Streaming workload plane acceptance tests (ISSUE 7, DESIGN.md §11).
+//!
+//! The lazy-equivalence contract pinned here:
+//!
+//! * **Workload-sequence identity** — for every scenario preset × a
+//!   spread of seeds, draining a lazy plan yields the exact
+//!   `StepWorkload` sequence eager resolution materializes.
+//! * **End-to-end byte identity** — `--workload-mode lazy` produces
+//!   StepReport JSON and JSONL event streams byte-identical to eager,
+//!   for every preset and every baseline framework.
+//! * **Record → streaming replay** — a trace replayed through the
+//!   streaming `TraceReader` path reproduces the generating run
+//!   bit-for-bit, in both workload modes.
+//! * **Typed mid-run failure** — a trace whose *steps* are corrupt
+//!   passes lazy header validation but surfaces the eager parser's
+//!   typed error text mid-run, never a panic.
+
+use flexmarl::config::{ExperimentConfig, Framework, WorkloadConfig, WorkloadMode};
+use flexmarl::experiment::Experiment;
+use flexmarl::metrics::StepReport;
+use flexmarl::orchestrator::{JsonlSink, SimOptions};
+use flexmarl::workload::scenario;
+use std::io::Write;
+use std::sync::{Arc, Mutex};
+
+fn small_cfg(fw: Framework, preset: &str) -> ExperimentConfig {
+    let mut wl = WorkloadConfig::ma();
+    wl.queries_per_step = 2;
+    wl.group_size = 4;
+    wl.scenario = preset.to_string();
+    let mut cfg = ExperimentConfig::new(wl, fw);
+    cfg.steps = 2;
+    cfg.seed = 2048; // paper §8.1
+    cfg
+}
+
+fn report_json(reports: &[StepReport]) -> String {
+    reports
+        .iter()
+        .map(|r| r.to_json().to_pretty())
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+fn with_mode(mut cfg: ExperimentConfig, mode: WorkloadMode) -> ExperimentConfig {
+    cfg.workload_mode = mode;
+    cfg
+}
+
+// ---------------------------------------------------------------------------
+// Workload sequences: lazy == eager for every preset × seed
+// ---------------------------------------------------------------------------
+
+#[test]
+fn lazy_plan_yields_eager_workload_sequence_for_every_preset_and_seed() {
+    // A deterministic seed spread (LCG over a fixed start) stands in
+    // for "random seeds": the property must hold for any seed.
+    let mut seed = 0x2545_f491_4f6c_dd1d_u64;
+    let mut seeds = vec![2048];
+    for _ in 0..4 {
+        seed = seed.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        seeds.push(seed >> 33);
+    }
+    for preset in scenario::names() {
+        for &s in &seeds {
+            let mut cfg = small_cfg(Framework::flexmarl(), preset);
+            cfg.seed = s;
+            let (_, eager) = Experiment::new(cfg.clone()).build().unwrap().into_workloads();
+            let (_, lazy) = Experiment::new(with_mode(cfg, WorkloadMode::Lazy))
+                .build()
+                .unwrap()
+                .into_workloads();
+            assert_eq!(eager, lazy, "{preset} seed {s}: lazy workloads diverged");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end: reports and JSONL streams byte-identical across the grid
+// ---------------------------------------------------------------------------
+
+struct VecWriter(Arc<Mutex<Vec<u8>>>);
+
+impl Write for VecWriter {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.0.lock().unwrap().write(buf)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+/// Run `cfg` with a capturing JSONL sink; return (reports json, jsonl).
+fn run_capturing(cfg: &ExperimentConfig, opts: &SimOptions) -> (String, String, f64) {
+    let buf = Arc::new(Mutex::new(Vec::new()));
+    let out = Experiment::new(cfg.clone())
+        .options(opts.clone())
+        .build()
+        .unwrap()
+        .with_sink(Box::new(JsonlSink::new(Box::new(VecWriter(Arc::clone(&buf))))))
+        .try_run()
+        .unwrap();
+    let jsonl = String::from_utf8(buf.lock().unwrap().clone()).unwrap();
+    (report_json(&out.reports), jsonl, out.total_s)
+}
+
+#[test]
+fn lazy_runs_byte_identical_to_eager_across_presets_and_baselines() {
+    let opts = SimOptions {
+        track_agents: vec![0, 1],
+        ..SimOptions::default()
+    };
+    for fw in Framework::all_baselines() {
+        for preset in scenario::names() {
+            let cfg = small_cfg(fw, preset);
+            let (er, ej, et) = run_capturing(&cfg, &opts);
+            let (lr, lj, lt) = run_capturing(&with_mode(cfg, WorkloadMode::Lazy), &opts);
+            assert_eq!(er, lr, "{} / {preset}: reports diverged", fw.name);
+            assert_eq!(ej, lj, "{} / {preset}: jsonl stream diverged", fw.name);
+            assert_eq!(et, lt, "{} / {preset}: total time diverged", fw.name);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Record → replay through the streaming TraceReader
+// ---------------------------------------------------------------------------
+
+#[test]
+fn streamed_trace_replay_reproduces_the_generating_run_bit_for_bit() {
+    for preset in ["bursty", "flash_crowd", "diurnal"] {
+        let cfg = small_cfg(Framework::flexmarl(), preset);
+        let generated = Experiment::new(cfg.clone()).build().unwrap().run();
+
+        let tr = flexmarl::workload::Trace::record(&cfg.workload, cfg.seed, cfg.steps).unwrap();
+        let path = std::env::temp_dir().join(format!("flexmarl_lazy_replay_{preset}.jsonl"));
+        let path = path.to_str().unwrap().to_string();
+        tr.write_file(&path).unwrap();
+
+        let mut replay_cfg = cfg.clone();
+        replay_cfg.workload.trace = Some(path.clone());
+        for mode in [WorkloadMode::Eager, WorkloadMode::Lazy] {
+            let replayed =
+                Experiment::new(with_mode(replay_cfg.clone(), mode)).build().unwrap().run();
+            assert_eq!(generated.total_s, replayed.total_s, "{preset} {mode:?}");
+            assert_eq!(
+                report_json(&generated.reports),
+                report_json(&replayed.reports),
+                "{preset} {mode:?}: replay diverged from the generating run"
+            );
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mid-run failure: corrupt trace steps surface the typed eager error
+// ---------------------------------------------------------------------------
+
+#[test]
+fn lazy_trace_with_corrupt_step_fails_mid_run_with_the_eager_error_text() {
+    let cfg = small_cfg(Framework::flexmarl(), "baseline");
+    let tr = flexmarl::workload::Trace::record(&cfg.workload, cfg.seed, cfg.steps).unwrap();
+    let jsonl = tr.to_jsonl();
+    // Truncate mid-way through the final record: the header (and step
+    // 0) stay valid, so lazy resolution accepts the file.
+    let cut = &jsonl[..jsonl.trim_end().len() - 10];
+    let path = std::env::temp_dir().join("flexmarl_lazy_corrupt.jsonl");
+    let path = path.to_str().unwrap().to_string();
+    std::fs::write(&path, cut).unwrap();
+
+    let mut replay_cfg = cfg;
+    replay_cfg.workload.trace = Some(path.clone());
+
+    // Eager resolution rejects the file up front, at build().
+    let eager_err = Experiment::new(replay_cfg.clone()).build().unwrap_err();
+
+    // Lazy resolution accepts the header, then surfaces the *same*
+    // typed error text when the engine pulls the corrupt step.
+    let mut session = Experiment::new(with_mode(replay_cfg, WorkloadMode::Lazy))
+        .build()
+        .expect("lazy build validates only the header")
+        .session()
+        .unwrap();
+    let lazy_err = loop {
+        match session.step() {
+            Ok(Some(_)) => continue,
+            Ok(None) => panic!("corrupt trace must error, not exhaust cleanly"),
+            Err(e) => break e,
+        }
+    };
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(eager_err.to_string(), lazy_err.to_string(), "error text must match eager");
+}

@@ -1,0 +1,98 @@
+#!/usr/bin/env python3
+"""Perf regression gate over the committed BENCH_*.json baselines.
+
+Usage:
+    bench_gate.py --baseline rust/BENCH_hotpath.json \
+                  --current  BENCH_hotpath.json [--threshold 0.25]
+
+Compares every shared *timing* key (nanosecond values) of `current`
+against `baseline` and fails (exit 1) if any named group regressed by
+more than `threshold` (default +25%). Non-timing bookkeeping keys
+(`speedup`, `grid_runs`, `jobs_n`) are ignored — `speedup` is
+better-is-higher and machine-dependent, the others are run metadata.
+
+First-run behaviour: if the baseline file does not exist yet, the gate
+prints a warning and exits 0 so the very first CI run can commit the
+initial baselines instead of failing on their absence.
+
+Keys present on only one side are reported but never fatal: new
+benchmarks have no history, and deleted ones have no present.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# Bookkeeping keys that are not nanosecond timings and must not gate.
+NON_TIMING_KEYS = {"speedup", "grid_runs", "jobs_n"}
+
+
+def load(path: str) -> dict:
+    with open(path, encoding="utf-8") as f:
+        data = json.load(f)
+    if not isinstance(data, dict):
+        raise SystemExit(f"{path}: expected a JSON object of name -> nanoseconds")
+    return data
+
+
+def timing_items(data: dict) -> dict:
+    return {
+        k: float(v)
+        for k, v in data.items()
+        if k not in NON_TIMING_KEYS and isinstance(v, (int, float))
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", required=True, help="committed BENCH_*.json")
+    ap.add_argument("--current", required=True, help="freshly produced BENCH_*.json")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.25,
+        help="max allowed fractional regression per group (default 0.25 = +25%%)",
+    )
+    args = ap.parse_args()
+
+    try:
+        baseline = timing_items(load(args.baseline))
+    except FileNotFoundError:
+        print(
+            f"::warning::no baseline at {args.baseline} — first run, gate is advisory. "
+            f"Commit {args.current} as the baseline to arm it."
+        )
+        return 0
+
+    current = timing_items(load(args.current))
+
+    regressions = []
+    for name in sorted(baseline.keys() & current.keys()):
+        base, cur = baseline[name], current[name]
+        if base <= 0.0:
+            print(f"  skip  {name}: non-positive baseline ({base})")
+            continue
+        delta = (cur - base) / base
+        marker = "REGRESSED" if delta > args.threshold else "ok"
+        print(f"  {marker:9s} {name}: {base:.0f} ns -> {cur:.0f} ns ({delta:+.1%})")
+        if delta > args.threshold:
+            regressions.append((name, delta))
+
+    for name in sorted(baseline.keys() - current.keys()):
+        print(f"::warning::benchmark '{name}' vanished from {args.current}")
+    for name in sorted(current.keys() - baseline.keys()):
+        print(f"  new       {name}: no baseline yet (not gated)")
+
+    if regressions:
+        worst = ", ".join(f"{n} ({d:+.1%})" for n, d in regressions)
+        print(f"::error::perf gate: {len(regressions)} group(s) regressed "
+              f"beyond +{args.threshold:.0%}: {worst}")
+        return 1
+    print(f"perf gate passed ({len(baseline.keys() & current.keys())} groups compared)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

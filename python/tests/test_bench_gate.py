@@ -1,0 +1,125 @@
+"""Unit tests for scripts/bench_gate.py — the perf regression gate.
+
+Run by the same CI job as the rest of this directory
+(`python -m pytest tests -q` from `python/`). The gate is plain-stdlib
+Python, so these tests need nothing beyond pytest.
+"""
+
+from __future__ import annotations
+
+import importlib.util
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+_GATE = Path(__file__).resolve().parents[2] / "scripts" / "bench_gate.py"
+_spec = importlib.util.spec_from_file_location("bench_gate", _GATE)
+bench_gate = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(bench_gate)
+
+
+def run_gate(tmp_path, baseline, current, threshold=0.25, capsys=None):
+    """Write the two dicts as JSON files and invoke the gate's main()."""
+    bp = tmp_path / "baseline.json"
+    cp = tmp_path / "current.json"
+    bp.write_text(json.dumps(baseline))
+    cp.write_text(json.dumps(current))
+    argv = sys.argv
+    sys.argv = [
+        "bench_gate.py",
+        "--baseline",
+        str(bp),
+        "--current",
+        str(cp),
+        "--threshold",
+        str(threshold),
+    ]
+    try:
+        return bench_gate.main()
+    finally:
+        sys.argv = argv
+
+
+def test_passes_within_threshold(tmp_path):
+    assert run_gate(tmp_path, {"group": 100.0}, {"group": 110.0}) == 0
+
+
+def test_fails_beyond_threshold(tmp_path):
+    assert run_gate(tmp_path, {"group": 100.0}, {"group": 200.0}) == 1
+
+
+def test_missing_baseline_file_is_advisory(tmp_path):
+    cp = tmp_path / "current.json"
+    cp.write_text(json.dumps({"group": 100.0}))
+    argv = sys.argv
+    sys.argv = [
+        "bench_gate.py",
+        "--baseline",
+        str(tmp_path / "absent.json"),
+        "--current",
+        str(cp),
+    ]
+    try:
+        assert bench_gate.main() == 0
+    finally:
+        sys.argv = argv
+
+
+def test_zero_baseline_is_skipped_not_divided(tmp_path, capsys):
+    # A zero baseline (interrupted bench run) must neither crash with a
+    # ZeroDivisionError nor produce an inf delta that always gates.
+    assert run_gate(tmp_path, {"group": 0.0}, {"group": 100.0}) == 0
+    out = capsys.readouterr().out
+    assert "unusable baseline" in out
+
+
+def test_nan_baseline_is_skipped_with_warning(tmp_path, capsys):
+    # json.load parses bare NaN into float('nan'); a NaN delta compares
+    # False against any threshold, which silently passed before the
+    # isfinite guard.
+    bp = tmp_path / "baseline.json"
+    cp = tmp_path / "current.json"
+    bp.write_text('{"group": NaN, "healthy": 100.0}')
+    cp.write_text('{"group": 100.0, "healthy": 500.0}')
+    argv = sys.argv
+    sys.argv = ["bench_gate.py", "--baseline", str(bp), "--current", str(cp)]
+    try:
+        # The NaN group is skipped; the healthy group still regresses.
+        assert bench_gate.main() == 1
+    finally:
+        sys.argv = argv
+    out = capsys.readouterr().out
+    assert "unusable baseline" in out
+    assert "healthy" in out
+
+
+def test_nan_current_is_skipped_with_warning(tmp_path, capsys):
+    bp = tmp_path / "baseline.json"
+    cp = tmp_path / "current.json"
+    bp.write_text('{"group": 100.0}')
+    cp.write_text('{"group": NaN}')
+    argv = sys.argv
+    sys.argv = ["bench_gate.py", "--baseline", str(bp), "--current", str(cp)]
+    try:
+        assert bench_gate.main() == 0
+    finally:
+        sys.argv = argv
+    assert "unusable current" in capsys.readouterr().out
+
+
+def test_non_timing_keys_never_gate(tmp_path):
+    # `speedup` is better-is-higher: halving it must not trip the gate.
+    assert (
+        run_gate(
+            tmp_path,
+            {"group": 100.0, "speedup": 4.0},
+            {"group": 100.0, "speedup": 2.0},
+        )
+        == 0
+    )
+
+
+def test_one_sided_keys_are_reported_not_fatal(tmp_path):
+    assert run_gate(tmp_path, {"gone": 100.0}, {"new": 100.0}) == 0

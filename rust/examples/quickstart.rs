@@ -98,6 +98,37 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let outcome = session.finish();
     println!("  faulted run completed {} steps, t={:.1}s", outcome.reports.len(), outcome.total_s);
 
+    // ---- Part 1d: kill-safe runs — checkpoint & byte-identical resume ----
+    // A Session snapshots its complete mutable state (DESIGN.md §12):
+    // save mid-run, "crash", rebuild the experiment, resume from the
+    // file — the resumed run finishes with byte-identical metrics.
+    println!("\n== Part 1d: checkpoint / resume (crash-consistent, byte-identical) ==");
+    let ckpt_path = std::env::temp_dir()
+        .join(format!("flexmarl_quickstart_{}.ckpt", std::process::id()))
+        .to_str()
+        .expect("temp path is utf-8")
+        .to_string();
+    let build = || {
+        let cfg = ExperimentConfig::new(WorkloadConfig::ma(), Framework::flexmarl());
+        Experiment::new(cfg).scenario("poisson").steps(3).build()
+    };
+    let mut session = build()?.session()?;
+    session.step()?.expect("step 0"); // run one step...
+    session.save(&ckpt_path)?; // ...checkpoint (temp file + atomic rename)...
+    drop(session); // ...and "crash".
+    let mut resumed = build()?.resume_file(&ckpt_path)?; // typed errors on corrupt/stale files
+    println!("  resumed at step {} from {ckpt_path}", resumed.steps_completed());
+    while let Some(step) = resumed.step()? {
+        println!("  step done: e2e {:.1}s  {:.0} tok/s", step.e2e_s, step.throughput_tps());
+    }
+    let outcome = resumed.finish();
+    println!(
+        "  resumed run completed {}/3 steps, t={:.1}s (byte-identical to uninterrupted)",
+        outcome.reports.len(),
+        outcome.total_s
+    );
+    let _ = std::fs::remove_file(&ckpt_path);
+
     // ---- Part 2: real PJRT runtime (optional) ---------------------------
     // Only the *default* location skips silently; an explicitly passed
     // dir that does not resolve must fail loudly below (a typo'd path

@@ -1,0 +1,299 @@
+//! Checkpoint plane: versioned, crash-consistent snapshot files
+//! (DESIGN.md §12).
+//!
+//! A checkpoint is the complete mutable state of a running
+//! [`crate::orchestrator::Session`] — event queue, experience store,
+//! rollout-manager tables, the retiring step window, counters, series,
+//! workload-source position, and every report already yielded — encoded
+//! with the in-tree JSON util (the crate is zero-dependency; no serde).
+//! This module owns the *file format*; the per-subsystem state codecs
+//! live next to the private fields they capture (`sim`, `store`,
+//! `rollout`, `training`, `orchestrator::simloop`).
+//!
+//! File layout (two lines, both newline-terminated):
+//!
+//! ```text
+//! {"magic":"flexmarl-ckpt","version":1,"checksum":"<fnv1a64 hex>"}
+//! {...payload...}
+//! ```
+//!
+//! * **Versioned** — `version` is [`FORMAT_VERSION`]; a reader rejects
+//!   any other value with a typed [`PallasError::Checkpoint`] (stale
+//!   files never deserialize into garbage state).
+//! * **Checksummed** — FNV-1a 64 over the exact payload bytes; a
+//!   flipped bit or a torn tail is a typed rejection, not a panic.
+//! * **Crash-consistent** — [`write_file`] writes a temp file in the
+//!   destination directory and atomically renames it over the target:
+//!   a reader observes either the old complete checkpoint or the new
+//!   complete one, never a partial write.
+//!
+//! Integer encoding: JSON numbers are f64, exact only to 2^53, so u64
+//! ids/sequence counters and the PRNG's u128 state are string-encoded
+//! ([`ju64`]/[`ju128`]). `f64` values round-trip bit-exactly through
+//! the in-tree JSON (shortest-round-trip formatting, correctly rounded
+//! parse) — the foundation of the byte-identical-resume contract.
+
+use crate::error::PallasError;
+use crate::util::json::{parse, Json};
+
+/// Checkpoint format version. Bump on any payload-shape change; old
+/// readers reject newer files (and vice versa) with a typed error.
+pub const FORMAT_VERSION: u64 = 1;
+
+/// First-line magic distinguishing checkpoints from arbitrary JSON.
+pub const MAGIC: &str = "flexmarl-ckpt";
+
+// ---------------------------------------------------------------------------
+// Integer codecs (JSON numbers are f64 — exact only to 2^53)
+// ---------------------------------------------------------------------------
+
+/// Encode a `u64` losslessly (decimal string).
+pub fn ju64(v: u64) -> Json {
+    Json::Str(v.to_string())
+}
+
+/// Encode a `u128` losslessly (decimal string) — PRNG state words.
+pub fn ju128(v: u128) -> Json {
+    Json::Str(v.to_string())
+}
+
+/// Decode [`ju64`]; tolerates a plain in-range JSON number too.
+pub fn as_ju64(j: &Json) -> Option<u64> {
+    match j {
+        Json::Str(s) => s.parse::<u64>().ok(),
+        _ => j.as_u64(),
+    }
+}
+
+/// Decode [`ju128`].
+pub fn as_ju128(j: &Json) -> Option<u128> {
+    match j {
+        Json::Str(s) => s.parse::<u128>().ok(),
+        _ => None,
+    }
+}
+
+/// Encode an `i64` losslessly (decimal string) — store scalar columns.
+pub fn ji64(v: i64) -> Json {
+    Json::Str(v.to_string())
+}
+
+/// Decode [`ji64`]; tolerates a plain in-range JSON number too.
+pub fn as_ji64(j: &Json) -> Option<i64> {
+    match j {
+        Json::Str(s) => s.parse::<i64>().ok(),
+        Json::Num(n) if n.fract() == 0.0 && n.abs() < 9.007_199_254_740_992e15 => Some(*n as i64),
+        _ => None,
+    }
+}
+
+/// FNV-1a 64-bit over `bytes` — the payload checksum. In-tree (the
+/// image has no hash crates); collision resistance is not the goal,
+/// torn-write and bit-rot *detection* is.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn reject(path: &str, reason: impl Into<String>) -> PallasError {
+    PallasError::Checkpoint {
+        path: path.to_string(),
+        reason: reason.into(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Encode / decode
+// ---------------------------------------------------------------------------
+
+/// Serialize a payload into the two-line checkpoint text.
+pub fn encode(payload: &Json) -> String {
+    let body = payload.to_string();
+    let header = Json::obj(vec![
+        ("magic", Json::str(MAGIC)),
+        ("version", Json::num(FORMAT_VERSION as f64)),
+        ("checksum", Json::str(format!("{:016x}", fnv1a64(body.as_bytes())))),
+    ]);
+    format!("{}\n{}\n", header.to_string(), body)
+}
+
+/// Validate and parse checkpoint text: magic, format version, checksum,
+/// payload JSON. Every rejection is a typed [`PallasError::Checkpoint`]
+/// naming `path` (pass `""` for in-memory text).
+pub fn decode(text: &str, path: &str) -> Result<Json, PallasError> {
+    let Some((header_line, rest)) = text.split_once('\n') else {
+        return Err(reject(path, "truncated file (no payload line)"));
+    };
+    let header = parse(header_line)
+        .map_err(|e| reject(path, format!("unreadable header: {e}")))?;
+    match header.at(&["magic"]).and_then(Json::as_str) {
+        Some(m) if m == MAGIC => {}
+        _ => return Err(reject(path, "not a flexmarl checkpoint (bad magic)")),
+    }
+    let version = header.at(&["version"]).and_then(Json::as_u64).unwrap_or(0);
+    if version != FORMAT_VERSION {
+        return Err(reject(
+            path,
+            format!("unsupported checkpoint format version {version} (want {FORMAT_VERSION})"),
+        ));
+    }
+    let want = header
+        .at(&["checksum"])
+        .and_then(Json::as_str)
+        .ok_or_else(|| reject(path, "header missing 'checksum'"))?
+        .to_string();
+    // The writer always terminates the payload line; a missing final
+    // newline is a torn tail even before the checksum says so.
+    let Some(body) = rest.strip_suffix('\n') else {
+        return Err(reject(
+            path,
+            "truncated file (payload ends mid-line; the write was torn)",
+        ));
+    };
+    let got = format!("{:016x}", fnv1a64(body.as_bytes()));
+    if got != want {
+        return Err(reject(
+            path,
+            format!("checksum mismatch (header {want}, payload {got}) — corrupt or truncated"),
+        ));
+    }
+    parse(body).map_err(|e| reject(path, format!("unreadable payload: {e}")))
+}
+
+/// Write a checkpoint crash-consistently: temp file in the destination
+/// directory, then atomic rename over `path`. A crash at any instant
+/// leaves either the previous complete checkpoint or the new one.
+pub fn write_file(path: &str, payload: &Json) -> Result<(), PallasError> {
+    let tmp = format!("{path}.tmp.{}", std::process::id());
+    std::fs::write(&tmp, encode(payload)).map_err(|e| PallasError::File {
+        path: tmp.clone(),
+        error: e.to_string(),
+    })?;
+    std::fs::rename(&tmp, path).map_err(|e| {
+        // Never leave the temp file behind on a failed rename.
+        let _ = std::fs::remove_file(&tmp);
+        PallasError::File {
+            path: path.to_string(),
+            error: e.to_string(),
+        }
+    })
+}
+
+/// Read and validate a checkpoint file. I/O failures are
+/// [`PallasError::File`]; format violations are
+/// [`PallasError::Checkpoint`].
+pub fn read_file(path: &str) -> Result<Json, PallasError> {
+    let text = std::fs::read_to_string(path).map_err(|e| PallasError::File {
+        path: path.to_string(),
+        error: e.to_string(),
+    })?;
+    decode(&text, path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn payload() -> Json {
+        Json::obj(vec![
+            ("kind", Json::str("test")),
+            ("seq", ju64(u64::MAX)),
+            ("state", ju128(u128::MAX - 7)),
+            ("t", Json::num(0.1 + 0.2)), // not exactly representable — must round-trip
+        ])
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let p = payload();
+        let text = encode(&p);
+        let back = decode(&text, "").unwrap();
+        assert_eq!(back.to_string(), p.to_string());
+        assert_eq!(as_ju64(back.at(&["seq"]).unwrap()), Some(u64::MAX));
+        assert_eq!(as_ju128(back.at(&["state"]).unwrap()), Some(u128::MAX - 7));
+        assert_eq!(
+            back.at(&["t"]).and_then(Json::as_f64).unwrap().to_bits(),
+            (0.1f64 + 0.2).to_bits()
+        );
+    }
+
+    #[test]
+    fn corrupt_payload_rejected_by_checksum() {
+        let text = encode(&payload());
+        let bad = text.replace("\"kind\":\"test\"", "\"kind\":\"toast\"");
+        assert_ne!(bad, text);
+        let err = decode(&bad, "ck.json").unwrap_err();
+        assert!(matches!(err, PallasError::Checkpoint { .. }), "{err:?}");
+        assert!(err.to_string().contains("checksum mismatch"), "{err}");
+        assert!(err.to_string().contains("ck.json"), "{err}");
+    }
+
+    #[test]
+    fn truncated_file_rejected() {
+        let text = encode(&payload());
+        // Torn tail: payload cut mid-line (no trailing newline).
+        let cut = &text[..text.len() - 10];
+        let err = decode(cut, "ck.json").unwrap_err();
+        assert!(err.to_string().contains("truncated"), "{err}");
+        // Header-only file: no payload line at all.
+        let header_only = text.split_once('\n').unwrap().0;
+        let err = decode(header_only, "ck.json").unwrap_err();
+        assert!(err.to_string().contains("truncated"), "{err}");
+        // Empty file.
+        assert!(decode("", "ck.json").is_err());
+    }
+
+    #[test]
+    fn stale_format_version_rejected() {
+        let text = encode(&payload());
+        let bad = text.replacen("\"version\":1", "\"version\":99", 1);
+        assert_ne!(bad, text, "test setup: version field not found");
+        let err = decode(&bad, "ck.json").unwrap_err();
+        let msg = err.to_string();
+        assert!(
+            msg.contains("unsupported checkpoint format version 99"),
+            "{msg}"
+        );
+    }
+
+    #[test]
+    fn non_checkpoint_json_rejected_by_magic() {
+        let err = decode("{\"hello\":1}\n{}\n", "x").unwrap_err();
+        assert!(err.to_string().contains("bad magic"), "{err}");
+        let err = decode("not json at all\nstill not\n", "x").unwrap_err();
+        assert!(err.to_string().contains("unreadable header"), "{err}");
+    }
+
+    #[test]
+    fn file_roundtrip_is_atomic_replace() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("flexmarl_ckpt_test.json");
+        let path = path.to_str().unwrap().to_string();
+        write_file(&path, &payload()).unwrap();
+        let back = read_file(&path).unwrap();
+        assert_eq!(back.to_string(), payload().to_string());
+        // Replacing writes through the same atomic path.
+        let p2 = Json::obj(vec![("kind", Json::str("v2"))]);
+        write_file(&path, &p2).unwrap();
+        assert_eq!(read_file(&path).unwrap().to_string(), p2.to_string());
+        // No temp litter.
+        let tmp = format!("{path}.tmp.{}", std::process::id());
+        assert!(!std::path::Path::new(&tmp).exists());
+        let _ = std::fs::remove_file(&path);
+        // Missing file is a typed File error.
+        let err = read_file(&path).unwrap_err();
+        assert!(matches!(err, PallasError::File { .. }), "{err:?}");
+    }
+
+    #[test]
+    fn fnv_vectors() {
+        // Standard FNV-1a 64 test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85dd_35c8_b3d6_f00c);
+    }
+}

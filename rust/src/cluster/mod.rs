@@ -9,6 +9,7 @@
 //! strategies so the ablation bench can quantify the difference.
 
 use crate::config::ClusterConfig;
+use crate::util::json::Json;
 
 pub type NodeId = usize;
 pub type DeviceId = usize; // global id = node * devices_per_node + local
@@ -209,6 +210,65 @@ impl DevicePool {
             self.free[node].push(d);
         }
         self.in_use -= placement.devices.len();
+    }
+
+    // ---- checkpointing (DESIGN.md §12) ------------------------------------
+
+    /// Checkpoint capture: per-node free lists in exact stack order
+    /// (allocation pops from the end, so order determines which device
+    /// ids future allocations receive) plus the in-use count. `cfg` and
+    /// `total` are rebuilt from config at restore.
+    pub fn snapshot(&self) -> Json {
+        Json::obj(vec![
+            (
+                "free",
+                Json::arr(self.free.iter().map(|node| {
+                    Json::arr(node.iter().map(|&d| Json::num(d as f64)))
+                })),
+            ),
+            ("in_use", Json::num(self.in_use as f64)),
+        ])
+    }
+
+    /// Restore a [`DevicePool::snapshot`] into a pool freshly built
+    /// from the same config. Shape mismatches (different node count or
+    /// device totals) mean the checkpoint came from a different
+    /// cluster layout and are reported as errors.
+    pub fn restore_from(&mut self, j: &Json) -> Result<(), String> {
+        let free_j = j
+            .get("free")
+            .and_then(Json::as_arr)
+            .ok_or("device pool missing 'free'")?;
+        if free_j.len() != self.free.len() {
+            return Err(format!(
+                "device pool has {} nodes, checkpoint has {}",
+                self.free.len(),
+                free_j.len()
+            ));
+        }
+        let mut free = Vec::with_capacity(free_j.len());
+        for node in free_j {
+            let ids = node.as_arr().ok_or("device pool free list not an array")?;
+            let mut v = Vec::with_capacity(ids.len());
+            for id in ids {
+                v.push(id.as_usize().ok_or("bad device id in checkpoint")?);
+            }
+            free.push(v);
+        }
+        let in_use = j
+            .get("in_use")
+            .and_then(Json::as_usize)
+            .ok_or("device pool missing 'in_use'")?;
+        let n_free: usize = free.iter().map(Vec::len).sum();
+        if n_free + in_use != self.total {
+            return Err(format!(
+                "device pool count mismatch: {n_free} free + {in_use} in use != {} total",
+                self.total
+            ));
+        }
+        self.free = free;
+        self.in_use = in_use;
+        Ok(())
     }
 }
 

@@ -458,6 +458,32 @@ impl WorkloadMode {
     }
 }
 
+/// Periodic checkpointing (DESIGN.md §12). Inert by default: a config
+/// that never mentions checkpoints runs exactly as before, and the
+/// section is excluded from the resume fingerprint (where snapshots
+/// are written does not change what is computed).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CheckpointConfig {
+    /// Write a checkpoint after every `n` completed MARL steps
+    /// (`--checkpoint-every`); `None` disables checkpointing.
+    pub every: Option<usize>,
+    /// Directory for the checkpoint file (`--checkpoint-dir`); the
+    /// current directory when unset.
+    pub dir: Option<String>,
+}
+
+impl CheckpointConfig {
+    /// The stable checkpoint path: `<dir>/ckpt.json`, atomically
+    /// replaced on every write (the newest checkpoint is always the
+    /// only one).
+    pub fn path(&self) -> String {
+        match &self.dir {
+            Some(d) => format!("{}/ckpt.json", d.trim_end_matches('/')),
+            None => "ckpt.json".to_string(),
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
     pub cluster: ClusterConfig,
@@ -474,6 +500,8 @@ pub struct ExperimentConfig {
     /// Workload resolution mode (`--workload-mode`): eager
     /// materialization (default) or the lazy streaming plane.
     pub workload_mode: WorkloadMode,
+    /// Periodic checkpointing (DESIGN.md §12); disabled by default.
+    pub checkpoint: CheckpointConfig,
 }
 
 impl ExperimentConfig {
@@ -487,6 +515,7 @@ impl ExperimentConfig {
             seed: 2048, // paper §8.1
             faults: crate::fault::FaultConfig::default(),
             workload_mode: WorkloadMode::default(),
+            checkpoint: CheckpointConfig::default(),
         }
     }
 
@@ -522,6 +551,7 @@ impl ExperimentConfig {
             ("pipeline", PIPELINE_KEYS),
             ("cluster", CLUSTER_KEYS),
             ("workload_overrides", OVERRIDE_KEYS),
+            ("checkpoint", CHECKPOINT_KEYS),
         ] {
             if let Some(sub) = top.get(section) {
                 let Some(obj) = sub.as_obj() else {
@@ -588,6 +618,12 @@ impl ExperimentConfig {
                 ))
             })?;
         }
+        if let Some(v) = j.at(&["checkpoint", "every"]).and_then(Json::as_usize) {
+            cfg.checkpoint.every = Some(v);
+        }
+        if let Some(v) = j.at(&["checkpoint", "dir"]).and_then(Json::as_str) {
+            cfg.checkpoint.dir = Some(v.to_string());
+        }
         // The faults section has its own schema (and its own unknown-key
         // rejection) in `crate::fault`; it also rejects non-objects.
         if let Some(sub) = top.get("faults") {
@@ -624,6 +660,11 @@ impl ExperimentConfig {
                 self.cluster.total_devices()
             )));
         }
+        if self.checkpoint.every == Some(0) {
+            return Err(PallasError::InvalidConfig(
+                "checkpoint.every must be positive (omit it to disable checkpointing)".into(),
+            ));
+        }
         self.faults.validate()?;
         Ok(())
     }
@@ -631,6 +672,7 @@ impl ExperimentConfig {
 
 /// Keys [`ExperimentConfig::from_json`] reads at the document root.
 const TOP_KEYS: &[&str] = &[
+    "checkpoint",
     "cluster",
     "faults",
     "framework",
@@ -649,6 +691,8 @@ const PIPELINE_KEYS: &[&str] = &["delta_threshold", "global_batch", "micro_batch
 const CLUSTER_KEYS: &[&str] = &["devices_per_node", "nodes"];
 /// Keys read inside `"workload_overrides"`.
 const OVERRIDE_KEYS: &[&str] = &["group_size", "queries_per_step", "scenario", "trace"];
+/// Keys read inside `"checkpoint"`.
+const CHECKPOINT_KEYS: &[&str] = &["dir", "every"];
 
 /// Reject any key of `obj` not in `valid` — typos fail loudly with the
 /// nearest valid key instead of being silently ignored.

@@ -106,6 +106,18 @@ pub enum PallasError {
         /// The lost instance's id.
         instance: usize,
     },
+    /// A checkpoint file that cannot be accepted: corrupt or truncated
+    /// payload, checksum mismatch, stale/unknown format version, or a
+    /// snapshot recorded under a different config than the one it is
+    /// being restored into (DESIGN.md §12). Plain I/O failures on
+    /// checkpoint paths stay [`PallasError::File`]; this variant is the
+    /// *format/compatibility* rejection — always typed, never a panic.
+    Checkpoint {
+        /// The checkpoint file involved (empty for in-memory snapshots).
+        path: String,
+        /// What was wrong, preformatted at the detection site.
+        reason: String,
+    },
     /// A run ended with no completed steps to aggregate: a zero-step
     /// experiment, or an early-stop sink cut the run before the first
     /// step boundary. Distinct from [`PallasError::InvalidConfig`] —
@@ -156,6 +168,13 @@ impl fmt::Display for PallasError {
                 "instance {instance} (agent {agent}) lost at t={t} \
                  (fail-fast recovery policy)"
             ),
+            PallasError::Checkpoint { path, reason } => {
+                if path.is_empty() {
+                    write!(f, "checkpoint: {reason}")
+                } else {
+                    write!(f, "checkpoint {path}: {reason}")
+                }
+            }
             PallasError::EmptyRun => write!(
                 f,
                 "run completed no steps to evaluate (zero-step experiment, or \
@@ -300,6 +319,20 @@ mod tests {
         assert_eq!(edit_distance("sceanrio", "scenario"), 2);
         assert_eq!(edit_distance("", "abc"), 3);
         assert_eq!(edit_distance("kitten", "sitting"), 3);
+    }
+
+    #[test]
+    fn checkpoint_rejection_names_path_and_reason() {
+        let e = PallasError::Checkpoint {
+            path: "ck.json".into(),
+            reason: "checksum mismatch".into(),
+        };
+        assert_eq!(e.to_string(), "checkpoint ck.json: checksum mismatch");
+        let e = PallasError::Checkpoint {
+            path: String::new(),
+            reason: "snapshot missing 'engine'".into(),
+        };
+        assert_eq!(e.to_string(), "checkpoint: snapshot missing 'engine'");
     }
 
     #[test]

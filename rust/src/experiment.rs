@@ -194,6 +194,26 @@ impl Experiment {
         Ok(Session::from_engine(engine))
     }
 
+    /// Resume a [`Session`] from a checkpoint payload
+    /// ([`crate::orchestrator::Session::snapshot`], typically read back
+    /// via [`crate::ckpt::read_file`]). The experiment must be built
+    /// from the *same* config, seed, and options as the run that wrote
+    /// the checkpoint — the payload's config fingerprint enforces this
+    /// with a typed [`PallasError::Checkpoint`] on mismatch. `path`
+    /// names the source file in errors (pass `""` for in-memory
+    /// payloads).
+    pub fn resume(self, payload: &crate::util::json::Json, path: &str) -> Result<Session, PallasError> {
+        self.session()?.restore(payload, path)
+    }
+
+    /// [`Experiment::resume`] straight from a checkpoint file: read,
+    /// validate (magic / format version / checksum — [`crate::ckpt`]),
+    /// and restore.
+    pub fn resume_file(self, path: &str) -> Result<Session, PallasError> {
+        let payload = crate::ckpt::read_file(path)?;
+        self.resume(&payload, path)
+    }
+
     /// Run the discrete-event simulation to completion, consuming the
     /// experiment — a drain over [`Experiment::session`]. The one
     /// runtime failure the engine models — the run loop's livelock
@@ -298,6 +318,24 @@ impl ExperimentBuilder {
     /// Engine knobs (instance counts, poll period, queue backend, …).
     pub fn options(mut self, opts: SimOptions) -> Self {
         self.opts = opts;
+        self
+    }
+
+    /// Write a crash-consistent checkpoint after every `n` completed
+    /// MARL steps (DESIGN.md §12). The file is
+    /// `<checkpoint_dir>/ckpt.json`, atomically replaced each time; a
+    /// run killed at any instant resumes from its last checkpoint via
+    /// [`Experiment::resume_file`] with byte-identical remaining
+    /// output.
+    pub fn checkpoint_every(mut self, n: usize) -> Self {
+        self.cfg.checkpoint.every = Some(n);
+        self
+    }
+
+    /// Directory the periodic checkpoint file is written into
+    /// (defaults to the current directory).
+    pub fn checkpoint_dir(mut self, dir: impl Into<String>) -> Self {
+        self.cfg.checkpoint.dir = Some(dir.into());
         self
     }
 

@@ -29,6 +29,7 @@
 //! `artifacts/*.hlo.txt` via PJRT and is self-contained.
 
 pub mod baselines;
+pub mod ckpt;
 pub mod cluster;
 pub mod config;
 pub mod error;

@@ -85,6 +85,11 @@ options: --workload MA|CA  --framework <name>  --steps N  --seed N
 simulate: --emit jsonl        (stream one StepReport JSON line per step)
          --emit jsonl-batch   (same lines from a monolithic run)
          --max-wall-s N       (stop after N real seconds, partial result)
+         --checkpoint-every N (atomic snapshot every N steps; DESIGN.md §12)
+         --checkpoint-dir D   (where ckpt.json lands; default cwd)
+         --resume <path>      (resume from a checkpoint — metrics and
+                               --emit jsonl output stay byte-identical
+                               to the uninterrupted run)
 sweep:   framework × scenario × seed grid on the parallel executor;
          --jobs N (default PALLAS_JOBS or all cores) --replicates N
          --framework/--scenario restrict an axis; --json is
@@ -184,13 +189,34 @@ fn build_opts(args: &Args) -> SimOptions {
 
 fn emit_json(args: &Args, j: &Json) {
     if let Some(path) = args.get("json") {
-        std::fs::write(path, j.to_pretty()).expect("write json");
+        // Typed failure, not a panic: an unwritable --json path (missing
+        // directory, permissions, full disk) exits 1 like every other
+        // runtime I/O failure.
+        if let Err(e) = std::fs::write(path, j.to_pretty()) {
+            let err = flexmarl::error::PallasError::File {
+                path: path.to_string(),
+                error: e.to_string(),
+            };
+            eprintln!("failed to write --json: {err}");
+            std::process::exit(1);
+        }
         eprintln!("wrote {path}");
     }
 }
 
 fn cmd_simulate(args: &Args) {
-    let cfg = build_cfg(args);
+    let mut cfg = build_cfg(args);
+    if let Some(v) = args.get("checkpoint-every") {
+        let n = v.parse::<usize>().ok().filter(|&n| n > 0).unwrap_or_else(|| {
+            eprintln!("--checkpoint-every needs a positive step count (got '{v}')");
+            std::process::exit(2)
+        });
+        cfg.checkpoint.every = Some(n);
+    }
+    if let Some(d) = args.get("checkpoint-dir") {
+        cfg.checkpoint.dir = Some(d.to_string());
+    }
+    let resume = args.get("resume");
     let opts = build_opts(args);
     let emit = args.get("emit");
     let progress = args.has_flag("progress");
@@ -201,9 +227,10 @@ fn cmd_simulate(args: &Args) {
             std::process::exit(2)
         })
     });
-    if emit.is_none() && !progress && max_wall.is_none() {
+    if emit.is_none() && !progress && max_wall.is_none() && resume.is_none() {
         // Classic run-to-completion path — stdout stays byte-for-byte
-        // what it always was.
+        // what it always was (periodic checkpoints, if enabled, are
+        // written inside the drain).
         let rep = run_eval(&cfg, &opts);
         print_report(&rep);
         emit_json(args, &rep.to_json());
@@ -216,23 +243,49 @@ fn cmd_simulate(args: &Args) {
             std::process::exit(2);
         }
     }
-    let mut exp = build_experiment(&cfg, &opts);
+    let exp = build_experiment(&cfg, &opts);
     let total_steps = exp.config().steps;
     let overlaps = exp.policies().pipeline.overlaps_steps();
+    let mut session = match resume {
+        // Resume from a checkpoint file (DESIGN.md §12): format
+        // violations (corrupt/truncated/stale-version) and config
+        // fingerprint mismatches are typed errors, exit 1.
+        Some(path) => exp.resume_file(path).unwrap_or_else(|e| {
+            eprintln!("resume failed: {e}");
+            std::process::exit(1)
+        }),
+        None => exp.session().unwrap_or_else(|e| {
+            eprintln!("invalid workload: {e}");
+            std::process::exit(2)
+        }),
+    };
     if progress {
-        exp = exp.with_sink(Box::new(ProgressSink::stderr(total_steps)));
+        session.add_sink(Box::new(ProgressSink::stderr(total_steps)));
     }
     if let Some(s) = max_wall {
-        exp = exp.with_sink(Box::new(WallClockSink::after(Duration::from_secs_f64(s))));
+        session.add_sink(Box::new(WallClockSink::after(Duration::from_secs_f64(s))));
     }
     if emit == Some("jsonl") {
         // Streamed: one line per step, written the moment it completes.
-        exp = exp.with_sink(Box::new(JsonlSink::stdout()));
+        // A resumed run first re-emits the restored steps' lines, so
+        // its stdout is the full stream from step 0 — byte-identical
+        // to the uninterrupted run's.
+        for r in session.reports() {
+            println!("{}", r.to_json().to_string());
+        }
+        session.add_sink(Box::new(JsonlSink::stdout()));
     }
-    let out = exp.try_run().unwrap_or_else(|e| {
-        eprintln!("simulation failed: {e}");
-        std::process::exit(1)
-    });
+    loop {
+        match session.step() {
+            Ok(Some(_)) => {}
+            Ok(None) => break,
+            Err(e) => {
+                eprintln!("simulation failed: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+    let out = session.finish();
     if emit == Some("jsonl-batch") {
         // Reference batch path: the identical lines, printed after the
         // run — CI byte-diffs this against the streamed variant.
@@ -459,8 +512,13 @@ fn cmd_sweep(args: &Args) {
     // build_cfg validated --scenario; canonicalize alias spellings
     // ("Core-Skew") so the restricted axis carries the registry name.
     let scenarios = if args.get("scenario").is_some() {
+        // build_cfg validated the name; a clean exit beats a panic if
+        // that invariant ever drifts.
         let scen = flexmarl::workload::scenario::by_name(&cfg.workload.scenario)
-            .expect("scenario validated by build_cfg");
+            .unwrap_or_else(|| {
+                eprintln!("unknown scenario '{}'", cfg.workload.scenario);
+                std::process::exit(2)
+            });
         vec![scen.name().to_string()]
     } else {
         flexmarl::workload::scenario::owned_names()

@@ -64,6 +64,30 @@ impl Counters {
     pub fn get(&self, id: MetricId) -> f64 {
         self.vals[id.0 as usize]
     }
+
+    /// Checkpoint capture (DESIGN.md §12): the accumulated values only.
+    /// Keys are re-registered in the same order by engine construction,
+    /// so ids line up by position; a resumed run restores values into
+    /// the freshly-interned table.
+    pub fn snapshot_vals(&self) -> &[f64] {
+        &self.vals
+    }
+
+    /// Restore accumulated values captured by
+    /// [`Counters::snapshot_vals`] into a freshly-registered table.
+    /// Errors (rather than panicking) on a count mismatch — that means
+    /// the checkpoint came from a different engine layout.
+    pub fn restore_vals(&mut self, vals: &[f64]) -> Result<(), String> {
+        if vals.len() != self.vals.len() {
+            return Err(format!(
+                "counter table has {} keys, checkpoint has {}",
+                self.vals.len(),
+                vals.len()
+            ));
+        }
+        self.vals.copy_from_slice(vals);
+        Ok(())
+    }
 }
 
 #[cfg(test)]

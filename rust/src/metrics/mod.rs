@@ -124,6 +124,155 @@ impl StepReport {
             ),
         ])
     }
+
+    // ---- checkpointing (DESIGN.md §12) ------------------------------------
+
+    /// Full-fidelity checkpoint codec. [`StepReport::to_json`] is a
+    /// *presentation* format (it omits `busy_device_s`, `pool_devices`
+    /// and `trajectory_latencies`, and adds derived fields); a resumed
+    /// run must rebuild the exact struct, so the checkpoint carries
+    /// every field verbatim.
+    pub fn to_ckpt_json(&self) -> Json {
+        Json::obj(vec![
+            ("framework", Json::str(self.framework.clone())),
+            ("workload", Json::str(self.workload.clone())),
+            ("scenario", Json::str(self.scenario.clone())),
+            ("e2e_s", Json::num(self.e2e_s)),
+            ("rollout_s", Json::num(self.rollout_s)),
+            ("train_s", Json::num(self.train_s)),
+            ("other_s", Json::num(self.other_s)),
+            ("tokens", Json::num(self.tokens)),
+            ("busy_device_s", Json::num(self.busy_device_s)),
+            ("pool_devices", Json::num(self.pool_devices as f64)),
+            (
+                "agent_calls",
+                Json::arr(self.agent_calls.iter().map(|&c| Json::num(c as f64))),
+            ),
+            (
+                "trajectory_latencies",
+                Json::arr(self.trajectory_latencies.iter().map(|&l| Json::num(l))),
+            ),
+            ("scale_ops", Json::num(self.scale_ops as f64)),
+            ("swap_s", Json::num(self.swap_s)),
+            ("retries", Json::num(self.retries as f64)),
+            ("lost_tokens", Json::num(self.lost_tokens)),
+            ("recovery_s", Json::num(self.recovery_s)),
+            ("degraded_s", Json::num(self.degraded_s)),
+        ])
+    }
+
+    /// Decode [`StepReport::to_ckpt_json`].
+    pub fn from_ckpt_json(j: &Json) -> Result<StepReport, String> {
+        let s = |k: &str| -> Result<String, String> {
+            Ok(j.get(k)
+                .and_then(Json::as_str)
+                .ok_or(format!("report missing '{k}'"))?
+                .to_string())
+        };
+        let f = |k: &str| -> Result<f64, String> {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .ok_or(format!("report missing '{k}'"))
+        };
+        let u = |k: &str| -> Result<usize, String> {
+            j.get(k)
+                .and_then(Json::as_usize)
+                .ok_or(format!("report missing '{k}'"))
+        };
+        Ok(StepReport {
+            framework: s("framework")?,
+            workload: s("workload")?,
+            scenario: s("scenario")?,
+            e2e_s: f("e2e_s")?,
+            rollout_s: f("rollout_s")?,
+            train_s: f("train_s")?,
+            other_s: f("other_s")?,
+            tokens: f("tokens")?,
+            busy_device_s: f("busy_device_s")?,
+            pool_devices: u("pool_devices")?,
+            agent_calls: j
+                .get("agent_calls")
+                .and_then(Json::as_arr)
+                .ok_or("report missing 'agent_calls'")?
+                .iter()
+                .map(|c| c.as_usize().ok_or("bad agent_calls entry"))
+                .collect::<Result<_, _>>()?,
+            trajectory_latencies: j
+                .get("trajectory_latencies")
+                .and_then(Json::as_arr)
+                .ok_or("report missing 'trajectory_latencies'")?
+                .iter()
+                .map(|l| l.as_f64().ok_or("bad trajectory latency"))
+                .collect::<Result<_, _>>()?,
+            scale_ops: u("scale_ops")?,
+            swap_s: f("swap_s")?,
+            retries: u("retries")?,
+            lost_tokens: f("lost_tokens")?,
+            recovery_s: f("recovery_s")?,
+            degraded_s: f("degraded_s")?,
+        })
+    }
+}
+
+impl RunSeries {
+    /// Checkpoint codec for the run-wide poll series: `(time, value)`
+    /// pairs, keyed by tracked-agent id.
+    pub fn to_ckpt_json(&self) -> Json {
+        let series = |v: &[(f64, usize)]| {
+            Json::arr(
+                v.iter()
+                    .map(|&(t, x)| Json::arr([Json::num(t), Json::num(x as f64)])),
+            )
+        };
+        let keyed = |m: &BTreeMap<usize, Vec<(f64, usize)>>| {
+            Json::Obj(
+                m.iter()
+                    .map(|(agent, v)| (agent.to_string(), series(v)))
+                    .collect(),
+            )
+        };
+        Json::obj(vec![
+            ("processed", keyed(&self.processed)),
+            ("queued", keyed(&self.queued)),
+            ("busy", series(&self.busy)),
+        ])
+    }
+
+    /// Decode [`RunSeries::to_ckpt_json`].
+    pub fn from_ckpt_json(j: &Json) -> Result<RunSeries, String> {
+        fn series(j: &Json, what: &str) -> Result<Vec<(f64, usize)>, String> {
+            j.as_arr()
+                .ok_or(format!("bad '{what}' series"))?
+                .iter()
+                .map(|p| {
+                    let p = p.as_arr().filter(|p| p.len() == 2).ok_or("bad series pair")?;
+                    Ok((
+                        p[0].as_f64().ok_or("bad series time")?,
+                        p[1].as_usize().ok_or("bad series value")?,
+                    ))
+                })
+                .collect()
+        }
+        fn keyed(
+            j: Option<&Json>,
+            what: &str,
+        ) -> Result<BTreeMap<usize, Vec<(f64, usize)>>, String> {
+            j.and_then(Json::as_obj)
+                .ok_or(format!("series missing '{what}'"))?
+                .iter()
+                .map(|(k, v)| {
+                    let agent: usize =
+                        k.parse().map_err(|_| format!("bad agent key '{k}'"))?;
+                    Ok((agent, series(v, what)?))
+                })
+                .collect()
+        }
+        Ok(RunSeries {
+            processed: keyed(j.get("processed"), "processed")?,
+            queued: keyed(j.get("queued"), "queued")?,
+            busy: series(j.get("busy").unwrap_or(&Json::Null), "busy")?,
+        })
+    }
 }
 
 /// Aggregate several steps (mean over steps, as the paper's per-sample

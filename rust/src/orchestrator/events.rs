@@ -261,6 +261,9 @@ impl EventSink for ProgressSink {
 /// the per-step reports of a monolithic run (a CI job diffs the two).
 pub struct JsonlSink {
     w: Box<dyn Write + Send>,
+    /// Set once a write or flush fails; the sink stops the run and
+    /// goes quiet instead of emitting a gap-ridden stream.
+    failed: bool,
 }
 
 impl JsonlSink {
@@ -270,19 +273,43 @@ impl JsonlSink {
     }
 
     pub fn new(w: Box<dyn Write + Send>) -> JsonlSink {
-        JsonlSink { w }
+        JsonlSink { w, failed: false }
     }
 }
 
 impl EventSink for JsonlSink {
     fn on_event(&mut self, _t: f64, ev: &EngineEvent<'_>) -> ControlFlow {
+        if self.failed {
+            // Keep requesting the stop until the engine honors it —
+            // and never write another (now out-of-sequence) line.
+            return ControlFlow::Stop;
+        }
         if let EngineEvent::StepFinished { report, .. } = ev {
             // Flush per line: the point of streaming is that a consumer
-            // sees each step as it lands, not at process exit.
-            let _ = writeln!(self.w, "{}", report.to_json().to_string());
-            let _ = self.w.flush();
+            // sees each step as it lands, not at process exit. A failed
+            // write or flush (closed pipe, full disk) is not swallowed:
+            // the stream contract is one complete line per completed
+            // step, so the sink warns once and stops the run cleanly —
+            // the partial outcome stays well-formed.
+            let res = writeln!(self.w, "{}", report.to_json().to_string())
+                .and_then(|()| self.w.flush());
+            if let Err(e) = res {
+                self.failed = true;
+                eprintln!("jsonl sink: write failed, stopping run: {e}");
+                return ControlFlow::Stop;
+            }
         }
         ControlFlow::Continue
+    }
+}
+
+impl Drop for JsonlSink {
+    fn drop(&mut self) {
+        // Best-effort final flush so a buffered writer dropped with the
+        // engine doesn't silently lose its tail.
+        if !self.failed {
+            let _ = self.w.flush();
+        }
     }
 }
 
@@ -548,5 +575,30 @@ mod tests {
         sink.on_event(1.0, &EngineEvent::StepFinished { step: 0, report: &r });
         let text = String::from_utf8(buf.lock().unwrap().clone()).unwrap();
         assert_eq!(text, format!("{}\n", r.to_json().to_string()));
+    }
+
+    #[test]
+    fn jsonl_sink_stops_on_write_failure_and_stays_stopped() {
+        struct Broken;
+        impl Write for Broken {
+            fn write(&mut self, _buf: &[u8]) -> std::io::Result<usize> {
+                Err(std::io::Error::new(
+                    std::io::ErrorKind::BrokenPipe,
+                    "pipe closed",
+                ))
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+        let mut sink = JsonlSink::new(Box::new(Broken));
+        let r = report(1.0);
+        let fin = EngineEvent::StepFinished { step: 0, report: &r };
+        // First failure: warn + stop.
+        assert_eq!(sink.on_event(0.0, &fin), ControlFlow::Stop);
+        // Latched: every later event keeps requesting the stop, and the
+        // sink never attempts another write (Broken would not mind, but
+        // a half-working writer would interleave out-of-order lines).
+        assert_eq!(sink.on_event(1.0, &fin), ControlFlow::Stop);
     }
 }

@@ -21,6 +21,7 @@ use super::simloop::{Engine, SimOutcome, StopInfo};
 use crate::config::ExperimentConfig;
 use crate::error::PallasError;
 use crate::metrics::StepReport;
+use crate::util::json::Json;
 
 /// A resumable simulation: step it, watch it, stop it.
 ///
@@ -79,6 +80,7 @@ impl Session {
         match self.engine.pump_step()? {
             Some(report) => {
                 self.reports.push(report.clone());
+                self.maybe_checkpoint()?;
                 Ok(Some(report))
             }
             None => Ok(None),
@@ -103,6 +105,7 @@ impl Session {
     pub fn run_to_end(mut self) -> Result<SimOutcome, PallasError> {
         while let Some(report) = self.engine.pump_step()? {
             self.reports.push(report);
+            self.maybe_checkpoint()?;
         }
         Ok(self.finish())
     }
@@ -132,5 +135,73 @@ impl Session {
     /// The resolved config this session is simulating.
     pub fn config(&self) -> &ExperimentConfig {
         self.engine.config()
+    }
+
+    /// Every report yielded so far, in step order. After a
+    /// [`Session::restore`] this includes the restored prefix — what a
+    /// resumed CLI run re-emits before streaming new steps.
+    pub fn reports(&self) -> &[StepReport] {
+        &self.reports
+    }
+
+    // ---- checkpointing (DESIGN.md §12) ------------------------------------
+
+    /// Complete session state as a checkpoint payload: the engine's
+    /// mutable state plus every report yielded so far (full fidelity —
+    /// a resumed run re-yields byte-identical metrics).
+    pub fn snapshot(&self) -> Json {
+        Json::obj(vec![
+            ("engine", self.engine.snapshot()),
+            ("reports", Json::arr(self.reports.iter().map(|r| r.to_ckpt_json()))),
+        ])
+    }
+
+    /// Write a crash-consistent checkpoint file ([`crate::ckpt`]):
+    /// temp file + atomic rename, so a kill at any instant leaves
+    /// either the previous complete checkpoint or the new one.
+    pub fn save(&self, path: &str) -> Result<(), PallasError> {
+        crate::ckpt::write_file(path, &self.snapshot())
+    }
+
+    /// Restore a [`Session::snapshot`] payload onto a freshly built
+    /// session (same config/seed/options — enforced by the payload's
+    /// config fingerprint). `path` names the source file in errors;
+    /// pass `""` for in-memory payloads.
+    ///
+    /// The contract (pinned in `tests/ckpt.rs` and CI): a run killed at
+    /// any step and resumed from its last checkpoint yields the same
+    /// remaining reports, byte for byte, as the uninterrupted run.
+    pub fn restore(mut self, payload: &Json, path: &str) -> Result<Session, PallasError> {
+        let bad = |reason: &str| PallasError::Checkpoint {
+            path: path.to_string(),
+            reason: reason.to_string(),
+        };
+        self.engine
+            .restore_from(payload.get("engine").ok_or_else(|| bad("payload missing 'engine'"))?, path)?;
+        let reports = payload
+            .get("reports")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| bad("payload missing 'reports'"))?;
+        self.reports = reports
+            .iter()
+            .map(StepReport::from_ckpt_json)
+            .collect::<Result<Vec<_>, String>>()
+            .map_err(|reason| bad(&reason))?;
+        Ok(self)
+    }
+
+    /// Write `cfg.checkpoint`'s periodic snapshot if one is due —
+    /// called after every completed step by both [`Session::step`] and
+    /// [`Session::run_to_end`] (the batch drain bypasses `step`).
+    fn maybe_checkpoint(&mut self) -> Result<(), PallasError> {
+        let ck = &self.engine.config().checkpoint;
+        let Some(every) = ck.every else {
+            return Ok(());
+        };
+        if every == 0 || self.reports.len() % every != 0 {
+            return Ok(());
+        }
+        let path = ck.path();
+        self.save(&path)
     }
 }

@@ -38,6 +38,7 @@
 //! named decision point.
 
 use super::events::{EngineEvent, SinkSet};
+use crate::ckpt::{as_ju64, ju64};
 use crate::cluster::DevicePool;
 use crate::config::ExperimentConfig;
 use crate::error::PallasError;
@@ -47,6 +48,7 @@ use crate::metrics::{Counters, MetricId, RunSeries, StepReport};
 use crate::policy::{LoadSnapshot, PolicyBundle, RecoveryAction};
 use crate::rollout::{CallRef, Dispatch, Mode, RequestId, RolloutManager, TrajectoryScheduler};
 use crate::sim::{EventQueue, QueueKind};
+use crate::util::json::Json;
 use crate::store::{ColumnType, ExperienceStore, Field, PutRow, SampleId, Value};
 use crate::training::{
     apply_update_s, grad_compute_s, swap_in_cost, swap_out_cost, AgentCentricAllocator,
@@ -1773,6 +1775,392 @@ impl Engine {
         let ev = EngineEvent::ClusterResized { delta, instances: changed };
         self.sinks.emit(t, &ev);
     }
+
+    // -----------------------------------------------------------------------
+    // Checkpointing (DESIGN.md §12)
+    // -----------------------------------------------------------------------
+
+    /// Fingerprint of everything the checkpoint payload does *not*
+    /// carry because restore rebuilds it from config: cluster, workload
+    /// shape, pipeline, framework, run length, seed, fault-plan inputs,
+    /// policy bundle, and the engine knobs. Resuming against a
+    /// different config would silently diverge — the fingerprint turns
+    /// that into a typed rejection. Deliberately *excluded*: the
+    /// event-queue backend (snapshots are backend-agnostic),
+    /// `workload_mode` (lazy and eager runs are byte-identical), and
+    /// the checkpoint section itself (where snapshots are written does
+    /// not change what is computed).
+    pub(crate) fn fingerprint(&self) -> u64 {
+        let o = &self.opts;
+        let id = format!(
+            "{:?}|{:?}|{:?}|{:?}|{}|{}|{:?}|{}|{}|{}|{}|{}|{}|{}|{}|{:?}",
+            self.cfg.cluster,
+            self.cfg.workload,
+            self.cfg.pipeline,
+            self.cfg.framework,
+            self.cfg.steps,
+            self.cfg.seed,
+            self.cfg.faults,
+            self.policies.name,
+            o.instances_per_agent,
+            o.concurrency,
+            o.scaler_poll_s,
+            o.reinit_s,
+            o.switch_s,
+            o.context_tokens,
+            o.sync_s,
+            o.track_agents,
+        );
+        crate::ckpt::fnv1a64(id.as_bytes())
+    }
+
+    /// Complete mutable engine state as a checkpoint payload. Pure-
+    /// from-config state — the fault plan, transfer model, policy
+    /// bundle, interned keys/ids, pool accounting, and each window
+    /// step's *workload* — is rebuilt by [`Engine::restore_from`] and
+    /// stays out of the payload; [`Engine::fingerprint`] guards that
+    /// contract.
+    pub(crate) fn snapshot(&self) -> Json {
+        let (qnow, next_seq, entries) = self.q.snapshot_entries();
+        let fs = |v: &[f64]| Json::arr(v.iter().map(|&x| Json::num(x)));
+        Json::obj(vec![
+            ("fingerprint", ju64(self.fingerprint())),
+            (
+                "queue",
+                Json::obj(vec![
+                    ("now", Json::num(qnow)),
+                    ("next_seq", ju64(next_seq)),
+                    (
+                        "entries",
+                        Json::arr(entries.into_iter().map(|(t, seq, ev)| {
+                            Json::arr([Json::num(t), ju64(seq), ev_to_json(ev)])
+                        })),
+                    ),
+                ]),
+            ),
+            ("man", self.man.snapshot()),
+            ("store", self.store.snapshot()),
+            ("alloc", self.alloc.snapshot()),
+            ("window_base", Json::num(self.window_base as f64)),
+            ("window", Json::arr(self.steps.iter().map(ctl_to_json))),
+            (
+                "reqs",
+                Json::obj(vec![
+                    (
+                        "slots",
+                        Json::arr(self.reqs.slots.iter().map(|s| match s {
+                            None => Json::Null,
+                            Some(r) => req_to_json(r),
+                        })),
+                    ),
+                    (
+                        "free",
+                        Json::arr(self.reqs.free.iter().map(|&i| Json::num(i as f64))),
+                    ),
+                ]),
+            ),
+            (
+                "tstate",
+                Json::arr(self.tstate.iter().map(|s| {
+                    Json::str(match s {
+                        AgentTrain::Idle => "idle",
+                        AgentTrain::SwappingIn => "swap_in",
+                        AgentTrain::Computing => "computing",
+                        AgentTrain::Applying => "applying",
+                        AgentTrain::SwappingOut => "swap_out",
+                    })
+                })),
+            ),
+            (
+                "inst_agent",
+                Json::arr(self.inst_agent.iter().map(|(&i, &a)| {
+                    Json::arr([Json::num(i as f64), Json::num(a as f64)])
+                })),
+            ),
+            (
+                "agent_busy_scaling",
+                Json::arr(self.agent_busy_scaling.iter().map(|&b| Json::Bool(b))),
+            ),
+            ("sample_seq", ju64(self.sample_seq)),
+            ("counters", fs(self.counters.snapshot_vals())),
+            (
+                "series",
+                RunSeries {
+                    processed: self.processed_series.clone(),
+                    queued: self.queued_series.clone(),
+                    busy: self.busy_series.clone(),
+                }
+                .to_ckpt_json(),
+            ),
+            ("guard", ju64(self.guard)),
+            ("histo", Json::arr(self.histo.iter().map(|&h| ju64(h)))),
+            ("now", Json::num(self.now)),
+            ("done", Json::Bool(self.done)),
+            ("failed", Json::Bool(self.failed)),
+            (
+                "stop",
+                match &self.stop {
+                    None => Json::Null,
+                    Some(s) => Json::obj(vec![
+                        ("t", Json::num(s.t)),
+                        ("steps_completed", Json::num(s.steps_completed as f64)),
+                    ]),
+                },
+            ),
+            ("next_report", Json::num(self.next_report as f64)),
+            ("pending", Json::arr(self.pending.iter().map(|r| r.to_ckpt_json()))),
+            (
+                "prev_counters",
+                fs(&[
+                    self.prev_scale_ops,
+                    self.prev_swap_s,
+                    self.prev_retries,
+                    self.prev_lost_tokens,
+                    self.prev_recovery_s,
+                    self.prev_degraded_s,
+                ]),
+            ),
+            ("dead_reqs", Json::arr(self.dead_reqs.iter().map(|&r| ju64(r)))),
+            (
+                "retry_parked",
+                Json::arr(self.retry_parked.iter().map(|s| match s {
+                    None => Json::Null,
+                    Some(r) => req_to_json(r),
+                })),
+            ),
+            ("slow_until", fs(&self.slow_until)),
+            ("slow_mult", fs(&self.slow_mult)),
+            ("flap_until", Json::num(self.flap_until)),
+            ("flap_added_s", Json::num(self.flap_added_s)),
+        ])
+    }
+
+    /// Overlay a [`Engine::snapshot`] payload onto a freshly
+    /// constructed engine (same config/options/policies — enforced by
+    /// the fingerprint). Wholesale subsystem state (event queue,
+    /// rollout manager, experience store, training allocator) is
+    /// replaced; the live step window is rebuilt by re-pulling each
+    /// in-flight step's workload from the source — sources are pure in
+    /// `(seed, step)` — and overlaying its serialized progress.
+    pub(crate) fn restore_from(&mut self, j: &Json, path: &str) -> Result<(), PallasError> {
+        self.try_restore(j).map_err(|reason| PallasError::Checkpoint {
+            path: path.to_string(),
+            reason,
+        })
+    }
+
+    fn try_restore(&mut self, j: &Json) -> Result<(), String> {
+        let n_agents = self.n_agents();
+        let want = self.fingerprint();
+        let got =
+            j.get("fingerprint").and_then(as_ju64).ok_or("payload missing 'fingerprint'")?;
+        if got != want {
+            return Err(format!(
+                "config fingerprint mismatch (checkpoint {got:016x}, this experiment \
+                 {want:016x}): resume needs the run's exact config, seed, and engine options"
+            ));
+        }
+
+        // -- step window: re-pull workloads, overlay progress ------------
+        let window_base = j
+            .get("window_base")
+            .and_then(Json::as_usize)
+            .ok_or("payload missing 'window_base'")?;
+        let window =
+            j.get("window").and_then(Json::as_arr).ok_or("payload missing 'window'")?;
+        if window_base + window.len() > self.total_steps {
+            return Err("step window extends past the configured run length".into());
+        }
+        self.source.fast_forward(window_base).map_err(|e| e.to_string())?;
+        let mut steps = VecDeque::with_capacity(window.len());
+        for (i, cj) in window.iter().enumerate() {
+            let w = self
+                .source
+                .next_step()
+                .ok_or_else(|| format!("workload source ran dry at step {}", window_base + i))?;
+            let mut ctl = Self::build_ctl(w, self.sched_mode, n_agents);
+            ctl_restore(&mut ctl, cj)?;
+            steps.push_back(ctl);
+        }
+        self.steps = steps;
+        self.window_base = window_base;
+
+        // -- wholesale subsystem state -----------------------------------
+        let qj = j.get("queue").ok_or("payload missing 'queue'")?;
+        let qnow = qj.get("now").and_then(Json::as_f64).ok_or("queue missing 'now'")?;
+        let next_seq =
+            qj.get("next_seq").and_then(as_ju64).ok_or("queue missing 'next_seq'")?;
+        let mut entries = Vec::new();
+        for e in qj.get("entries").and_then(Json::as_arr).ok_or("queue missing 'entries'")? {
+            let e = e.as_arr().filter(|e| e.len() == 3).ok_or("bad queue entry")?;
+            let t = e[0].as_f64().filter(|t| t.is_finite()).ok_or("bad queue entry time")?;
+            let seq = as_ju64(&e[1]).ok_or("bad queue entry seq")?;
+            if t < qnow || seq >= next_seq {
+                return Err("queue entry out of range (corrupt snapshot)".into());
+            }
+            entries.push((t, seq, ev_from_json(&e[2])?));
+        }
+        self.q = EventQueue::restore(self.opts.event_queue, qnow, next_seq, entries);
+        self.man =
+            RolloutManager::restore_from(j.get("man").ok_or("payload missing 'man'")?, n_agents)?;
+        self.store.restore_from(j.get("store").ok_or("payload missing 'store'")?)?;
+        self.alloc.restore_from(j.get("alloc").ok_or("payload missing 'alloc'")?)?;
+
+        // -- request slab (slot indices are RequestIds; free-list order
+        //    decides id recycling, so both restore verbatim) -------------
+        let rj = j.get("reqs").ok_or("payload missing 'reqs'")?;
+        let slots = rj.get("slots").and_then(Json::as_arr).ok_or("reqs missing 'slots'")?;
+        self.reqs.slots.clear();
+        for s in slots {
+            self.reqs.slots.push(match s {
+                Json::Null => None,
+                s => Some(req_from_json(s)?),
+            });
+        }
+        self.reqs.free = rj
+            .get("free")
+            .and_then(Json::as_arr)
+            .ok_or("reqs missing 'free'")?
+            .iter()
+            .map(|v| v.as_u64().map(|x| x as u32).ok_or("bad free-list entry"))
+            .collect::<Result<_, _>>()?;
+
+        // -- per-agent vectors -------------------------------------------
+        let ts = j.get("tstate").and_then(Json::as_arr).ok_or("payload missing 'tstate'")?;
+        if ts.len() != n_agents {
+            return Err("'tstate' length mismatch".into());
+        }
+        for (dst, v) in self.tstate.iter_mut().zip(ts) {
+            *dst = match v.as_str().ok_or("bad tstate entry")? {
+                "idle" => AgentTrain::Idle,
+                "swap_in" => AgentTrain::SwappingIn,
+                "computing" => AgentTrain::Computing,
+                "applying" => AgentTrain::Applying,
+                "swap_out" => AgentTrain::SwappingOut,
+                other => return Err(format!("unknown tstate '{other}'")),
+            };
+        }
+        let busy = j
+            .get("agent_busy_scaling")
+            .and_then(Json::as_arr)
+            .ok_or("payload missing 'agent_busy_scaling'")?;
+        if busy.len() != n_agents {
+            return Err("'agent_busy_scaling' length mismatch".into());
+        }
+        for (dst, v) in self.agent_busy_scaling.iter_mut().zip(busy) {
+            *dst = v.as_bool().ok_or("bad agent_busy_scaling entry")?;
+        }
+        self.inst_agent.clear();
+        for p in
+            j.get("inst_agent").and_then(Json::as_arr).ok_or("payload missing 'inst_agent'")?
+        {
+            let p = p.as_arr().filter(|p| p.len() == 2).ok_or("bad inst_agent pair")?;
+            let iid = p[0].as_usize().ok_or("bad instance id")?;
+            let agent = p[1].as_usize().filter(|&a| a < n_agents).ok_or("bad agent id")?;
+            self.inst_agent.insert(iid, agent);
+        }
+        let f64s = |k: &str| -> Result<Vec<f64>, String> {
+            j.get(k)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| format!("payload missing '{k}'"))?
+                .iter()
+                .map(|v| v.as_f64().ok_or_else(|| format!("bad value in '{k}'")))
+                .collect()
+        };
+        let slow_until = f64s("slow_until")?;
+        let slow_mult = f64s("slow_mult")?;
+        if slow_until.len() != n_agents || slow_mult.len() != n_agents {
+            return Err("straggler-window length mismatch".into());
+        }
+        self.slow_until = slow_until;
+        self.slow_mult = slow_mult;
+
+        // -- counters, series, reports -----------------------------------
+        self.counters.restore_vals(&f64s("counters")?)?;
+        let series =
+            RunSeries::from_ckpt_json(j.get("series").ok_or("payload missing 'series'")?)?;
+        let keys = |m: &BTreeMap<usize, Vec<(f64, usize)>>| m.keys().copied().collect::<Vec<_>>();
+        if keys(&series.processed) != keys(&self.processed_series)
+            || keys(&series.queued) != keys(&self.queued_series)
+        {
+            return Err("tracked-agent series keys do not match this experiment's options".into());
+        }
+        self.processed_series = series.processed;
+        self.queued_series = series.queued;
+        self.busy_series = series.busy;
+        self.pending.clear();
+        for r in j.get("pending").and_then(Json::as_arr).ok_or("payload missing 'pending'")? {
+            self.pending.push_back(StepReport::from_ckpt_json(r)?);
+        }
+        let prev = f64s("prev_counters")?;
+        if prev.len() != 6 {
+            return Err("'prev_counters' must have 6 entries".into());
+        }
+        self.prev_scale_ops = prev[0];
+        self.prev_swap_s = prev[1];
+        self.prev_retries = prev[2];
+        self.prev_lost_tokens = prev[3];
+        self.prev_recovery_s = prev[4];
+        self.prev_degraded_s = prev[5];
+
+        // -- fault plane & run-loop scalars ------------------------------
+        self.dead_reqs = j
+            .get("dead_reqs")
+            .and_then(Json::as_arr)
+            .ok_or("payload missing 'dead_reqs'")?
+            .iter()
+            .map(|v| as_ju64(v).ok_or("bad dead request id"))
+            .collect::<Result<_, _>>()?;
+        self.retry_parked.clear();
+        for s in j
+            .get("retry_parked")
+            .and_then(Json::as_arr)
+            .ok_or("payload missing 'retry_parked'")?
+        {
+            self.retry_parked.push(match s {
+                Json::Null => None,
+                s => Some(req_from_json(s)?),
+            });
+        }
+        let fscalar = |k: &str| {
+            j.get(k).and_then(Json::as_f64).ok_or_else(|| format!("payload missing '{k}'"))
+        };
+        self.flap_until = fscalar("flap_until")?;
+        self.flap_added_s = fscalar("flap_added_s")?;
+        self.sample_seq =
+            j.get("sample_seq").and_then(as_ju64).ok_or("payload missing 'sample_seq'")?;
+        self.guard = j.get("guard").and_then(as_ju64).ok_or("payload missing 'guard'")?;
+        let histo = j.get("histo").and_then(Json::as_arr).ok_or("payload missing 'histo'")?;
+        if histo.len() != EV_KINDS {
+            return Err("'histo' length mismatch".into());
+        }
+        for (dst, v) in self.histo.iter_mut().zip(histo) {
+            *dst = as_ju64(v).ok_or("bad histogram entry")?;
+        }
+        self.now = fscalar("now")?;
+        self.done = j.get("done").and_then(Json::as_bool).ok_or("payload missing 'done'")?;
+        self.failed =
+            j.get("failed").and_then(Json::as_bool).ok_or("payload missing 'failed'")?;
+        self.stop = match j.get("stop") {
+            None | Some(Json::Null) => None,
+            Some(s) => Some(StopInfo {
+                t: s.get("t").and_then(Json::as_f64).ok_or("stop missing 't'")?,
+                steps_completed: s
+                    .get("steps_completed")
+                    .and_then(Json::as_usize)
+                    .ok_or("stop missing 'steps_completed'")?,
+            }),
+        };
+        self.next_report = j
+            .get("next_report")
+            .and_then(Json::as_usize)
+            .ok_or("payload missing 'next_report'")?;
+        if self.next_report != self.window_base {
+            // Retirement advances both in lockstep (`collect_completed`).
+            return Err("report cursor and window base disagree (corrupt snapshot)".into());
+        }
+        Ok(())
+    }
 }
 
 /// Event-kind count and names: the run-loop histogram is a plain
@@ -1812,6 +2200,216 @@ fn ev_idx(ev: &Ev) -> usize {
         Ev::RetryDue(_) => 11,
         Ev::Recover { .. } => 12,
     }
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint codecs (DESIGN.md §12): events, request slab, step window
+// ---------------------------------------------------------------------------
+
+fn ev_to_json(ev: &Ev) -> Json {
+    let n = |v: usize| Json::num(v as f64);
+    match ev {
+        Ev::StartStep(s) => Json::obj(vec![("k", Json::str("start_step")), ("s", n(*s))]),
+        Ev::CallDone(rid) => Json::obj(vec![("k", Json::str("call_done")), ("rid", ju64(*rid))]),
+        Ev::Poll => Json::obj(vec![("k", Json::str("poll"))]),
+        Ev::MigrationArrive { donor_insts, target } => Json::obj(vec![
+            ("k", Json::str("migration_arrive")),
+            ("donors", Json::arr(donor_insts.iter().map(|&i| n(i)))),
+            ("target", n(*target)),
+        ]),
+        Ev::SwitchToTrainDone(s) => {
+            Json::obj(vec![("k", Json::str("switch_train")), ("s", n(*s))])
+        }
+        Ev::SwitchToRolloutDone(s) => {
+            Json::obj(vec![("k", Json::str("switch_rollout")), ("s", n(*s))])
+        }
+        Ev::SwapInDone { agent, step } => Json::obj(vec![
+            ("k", Json::str("swap_in")),
+            ("agent", n(*agent)),
+            ("s", n(*step)),
+        ]),
+        Ev::GradDone { agent, step, n: batch } => Json::obj(vec![
+            ("k", Json::str("grad")),
+            ("agent", n(*agent)),
+            ("s", n(*step)),
+            ("n", n(*batch)),
+        ]),
+        Ev::ApplyDone { agent, step } => Json::obj(vec![
+            ("k", Json::str("apply")),
+            ("agent", n(*agent)),
+            ("s", n(*step)),
+        ]),
+        Ev::SwapOutDone { agent } => {
+            Json::obj(vec![("k", Json::str("swap_out")), ("agent", n(*agent))])
+        }
+        Ev::FaultStrike(i) => Json::obj(vec![("k", Json::str("fault")), ("i", n(*i))]),
+        Ev::RetryDue(i) => Json::obj(vec![("k", Json::str("retry")), ("i", n(*i))]),
+        Ev::Recover { agent } => {
+            Json::obj(vec![("k", Json::str("recover")), ("agent", n(*agent))])
+        }
+    }
+}
+
+fn ev_from_json(j: &Json) -> Result<Ev, String> {
+    let k = j.get("k").and_then(Json::as_str).ok_or("event missing 'k'")?;
+    let u = |key: &str| {
+        j.get(key)
+            .and_then(Json::as_usize)
+            .ok_or_else(|| format!("event '{k}' missing '{key}'"))
+    };
+    Ok(match k {
+        "start_step" => Ev::StartStep(u("s")?),
+        "call_done" => {
+            Ev::CallDone(j.get("rid").and_then(as_ju64).ok_or("call_done missing 'rid'")?)
+        }
+        "poll" => Ev::Poll,
+        "migration_arrive" => Ev::MigrationArrive {
+            donor_insts: j
+                .get("donors")
+                .and_then(Json::as_arr)
+                .ok_or("migration_arrive missing 'donors'")?
+                .iter()
+                .map(|v| v.as_usize().ok_or("bad donor instance id"))
+                .collect::<Result<_, _>>()?,
+            target: u("target")?,
+        },
+        "switch_train" => Ev::SwitchToTrainDone(u("s")?),
+        "switch_rollout" => Ev::SwitchToRolloutDone(u("s")?),
+        "swap_in" => Ev::SwapInDone { agent: u("agent")?, step: u("s")? },
+        "grad" => Ev::GradDone { agent: u("agent")?, step: u("s")?, n: u("n")? },
+        "apply" => Ev::ApplyDone { agent: u("agent")?, step: u("s")? },
+        "swap_out" => Ev::SwapOutDone { agent: u("agent")? },
+        "fault" => Ev::FaultStrike(u("i")?),
+        "retry" => Ev::RetryDue(u("i")?),
+        "recover" => Ev::Recover { agent: u("agent")? },
+        other => return Err(format!("unknown event kind '{other}'")),
+    })
+}
+
+fn req_to_json(r: &ReqInfo) -> Json {
+    Json::obj(vec![
+        ("step", Json::num(r.step as f64)),
+        ("traj", Json::num(r.call.traj as f64)),
+        ("call", Json::num(r.call.call as f64)),
+        ("decode_s", Json::num(r.decode_s)),
+        ("env_s", Json::num(r.env_s)),
+        ("agent", Json::num(r.agent as f64)),
+        ("attempt", Json::num(r.attempt as f64)),
+    ])
+}
+
+fn req_from_json(j: &Json) -> Result<ReqInfo, String> {
+    let u = |k: &str| {
+        j.get(k).and_then(Json::as_usize).ok_or_else(|| format!("request missing '{k}'"))
+    };
+    let f = |k: &str| {
+        j.get(k).and_then(Json::as_f64).ok_or_else(|| format!("request missing '{k}'"))
+    };
+    Ok(ReqInfo {
+        step: u("step")?,
+        call: CallRef { traj: u("traj")?, call: u("call")? },
+        decode_s: f("decode_s")?,
+        env_s: f("env_s")?,
+        agent: u("agent")?,
+        attempt: u("attempt")? as u32,
+    })
+}
+
+/// Mutable fields of a [`StepCtl`]. The workload itself is re-pulled
+/// from the source at restore (sources are pure in `(seed, step)`) and
+/// `expected` derives from it, so neither is serialized.
+fn ctl_to_json(ctl: &StepCtl) -> Json {
+    Json::obj(vec![
+        ("sched", ctl.sched.snapshot()),
+        ("started", Json::Bool(ctl.started)),
+        ("rollout_done", Json::Bool(ctl.rollout_done)),
+        ("start_t", Json::num(ctl.start_t)),
+        ("rollout_end_t", Json::num(ctl.rollout_end_t)),
+        ("end_t", Json::num(ctl.end_t)),
+        ("grads_done", Json::arr(ctl.grads_done.iter().map(|&g| Json::num(g as f64)))),
+        ("applied", Json::arr(ctl.applied.iter().map(|&b| Json::Bool(b)))),
+        ("traj_remaining", Json::num(ctl.traj_remaining as f64)),
+        ("traj_start", Json::arr(ctl.traj_start.iter().map(|&t| Json::num(t)))),
+        ("traj_end", Json::arr(ctl.traj_end.iter().map(|&t| Json::num(t)))),
+        (
+            "group_pending",
+            Json::arr(ctl.group_pending.iter().map(|(&(q, ci), (outstanding, toks))| {
+                Json::arr([
+                    Json::num(q as f64),
+                    Json::num(ci as f64),
+                    Json::num(*outstanding as f64),
+                    Json::arr(toks.iter().map(|&t| Json::num(t))),
+                ])
+            })),
+        ),
+        ("busy_s", Json::num(ctl.busy_s)),
+        ("switch_s_total", Json::num(ctl.switch_s_total)),
+    ])
+}
+
+/// Overlay serialized progress onto a freshly rebuilt control block
+/// (from [`Engine::build_ctl`] on the re-pulled workload).
+fn ctl_restore(ctl: &mut StepCtl, j: &Json) -> Result<(), String> {
+    ctl.sched.restore_from(j.get("sched").ok_or("step missing 'sched'")?)?;
+    let b = |k: &str| {
+        j.get(k).and_then(Json::as_bool).ok_or_else(|| format!("step missing '{k}'"))
+    };
+    let f = |k: &str| {
+        j.get(k).and_then(Json::as_f64).ok_or_else(|| format!("step missing '{k}'"))
+    };
+    ctl.started = b("started")?;
+    ctl.rollout_done = b("rollout_done")?;
+    ctl.start_t = f("start_t")?;
+    ctl.rollout_end_t = f("rollout_end_t")?;
+    ctl.end_t = f("end_t")?;
+    let grads = j.get("grads_done").and_then(Json::as_arr).ok_or("step missing 'grads_done'")?;
+    if grads.len() != ctl.grads_done.len() {
+        return Err("step 'grads_done' length mismatch".into());
+    }
+    for (dst, v) in ctl.grads_done.iter_mut().zip(grads) {
+        *dst = v.as_usize().ok_or("bad grads_done entry")?;
+    }
+    let applied = j.get("applied").and_then(Json::as_arr).ok_or("step missing 'applied'")?;
+    if applied.len() != ctl.applied.len() {
+        return Err("step 'applied' length mismatch".into());
+    }
+    for (dst, v) in ctl.applied.iter_mut().zip(applied) {
+        *dst = v.as_bool().ok_or("bad applied entry")?;
+    }
+    ctl.traj_remaining = j
+        .get("traj_remaining")
+        .and_then(Json::as_usize)
+        .ok_or("step missing 'traj_remaining'")?;
+    for (key, dst) in [("traj_start", &mut ctl.traj_start), ("traj_end", &mut ctl.traj_end)] {
+        let arr =
+            j.get(key).and_then(Json::as_arr).ok_or_else(|| format!("step missing '{key}'"))?;
+        if arr.len() != dst.len() {
+            return Err(format!("step '{key}' length mismatch"));
+        }
+        for (d, v) in dst.iter_mut().zip(arr) {
+            *d = v.as_f64().ok_or_else(|| format!("bad {key} entry"))?;
+        }
+    }
+    let groups =
+        j.get("group_pending").and_then(Json::as_arr).ok_or("step missing 'group_pending'")?;
+    let mut gp = BTreeMap::new();
+    for g in groups {
+        let g = g.as_arr().filter(|g| g.len() == 4).ok_or("bad group_pending entry")?;
+        let q = g[0].as_usize().ok_or("bad group query")?;
+        let ci = g[1].as_usize().ok_or("bad group turn")?;
+        let outstanding = g[2].as_usize().ok_or("bad group outstanding")?;
+        let toks = g[3]
+            .as_arr()
+            .ok_or("bad group tokens")?
+            .iter()
+            .map(|t| t.as_f64().ok_or("bad group token"))
+            .collect::<Result<Vec<f64>, _>>()?;
+        gp.insert((q, ci), (outstanding, toks));
+    }
+    ctl.group_pending = gp;
+    ctl.busy_s = f("busy_s")?;
+    ctl.switch_s_total = f("switch_s_total")?;
+    Ok(())
 }
 
 #[cfg(test)]

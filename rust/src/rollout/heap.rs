@@ -149,6 +149,35 @@ impl IndexedMinHeap {
     pub fn ids(&self) -> impl Iterator<Item = usize> + '_ {
         self.heap.iter().copied()
     }
+
+    // ---- checkpointing (DESIGN.md §12) ------------------------------------
+
+    /// Checkpoint capture: `(id, key)` pairs in the exact internal
+    /// array order. The layout is captured (not just the membership)
+    /// because [`IndexedMinHeap::ids`] iterates it, and a resumed run
+    /// must walk instances in the same order as the uninterrupted one.
+    pub fn snapshot_pairs(&self) -> Vec<(usize, u64)> {
+        self.heap.iter().map(|&id| (id, self.key[id])).collect()
+    }
+
+    /// Rebuild from [`IndexedMinHeap::snapshot_pairs`]: the array is
+    /// restored verbatim (it is a valid heap by construction — it was
+    /// one when captured) and `pos` is re-derived.
+    pub fn restore_pairs(pairs: &[(usize, u64)]) -> IndexedMinHeap {
+        let max_id = pairs.iter().map(|&(id, _)| id).max();
+        let cap = max_id.map(|m| m + 1).unwrap_or(0);
+        let mut h = IndexedMinHeap {
+            heap: Vec::with_capacity(pairs.len()),
+            pos: vec![None; cap],
+            key: vec![0; cap],
+        };
+        for (i, &(id, key)) in pairs.iter().enumerate() {
+            h.heap.push(id);
+            h.pos[id] = Some(i);
+            h.key[id] = key;
+        }
+        h
+    }
 }
 
 impl Default for IndexedMinHeap {

@@ -8,7 +8,9 @@
 //! same code (DESIGN.md §5).
 
 use super::heap::IndexedMinHeap;
+use crate::ckpt::{as_ju64, ju64};
 use crate::util::hash::FastMap;
+use crate::util::json::Json;
 use std::collections::VecDeque;
 
 pub type RequestId = u64;
@@ -284,6 +286,154 @@ impl RolloutManager {
 
     pub fn instance_counts(&self) -> Vec<usize> {
         (0..self.n_agents()).map(|a| self.instance_count(a)).collect()
+    }
+
+    // ---- checkpointing (DESIGN.md §12) ------------------------------------
+
+    /// Checkpoint capture: instance slots (including tombstones —
+    /// `InstanceId`s are slot indices, so holes must survive), per-agent
+    /// heap layouts, parked queues, and completion counters. The
+    /// request table is *not* serialized: every request's state is
+    /// fully determined by which instance list or parked queue holds
+    /// it, so restore rebuilds the table from those.
+    pub fn snapshot(&self) -> Json {
+        let rid_arr = |rids: &mut dyn Iterator<Item = &RequestId>| -> Json {
+            Json::arr(rids.map(|&r| ju64(r)))
+        };
+        Json::obj(vec![
+            (
+                "instances",
+                Json::arr(self.instances.iter().map(|slot| match slot {
+                    None => Json::Null,
+                    Some(i) => Json::obj(vec![
+                        ("agent", Json::num(i.agent as f64)),
+                        ("max_concurrency", Json::num(i.max_concurrency as f64)),
+                        ("active", rid_arr(&mut i.active.iter())),
+                        ("queue", rid_arr(&mut i.queue.iter())),
+                        ("draining", Json::Bool(i.draining)),
+                    ]),
+                })),
+            ),
+            (
+                "heaps",
+                Json::arr(self.heaps.iter().map(|h| {
+                    Json::arr(h.snapshot_pairs().into_iter().map(|(id, key)| {
+                        Json::arr([Json::num(id as f64), ju64(key)])
+                    }))
+                })),
+            ),
+            (
+                "parked",
+                Json::arr(self.parked.iter().map(|q| rid_arr(&mut q.iter()))),
+            ),
+            (
+                "completed_per_agent",
+                Json::arr(self.completed_per_agent.iter().map(|&c| ju64(c))),
+            ),
+        ])
+    }
+
+    /// Rebuild a manager from [`RolloutManager::snapshot`]. The agent
+    /// count must match the config the engine was rebuilt from.
+    pub fn restore_from(j: &Json, n_agents: usize) -> Result<RolloutManager, String> {
+        let rids = |j: &Json, what: &str| -> Result<Vec<RequestId>, String> {
+            j.as_arr()
+                .ok_or(format!("bad {what} list"))?
+                .iter()
+                .map(|r| as_ju64(r).ok_or(format!("bad request id in {what}")))
+                .collect()
+        };
+        let mut m = RolloutManager::new(n_agents);
+        let insts = j
+            .get("instances")
+            .and_then(Json::as_arr)
+            .ok_or("manager missing 'instances'")?;
+        for (iid, slot) in insts.iter().enumerate() {
+            if matches!(slot, Json::Null) {
+                m.instances.push(None);
+                continue;
+            }
+            let agent = slot
+                .get("agent")
+                .and_then(Json::as_usize)
+                .ok_or("instance missing 'agent'")?;
+            if agent >= n_agents {
+                return Err(format!("instance {iid} names agent {agent} of {n_agents}"));
+            }
+            let active = rids(slot.get("active").unwrap_or(&Json::Null), "active")?;
+            let queue = rids(slot.get("queue").unwrap_or(&Json::Null), "queue")?;
+            for &rid in &active {
+                m.requests.insert(rid, (agent, ReqState::Active(iid)));
+            }
+            for &rid in &queue {
+                m.requests.insert(rid, (agent, ReqState::Queued(iid)));
+            }
+            m.instances.push(Some(Instance {
+                agent,
+                max_concurrency: slot
+                    .get("max_concurrency")
+                    .and_then(Json::as_usize)
+                    .ok_or("instance missing 'max_concurrency'")?,
+                active,
+                queue: queue.into(),
+                draining: slot
+                    .get("draining")
+                    .and_then(Json::as_bool)
+                    .ok_or("instance missing 'draining'")?,
+            }));
+        }
+        let heaps = j
+            .get("heaps")
+            .and_then(Json::as_arr)
+            .ok_or("manager missing 'heaps'")?;
+        if heaps.len() != n_agents {
+            return Err(format!("checkpoint has {} heaps for {n_agents} agents", heaps.len()));
+        }
+        for (a, hj) in heaps.iter().enumerate() {
+            let pairs = hj
+                .as_arr()
+                .ok_or("bad heap")?
+                .iter()
+                .map(|p| {
+                    let p = p.as_arr().filter(|p| p.len() == 2).ok_or("bad heap pair")?;
+                    let id = p[0].as_usize().ok_or("bad heap id")?;
+                    let key = as_ju64(&p[1]).ok_or("bad heap key")?;
+                    Ok::<(usize, u64), String>((id, key))
+                })
+                .collect::<Result<Vec<_>, _>>()?;
+            if pairs.iter().any(|&(id, _)| {
+                id >= m.instances.len() || m.instances[id].is_none()
+            }) {
+                return Err(format!("heap {a} references a missing instance"));
+            }
+            m.heaps[a] = IndexedMinHeap::restore_pairs(&pairs);
+        }
+        let parked = j
+            .get("parked")
+            .and_then(Json::as_arr)
+            .ok_or("manager missing 'parked'")?;
+        if parked.len() != n_agents {
+            return Err("parked queue count mismatch".to_string());
+        }
+        for (a, pj) in parked.iter().enumerate() {
+            let q = rids(pj, "parked")?;
+            for &rid in &q {
+                m.requests.insert(rid, (a, ReqState::Parked));
+            }
+            m.parked[a] = q.into();
+        }
+        let completed = j
+            .get("completed_per_agent")
+            .and_then(Json::as_arr)
+            .ok_or("manager missing 'completed_per_agent'")?;
+        if completed.len() != n_agents {
+            return Err("completed_per_agent count mismatch".to_string());
+        }
+        m.completed_per_agent = completed
+            .iter()
+            .map(|c| as_ju64(c).ok_or("bad completion counter".to_string()))
+            .collect::<Result<_, _>>()?;
+        Ok(m)
     }
 }
 

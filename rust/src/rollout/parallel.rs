@@ -9,6 +9,7 @@
 //!    independently; a call is ready the moment its upstream (previous
 //!    call of the same candidate chain) completes.
 
+use crate::util::json::Json;
 use crate::workload::StepWorkload;
 
 /// Identifies one call: (trajectory index in the workload, call index).
@@ -178,6 +179,63 @@ impl TrajectoryScheduler {
         self.members[q]
             .iter()
             .all(|&t| self.next_call[t] == self.n_calls[t])
+    }
+
+    // ---- checkpointing (DESIGN.md §12) ------------------------------------
+
+    /// Checkpoint capture: the mutable cursors only. `n_calls`,
+    /// `query_of`, and `members` are pure functions of the step's
+    /// workload, which the resumed engine regenerates — so restore is
+    /// "rebuild from workload, then overlay cursors".
+    pub fn snapshot(&self) -> Json {
+        let nums = |v: &[usize]| Json::arr(v.iter().map(|&x| Json::num(x as f64)));
+        Json::obj(vec![
+            ("next_call", nums(&self.next_call)),
+            ("admitted", Json::num(self.admitted as f64)),
+            ("next_query", Json::num(self.next_query as f64)),
+            ("turn_pending", nums(&self.turn_pending)),
+            ("completed_trajs", Json::num(self.completed_trajs as f64)),
+        ])
+    }
+
+    /// Overlay cursors captured by [`TrajectoryScheduler::snapshot`]
+    /// onto a scheduler freshly built from the same step workload.
+    pub fn restore_from(&mut self, j: &Json) -> Result<(), String> {
+        let nums = |j: &Json, what: &str, want: usize| -> Result<Vec<usize>, String> {
+            let v = j
+                .as_arr()
+                .ok_or(format!("scheduler missing '{what}'"))?
+                .iter()
+                .map(|x| x.as_usize().ok_or(format!("bad '{what}' entry")))
+                .collect::<Result<Vec<_>, _>>()?;
+            if v.len() != want {
+                return Err(format!("'{what}' has {} entries, want {want}", v.len()));
+            }
+            Ok(v)
+        };
+        self.next_call = nums(
+            j.get("next_call").unwrap_or(&Json::Null),
+            "next_call",
+            self.n_calls.len(),
+        )?;
+        self.turn_pending = nums(
+            j.get("turn_pending").unwrap_or(&Json::Null),
+            "turn_pending",
+            self.members.len(),
+        )?;
+        self.admitted = j
+            .get("admitted")
+            .and_then(Json::as_usize)
+            .ok_or("scheduler missing 'admitted'")?;
+        self.next_query = j
+            .get("next_query")
+            .and_then(Json::as_usize)
+            .ok_or("scheduler missing 'next_query'")?;
+        self.completed_trajs = j
+            .get("completed_trajs")
+            .and_then(Json::as_usize)
+            .ok_or("scheduler missing 'completed_trajs'")?;
+        Ok(())
     }
 }
 

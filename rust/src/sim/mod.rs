@@ -349,6 +349,59 @@ impl<E> EventQueue<E> {
             Backend::Calendar(c) => c.len,
         }
     }
+
+    // ---- checkpointing (DESIGN.md §12) ------------------------------------
+
+    /// Complete queue state for a checkpoint: `(now, next_seq, entries)`
+    /// with entries sorted by `(time, seq)` — the exact future pop
+    /// order. The snapshot is **backend-agnostic**: heap internals and
+    /// calendar bucket geometry are derived structure, so a snapshot
+    /// taken from one backend restores into either and pops the same
+    /// sequence bit-for-bit (which is why the backend choice is not
+    /// part of the checkpoint's config fingerprint).
+    pub fn snapshot_entries(&self) -> (Time, u64, Vec<(Time, u64, &E)>) {
+        let mut entries: Vec<(Time, u64, &E)> = match &self.backend {
+            Backend::Heap(h) => h.iter().map(|e| (e.time, e.seq, &e.payload)).collect(),
+            Backend::Calendar(c) => c
+                .buckets
+                .iter()
+                .flatten()
+                .chain(c.overflow.iter())
+                .map(|e| (e.time, e.seq, &e.payload))
+                .collect(),
+        };
+        entries.sort_by(|a, b| {
+            a.0.partial_cmp(&b.0)
+                .expect("finite event times")
+                .then(a.1.cmp(&b.1))
+        });
+        (self.now, self.seq, entries)
+    }
+
+    /// Rebuild a queue from a [`EventQueue::snapshot_entries`] capture.
+    /// Entries keep their original FIFO sequence numbers, so ties at
+    /// equal times break exactly as they would have in the original
+    /// run; `next_seq` continues the counter so post-restore pushes
+    /// sort after every pre-snapshot event at the same time.
+    pub fn restore(
+        kind: QueueKind,
+        now: Time,
+        next_seq: u64,
+        entries: Vec<(Time, u64, E)>,
+    ) -> Self {
+        let mut q = Self::with_kind(kind);
+        q.now = now;
+        for (time, seq, payload) in entries {
+            debug_assert!(time.is_finite() && time >= now && seq < next_seq);
+            let entry = Entry { time, seq, payload };
+            match &mut q.backend {
+                Backend::Heap(h) => h.push(entry),
+                Backend::Calendar(c) => c.push(entry),
+            }
+        }
+        q.seq = next_seq;
+        q
+    }
 }
 
 /// Accumulates busy device-seconds over a set of devices — the hardware
@@ -523,6 +576,86 @@ mod tests {
                 }
             }
         });
+    }
+
+    /// Satellite (ISSUE 8): snapshot/restore preserves pop order
+    /// bit-identically for both backends, at any split point, with
+    /// FIFO ties and post-restore pushes in the mix.
+    #[test]
+    fn prop_snapshot_restore_pop_order_bit_identical() {
+        for kind in both_kinds() {
+            forall("snapshot/restore pops == uninterrupted pops", 80, |rng| {
+                let mut q = EventQueue::with_kind(kind);
+                let mut reference = EventQueue::with_kind(kind);
+                let mut next_id = 0u64;
+                let mut push = |q: &mut EventQueue<u64>, r: &mut EventQueue<u64>, rng: &mut crate::util::rng::Pcg64, id: &mut u64| {
+                    let t = match rng.below(8) {
+                        0 => q.now(),                      // exact tie
+                        1 => q.now() + 500.0 * rng.f64(),  // far future
+                        _ => q.now() + rng.f64() * 2.0,    // dense
+                    };
+                    q.push_at(t, *id);
+                    r.push_at(t, *id);
+                    *id += 1;
+                };
+                for _ in 0..120 {
+                    if rng.f64() < 0.7 {
+                        push(&mut q, &mut reference, rng, &mut next_id);
+                    } else {
+                        assert_eq!(q.pop(), reference.pop());
+                    }
+                }
+                // Snapshot mid-run, rebuild, and verify the restored
+                // queue continues exactly like the uninterrupted one —
+                // including events pushed *after* the restore.
+                let (now, next_seq, entries) = q.snapshot_entries();
+                let owned: Vec<(Time, u64, u64)> =
+                    entries.iter().map(|&(t, s, p)| (t, s, *p)).collect();
+                let mut restored = EventQueue::restore(kind, now, next_seq, owned);
+                assert_eq!(restored.now(), reference.now());
+                assert_eq!(restored.len(), reference.len());
+                for _ in 0..40 {
+                    if rng.f64() < 0.4 {
+                        push(&mut restored, &mut reference, rng, &mut next_id);
+                    } else {
+                        assert_eq!(restored.pop(), reference.pop());
+                    }
+                }
+                loop {
+                    match (restored.pop(), reference.pop()) {
+                        (None, None) => break,
+                        (a, b) => assert_eq!(a, b, "{kind:?} diverged"),
+                    }
+                }
+            });
+        }
+    }
+
+    /// A snapshot taken on one backend restores into the *other* and
+    /// still pops identically — the capture is backend-agnostic, which
+    /// is why `--event-queue` is excluded from the checkpoint's config
+    /// fingerprint.
+    #[test]
+    fn snapshot_restores_across_backends() {
+        let mut cal = EventQueue::with_kind(QueueKind::Calendar);
+        for i in 0..300u64 {
+            cal.push_at(1.0 + (i % 11) as f64 * 0.25, i);
+        }
+        cal.push_at(1e5, 9999);
+        for _ in 0..50 {
+            cal.pop();
+        }
+        let (now, next_seq, entries) = cal.snapshot_entries();
+        let owned: Vec<(Time, u64, u64)> = entries.iter().map(|&(t, s, p)| (t, s, *p)).collect();
+        let mut heap = EventQueue::restore(QueueKind::BinaryHeap, now, next_seq, owned);
+        assert_eq!(heap.kind(), QueueKind::BinaryHeap);
+        loop {
+            match (heap.pop(), cal.pop()) {
+                (None, None) => break,
+                (a, b) => assert_eq!(a, b, "cross-backend restore diverged"),
+            }
+        }
+        assert_eq!(heap.now(), cal.now());
     }
 
     #[test]

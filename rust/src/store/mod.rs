@@ -52,7 +52,9 @@
 //!     held; blobs are parked **before** the referencing status column
 //!     is set, so a ready row's blob refs always resolve.
 
+use crate::ckpt::{as_ji64, as_ju64, ji64, ju64};
 use crate::util::hash::FastMap;
+use crate::util::json::Json;
 use std::collections::{BTreeMap, BTreeSet};
 use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -495,6 +497,181 @@ impl Table {
         out
     }
 
+    // ---- checkpointing (DESIGN.md §12) ------------------------------------
+
+    /// Checkpoint capture: the slot slab verbatim — keys (including
+    /// stale entries on freed slots; they are never read but keeping
+    /// the slab byte-exact keeps future slot assignment identical),
+    /// flags, free-list order, and every typed column with its status
+    /// column. `index`/`ready`/`ready_by_version` are derived views and
+    /// are rebuilt at restore.
+    fn snapshot(&self) -> Json {
+        let bools = |v: &[bool]| Json::arr(v.iter().map(|&b| Json::Bool(b)));
+        Json::obj(vec![
+            (
+                "keys",
+                Json::arr(self.keys.iter().map(|k| {
+                    Json::arr([
+                        ju64(k.version),
+                        ju64(k.id.input_id),
+                        Json::num(k.id.turns as f64),
+                        ju64(k.id.trajectory_id),
+                    ])
+                })),
+            ),
+            ("processing", bools(&self.processing)),
+            (
+                "missing",
+                Json::arr(self.missing.iter().map(|&m| Json::num(m as f64))),
+            ),
+            ("occupied", bools(&self.occupied)),
+            (
+                "free",
+                Json::arr(self.free.iter().map(|&s| Json::num(s as f64))),
+            ),
+            (
+                "cols",
+                Json::arr(self.cols.iter().map(|c| {
+                    let data = match &c.data {
+                        ColData::Int(v) => Json::arr(v.iter().map(|&x| ji64(x))),
+                        ColData::Float(v) => Json::arr(v.iter().map(|&x| Json::num(x))),
+                        ColData::Bool(v) => bools(v),
+                        ColData::Blob(v) => Json::arr(v.iter().map(|&x| ju64(x))),
+                    };
+                    Json::obj(vec![("data", data), ("set", bools(&c.set))])
+                })),
+            ),
+        ])
+    }
+
+    /// Rebuild a table from [`Table::snapshot`] given its schema (the
+    /// schema itself is config-derived and comes from the engine's
+    /// `create_table` calls at restore).
+    fn restore(schema: Vec<(String, ColumnType)>, j: &Json) -> Result<Table, String> {
+        fn bools(j: Option<&Json>, what: &str) -> Result<Vec<bool>, String> {
+            j.and_then(Json::as_arr)
+                .ok_or(format!("table missing '{what}'"))?
+                .iter()
+                .map(|b| b.as_bool().ok_or(format!("bad '{what}' entry")))
+                .collect()
+        }
+        let keys = j
+            .get("keys")
+            .and_then(Json::as_arr)
+            .ok_or("table missing 'keys'")?
+            .iter()
+            .map(|k| {
+                let k = k.as_arr().filter(|k| k.len() == 4).ok_or("bad sample key")?;
+                Ok::<SampleKey, String>(SampleKey {
+                    version: as_ju64(&k[0]).ok_or("bad key version")?,
+                    id: SampleId {
+                        input_id: as_ju64(&k[1]).ok_or("bad key input_id")?,
+                        turns: k[2].as_u64().ok_or("bad key turns")? as u32,
+                        trajectory_id: as_ju64(&k[3]).ok_or("bad key trajectory_id")?,
+                    },
+                })
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        let n_slots = keys.len();
+        let processing = bools(j.get("processing"), "processing")?;
+        let occupied = bools(j.get("occupied"), "occupied")?;
+        let missing = j
+            .get("missing")
+            .and_then(Json::as_arr)
+            .ok_or("table missing 'missing'")?
+            .iter()
+            .map(|m| m.as_u64().map(|m| m as u32).ok_or("bad 'missing' entry"))
+            .collect::<Result<Vec<_>, _>>()?;
+        let free = j
+            .get("free")
+            .and_then(Json::as_arr)
+            .ok_or("table missing 'free'")?
+            .iter()
+            .map(|s| s.as_u64().map(|s| s as u32).ok_or("bad free-list entry"))
+            .collect::<Result<Vec<_>, _>>()?;
+        if processing.len() != n_slots || occupied.len() != n_slots || missing.len() != n_slots {
+            return Err("table slab column lengths disagree".to_string());
+        }
+        let cols_j = j
+            .get("cols")
+            .and_then(Json::as_arr)
+            .ok_or("table missing 'cols'")?;
+        if cols_j.len() != schema.len() {
+            return Err(format!(
+                "table has {} columns, checkpoint has {}",
+                schema.len(),
+                cols_j.len()
+            ));
+        }
+        let mut cols = Vec::with_capacity(cols_j.len());
+        for (cj, &(ref name, ty)) in cols_j.iter().zip(&schema) {
+            let dj = cj
+                .get("data")
+                .and_then(Json::as_arr)
+                .ok_or(format!("column '{name}' missing 'data'"))?;
+            if dj.len() != n_slots {
+                return Err(format!("column '{name}' length != slab size"));
+            }
+            let data = match ty {
+                ColumnType::Int => ColData::Int(
+                    dj.iter()
+                        .map(|x| as_ji64(x).ok_or("bad int cell"))
+                        .collect::<Result<_, _>>()?,
+                ),
+                ColumnType::Float => ColData::Float(
+                    dj.iter()
+                        .map(|x| x.as_f64().ok_or("bad float cell"))
+                        .collect::<Result<_, _>>()?,
+                ),
+                ColumnType::Bool => ColData::Bool(
+                    dj.iter()
+                        .map(|x| x.as_bool().ok_or("bad bool cell"))
+                        .collect::<Result<_, _>>()?,
+                ),
+                ColumnType::Blob => ColData::Blob(
+                    dj.iter()
+                        .map(|x| as_ju64(x).ok_or("bad blob ref cell"))
+                        .collect::<Result<_, _>>()?,
+                ),
+            };
+            let set = bools(cj.get("set"), "set")?;
+            if set.len() != n_slots {
+                return Err(format!("column '{name}' status length != slab size"));
+            }
+            cols.push(Column { data, set });
+        }
+        let mut t = Table {
+            schema,
+            cols,
+            keys,
+            processing,
+            missing,
+            occupied,
+            free,
+            index: FastMap::default(),
+            ready: BTreeSet::new(),
+            ready_by_version: BTreeMap::new(),
+            live_rows: 0,
+        };
+        // Derived views: index over occupied slots; the ready set is
+        // exactly "occupied && complete && not processing" (the
+        // documented invariant the property tests pin).
+        for s in 0..t.keys.len() {
+            if !t.occupied[s] {
+                continue;
+            }
+            let key = t.keys[s];
+            if t.index.insert(key, s as u32).is_some() {
+                return Err(format!("duplicate sample key {} v{}", key.id, key.version));
+            }
+            t.live_rows += 1;
+            if t.missing[s] == 0 && !t.processing[s] {
+                t.mark_ready(key);
+            }
+        }
+        Ok(t)
+    }
+
     /// The pre-columnar reference path: recompute the ready set by a
     /// full slab scan. Only used by diagnostics and the property tests
     /// that pin the ready-set index to identical dispatch behaviour.
@@ -865,6 +1042,113 @@ impl ExperienceStore {
 
     pub fn total_blobs(&self) -> usize {
         self.blobs.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    // ---- checkpointing (DESIGN.md §12) ------------------------------------
+
+    /// Checkpoint capture: every table slab, the blob arena (keyed
+    /// payloads, sorted by key for stable output), and the arena's id
+    /// counter. Shard assignment is a pure function of the key, so
+    /// shards are not part of the format.
+    pub fn snapshot(&self) -> Json {
+        let tables = self.tables.read().unwrap();
+        let mut blob_map: BTreeMap<String, Json> = BTreeMap::new();
+        for shard in &self.blobs {
+            for (&k, b) in shard.lock().unwrap().iter() {
+                let (ty, v) = match b {
+                    Blob::Tokens(t) => (
+                        "tokens",
+                        Json::arr(t.iter().map(|&x| Json::num(x as f64))),
+                    ),
+                    Blob::Floats(f) => (
+                        "floats",
+                        Json::arr(f.iter().map(|&x| Json::num(x as f64))),
+                    ),
+                    Blob::Text(s) => ("text", Json::str(s.clone())),
+                };
+                blob_map.insert(
+                    k.to_string(),
+                    Json::obj(vec![("ty", Json::str(ty)), ("v", v)]),
+                );
+            }
+        }
+        Json::obj(vec![
+            (
+                "tables",
+                Json::Obj(
+                    tables
+                        .iter()
+                        .map(|(name, t)| (name.clone(), t.lock().unwrap().snapshot()))
+                        .collect(),
+                ),
+            ),
+            ("blobs", Json::Obj(blob_map)),
+            ("next_blob", ju64(self.next_blob.load(Ordering::SeqCst))),
+        ])
+    }
+
+    /// Restore an [`ExperienceStore::snapshot`] into a store whose
+    /// tables were already created (by engine construction) with the
+    /// same names and schemas. The checkpoint's table set must match
+    /// exactly — a mismatch means it came from a different config.
+    pub fn restore_from(&self, j: &Json) -> Result<(), String> {
+        let tj = j
+            .get("tables")
+            .and_then(Json::as_obj)
+            .ok_or("store missing 'tables'")?;
+        {
+            let mut tables = self.tables.write().unwrap();
+            if tables.len() != tj.len() || !tables.keys().all(|k| tj.contains_key(k)) {
+                return Err(format!(
+                    "store has tables [{}], checkpoint has [{}]",
+                    tables.keys().cloned().collect::<Vec<_>>().join(", "),
+                    tj.keys().cloned().collect::<Vec<_>>().join(", ")
+                ));
+            }
+            for (name, snap) in tj {
+                let slot = tables.get_mut(name).expect("checked above");
+                let schema = slot.lock().unwrap().schema.clone();
+                let restored = Table::restore(schema, snap)
+                    .map_err(|e| format!("table '{name}': {e}"))?;
+                *slot = Arc::new(Mutex::new(restored));
+            }
+        }
+        let bj = j
+            .get("blobs")
+            .and_then(Json::as_obj)
+            .ok_or("store missing 'blobs'")?;
+        for shard in &self.blobs {
+            shard.lock().unwrap().clear();
+        }
+        for (ks, bv) in bj {
+            let k: u64 = ks.parse().map_err(|_| format!("bad blob key '{ks}'"))?;
+            let v = bv.get("v").ok_or("blob missing 'v'")?;
+            let blob = match bv.get("ty").and_then(Json::as_str) {
+                Some("tokens") => Blob::Tokens(
+                    v.as_arr()
+                        .ok_or("bad tokens blob")?
+                        .iter()
+                        .map(|x| x.as_f64().map(|f| f as i32).ok_or("bad token"))
+                        .collect::<Result<_, _>>()?,
+                ),
+                Some("floats") => Blob::Floats(
+                    v.as_arr()
+                        .ok_or("bad floats blob")?
+                        .iter()
+                        .map(|x| x.as_f64().map(|f| f as f32).ok_or("bad float"))
+                        .collect::<Result<_, _>>()?,
+                ),
+                Some("text") => Blob::Text(v.as_str().ok_or("bad text blob")?.to_string()),
+                other => return Err(format!("unknown blob type {other:?}")),
+            };
+            self.blob_shard(k).lock().unwrap().insert(k, blob);
+        }
+        let next = j
+            .get("next_blob")
+            .and_then(as_ju64)
+            .ok_or("store missing 'next_blob'")?;
+        self.next_blob.store(next, Ordering::SeqCst);
+        Ok(())
     }
 }
 

@@ -6,9 +6,11 @@
 //! partition at startup and holds it for the whole run — the
 //! Obs. 3 configuration whose utilization collapses to ~18.8%.
 
+use crate::ckpt::{as_ju64, ju64};
 use crate::cluster::{DevicePool, Placement, PlacementStrategy};
 use crate::config::{ClusterConfig, ModelScale};
-use crate::training::process_group::{ActivateError, ProcessGroup};
+use crate::training::process_group::{ActivateError, GroupState, ProcessGroup};
+use crate::util::json::Json;
 
 pub struct AgentCentricAllocator {
     pub pool: DevicePool,
@@ -79,6 +81,106 @@ impl AgentCentricAllocator {
 
     pub fn active_devices(&self) -> usize {
         self.pool.in_use()
+    }
+
+    // ---- checkpointing (DESIGN.md §12) ------------------------------------
+
+    /// Checkpoint capture: pool free lists, every group's lifecycle
+    /// state (placement, locality memory, swap counters, gradient-cache
+    /// occupancy), and the FIFO wait queue. Group identity (`agent`,
+    /// `model`) is config-derived and rebuilt at restore.
+    pub fn snapshot(&self) -> Json {
+        Json::obj(vec![
+            ("pool", self.pool.snapshot()),
+            (
+                "wait_queue",
+                Json::arr(self.wait_queue.iter().map(|&a| Json::num(a as f64))),
+            ),
+            (
+                "groups",
+                Json::arr(self.groups.iter().map(|g| {
+                    let placement = match &g.state {
+                        GroupState::Destroyed => Json::Null,
+                        GroupState::Active(p) => {
+                            Json::arr(p.devices.iter().map(|&d| Json::num(d as f64)))
+                        }
+                    };
+                    Json::obj(vec![
+                        ("placement", placement),
+                        (
+                            "last_node",
+                            g.last_node
+                                .map(|n| Json::num(n as f64))
+                                .unwrap_or(Json::Null),
+                        ),
+                        ("swaps_out", ju64(g.swaps_out)),
+                        ("swaps_in", ju64(g.swaps_in)),
+                        (
+                            "cached_micro_batches",
+                            Json::num(g.cached_micro_batches as f64),
+                        ),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    /// Restore an [`AgentCentricAllocator::snapshot`] into an allocator
+    /// freshly built from the same config (same model list, same pool
+    /// node range).
+    pub fn restore_from(&mut self, j: &Json) -> Result<(), String> {
+        self.pool
+            .restore_from(j.get("pool").ok_or("allocator missing 'pool'")?)?;
+        let wq = j
+            .get("wait_queue")
+            .and_then(Json::as_arr)
+            .ok_or("allocator missing 'wait_queue'")?;
+        self.wait_queue = wq
+            .iter()
+            .map(|a| a.as_usize().ok_or("bad wait_queue entry".to_string()))
+            .collect::<Result<_, _>>()?;
+        let groups = j
+            .get("groups")
+            .and_then(Json::as_arr)
+            .ok_or("allocator missing 'groups'")?;
+        if groups.len() != self.groups.len() {
+            return Err(format!(
+                "allocator has {} groups, checkpoint has {}",
+                self.groups.len(),
+                groups.len()
+            ));
+        }
+        for (g, gj) in self.groups.iter_mut().zip(groups) {
+            g.state = match gj.get("placement") {
+                Some(Json::Null) | None => GroupState::Destroyed,
+                Some(arr) => {
+                    let devices = arr
+                        .as_arr()
+                        .ok_or("bad group placement")?
+                        .iter()
+                        .map(|d| d.as_usize().ok_or("bad device id".to_string()))
+                        .collect::<Result<Vec<_>, _>>()?;
+                    GroupState::Active(Placement { devices })
+                }
+            };
+            g.last_node = match gj.get("last_node") {
+                Some(Json::Null) | None => None,
+                Some(n) => Some(n.as_usize().ok_or("bad last_node")?),
+            };
+            g.swaps_out = gj
+                .get("swaps_out")
+                .and_then(as_ju64)
+                .ok_or("group missing 'swaps_out'")?;
+            g.swaps_in = gj
+                .get("swaps_in")
+                .and_then(as_ju64)
+                .ok_or("group missing 'swaps_in'")?;
+            g.cached_micro_batches = gj
+                .get("cached_micro_batches")
+                .and_then(Json::as_usize)
+                .ok_or("group missing 'cached_micro_batches'")?;
+        }
+        Ok(())
     }
 }
 

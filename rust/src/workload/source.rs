@@ -78,6 +78,25 @@ pub trait WorkloadSource: Send {
     fn take_error(&mut self) -> Option<PallasError> {
         None
     }
+
+    /// Resume support (DESIGN.md §12): advance the source past its
+    /// first `n` steps without the engine seeing them, leaving it
+    /// positioned exactly where a run that pulled `n` steps would be.
+    /// The default pulls and discards — correct for any source;
+    /// [`ScenarioSource`] overrides with an O(1) cursor jump. Returns
+    /// an error if the source ends (or fails) before `n` steps.
+    fn fast_forward(&mut self, n: usize) -> Result<(), PallasError> {
+        for i in 0..n {
+            if self.next_step().is_none() {
+                return Err(self.take_error().unwrap_or_else(|| {
+                    PallasError::InvalidConfig(format!(
+                        "workload source ended at step {i} while resuming to step {n}"
+                    ))
+                }));
+            }
+        }
+        Ok(())
+    }
 }
 
 /// Eager adapter: a pre-materialized `Vec<StepWorkload>`, yielded in
@@ -149,6 +168,25 @@ impl WorkloadSource for ScenarioSource {
 
     fn len_hint(&self) -> LenHint {
         LenHint::Exact(self.total - self.next)
+    }
+
+    /// O(1): generation is pure in `(seed, step)`, so resuming is a
+    /// cursor assignment — no steps are generated and discarded.
+    fn fast_forward(&mut self, n: usize) -> Result<(), PallasError> {
+        if self.next != 0 {
+            return Err(PallasError::InvalidConfig(format!(
+                "fast_forward on a source already at step {}",
+                self.next
+            )));
+        }
+        if n > self.total {
+            return Err(PallasError::InvalidConfig(format!(
+                "cannot resume to step {n}: scenario has {} steps",
+                self.total
+            )));
+        }
+        self.next = n;
+        Ok(())
     }
 }
 
@@ -274,6 +312,36 @@ mod tests {
         let err = src.take_error().expect("typed cause must be retrievable");
         assert!(err.to_string().contains("out of order"), "{err}");
         assert!(src.take_error().is_none(), "take_error is take-once");
+    }
+
+    #[test]
+    fn fast_forward_positions_sources_like_n_pulls() {
+        // Scenario override (O(1) cursor jump) and the default
+        // pull-and-discard path (trace) both land exactly where a run
+        // that consumed n steps would be.
+        let (shaped, scen) = scenario::resolve(&small("bursty")).unwrap();
+        let eager: Vec<StepWorkload> = (0..5).map(|s| scen.step(&shaped, 2048, s)).collect();
+        let (shaped2, scen2) = scenario::resolve(&small("bursty")).unwrap();
+        let mut src = ScenarioSource::new(shaped2, scen2, 2048, 5);
+        src.fast_forward(3).unwrap();
+        assert_eq!(src.len_hint(), LenHint::Exact(2));
+        assert_eq!(drain(&mut src), &eager[3..]);
+
+        let tr = Trace::record(&small("flash_crowd"), 2048, 5).unwrap();
+        let reader = crate::workload::TraceReader::from_text(&tr.to_jsonl()).unwrap();
+        let mut src = TraceSource::new(reader);
+        src.fast_forward(3).unwrap();
+        assert_eq!(src.len_hint(), LenHint::Exact(2));
+        assert_eq!(drain(&mut src), &tr.steps[3..]);
+
+        // Past-the-end resume is a typed error, not a panic.
+        let (shaped3, scen3) = scenario::resolve(&small("bursty")).unwrap();
+        let mut src = ScenarioSource::new(shaped3, scen3, 2048, 5);
+        assert!(src.fast_forward(6).is_err());
+        let tr2 = Trace::record(&small("baseline"), 7, 2).unwrap();
+        let reader2 = crate::workload::TraceReader::from_text(&tr2.to_jsonl()).unwrap();
+        let mut src2 = TraceSource::new(reader2);
+        assert!(src2.fast_forward(3).is_err());
     }
 
     #[test]

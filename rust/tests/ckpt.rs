@@ -1,0 +1,304 @@
+//! Checkpoint/resume plane acceptance tests (DESIGN.md §12).
+//!
+//! The contracts pinned here:
+//!
+//! * **Byte-identical resume** — a run snapshotted after any step k and
+//!   resumed onto a freshly built session yields the remaining reports,
+//!   the total virtual time, and the run series byte-for-byte equal to
+//!   the uninterrupted run — for an open-loop arrival scenario and for
+//!   a chaos-faulted run (the two CI presets).
+//! * **Snapshot idempotence** — snapshot → restore → snapshot encodes
+//!   to the identical checkpoint text.
+//! * **Periodic checkpointing** — `.checkpoint_every(n)` writes
+//!   `<dir>/ckpt.json` crash-consistently during both `step()` and
+//!   `run_to_end()` drains, and the file resumes.
+//! * **Typed rejection** — corrupt, truncated, stale-format-version,
+//!   and config-fingerprint-mismatched checkpoints all fail with
+//!   `PallasError::Checkpoint`, never a panic or garbage state.
+
+use flexmarl::config::{ExperimentConfig, Framework, WorkloadConfig};
+use flexmarl::error::PallasError;
+use flexmarl::experiment::Experiment;
+use flexmarl::fault::preset;
+use flexmarl::metrics::StepReport;
+use flexmarl::orchestrator::{Session, SimOptions, SimOutcome};
+
+const STEPS: usize = 4;
+
+/// The two acceptance presets: one open-loop arrival scenario, one
+/// closed-loop scenario under the chaos fault plan.
+fn acceptance_cfgs() -> Vec<(String, ExperimentConfig)> {
+    let mut open_loop = small_cfg("poisson");
+    open_loop.faults = Default::default();
+    let mut faulted = small_cfg("core_skew");
+    faulted.faults = preset("chaos").unwrap();
+    vec![
+        ("poisson (open-loop)".to_string(), open_loop),
+        ("core_skew + chaos faults".to_string(), faulted),
+    ]
+}
+
+fn small_cfg(scenario: &str) -> ExperimentConfig {
+    let mut wl = WorkloadConfig::ma();
+    wl.queries_per_step = 2;
+    wl.group_size = 4;
+    wl.scenario = scenario.to_string();
+    let mut cfg = ExperimentConfig::new(wl, Framework::flexmarl());
+    cfg.steps = STEPS;
+    cfg.seed = 2048; // paper §8.1
+    cfg
+}
+
+fn opts() -> SimOptions {
+    SimOptions {
+        track_agents: vec![0, 1],
+        ..SimOptions::default()
+    }
+}
+
+fn build(cfg: &ExperimentConfig) -> Experiment {
+    Experiment::new(cfg.clone())
+        .options(opts())
+        .build()
+        .unwrap()
+}
+
+fn fresh_session(cfg: &ExperimentConfig) -> Session {
+    build(cfg).session().unwrap()
+}
+
+/// Full-fidelity serialization of a report list — `to_ckpt_json` keeps
+/// every field bit-exact, so string equality is byte identity.
+fn reports_text(reports: &[StepReport]) -> String {
+    reports
+        .iter()
+        .map(|r| r.to_ckpt_json().to_string())
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+fn assert_outcomes_identical(a: &SimOutcome, b: &SimOutcome, label: &str) {
+    assert_eq!(
+        reports_text(&a.reports),
+        reports_text(&b.reports),
+        "{label}: resumed reports diverged"
+    );
+    assert_eq!(
+        a.total_s.to_bits(),
+        b.total_s.to_bits(),
+        "{label}: total_s diverged"
+    );
+    assert_eq!(a.series, b.series, "{label}: run series diverged");
+}
+
+/// A scratch path under the OS temp dir, unique per (process, tag) so
+/// parallel test binaries never collide.
+fn scratch(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("flexmarl_ckpt_it_{}_{tag}", std::process::id()))
+        .to_str()
+        .unwrap()
+        .to_string()
+}
+
+// ---------------------------------------------------------------------------
+// The core contract: kill at any step, resume, byte-identical output
+// ---------------------------------------------------------------------------
+
+#[test]
+fn resume_from_any_step_is_byte_identical_to_uninterrupted_run() {
+    for (label, cfg) in acceptance_cfgs() {
+        let mut full = fresh_session(&cfg);
+        while full.step().unwrap().is_some() {}
+        let full = full.finish();
+        assert_eq!(full.reports.len(), STEPS, "{label}");
+
+        for k in 1..STEPS {
+            // "Crash" after step k: all that survives is the snapshot.
+            let mut victim = fresh_session(&cfg);
+            for _ in 0..k {
+                victim.step().unwrap().expect("mid-run step");
+            }
+            let payload = victim.snapshot();
+            drop(victim);
+
+            let mut resumed = build(&cfg).resume(&payload, "").unwrap();
+            assert_eq!(resumed.steps_completed(), k, "{label} k={k}");
+            while resumed.step().unwrap().is_some() {}
+            let resumed = resumed.finish();
+            assert_outcomes_identical(&full, &resumed, &format!("{label} k={k}"));
+
+            // The paper-table aggregate is identical too.
+            let overlaps = build(&cfg).policies().pipeline.overlaps_steps();
+            assert_eq!(
+                full.evaluate(overlaps).unwrap().to_json().to_pretty(),
+                resumed.evaluate(overlaps).unwrap().to_json().to_pretty(),
+                "{label} k={k}: evaluate() diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn snapshot_restore_snapshot_is_identity() {
+    for (label, cfg) in acceptance_cfgs() {
+        let mut s = fresh_session(&cfg);
+        s.step().unwrap().unwrap();
+        s.step().unwrap().unwrap();
+        let first = s.snapshot();
+        let restored = fresh_session(&cfg).restore(&first, "").unwrap();
+        let second = restored.snapshot();
+        assert_eq!(
+            flexmarl::ckpt::encode(&first),
+            flexmarl::ckpt::encode(&second),
+            "{label}: re-snapshot of a restored session drifted"
+        );
+    }
+}
+
+#[test]
+fn resume_of_a_completed_run_yields_nothing_more() {
+    let cfgs = acceptance_cfgs();
+    let (_, cfg) = &cfgs[0];
+    let mut s = fresh_session(cfg);
+    while s.step().unwrap().is_some() {}
+    let payload = s.snapshot();
+    let full = s.finish();
+
+    let mut resumed = build(cfg).resume(&payload, "").unwrap();
+    assert_eq!(resumed.steps_completed(), STEPS);
+    assert!(resumed.step().unwrap().is_none(), "no steps left to run");
+    assert_outcomes_identical(&full, &resumed.finish(), "completed-run resume");
+}
+
+// ---------------------------------------------------------------------------
+// Periodic checkpoint files
+// ---------------------------------------------------------------------------
+
+#[test]
+fn periodic_checkpointing_writes_a_resumable_file() {
+    let dir = scratch("periodic");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfgs = acceptance_cfgs();
+    let (_, cfg) = &cfgs[1];
+
+    // run_to_end drains without going through step() — it must
+    // checkpoint too.
+    let full = Experiment::new(cfg.clone())
+        .options(opts())
+        .checkpoint_every(1)
+        .checkpoint_dir(&dir)
+        .build()
+        .unwrap()
+        .session()
+        .unwrap()
+        .run_to_end()
+        .unwrap();
+
+    let ckpt_path = format!("{dir}/ckpt.json");
+    assert!(
+        std::path::Path::new(&ckpt_path).exists(),
+        "periodic checkpoint file missing"
+    );
+    // No temp litter from the atomic-rename protocol.
+    assert!(
+        !std::path::Path::new(&format!("{ckpt_path}.tmp.{}", std::process::id())).exists()
+    );
+
+    // The last checkpoint (after the final step) resumes to the same
+    // outcome. Resume with a *plain* config — the checkpoint settings
+    // are excluded from the fingerprint, so the resuming process does
+    // not have to re-enable checkpointing.
+    let resumed = build(cfg).resume_file(&ckpt_path).unwrap().finish();
+    assert_outcomes_identical(&full, &resumed, "periodic-file resume");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn checkpoint_every_zero_is_rejected_at_build() {
+    let err = Experiment::new(small_cfg("baseline"))
+        .checkpoint_every(0)
+        .build()
+        .map(|_| ())
+        .unwrap_err();
+    assert!(
+        matches!(err, PallasError::InvalidConfig(_)),
+        "expected InvalidConfig, got {err:?}"
+    );
+    assert!(err.to_string().contains("checkpoint.every"), "{err}");
+}
+
+// ---------------------------------------------------------------------------
+// Typed rejection of bad checkpoints
+// ---------------------------------------------------------------------------
+
+#[test]
+fn config_fingerprint_mismatch_is_rejected() {
+    let cfgs = acceptance_cfgs();
+    let (_, cfg) = &cfgs[0];
+    let mut s = fresh_session(cfg);
+    s.step().unwrap().unwrap();
+    let payload = s.snapshot();
+
+    // Same payload, different seed: restoring would silently splice two
+    // unrelated runs together — must be refused.
+    let mut other = cfg.clone();
+    other.seed = 7;
+    let err = build(&other).resume(&payload, "ck.json").unwrap_err();
+    assert!(
+        matches!(err, PallasError::Checkpoint { .. }),
+        "expected Checkpoint error, got {err:?}"
+    );
+    let msg = err.to_string();
+    assert!(msg.contains("fingerprint"), "{msg}");
+    assert!(msg.contains("ck.json"), "{msg}");
+}
+
+#[test]
+fn corrupt_truncated_and_stale_files_are_rejected_via_resume_file() {
+    let cfgs = acceptance_cfgs();
+    let (_, cfg) = &cfgs[0];
+    let mut s = fresh_session(cfg);
+    s.step().unwrap().unwrap();
+
+    let path = scratch("reject.json");
+    s.save(&path).unwrap();
+    let good = std::fs::read_to_string(&path).unwrap();
+
+    // Bit-flip inside the payload: checksum rejection.
+    let flipped = {
+        let idx = good.len() - 10;
+        let mut bytes = good.clone().into_bytes();
+        bytes[idx] = if bytes[idx] == b'0' { b'1' } else { b'0' };
+        String::from_utf8(bytes).unwrap()
+    };
+    std::fs::write(&path, &flipped).unwrap();
+    let err = build(cfg).resume_file(&path).unwrap_err();
+    assert!(matches!(err, PallasError::Checkpoint { .. }), "{err:?}");
+    assert!(err.to_string().contains("checksum mismatch"), "{err}");
+
+    // Torn tail: the payload line cut mid-write.
+    std::fs::write(&path, &good[..good.len() - 25]).unwrap();
+    let err = build(cfg).resume_file(&path).unwrap_err();
+    assert!(err.to_string().contains("truncated"), "{err}");
+
+    // Stale format version.
+    std::fs::write(&path, good.replacen("\"version\":1", "\"version\":99", 1)).unwrap();
+    let err = build(cfg).resume_file(&path).unwrap_err();
+    assert!(
+        err.to_string()
+            .contains("unsupported checkpoint format version 99"),
+        "{err}"
+    );
+
+    // Not a checkpoint at all.
+    std::fs::write(&path, "{\"hello\":1}\n{}\n").unwrap();
+    let err = build(cfg).resume_file(&path).unwrap_err();
+    assert!(err.to_string().contains("bad magic"), "{err}");
+
+    // Missing file: typed File error, not a panic.
+    std::fs::remove_file(&path).unwrap();
+    let err = build(cfg).resume_file(&path).unwrap_err();
+    assert!(matches!(err, PallasError::File { .. }), "{err:?}");
+}

@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import sys
 
 # Bookkeeping keys that are not nanosecond timings and must not gate.
@@ -71,8 +72,16 @@ def main() -> int:
     regressions = []
     for name in sorted(baseline.keys() & current.keys()):
         base, cur = baseline[name], current[name]
-        if base <= 0.0:
-            print(f"  skip  {name}: non-positive baseline ({base})")
+        # A zero, negative, NaN, or infinite baseline cannot anchor a
+        # ratio: dividing by it yields inf/NaN deltas, and a NaN delta
+        # compares False against the threshold — a silent pass. Such
+        # entries come from interrupted/smoke bench runs; skip loudly
+        # rather than gate on garbage.
+        if not math.isfinite(base) or base <= 0.0:
+            print(f"::warning::skipping '{name}': unusable baseline timing ({base})")
+            continue
+        if not math.isfinite(cur):
+            print(f"::warning::skipping '{name}': unusable current timing ({cur})")
             continue
         delta = (cur - base) / base
         marker = "REGRESSED" if delta > args.threshold else "ok"

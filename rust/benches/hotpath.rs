@@ -19,6 +19,7 @@ use flexmarl::metrics::StepReport;
 use flexmarl::orchestrator::{try_simulate, NullSink, SimOptions};
 use flexmarl::policy::PolicyBundle;
 use flexmarl::rollout::{heap::IndexedMinHeap, RolloutManager};
+use flexmarl::serve::{ServeConfig, ServePlane};
 use flexmarl::sim::{EventQueue, QueueKind};
 use flexmarl::store::{
     grpo_schema, Blob, ExperienceStore, Field, PutRow, SampleId, Value,
@@ -82,6 +83,7 @@ fn main() {
     bench_sim_engine(&mut rec, t);
     bench_session(&mut rec, t);
     bench_sweep(smoke);
+    bench_serve(smoke);
     if !smoke {
         bench_pjrt(&mut rec);
     }
@@ -130,6 +132,61 @@ fn bench_sweep(smoke: bool) {
     match std::fs::write("BENCH_sweep.json", Json::Obj(map).to_pretty()) {
         Ok(()) => println!("wrote BENCH_sweep.json"),
         Err(e) => eprintln!("could not write BENCH_sweep.json: {e}"),
+    }
+}
+
+/// Serve group (DESIGN.md §13): the mixed tenant mix through the
+/// serving plane at workers=1 vs workers=N. Wall times and real session
+/// throughput go to `BENCH_serve.json`; the load report and every
+/// per-session stream are asserted byte-identical across the two runs
+/// while we're here (the plane's whole determinism contract).
+fn bench_serve(smoke: bool) {
+    let mut cfg = ServeConfig::mix("mixed", 2048).expect("mixed mix must exist");
+    cfg.ticks = if smoke { 30 } else { 120 };
+    let jobs_n = pool::default_jobs().max(2);
+
+    let (r1, t1) = time_once(|| {
+        ServePlane::new(cfg.clone(), 1).unwrap().run().unwrap()
+    });
+    let (rn, tn) = time_once(|| {
+        ServePlane::new(cfg.clone(), jobs_n).unwrap().run().unwrap()
+    });
+    assert_eq!(
+        r1.report.to_json().to_pretty(),
+        rn.report.to_json().to_pretty(),
+        "serve load report depends on worker count"
+    );
+    assert_eq!(r1.sessions.len(), rn.sessions.len());
+    for (a, b) in r1.sessions.iter().zip(&rn.sessions) {
+        assert_eq!(a.jsonl, b.jsonl, "session {} bytes depend on worker count", a.seq);
+    }
+
+    let sessions = r1.report.completed;
+    let speedup = t1.as_secs_f64() / tn.as_secs_f64().max(1e-9);
+    let sessions_per_s = sessions as f64 / tn.as_secs_f64().max(1e-9);
+    println!(
+        "\nserve mixed mix ({} ticks, {sessions} sessions): \
+         workers=1 {:.2?}   workers={jobs_n} {:.2?}   speedup {speedup:.2}x \
+         ({sessions_per_s:.0} sessions/s)",
+        cfg.ticks, t1, tn,
+    );
+    let map: BTreeMap<String, Json> = [
+        ("sessions".to_string(), Json::num(sessions as f64)),
+        ("jobs_n".to_string(), Json::num(jobs_n as f64)),
+        ("jobs1_ns".to_string(), Json::num(t1.as_nanos() as f64)),
+        ("jobsN_ns".to_string(), Json::num(tn.as_nanos() as f64)),
+        (
+            "ns_per_session".to_string(),
+            Json::num(tn.as_nanos() as f64 / (sessions as f64).max(1.0)),
+        ),
+        ("sessions_per_s".to_string(), Json::num(sessions_per_s)),
+        ("speedup".to_string(), Json::num(speedup)),
+    ]
+    .into_iter()
+    .collect();
+    match std::fs::write("BENCH_serve.json", Json::Obj(map).to_pretty()) {
+        Ok(()) => println!("wrote BENCH_serve.json"),
+        Err(e) => eprintln!("could not write BENCH_serve.json: {e}"),
     }
 }
 

@@ -1,206 +1,107 @@
-//! Rollout-engine serving demo under *wall clock*: a vLLM-router-style
-//! deployment of the FlexMARL rollout engine with real threads.
+//! Rollout-as-a-Service demo on the serving plane (DESIGN.md §13).
 //!
-//! N worker threads play inference instances (their per-request latency
-//! follows the MA workload's long-tail token distribution, time-scaled
-//! 200×); the main thread is the rollout manager: min-heap least-loaded
-//! dispatch, queue-length polling, and inter-agent scaling through the
-//! Set/Get store when the Δ-threshold trips. Demonstrates that the
-//! scheduling components are runtime-agnostic — the same code the
-//! virtual-time simulator drives (deliverable (b), domain scenario 2).
+//! Builds a named tenant mix, runs it twice through
+//! [`flexmarl::serve::ServePlane`] — once on a single worker, once on
+//! `--workers` threads — and verifies the plane's determinism contract
+//! live: every per-session JSONL stream and the whole load report are
+//! byte-identical across the two runs, while wall time shows the
+//! worker-pool speedup. The same `ServePlane` backs the `flexmarl
+//! serve` subcommand; this example is the library-API view of it.
 //!
-//! Run: `cargo run --release --example rollout_serve -- --queries 24`
-//! Traffic shapes: `--scenario <preset>` (see `flexmarl scenarios`);
-//! `--trace <path>` replays a recorded JSONL trace instead.
+//! Run: `cargo run --release --example rollout_serve -- --mix flash`
+//! Knobs: `--mix steady|mixed|flash  --ticks N  --seed N  --workers N`
 
-use flexmarl::config::{ExperimentConfig, Framework, WorkloadConfig};
-use flexmarl::experiment::Experiment;
-use flexmarl::memstore::{Location, MemStore, TransferModel};
-use flexmarl::rollout::{plan_migration, Dispatch, RolloutManager};
+use flexmarl::serve::{ServeConfig, ServeOutcome, ServePlane};
 use flexmarl::util::cli::Args;
-use std::collections::BTreeMap;
-use std::sync::mpsc;
-use std::time::{Duration, Instant};
+use flexmarl::util::pool;
 
-const TIME_SCALE: f64 = 200.0; // simulated seconds per wall second
+fn run(cfg: &ServeConfig, workers: usize) -> ServeOutcome {
+    let plane = ServePlane::new(cfg.clone(), workers).unwrap_or_else(|e| {
+        eprintln!("invalid serve config: {e}");
+        std::process::exit(2)
+    });
+    plane.run().unwrap_or_else(|e| {
+        eprintln!("serve failed: {e}");
+        std::process::exit(1)
+    })
+}
 
 fn main() {
     let args = Args::from_env();
-    let mut wl = WorkloadConfig::ma();
-    wl.queries_per_step = args.get_usize("queries", 24) / wl.group_size.clamp(1, 16);
-    wl.queries_per_step = wl.queries_per_step.max(2);
-    wl.group_size = 4;
-    wl.scenario = args.get_or("scenario", "baseline");
-    let delta = args.get_usize("delta", 5);
-
-    // Exactly the simulator's source-selection path, through the typed
-    // Experiment builder: scenario-shaped generation, or bit-identical
-    // replay of a recorded trace (header authoritative, n_agents
-    // validated) — no parallel logic to drift.
-    if let Some(path) = args.get("trace") {
-        wl.trace = Some(path.to_string());
-    }
-    let mut cfg = ExperimentConfig::new(wl, Framework::flexmarl());
-    cfg.seed = args.get_u64("seed", 2048); // steps stays 1: serve step 0
-    let exp = Experiment::new(cfg).build().unwrap_or_else(|e| {
-        eprintln!("workload resolution failed: {e}");
-        std::process::exit(1)
+    let mix = args.get_or("mix", "mixed");
+    let seed = args.get_u64("seed", 2048);
+    let workers = args.get_usize("workers", pool::default_jobs().max(2));
+    let mut cfg = ServeConfig::mix(&mix, seed).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2)
     });
-    let (resolved, mut step_wls) = exp.into_workloads();
-    if step_wls.is_empty() {
-        eprintln!("trace has no steps");
-        std::process::exit(1)
-    }
-    if step_wls.len() > 1 {
-        eprintln!(
-            "note: trace has {} steps; this wall-clock demo serves step 0 only",
-            step_wls.len()
-        );
-    }
-    let wl = resolved.workload;
-    let workload = step_wls.remove(0);
-    let n_agents = wl.agents.len();
+    cfg.ticks = args.get_u64("ticks", 80);
+
     println!(
-        "serving {} trajectories ({} calls) across {} agents, scenario '{}' (Δ = {delta}, time×{TIME_SCALE})",
-        workload.trajectories.len(),
-        workload.total_calls(),
-        n_agents,
-        wl.scenario,
+        "serving mix '{mix}' (seed {seed}): {} tenants, {} ticks, {} slots, queue cap {}",
+        cfg.tenants.len(),
+        cfg.ticks,
+        cfg.slots,
+        cfg.queue_cap
     );
 
-    let store = MemStore::new();
-    let transfer = TransferModel::new(Default::default());
-    let mut man = RolloutManager::new(n_agents);
-    for a in 0..n_agents {
-        man.add_instance(a, 4);
-        man.add_instance(a, 4);
-        // Publish each agent's weights once (§7 Set).
-        store.set(
-            &format!("agent/{a}/weights"),
-            Location::Device(a * 4),
-            wl.agents[a].model.weight_bytes(),
-            None,
-        );
-    }
+    let solo = run(&cfg, 1);
+    let multi = run(&cfg, workers);
 
-    // Flatten calls into (request, agent, service_ms); chains dispatch
-    // sequentially per trajectory (dependency-driven).
-    let (done_tx, done_rx) = mpsc::channel::<u64>();
-    let mut next_call: Vec<usize> = vec![0; workload.trajectories.len()];
-    let mut req_meta: BTreeMap<u64, (usize, usize, u64)> = BTreeMap::new(); // rid -> (traj, agent, service_ms)
-    let mut next_rid = 0u64;
-    let mut completed_calls = 0usize;
-    let total_calls = workload.total_calls();
-    let mut scale_ops = 0usize;
-    let t0 = Instant::now();
-
-    let spawn_service = |rid: u64, ms: u64, tx: mpsc::Sender<u64>| {
-        std::thread::spawn(move || {
-            std::thread::sleep(Duration::from_millis(ms));
-            let _ = tx.send(rid);
-        });
-    };
-
-    let submit = |man: &mut RolloutManager,
-                  req_meta: &mut BTreeMap<u64, (usize, usize, u64)>,
-                  next_rid: &mut u64,
-                  traj: usize,
-                  call: usize| {
-        let spec = &workload.trajectories[traj].calls[call];
-        let rid = *next_rid;
-        *next_rid += 1;
-        let ms = ((spec.tokens / wl.agents[spec.agent].model.decode_tps() + spec.env_s)
-            / TIME_SCALE
-            * 1000.0) as u64;
-        req_meta.insert(rid, (traj, spec.agent, ms));
-        if let Dispatch::Started(_) = man.submit(rid, spec.agent) {
-            spawn_service(rid, ms.max(1), done_tx.clone());
-        }
-        // Queued requests start when the manager promotes them (below).
-    };
-
-    // Kick off call 0 of every trajectory.
-    for traj in 0..workload.trajectories.len() {
-        submit(&mut man, &mut req_meta, &mut next_rid, traj, 0);
-    }
-
-    let mut last_poll = Instant::now();
-    while completed_calls < total_calls {
-        if let Ok(rid) = done_rx.recv_timeout(Duration::from_millis(20)) {
-            let (traj, _agent, _) = req_meta[&rid];
-            if let Some(promoted) = man.complete(rid) {
-                let (_, _, pms) = req_meta[&promoted];
-                spawn_service(promoted, pms.max(1), done_tx.clone());
-            }
-            completed_calls += 1;
-            next_call[traj] += 1;
-            if next_call[traj] < workload.trajectories[traj].calls.len() {
-                let c = next_call[traj];
-                submit(&mut man, &mut req_meta, &mut next_rid, traj, c);
-            }
-        }
-        // Poll + inter-agent balancing (§5.2) every scaled 2 s.
-        if last_poll.elapsed() > Duration::from_millis((2000.0 / TIME_SCALE) as u64 * 10) {
-            last_poll = Instant::now();
-            let q = man.queue_lens();
-            let counts = man.instance_counts();
-            if let Some(plan) = plan_migration(&q, &counts, delta, &vec![false; n_agents]) {
-                let insts = man.instances_of(plan.donor);
-                let mut moved = 0;
-                for iid in insts.into_iter().take(plan.n_instances) {
-                    let displaced = man.drain_instance(iid);
-                    if man.is_drained(iid) {
-                        man.remove_instance(iid);
-                        let (_, started) = man.add_instance(plan.target, 4);
-                        for rid in started {
-                            let (_, _, ms) = req_meta[&rid];
-                            spawn_service(rid, ms.max(1), done_tx.clone());
-                        }
-                        for rid in displaced {
-                            let (_, agent, ms) = req_meta[&rid];
-                            if let Dispatch::Started(_) = man.submit(rid, agent) {
-                                spawn_service(rid, ms.max(1), done_tx.clone());
-                            }
-                        }
-                        moved += 1;
-                    }
-                }
-                if moved > 0 {
-                    // Weight migration via Get (D2D, contiguous buffer).
-                    let plan_t = store
-                        .get(
-                            &format!("agent/{}/weights", plan.target),
-                            Location::Device(plan.donor * 4),
-                            &transfer,
-                        )
-                        .unwrap();
-                    scale_ops += 1;
-                    println!(
-                        "  [scale] agent {} → {} ({} inst, disparity {}, weights {:.0} MiB in {:.0} ms)",
-                        plan.donor,
-                        plan.target,
-                        moved,
-                        plan.disparity,
-                        plan_t.bytes / (1 << 20) as f64,
-                        plan_t.seconds * 1000.0
-                    );
-                }
-            }
-        }
-    }
-
-    let wall = t0.elapsed().as_secs_f64();
-    println!(
-        "\nserved {total_calls} calls in {wall:.1}s wall ({:.0}s simulated)",
-        wall * TIME_SCALE
+    // The determinism contract, checked live: scheduling happened in
+    // virtual time before execution, so nothing — not one byte —
+    // depends on the worker count.
+    assert_eq!(
+        solo.report.to_json().to_pretty(),
+        multi.report.to_json().to_pretty(),
+        "load report depends on worker count"
     );
-    println!("scaling operations: {scale_ops}");
-    for a in 0..n_agents {
+    assert_eq!(solo.sessions.len(), multi.sessions.len());
+    for (a, b) in solo.sessions.iter().zip(&multi.sessions) {
+        assert_eq!(a.seq, b.seq);
+        assert_eq!(a.jsonl, b.jsonl, "session {} bytes depend on worker count", a.seq);
+    }
+
+    let r = &multi.report;
+    println!(
+        "\n{} submitted | {} admitted | {} rejected (queue_full {}, quota {}) | {} expired | {} completed",
+        r.submitted,
+        r.admitted,
+        r.rejected_queue_full + r.rejected_quota,
+        r.rejected_queue_full,
+        r.rejected_quota,
+        r.expired,
+        r.completed
+    );
+    println!(
+        "makespan {} ticks  {:.2} sessions/kilotick  queue depth max {} mean {:.2}",
+        r.makespan_ticks, r.sessions_per_kilotick, r.queue_depth_max, r.queue_depth_mean
+    );
+    println!(
+        "wait p50 {:.0} p90 {:.0} p99 {:.0} ticks  step latency p50 {:.1}s p99 {:.1}s (virtual)",
+        r.wait_ticks.p50(),
+        r.wait_ticks.p90(),
+        r.wait_ticks.p99(),
+        r.step_latency_s.p50(),
+        r.step_latency_s.p99()
+    );
+    println!("\n{:<14} {:>9} {:>9} {:>9} {:>8} {:>10}", "tenant", "submitted", "completed", "rejected", "expired", "wait p99");
+    for t in &r.tenants {
         println!(
-            "  {:<22} processed {:>4}  instances now {}",
-            wl.agents[a].name,
-            man.completed_per_agent[a],
-            man.instance_count(a)
+            "{:<14} {:>9} {:>9} {:>9} {:>8} {:>10.0}",
+            t.name,
+            t.submitted,
+            t.completed,
+            t.rejected_queue_full + t.rejected_quota,
+            t.expired,
+            t.wait_ticks.p99()
         );
     }
+    println!(
+        "\nbyte-identical across worker counts ✓   wall: {:.2}s @1 worker vs {:.2}s @{} workers ({:.1}x)",
+        solo.wall_s,
+        multi.wall_s,
+        workers,
+        solo.wall_s / multi.wall_s.max(1e-9)
+    );
 }

@@ -348,6 +348,19 @@ impl WorkloadConfig {
         }
     }
 
+    /// Serving-plane session shape (DESIGN.md §13): the MA ensemble
+    /// with the smallest batch geometry that still exercises every
+    /// code path (2 queries × GRPO group 2). The `serve` front-end
+    /// multiplexes hundreds of these per run, so each one must cost
+    /// milliseconds, not seconds.
+    pub fn tiny() -> WorkloadConfig {
+        let mut wl = WorkloadConfig::ma();
+        wl.queries_per_step = 2;
+        wl.group_size = 2;
+        wl.inter_query = 2;
+        wl
+    }
+
     /// Table 4 heterogeneous scalability configs on the MA workflow.
     pub fn scale_config(spec: &[(usize, ModelScale)]) -> WorkloadConfig {
         let mut base = WorkloadConfig::ma();
@@ -744,6 +757,14 @@ mod tests {
             ExperimentConfig::new(WorkloadConfig::ma(), fw).validate().unwrap();
             ExperimentConfig::new(WorkloadConfig::ca(), fw).validate().unwrap();
         }
+    }
+
+    #[test]
+    fn tiny_preset_validates_and_is_small() {
+        let wl = WorkloadConfig::tiny();
+        assert_eq!(wl.queries_per_step, 2);
+        assert_eq!(wl.group_size, 2);
+        ExperimentConfig::new(wl, Framework::flexmarl()).validate().unwrap();
     }
 
     #[test]

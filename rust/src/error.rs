@@ -126,6 +126,30 @@ pub enum PallasError {
     /// [`crate::orchestrator::SimOutcome::evaluate`] to handle partial
     /// outcomes without this error.
     EmptyRun,
+    /// The serving plane refused a session request at admission
+    /// (DESIGN.md §13). Overload is an *expected* outcome there, so the
+    /// rejection is typed — callers branch on [`AdmissionReject`], the
+    /// load report counts it, and nothing is dropped silently.
+    Admission {
+        /// Tenant that issued the request.
+        tenant: String,
+        /// Plane-wide arrival sequence number of the request.
+        request: u64,
+        /// Which admission rule refused it.
+        reject: AdmissionReject,
+        /// The limit that was hit (queue capacity or tenant quota).
+        limit: usize,
+    },
+}
+
+/// Why the serving plane refused a session request (DESIGN.md §13).
+#[non_exhaustive]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionReject {
+    /// The bounded intake queue was at capacity.
+    QueueFull,
+    /// The tenant already had its quota of outstanding sessions.
+    QuotaExceeded,
 }
 
 impl fmt::Display for PallasError {
@@ -180,6 +204,23 @@ impl fmt::Display for PallasError {
                 "run completed no steps to evaluate (zero-step experiment, or \
                  stopped before the first step boundary)"
             ),
+            PallasError::Admission {
+                tenant,
+                request,
+                reject,
+                limit,
+            } => match reject {
+                AdmissionReject::QueueFull => write!(
+                    f,
+                    "serve: request {request} (tenant '{tenant}') rejected: \
+                     intake queue full (cap {limit})"
+                ),
+                AdmissionReject::QuotaExceeded => write!(
+                    f,
+                    "serve: request {request} (tenant '{tenant}') rejected: \
+                     tenant quota {limit} outstanding sessions reached"
+                ),
+            },
         }
     }
 }
@@ -333,6 +374,40 @@ mod tests {
             reason: "snapshot missing 'engine'".into(),
         };
         assert_eq!(e.to_string(), "checkpoint: snapshot missing 'engine'");
+    }
+
+    #[test]
+    fn admission_rejections_name_tenant_request_and_limit() {
+        // Serving-plane contract: overload is typed and countable, and
+        // these strings are byte-diffed by the serve-smoke CI job.
+        let e = PallasError::Admission {
+            tenant: "burst".into(),
+            request: 41,
+            reject: AdmissionReject::QueueFull,
+            limit: 16,
+        };
+        assert_eq!(
+            e.to_string(),
+            "serve: request 41 (tenant 'burst') rejected: intake queue full (cap 16)"
+        );
+        let e = PallasError::Admission {
+            tenant: "steady".into(),
+            request: 7,
+            reject: AdmissionReject::QuotaExceeded,
+            limit: 4,
+        };
+        assert_eq!(
+            e.to_string(),
+            "serve: request 7 (tenant 'steady') rejected: \
+             tenant quota 4 outstanding sessions reached"
+        );
+        assert!(matches!(
+            e,
+            PallasError::Admission {
+                reject: AdmissionReject::QuotaExceeded,
+                ..
+            }
+        ));
     }
 
     #[test]

@@ -9,8 +9,10 @@
 //!   rollout engine (parallel sampling + hierarchical load balancing),
 //!   training engine (agent-centric allocation + state swap), the Set/Get
 //!   heterogeneous object store, baselines, a discrete-event cluster
-//!   simulator for paper-scale experiments, and a PJRT runtime that
-//!   executes the AOT-compiled policy models for the real end-to-end run.
+//!   simulator for paper-scale experiments, a multi-tenant
+//!   Rollout-as-a-Service serving plane ([`serve`], DESIGN.md §13),
+//!   and a PJRT runtime that executes the AOT-compiled policy models
+//!   for the real end-to-end run.
 //!
 //! The engine's public API is the [`experiment::Experiment`] builder
 //! over pluggable framework [`policy`] objects (DESIGN.md §8); every
@@ -43,6 +45,7 @@ pub mod orchestrator;
 pub mod policy;
 pub mod rollout;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod store;
 pub mod training;

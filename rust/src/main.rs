@@ -16,6 +16,10 @@
 //!                the scenario sweep through the executor)
 //!   record     — capture a scenario's workload stream to a JSONL trace
 //!   replay     — re-run a recorded trace (bit-identical workloads)
+//!   serve      — multi-tenant Rollout-as-a-Service plane: admission
+//!                control, priority/fair/EDF queueing, per-session
+//!                JSONL streams; byte-identical for any --workers
+//!                (DESIGN.md §13)
 //!   inspect    — summarize the AOT artifact manifest
 //!   train      — real end-to-end MARL training via PJRT (see also
 //!                rust/examples/marl_train.rs)
@@ -60,6 +64,7 @@ fn main() {
         "scenarios" => cmd_scenarios(&args),
         "record" => cmd_record(&args),
         "replay" => cmd_replay(&args),
+        "serve" => cmd_serve(&args),
         "inspect" => cmd_inspect(&args),
         "train" => cmd_train(&args),
         _ => {
@@ -72,7 +77,7 @@ fn main() {
 }
 
 const HELP: &str = "flexmarl — rollout-training co-design for LLM-based MARL
-usage: flexmarl <simulate|table2|table3|table4|fig1|fig8|fig10|fig11|sweep|scenarios|record|replay|inspect|train> [options]
+usage: flexmarl <simulate|table2|table3|table4|fig1|fig8|fig10|fig11|sweep|scenarios|record|replay|serve|inspect|train> [options]
 options: --workload MA|CA  --framework <name>  --steps N  --seed N
          --micro-batch N  --delta N  --instances N  --json <path>  --quiet
          --scenario <preset>  (see `flexmarl scenarios`)
@@ -97,7 +102,14 @@ sweep:   framework × scenario × seed grid on the parallel executor;
          per completed cell (completion order)
 scenarios: list presets; --run executes the scenario sweep [--jobs N]
 record:  --scenario <preset> --steps N --seed N --out <path>
-replay:  --trace <path> [--framework <name>]";
+replay:  --trace <path> [--framework <name>]  (`--trace -` reads the
+         recorded stream from stdin via `simulate`)
+serve:   multi-tenant serving plane (DESIGN.md §13):
+         --mix steady|mixed|flash  --ticks N  --slots N  --queue-cap N
+         --seed N  --workers N     (workers change wall time only)
+         --out-dir D               (one session-<seq>.jsonl per session)
+         --json <path>             (deterministic load report —
+                                    byte-identical for any --workers)";
 
 fn build_cfg(args: &Args) -> ExperimentConfig {
     let wl = match args.get_or("workload", "MA").to_ascii_uppercase().as_str() {
@@ -695,7 +707,17 @@ fn cmd_replay(args: &Args) {
         eprintln!("replay needs --trace <path>");
         std::process::exit(2)
     });
-    let tr = flexmarl::workload::Trace::read_file(path).unwrap_or_else(|e| {
+    // `replay` reads the trace twice (header here, stream in the
+    // engine), which a pipe cannot replay — route stdin users to the
+    // single-read `simulate --trace -` path instead.
+    if path == "-" {
+        eprintln!(
+            "replay re-reads the trace and cannot consume stdin; \
+             use `flexmarl simulate --trace -` for piped streams"
+        );
+        std::process::exit(2);
+    }
+    let tr = flexmarl::workload::Trace::read_path(path).unwrap_or_else(|e| {
         eprintln!("replay failed: {e}");
         std::process::exit(1)
     });
@@ -737,6 +759,113 @@ fn cmd_replay(args: &Args) {
     let rep = run_eval(&cfg, &build_opts(args));
     print_report(&rep);
     emit_json(args, &rep.to_json());
+}
+
+/// Rollout-as-a-Service front-end (DESIGN.md §13). Everything on
+/// stdout, in `--json` and under `--out-dir` is a pure function of
+/// (mix, seed, ticks, slots, queue-cap): CI runs two `--workers`
+/// counts and byte-diffs all three. Wall-clock numbers go to stderr.
+fn cmd_serve(args: &Args) {
+    let mix = args.get_or("mix", "mixed");
+    let seed = args.get_u64("seed", 2048);
+    let mut cfg = flexmarl::serve::ServeConfig::mix(&mix, seed).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2)
+    });
+    cfg.ticks = args.get_u64("ticks", cfg.ticks);
+    cfg.slots = args.get_usize("slots", cfg.slots);
+    cfg.queue_cap = args.get_usize("queue-cap", cfg.queue_cap);
+    if let Some(t) = args.get("trace") {
+        // Every session replays the same recording; a pipe can only be
+        // read once, so stdin cannot back a multi-session plane.
+        if t == "-" {
+            eprintln!(
+                "serve replays the trace once per session; stdin ('-') cannot be \
+                 re-read — pass a file path"
+            );
+            std::process::exit(2);
+        }
+        cfg.trace = Some(t.to_string());
+    }
+    let workers = args.get_usize("workers", flexmarl::util::pool::default_jobs());
+    let plane = flexmarl::serve::ServePlane::new(cfg, workers).unwrap_or_else(|e| {
+        eprintln!("invalid serve config: {e}");
+        std::process::exit(2)
+    });
+    // Worker count is wall-clock-only state — stderr, like sweep's jobs.
+    eprintln!("serve: mix={mix} seed={seed} workers={workers}");
+    let out = plane.run().unwrap_or_else(|e| {
+        eprintln!("serve failed: {e}");
+        std::process::exit(1)
+    });
+    let r = &out.report;
+    if !args.has_flag("quiet") {
+        println!(
+            "serve[{}] seed {}: {} submitted | {} admitted | {} rejected \
+             (queue_full {}, quota {}) | {} expired | {} completed",
+            r.mix,
+            r.seed,
+            r.submitted,
+            r.admitted,
+            r.rejected_queue_full + r.rejected_quota,
+            r.rejected_queue_full,
+            r.rejected_quota,
+            r.expired,
+            r.completed
+        );
+        println!(
+            "  makespan {} ticks  {:.2} sessions/kilotick  queue depth max {} mean {:.2}",
+            r.makespan_ticks, r.sessions_per_kilotick, r.queue_depth_max, r.queue_depth_mean
+        );
+        println!(
+            "  wait p50 {:.0} p90 {:.0} p99 {:.0} ticks  step latency p50 {:.1}s p99 {:.1}s",
+            r.wait_ticks.p50(),
+            r.wait_ticks.p90(),
+            r.wait_ticks.p99(),
+            r.step_latency_s.p50(),
+            r.step_latency_s.p99()
+        );
+        for t in &r.tenants {
+            println!(
+                "  tenant {:<12} {:>5} submitted {:>5} completed {:>4} rejected \
+                 {:>4} expired  wait p99 {:.0}",
+                t.name,
+                t.submitted,
+                t.completed,
+                t.rejected_queue_full + t.rejected_quota,
+                t.expired,
+                t.wait_ticks.p99()
+            );
+        }
+    }
+    // Real throughput depends on --workers: stderr only.
+    eprintln!(
+        "serve: {} sessions in {:.2}s wall ({:.0} sessions/s)",
+        r.completed,
+        out.wall_s,
+        r.completed as f64 / out.wall_s.max(1e-9)
+    );
+    if let Some(dir) = args.get("out-dir") {
+        fn fail(path: &str, e: std::io::Error) -> ! {
+            let err = flexmarl::error::PallasError::File {
+                path: path.to_string(),
+                error: e.to_string(),
+            };
+            eprintln!("failed to write --out-dir: {err}");
+            std::process::exit(1)
+        }
+        if let Err(e) = std::fs::create_dir_all(dir) {
+            fail(dir, e);
+        }
+        for s in &out.sessions {
+            let path = format!("{dir}/session-{:05}.jsonl", s.seq);
+            if let Err(e) = std::fs::write(&path, &s.jsonl) {
+                fail(&path, e);
+            }
+        }
+        eprintln!("wrote {} session streams to {dir}/", out.sessions.len());
+    }
+    emit_json(args, &r.to_json());
 }
 
 fn cmd_inspect(args: &Args) {

@@ -313,6 +313,42 @@ impl Drop for JsonlSink {
     }
 }
 
+/// A shared in-memory byte sink: the serving plane's per-session
+/// capture target (DESIGN.md §13). Clone one half into a
+/// `JsonlSink::new(Box::new(buf.clone()))` handed to the session, keep
+/// the other half, and read the finished session's exact JSONL bytes
+/// back with [`CaptureBuffer::contents`] — the stream a `--emit jsonl`
+/// run of the same config would have written to stdout, byte for byte.
+#[derive(Debug, Clone, Default)]
+pub struct CaptureBuffer {
+    bytes: std::sync::Arc<std::sync::Mutex<Vec<u8>>>,
+}
+
+impl CaptureBuffer {
+    pub fn new() -> CaptureBuffer {
+        CaptureBuffer::default()
+    }
+
+    /// Snapshot of everything written so far.
+    pub fn contents(&self) -> Vec<u8> {
+        self.bytes.lock().expect("capture buffer poisoned").clone()
+    }
+}
+
+impl Write for CaptureBuffer {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.bytes
+            .lock()
+            .expect("capture buffer poisoned")
+            .extend_from_slice(buf);
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
 /// Shared state behind a [`TraceSink`]/[`TraceHandle`] pair.
 struct TraceState {
     workload: String,
@@ -600,5 +636,20 @@ mod tests {
         // sink never attempts another write (Broken would not mind, but
         // a half-working writer would interleave out-of-order lines).
         assert_eq!(sink.on_event(1.0, &fin), ControlFlow::Stop);
+    }
+
+    #[test]
+    fn capture_buffer_collects_jsonl_lines_through_a_clone() {
+        // Serving-plane capture: the sink writes through one clone, the
+        // plane reads back through the other — same underlying bytes.
+        let buf = CaptureBuffer::new();
+        let mut sink = JsonlSink::new(Box::new(buf.clone()));
+        let r = report(3.0);
+        sink.on_event(1.0, &EngineEvent::StepFinished { step: 0, report: &r });
+        sink.on_event(2.0, &EngineEvent::StepFinished { step: 1, report: &r });
+        drop(sink);
+        let text = String::from_utf8(buf.contents()).unwrap();
+        let want = format!("{}\n", r.to_json().to_string());
+        assert_eq!(text, format!("{want}{want}"));
     }
 }

@@ -27,8 +27,8 @@ pub mod session;
 pub mod simloop;
 
 pub use events::{
-    BudgetSink, ControlFlow, EngineEvent, EventSink, JsonlSink, NullSink, ProgressSink,
-    TraceHandle, TraceSink, WallClockSink,
+    BudgetSink, CaptureBuffer, ControlFlow, EngineEvent, EventSink, JsonlSink, NullSink,
+    ProgressSink, TraceHandle, TraceSink, WallClockSink,
 };
 pub use session::Session;
 #[allow(deprecated)] // re-exported for back-compat until the panicking wrapper is removed

@@ -49,6 +49,14 @@ pub struct Session {
     reports: Vec<StepReport>,
 }
 
+// The serving plane (DESIGN.md §13) ships whole sessions across its
+// worker threads; pin the capability at the definition so a future
+// non-Send field fails here, not in a distant ServePlane bound.
+const _: () = {
+    const fn assert_send<T: Send>() {}
+    assert_send::<Session>();
+};
+
 impl Session {
     pub(crate) fn from_engine(engine: Engine) -> Session {
         Session {

@@ -320,8 +320,9 @@ pub fn resolve_workload(
     cfg: &ExperimentConfig,
 ) -> Result<(ExperimentConfig, Vec<StepWorkload>), PallasError> {
     let mut base = cfg.workload.clone();
+    // "-" reads the trace from stdin (the CLI's piped-feed convention).
     let trace = match &base.trace {
-        Some(path) => Some((path.clone(), Trace::read_file(path)?)),
+        Some(path) => Some((path.clone(), Trace::read_path(path)?)),
         None => None,
     };
     if let Some((_, tr)) = &trace {
@@ -367,7 +368,9 @@ pub fn resolve_workload_source(
     let mut base = cfg.workload.clone();
     let trace_path = base.trace.clone();
     if let Some(path) = trace_path {
-        let reader = TraceReader::open(&path)?;
+        // "-" streams step lines from stdin as they arrive: the lazy
+        // plane driven by a live feed (a blocking pipe paces the run).
+        let reader = TraceReader::open_path(&path)?;
         // The trace is authoritative about what it recorded (see
         // `resolve_workload`): shape from its header's scenario.
         base.scenario = reader.scenario().to_string();

@@ -1,0 +1,460 @@
+//! Rollout-as-a-Service serving plane (DESIGN.md §13).
+//!
+//! A [`ServePlane`] multiplexes many concurrent simulation sessions —
+//! each a complete [`crate::experiment::Experiment`] run — over a pool
+//! of long-lived workers ([`crate::util::pool::WorkerPool`]), with
+//! admission control, per-tenant quotas, priority classes, weighted
+//! fair scheduling, and EDF dispatch.
+//!
+//! # The determinism contract
+//!
+//! Everything observable is byte-reproducible for a fixed seed, for
+//! **any** worker count:
+//!
+//! * *Scheduling* happens in virtual ticks, entirely before execution
+//!   ([`sched::plan`]): admissions, rejections, expiries, dispatch
+//!   order and per-session start/finish ticks are a pure function of
+//!   the [`ServeConfig`].
+//! * *Execution* only realizes the plan: each admitted session is a
+//!   pure function of its derived config and writes its JSONL stream
+//!   into a pre-assigned slot ([`crate::orchestrator::CaptureBuffer`]);
+//!   aggregation reads slots in arrival order. Thread scheduling can
+//!   reorder *work*, never *output*.
+//! * Per-session bytes equal the same config run standalone through
+//!   [`crate::experiment::Experiment`] with a
+//!   [`crate::orchestrator::JsonlSink`] — pinned in `tests/serve.rs`.
+//!
+//! Wall-clock numbers (worker speedup, real sessions/sec) exist only in
+//! [`ServeOutcome::wall_s`] and the bench group — never in the byte-
+//! diffed [`report::LoadReport`].
+
+pub mod report;
+pub mod sched;
+
+use crate::config::{ExperimentConfig, Framework, WorkloadConfig};
+use crate::error::PallasError;
+use crate::experiment::Experiment;
+use crate::orchestrator::{CaptureBuffer, JsonlSink, SimOptions};
+use crate::util::pool::WorkerPool;
+use crate::workload::arrival::ArrivalProcess;
+use report::LoadReport;
+use sched::{Disposition, Request, Schedule};
+use std::sync::{Arc, Mutex};
+
+/// One tenant of the serving plane: an arrival stream plus its service
+/// class and session shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantSpec {
+    pub name: String,
+    /// Open-loop arrival process (arrivals per virtual tick).
+    pub arrivals: ArrivalProcess,
+    /// Strict priority class; lower runs first (0 = most urgent).
+    pub priority: u8,
+    /// Fair-share weight inside the class (stride scheduling).
+    pub weight: u32,
+    /// Max outstanding (queued + in-service) sessions.
+    pub quota: usize,
+    /// Latest start, in ticks after arrival; `None` never expires.
+    pub deadline_ticks: Option<u64>,
+    /// Traffic-shape scenario each of this tenant's sessions simulates.
+    pub scenario: String,
+    /// MARL steps per session.
+    pub steps: usize,
+}
+
+/// Full configuration of one serve run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeConfig {
+    pub seed: u64,
+    /// Open-loop arrival window, in virtual ticks (the plane then
+    /// drains; the schedule's makespan can exceed this).
+    pub ticks: u64,
+    /// Virtual service concurrency: sessions in service at once. This
+    /// is *scheduling* state — physical workers are a [`ServePlane`]
+    /// parameter and never affect any output byte.
+    pub slots: usize,
+    /// Intake queue capacity (the admission bound).
+    pub queue_cap: usize,
+    /// Virtual ticks one MARL step occupies a slot for.
+    pub service_ticks_per_step: u64,
+    pub tenants: Vec<TenantSpec>,
+    /// Session workload shape (default [`WorkloadConfig::tiny`]).
+    pub base: WorkloadConfig,
+    /// Optional recorded trace every session replays instead of
+    /// generating its workload.
+    pub trace: Option<String>,
+    /// Mix name, echoed into the load report.
+    pub mix: String,
+}
+
+/// Named tenant mixes for the CLI, CI and benches.
+pub const MIX_NAMES: &[&str] = &["steady", "mixed", "flash"];
+
+fn tenant(
+    name: &str,
+    arrivals: ArrivalProcess,
+    priority: u8,
+    weight: u32,
+    quota: usize,
+    deadline_ticks: Option<u64>,
+    scenario: &str,
+    steps: usize,
+) -> TenantSpec {
+    TenantSpec {
+        name: name.to_string(),
+        arrivals,
+        priority,
+        weight,
+        quota,
+        deadline_ticks,
+        scenario: scenario.to_string(),
+        steps,
+    }
+}
+
+impl ServeConfig {
+    /// Build a named mix (see [`MIX_NAMES`]). All mixes use
+    /// [`WorkloadConfig::tiny`] sessions so hundreds fit in a CI run;
+    /// their tenant sets are sized so a default run exercises every
+    /// admission outcome (accepts, both reject kinds, expiries).
+    pub fn mix(name: &str, seed: u64) -> Result<ServeConfig, PallasError> {
+        let tenants = match name {
+            "steady" => vec![
+                tenant("interactive", ArrivalProcess::poisson(1.0), 0, 2, 8, None, "baseline", 1),
+                tenant("batch", ArrivalProcess::poisson(0.8), 1, 1, 6, None, "uniform", 2),
+            ],
+            "mixed" => vec![
+                tenant(
+                    "interactive",
+                    ArrivalProcess::poisson(1.0),
+                    0,
+                    4,
+                    6,
+                    Some(6),
+                    "baseline",
+                    1,
+                ),
+                tenant("batch", ArrivalProcess::poisson(1.5), 1, 1, 4, None, "core_skew", 2),
+                tenant(
+                    "diurnal",
+                    ArrivalProcess::poisson(0.8).with_diurnal(1.5, 32),
+                    1,
+                    2,
+                    4,
+                    Some(24),
+                    "bursty",
+                    1,
+                ),
+            ],
+            "flash" => vec![
+                tenant(
+                    "interactive",
+                    ArrivalProcess::poisson(0.8),
+                    0,
+                    4,
+                    6,
+                    Some(6),
+                    "baseline",
+                    1,
+                ),
+                // Quota larger than the intake queue: a flash crowd
+                // can slam the shared queue itself, so this mix
+                // exercises queue-full rejects, not just quota ones.
+                tenant(
+                    "burst",
+                    ArrivalProcess::poisson(0.6).with_flash(0.15, 4.0, 3),
+                    1,
+                    2,
+                    20,
+                    Some(12),
+                    "bursty",
+                    1,
+                ),
+                tenant("batch", ArrivalProcess::poisson(1.2), 2, 1, 3, None, "uniform", 2),
+            ],
+            other => {
+                return Err(PallasError::InvalidConfig(format!(
+                    "unknown serve mix '{other}' (available: {})",
+                    MIX_NAMES.join(", ")
+                )))
+            }
+        };
+        Ok(ServeConfig {
+            seed,
+            ticks: 200,
+            slots: 4,
+            queue_cap: 16,
+            service_ticks_per_step: 2,
+            tenants,
+            base: WorkloadConfig::tiny(),
+            trace: None,
+            mix: name.to_string(),
+        })
+    }
+
+    pub fn validate(&self) -> Result<(), PallasError> {
+        let bad = |m: String| Err(PallasError::InvalidConfig(m));
+        if self.tenants.is_empty() {
+            return bad("serve: no tenants".into());
+        }
+        if self.ticks == 0 || self.slots == 0 || self.queue_cap == 0 {
+            return bad(format!(
+                "serve: ticks ({}), slots ({}) and queue_cap ({}) must be positive",
+                self.ticks, self.slots, self.queue_cap
+            ));
+        }
+        if self.service_ticks_per_step == 0 {
+            return bad("serve: service_ticks_per_step must be positive".into());
+        }
+        let mut names: Vec<&str> = self.tenants.iter().map(|t| t.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        if names.len() != self.tenants.len() {
+            return bad("serve: tenant names must be unique".into());
+        }
+        for t in &self.tenants {
+            if t.name.is_empty() {
+                return bad("serve: tenant name must be non-empty".into());
+            }
+            if t.weight == 0 || t.quota == 0 || t.steps == 0 {
+                return bad(format!(
+                    "serve: tenant '{}': weight ({}), quota ({}) and steps ({}) must be positive",
+                    t.name, t.weight, t.quota, t.steps
+                ));
+            }
+            if crate::workload::scenario::by_name(&t.scenario).is_none() {
+                return Err(PallasError::UnknownScenario(t.scenario.clone()));
+            }
+        }
+        // The shared session shape must itself be a valid experiment.
+        ExperimentConfig::new(self.base.clone(), Framework::flexmarl()).validate()
+    }
+
+    /// The standalone config for one admitted session — exactly what a
+    /// user would hand to [`Experiment`] directly. The plane's
+    /// byte-identity contract is a corollary of sessions being this
+    /// pure function of the request.
+    pub fn session_config(&self, req: &Request) -> ExperimentConfig {
+        let mut wl = self.base.clone();
+        wl.scenario = self.tenants[req.tenant].scenario.clone();
+        wl.trace = self.trace.clone();
+        let mut cfg = ExperimentConfig::new(wl, Framework::flexmarl());
+        cfg.steps = req.steps;
+        cfg.seed = req.seed;
+        cfg
+    }
+}
+
+/// One completed session's captured output.
+#[derive(Debug, Clone)]
+pub struct SessionOutput {
+    pub seq: u64,
+    pub tenant: String,
+    /// Engine seed — rerun [`ServeConfig::session_config`] standalone
+    /// with this to reproduce `jsonl` byte-for-byte.
+    pub seed: u64,
+    pub start_tick: u64,
+    pub finish_tick: u64,
+    /// The session's JSONL stream: one
+    /// [`crate::metrics::StepReport::to_json`] line per step.
+    pub jsonl: Vec<u8>,
+}
+
+/// Everything one serve run produces.
+#[derive(Debug, Clone)]
+pub struct ServeOutcome {
+    /// The deterministic plan (every request's fate).
+    pub schedule: Schedule,
+    /// Completed sessions in arrival order.
+    pub sessions: Vec<SessionOutput>,
+    /// The deterministic load report (byte-diffed in CI).
+    pub report: LoadReport,
+    /// Wall-clock execution time — stderr/bench material only; never
+    /// part of the report.
+    pub wall_s: f64,
+}
+
+/// The serving plane: a validated config plus a physical worker count.
+pub struct ServePlane {
+    cfg: ServeConfig,
+    workers: usize,
+}
+
+impl ServePlane {
+    /// Validate `cfg` and bind it to `workers.max(1)` execution
+    /// threads. Workers affect wall time only.
+    pub fn new(cfg: ServeConfig, workers: usize) -> Result<ServePlane, PallasError> {
+        cfg.validate()?;
+        Ok(ServePlane {
+            cfg,
+            workers: workers.max(1),
+        })
+    }
+
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run the plane: compute the schedule, execute every admitted
+    /// session on the worker pool, aggregate in arrival order.
+    pub fn run(&self) -> Result<ServeOutcome, PallasError> {
+        let schedule = sched::plan(&self.cfg);
+        let jobs: Vec<&sched::Decision> = schedule
+            .decisions
+            .iter()
+            .filter(|d| matches!(d.disposition, Disposition::Completed { .. }))
+            .collect();
+
+        // One pre-assigned slot per session; workers write their own
+        // slot, the aggregation loop below reads them in arrival order
+        // — the WorkerPool determinism discipline.
+        type SlotValue = Result<(Vec<u8>, Vec<f64>), PallasError>;
+        let slots: Arc<Vec<Mutex<Option<SlotValue>>>> =
+            Arc::new(jobs.iter().map(|_| Mutex::new(None)).collect());
+        let t0 = std::time::Instant::now();
+        {
+            let pool = WorkerPool::new(self.workers);
+            for (i, d) in jobs.iter().enumerate() {
+                let cfg = self.cfg.session_config(&d.request);
+                let slots = Arc::clone(&slots);
+                pool.submit(move || {
+                    *slots[i].lock().expect("serve slot poisoned") = Some(run_session(cfg));
+                });
+            }
+            pool.wait_idle();
+        }
+        let wall_s = t0.elapsed().as_secs_f64();
+
+        let mut sessions = Vec::with_capacity(jobs.len());
+        let mut step_latencies = Vec::new();
+        for (i, d) in jobs.iter().enumerate() {
+            let res = slots[i]
+                .lock()
+                .expect("serve slot poisoned")
+                .take()
+                .expect("serve: worker skipped a session slot");
+            let (jsonl, lats) = res?;
+            step_latencies.extend(lats);
+            let Disposition::Completed {
+                start_tick,
+                finish_tick,
+            } = d.disposition
+            else {
+                unreachable!("jobs holds only completed dispositions")
+            };
+            sessions.push(SessionOutput {
+                seq: d.request.seq,
+                tenant: self.cfg.tenants[d.request.tenant].name.clone(),
+                seed: d.request.seed,
+                start_tick,
+                finish_tick,
+                jsonl,
+            });
+        }
+        let report = LoadReport::build(&self.cfg, &schedule, &step_latencies);
+        Ok(ServeOutcome {
+            schedule,
+            sessions,
+            report,
+            wall_s,
+        })
+    }
+}
+
+/// Execute one admitted session exactly as a standalone run would:
+/// fresh engine, default options, a [`JsonlSink`] capturing the
+/// per-step stream. Returns the captured bytes plus each step's
+/// virtual end-to-end latency (for the report's quantiles).
+fn run_session(cfg: ExperimentConfig) -> Result<(Vec<u8>, Vec<f64>), PallasError> {
+    let buf = CaptureBuffer::new();
+    let outcome = Experiment::new(cfg)
+        .options(SimOptions::default())
+        .sink(Box::new(JsonlSink::new(Box::new(buf.clone()))))
+        .build()?
+        .try_run()?;
+    let lats = outcome.reports.iter().map(|r| r.e2e_s).collect();
+    Ok((buf.contents(), lats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mixes_validate_and_unknown_is_typed() {
+        for name in MIX_NAMES {
+            ServeConfig::mix(name, 7).unwrap().validate().unwrap();
+        }
+        let e = ServeConfig::mix("warp", 7).unwrap_err();
+        assert!(e.to_string().contains("unknown serve mix 'warp'"));
+    }
+
+    #[test]
+    fn plan_is_deterministic_and_covers_every_request() {
+        let cfg = ServeConfig::mix("mixed", 11).unwrap();
+        let a = sched::plan(&cfg);
+        let b = sched::plan(&cfg);
+        assert_eq!(a, b);
+        // seq-complete: every arrival 0..n appears exactly once.
+        for (i, d) in a.decisions.iter().enumerate() {
+            assert_eq!(d.request.seq, i as u64);
+        }
+        assert!(!a.decisions.is_empty());
+    }
+
+    #[test]
+    fn default_mixes_exercise_every_admission_outcome() {
+        for name in MIX_NAMES {
+            let cfg = ServeConfig::mix(name, 2048).unwrap();
+            let plan = sched::plan(&cfg);
+            let count = |want: fn(&Disposition) -> bool| {
+                plan.decisions.iter().filter(|d| want(&d.disposition)).count()
+            };
+            let completed = count(|d| matches!(d, Disposition::Completed { .. }));
+            let rejected = count(|d| {
+                matches!(d, Disposition::RejectedQueueFull | Disposition::RejectedQuota)
+            });
+            assert!(completed > 0, "{name}: nothing completed");
+            assert!(rejected > 0, "{name}: admission control never engaged");
+        }
+    }
+
+    #[test]
+    fn expired_requests_are_counted_not_dropped() {
+        // Single slow tenant with an immediate deadline and one slot:
+        // almost everything queued must expire, and every arrival still
+        // has a decision.
+        let mut cfg = ServeConfig::mix("steady", 5).unwrap();
+        cfg.ticks = 20;
+        cfg.slots = 1;
+        cfg.tenants.truncate(1);
+        cfg.tenants[0].deadline_ticks = Some(0);
+        cfg.tenants[0].quota = 100;
+        let plan = sched::plan(&cfg);
+        let expired = plan
+            .decisions
+            .iter()
+            .filter(|d| d.disposition == Disposition::Expired)
+            .count();
+        assert!(expired > 0, "no expiries under an immediate deadline");
+        for (i, d) in plan.decisions.iter().enumerate() {
+            assert_eq!(d.request.seq, i as u64, "an arrival lost its decision");
+        }
+    }
+
+    #[test]
+    fn small_plane_runs_end_to_end() {
+        let mut cfg = ServeConfig::mix("steady", 9).unwrap();
+        cfg.ticks = 6;
+        let out = ServePlane::new(cfg, 2).unwrap().run().unwrap();
+        assert_eq!(out.sessions.len() as u64, out.report.completed);
+        assert!(out.report.completed > 0);
+        for s in &out.sessions {
+            assert!(!s.jsonl.is_empty(), "session {} captured no bytes", s.seq);
+        }
+    }
+}

@@ -1,0 +1,213 @@
+//! The plane-level load report (DESIGN.md §13).
+//!
+//! Everything in a [`LoadReport`] is a pure function of the
+//! [`ServeConfig`](super::ServeConfig) — counters and gauges come from
+//! the virtual-tick [`Schedule`], latency quantiles from the sessions'
+//! *virtual* step latencies — so its JSON is byte-identical for any
+//! worker count and CI diffs it directly. Wall-clock numbers live in
+//! [`ServeOutcome::wall_s`](super::ServeOutcome::wall_s) and the bench
+//! group, never here.
+
+use super::sched::{Disposition, Schedule};
+use super::ServeConfig;
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+/// Per-tenant admission/service counters plus queue-wait quantiles.
+#[derive(Debug, Clone, Default)]
+pub struct TenantReport {
+    pub name: String,
+    /// Requests that arrived (every fate included).
+    pub submitted: u64,
+    /// Requests that entered the intake queue.
+    pub admitted: u64,
+    pub rejected_queue_full: u64,
+    pub rejected_quota: u64,
+    /// Admitted but start deadline passed while queued.
+    pub expired: u64,
+    /// Dispatched and run to completion.
+    pub completed: u64,
+    /// Queue wait (dispatch tick − arrival tick) of completed sessions.
+    pub wait_ticks: Summary,
+}
+
+impl TenantReport {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("tenant", Json::str(self.name.clone())),
+            ("submitted", Json::num(self.submitted as f64)),
+            ("admitted", Json::num(self.admitted as f64)),
+            ("rejected_queue_full", Json::num(self.rejected_queue_full as f64)),
+            ("rejected_quota", Json::num(self.rejected_quota as f64)),
+            ("expired", Json::num(self.expired as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("wait_ticks", summary_json(&self.wait_ticks)),
+        ])
+    }
+}
+
+/// The whole plane's deterministic counters, gauges and quantiles.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    pub mix: String,
+    pub seed: u64,
+    pub ticks: u64,
+    pub slots: usize,
+    pub queue_cap: usize,
+    pub submitted: u64,
+    pub admitted: u64,
+    pub rejected_queue_full: u64,
+    pub rejected_quota: u64,
+    pub expired: u64,
+    pub completed: u64,
+    /// Tick the last session released its slot.
+    pub makespan_ticks: u64,
+    /// Deterministic throughput: completed sessions per 1000 virtual
+    /// ticks of makespan.
+    pub sessions_per_kilotick: f64,
+    pub queue_depth_max: usize,
+    pub queue_depth_mean: f64,
+    /// Queue wait of completed sessions, plane-wide.
+    pub wait_ticks: Summary,
+    /// Per-step virtual end-to-end latency across completed sessions,
+    /// in simulated seconds (p50/p99 are the serve SLO numbers).
+    pub step_latency_s: Summary,
+    pub tenants: Vec<TenantReport>,
+}
+
+impl LoadReport {
+    /// Aggregate `schedule` (plus the arrival-ordered virtual step
+    /// latencies of completed sessions) into the report.
+    pub fn build(cfg: &ServeConfig, schedule: &Schedule, step_latencies: &[f64]) -> LoadReport {
+        let mut tenants: Vec<TenantReport> = cfg
+            .tenants
+            .iter()
+            .map(|t| TenantReport {
+                name: t.name.clone(),
+                ..TenantReport::default()
+            })
+            .collect();
+        let mut wait_ticks = Summary::new();
+        for d in &schedule.decisions {
+            let t = &mut tenants[d.request.tenant];
+            t.submitted += 1;
+            match d.disposition {
+                Disposition::RejectedQueueFull => t.rejected_queue_full += 1,
+                Disposition::RejectedQuota => t.rejected_quota += 1,
+                Disposition::Expired => {
+                    t.admitted += 1;
+                    t.expired += 1;
+                }
+                Disposition::Completed { start_tick, .. } => {
+                    t.admitted += 1;
+                    t.completed += 1;
+                    let wait = (start_tick - d.request.arrival_tick) as f64;
+                    t.wait_ticks.add(wait);
+                    wait_ticks.add(wait);
+                }
+            }
+        }
+        let sum = |f: fn(&TenantReport) -> u64| tenants.iter().map(f).sum::<u64>();
+        let completed = sum(|t| t.completed);
+        let mut step_latency_s = Summary::new();
+        for &l in step_latencies {
+            step_latency_s.add(l);
+        }
+        LoadReport {
+            mix: cfg.mix.clone(),
+            seed: cfg.seed,
+            ticks: cfg.ticks,
+            slots: cfg.slots,
+            queue_cap: cfg.queue_cap,
+            submitted: sum(|t| t.submitted),
+            admitted: sum(|t| t.admitted),
+            rejected_queue_full: sum(|t| t.rejected_queue_full),
+            rejected_quota: sum(|t| t.rejected_quota),
+            expired: sum(|t| t.expired),
+            completed,
+            makespan_ticks: schedule.makespan_ticks,
+            sessions_per_kilotick: completed as f64 * 1000.0
+                / (schedule.makespan_ticks.max(1)) as f64,
+            queue_depth_max: schedule.queue_depth_max,
+            queue_depth_mean: schedule.queue_depth_mean(),
+            wait_ticks,
+            step_latency_s,
+            tenants,
+        }
+    }
+
+    /// The machine-readable load report — every field deterministic.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("mix", Json::str(self.mix.clone())),
+            ("seed", Json::num(self.seed as f64)),
+            ("ticks", Json::num(self.ticks as f64)),
+            ("slots", Json::num(self.slots as f64)),
+            ("queue_cap", Json::num(self.queue_cap as f64)),
+            ("submitted", Json::num(self.submitted as f64)),
+            ("admitted", Json::num(self.admitted as f64)),
+            ("rejected_queue_full", Json::num(self.rejected_queue_full as f64)),
+            ("rejected_quota", Json::num(self.rejected_quota as f64)),
+            ("expired", Json::num(self.expired as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("makespan_ticks", Json::num(self.makespan_ticks as f64)),
+            ("sessions_per_kilotick", Json::num(self.sessions_per_kilotick)),
+            ("queue_depth_max", Json::num(self.queue_depth_max as f64)),
+            ("queue_depth_mean", Json::num(self.queue_depth_mean)),
+            ("wait_ticks", summary_json(&self.wait_ticks)),
+            ("step_latency_s", summary_json(&self.step_latency_s)),
+            ("tenants", Json::arr(self.tenants.iter().map(|t| t.to_json()))),
+        ])
+    }
+}
+
+/// p50/p90/p99 + moments of a [`Summary`], as deterministic JSON.
+fn summary_json(s: &Summary) -> Json {
+    Json::obj(vec![
+        ("count", Json::num(s.count() as f64)),
+        ("mean", Json::num(s.mean())),
+        ("p50", Json::num(s.p50())),
+        ("p90", Json::num(s.p90())),
+        ("p99", Json::num(s.p99())),
+        ("max", Json::num(s.max())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::sched;
+
+    #[test]
+    fn report_counters_are_complete_and_consistent() {
+        let cfg = ServeConfig::mix("mixed", 3).unwrap();
+        let schedule = sched::plan(&cfg);
+        let report = LoadReport::build(&cfg, &schedule, &[1.0, 2.0]);
+        assert_eq!(report.submitted as usize, schedule.decisions.len());
+        assert_eq!(
+            report.admitted,
+            report.expired + report.completed,
+            "admitted must split exactly into expired + completed"
+        );
+        assert_eq!(
+            report.submitted,
+            report.admitted + report.rejected_queue_full + report.rejected_quota,
+            "every request needs exactly one fate"
+        );
+        let tenant_sum: u64 = report.tenants.iter().map(|t| t.submitted).sum();
+        assert_eq!(tenant_sum, report.submitted);
+        assert_eq!(report.step_latency_s.count(), 2);
+    }
+
+    #[test]
+    fn report_json_is_deterministic() {
+        let cfg = ServeConfig::mix("flash", 17).unwrap();
+        let schedule = sched::plan(&cfg);
+        let lats = [0.5, 0.25, 4.0];
+        let a = LoadReport::build(&cfg, &schedule, &lats).to_json().to_pretty();
+        let b = LoadReport::build(&cfg, &sched::plan(&cfg), &lats).to_json().to_pretty();
+        assert_eq!(a, b);
+        assert!(a.contains("sessions_per_kilotick"));
+        assert!(a.contains("\"p99\""));
+    }
+}

@@ -1,0 +1,464 @@
+//! Deterministic admission + dispatch scheduling (DESIGN.md §13).
+//!
+//! The whole serving schedule — which requests are admitted, rejected,
+//! expired, and when each admitted session starts and finishes — is
+//! computed here in *virtual ticks*, before any session executes. A
+//! session's virtual service time is a pure function of its request
+//! (steps × `service_ticks_per_step`), so the plan is a pure function
+//! of the [`ServeConfig`]: byte-identical for any physical worker
+//! count, which is the plane's determinism contract.
+//!
+//! Dispatch order inside the plan is a strict hierarchy:
+//!
+//! 1. **priority class** — lower value runs first, strictly;
+//! 2. **weighted fair share** across tenants inside the class — stride
+//!    scheduling (lowest pass wins, ties to the lowest tenant index);
+//! 3. **EDF** within the winning tenant — earliest start deadline,
+//!    `None` last;
+//! 4. **arrival sequence** — the seeded stable tie-break.
+//!
+//! A queued request whose start deadline passes is *expired*: removed
+//! from the queue and counted, never silently dropped.
+
+use super::ServeConfig;
+use crate::error::{AdmissionReject, PallasError};
+use crate::exec::derive_seed;
+use crate::workload::arrival::tenant_seed;
+
+/// Stride-scheduling pass increment for weight 1; a tenant with weight
+/// `w` advances by `STRIDE_SCALE / w` per dispatch, so dispatch counts
+/// converge to the weight ratio.
+pub(crate) const STRIDE_SCALE: u64 = 1 << 20;
+
+/// One session request flowing through the plane.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Request {
+    /// Global arrival sequence number — the stable tie-break and the
+    /// per-session output key (`session-<seq>.jsonl`).
+    pub seq: u64,
+    /// Index into [`ServeConfig::tenants`].
+    pub tenant: usize,
+    pub arrival_tick: u64,
+    /// Latest tick at which the session may *start*; `None` never
+    /// expires.
+    pub deadline_tick: Option<u64>,
+    /// Strict class (from the tenant spec); lower runs first.
+    pub priority: u8,
+    /// Virtual ticks the session occupies a slot for.
+    pub service_ticks: u64,
+    /// MARL steps the session simulates.
+    pub steps: usize,
+    /// Engine seed for the session — what a standalone
+    /// [`crate::experiment::Experiment`] run must use to reproduce its
+    /// bytes.
+    pub seed: u64,
+}
+
+/// Final fate of a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Disposition {
+    /// Turned away at intake: the bounded queue was full.
+    RejectedQueueFull,
+    /// Turned away at intake: the tenant's outstanding-session quota
+    /// was reached.
+    RejectedQuota,
+    /// Admitted but its start deadline passed while queued.
+    Expired,
+    /// Dispatched into a slot at `start_tick`, releasing it at
+    /// `finish_tick`.
+    Completed { start_tick: u64, finish_tick: u64 },
+}
+
+/// A request plus its fate — the unit the load report aggregates.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Decision {
+    pub request: Request,
+    pub disposition: Disposition,
+}
+
+/// The complete deterministic plan for one serve run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Schedule {
+    /// Every request that ever arrived, in arrival (`seq`) order.
+    pub decisions: Vec<Decision>,
+    /// Tick at which the last admitted session released its slot.
+    pub makespan_ticks: u64,
+    /// Intake-depth gauges, sampled once per tick after dispatch.
+    pub queue_depth_max: usize,
+    pub queue_depth_sum: u64,
+    pub ticks_observed: u64,
+}
+
+impl Schedule {
+    /// Mean intake depth over the run.
+    pub fn queue_depth_mean(&self) -> f64 {
+        if self.ticks_observed == 0 {
+            0.0
+        } else {
+            self.queue_depth_sum as f64 / self.ticks_observed as f64
+        }
+    }
+}
+
+/// Bounded intake queue with typed admission control.
+///
+/// [`Intake::offer`] is the admission decision: per-tenant quota first
+/// (a hog must not consume shared queue space it could never use),
+/// then global capacity — both rejections are typed
+/// [`PallasError::Admission`] values, handed back with the request so
+/// the caller can record its disposition.
+pub struct Intake {
+    cap: usize,
+    queued: Vec<Request>,
+}
+
+impl Intake {
+    pub fn new(cap: usize) -> Intake {
+        Intake {
+            cap: cap.max(1),
+            queued: Vec::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.queued.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queued.is_empty()
+    }
+
+    /// Admit or reject `req`. `outstanding` is the tenant's queued +
+    /// running session count; `quota` its cap. On `Err` the request
+    /// rides back with the typed rejection.
+    pub fn offer(
+        &mut self,
+        req: Request,
+        tenant_name: &str,
+        outstanding: usize,
+        quota: usize,
+    ) -> Result<(), (Request, PallasError)> {
+        if outstanding >= quota {
+            let e = PallasError::Admission {
+                tenant: tenant_name.to_string(),
+                request: req.seq,
+                reject: AdmissionReject::QuotaExceeded,
+                limit: quota,
+            };
+            return Err((req, e));
+        }
+        if self.queued.len() >= self.cap {
+            let e = PallasError::Admission {
+                tenant: tenant_name.to_string(),
+                request: req.seq,
+                reject: AdmissionReject::QueueFull,
+                limit: self.cap,
+            };
+            return Err((req, e));
+        }
+        self.queued.push(req);
+        Ok(())
+    }
+
+    /// Remove and return every queued request whose start deadline has
+    /// passed (`deadline_tick < now`) — the caller counts them as
+    /// expired.
+    pub fn drain_expired(&mut self, now: u64) -> Vec<Request> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.queued.len() {
+            if matches!(self.queued[i].deadline_tick, Some(d) if d < now) {
+                out.push(self.queued.remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        out
+    }
+
+    /// Pick the next request to dispatch under the priority →
+    /// fair-share → EDF → seq hierarchy, advancing the winner tenant's
+    /// stride pass. `None` when the queue is empty.
+    pub fn take_next(&mut self, pass: &mut [u64], strides: &[u64]) -> Option<Request> {
+        let top = self.queued.iter().map(|r| r.priority).min()?;
+        // Fair share inside the class: the queued tenant with the
+        // lowest (pass, index).
+        let mut tenant: Option<usize> = None;
+        for r in &self.queued {
+            if r.priority != top {
+                continue;
+            }
+            match tenant {
+                None => tenant = Some(r.tenant),
+                Some(best) if (pass[r.tenant], r.tenant) < (pass[best], best) => {
+                    tenant = Some(r.tenant)
+                }
+                Some(_) => {}
+            }
+        }
+        let tenant = tenant?;
+        // EDF within the tenant: earliest start deadline, ties to the
+        // lowest arrival sequence.
+        let mut best: Option<usize> = None;
+        for (i, r) in self.queued.iter().enumerate() {
+            if r.tenant != tenant || r.priority != top {
+                continue;
+            }
+            let key = (r.deadline_tick.unwrap_or(u64::MAX), r.seq);
+            match best {
+                None => best = Some(i),
+                Some(b) => {
+                    let bk = (
+                        self.queued[b].deadline_tick.unwrap_or(u64::MAX),
+                        self.queued[b].seq,
+                    );
+                    if key < bk {
+                        best = Some(i);
+                    }
+                }
+            }
+        }
+        let i = best?;
+        pass[tenant] = pass[tenant].wrapping_add(strides[tenant]);
+        Some(self.queued.remove(i))
+    }
+}
+
+/// Compute the complete serving schedule for `cfg` — see the module
+/// docs for the per-tick phase order (completions → expiry → arrivals
+/// → dispatch → gauges).
+pub fn plan(cfg: &ServeConfig) -> Schedule {
+    let n_tenants = cfg.tenants.len();
+    let strides: Vec<u64> = cfg
+        .tenants
+        .iter()
+        .map(|t| STRIDE_SCALE / u64::from(t.weight.max(1)))
+        .collect();
+    // Standard stride scheduling: a tenant's first dispatch costs one
+    // full stride, so lighter weights start further back.
+    let mut pass: Vec<u64> = strides.clone();
+    let mut outstanding = vec![0usize; n_tenants];
+    let seeds: Vec<u64> = (0..n_tenants)
+        .map(|i| tenant_seed(cfg.seed, i as u64))
+        .collect();
+
+    let mut intake = Intake::new(cfg.queue_cap);
+    // (finish_tick, tenant) per in-service session.
+    let mut running: Vec<(u64, usize)> = Vec::new();
+    let mut decisions: Vec<Decision> = Vec::new();
+    let mut free = cfg.slots.max(1);
+    let mut seq = 0u64;
+    let (mut depth_max, mut depth_sum, mut ticks_observed) = (0usize, 0u64, 0u64);
+    // Liveness bound for the drain loop: with ≥1 slot, everything
+    // admitted finishes within its summed service time past the
+    // arrival window.
+    let mut admitted_service = 0u64;
+
+    let mut t = 0u64;
+    let makespan_ticks = loop {
+        // 1. Completions release their slots (and quota headroom).
+        running.retain(|&(finish, tenant)| {
+            if finish <= t {
+                outstanding[tenant] -= 1;
+                free += 1;
+                false
+            } else {
+                true
+            }
+        });
+
+        // 2. Expiry sweep: queued requests that can no longer start by
+        // their deadline are counted, not silently dropped.
+        for req in intake.drain_expired(t) {
+            outstanding[req.tenant] -= 1;
+            decisions.push(Decision {
+                request: req,
+                disposition: Disposition::Expired,
+            });
+        }
+
+        // 3. Open-loop arrivals, while inside the arrival window.
+        if t < cfg.ticks {
+            for (ti, spec) in cfg.tenants.iter().enumerate() {
+                let n = spec.arrivals.arrivals(seeds[ti], t as usize).total;
+                for _ in 0..n {
+                    let req = Request {
+                        seq,
+                        tenant: ti,
+                        arrival_tick: t,
+                        deadline_tick: spec.deadline_ticks.map(|d| t + d),
+                        priority: spec.priority,
+                        service_ticks: (spec.steps as u64 * cfg.service_ticks_per_step).max(1),
+                        steps: spec.steps,
+                        // seq + 1: replicate 0 is the identity in
+                        // derive_seed, and the plane seed itself should
+                        // not double as a session seed.
+                        seed: derive_seed(cfg.seed, seq + 1),
+                    };
+                    seq += 1;
+                    match intake.offer(req, &spec.name, outstanding[ti], spec.quota) {
+                        Ok(()) => outstanding[ti] += 1,
+                        Err((req, e)) => {
+                            let disposition = match e {
+                                PallasError::Admission {
+                                    reject: AdmissionReject::QueueFull,
+                                    ..
+                                } => Disposition::RejectedQueueFull,
+                                _ => Disposition::RejectedQuota,
+                            };
+                            decisions.push(Decision {
+                                request: req,
+                                disposition,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+
+        // 4. Dispatch into free virtual slots.
+        while free > 0 {
+            let Some(req) = intake.take_next(&mut pass, &strides) else {
+                break;
+            };
+            free -= 1;
+            let finish_tick = t + req.service_ticks;
+            admitted_service += req.service_ticks;
+            running.push((finish_tick, req.tenant));
+            decisions.push(Decision {
+                request: req,
+                disposition: Disposition::Completed {
+                    start_tick: t,
+                    finish_tick,
+                },
+            });
+        }
+
+        // 5. Gauges.
+        depth_max = depth_max.max(intake.len());
+        depth_sum += intake.len() as u64;
+        ticks_observed += 1;
+
+        if t >= cfg.ticks && intake.is_empty() && running.is_empty() {
+            break t;
+        }
+        t += 1;
+        assert!(
+            t <= cfg.ticks + admitted_service + 2,
+            "serve scheduler failed to drain by tick {t}"
+        );
+    };
+
+    decisions.sort_by_key(|d| d.request.seq);
+    Schedule {
+        decisions,
+        makespan_ticks,
+        queue_depth_max: depth_max,
+        queue_depth_sum: depth_sum,
+        ticks_observed,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(seq: u64, tenant: usize, priority: u8, deadline: Option<u64>) -> Request {
+        Request {
+            seq,
+            tenant,
+            arrival_tick: 0,
+            deadline_tick: deadline,
+            priority,
+            service_ticks: 1,
+            steps: 1,
+            seed: seq,
+        }
+    }
+
+    #[test]
+    fn offer_rejects_are_typed() {
+        let mut q = Intake::new(1);
+        // Quota is checked first.
+        let (_, e) = q.offer(req(0, 0, 0, None), "acme", 3, 3).unwrap_err();
+        assert!(matches!(
+            e,
+            PallasError::Admission {
+                reject: AdmissionReject::QuotaExceeded,
+                limit: 3,
+                ..
+            }
+        ));
+        q.offer(req(1, 0, 0, None), "acme", 0, 8).unwrap();
+        let (back, e) = q.offer(req(2, 0, 0, None), "acme", 1, 8).unwrap_err();
+        assert_eq!(back.seq, 2);
+        assert!(matches!(
+            e,
+            PallasError::Admission {
+                reject: AdmissionReject::QueueFull,
+                limit: 1,
+                ..
+            }
+        ));
+    }
+
+    #[test]
+    fn priority_classes_are_strict() {
+        let mut q = Intake::new(16);
+        q.offer(req(0, 0, 1, None), "low", 0, 99).unwrap();
+        q.offer(req(1, 1, 0, None), "high", 0, 99).unwrap();
+        q.offer(req(2, 1, 0, None), "high", 1, 99).unwrap();
+        let mut pass = vec![1, 1];
+        let strides = vec![1, 1];
+        let order: Vec<u64> = std::iter::from_fn(|| q.take_next(&mut pass, &strides))
+            .map(|r| r.seq)
+            .collect();
+        // Both class-0 requests drain before the class-1 one.
+        assert_eq!(order, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn fair_share_follows_weights() {
+        // Tenant 0 weight 3, tenant 1 weight 1, both priority 0 with a
+        // deep backlog: dispatches converge to 3:1.
+        let strides = vec![STRIDE_SCALE / 3, STRIDE_SCALE];
+        let mut pass = strides.clone();
+        let mut q = Intake::new(64);
+        for s in 0..24u64 {
+            q.offer(req(s, (s % 2) as usize, 0, None), "t", 0, 99).unwrap();
+        }
+        let mut counts = [0usize; 2];
+        for _ in 0..16 {
+            let r = q.take_next(&mut pass, &strides).unwrap();
+            counts[r.tenant] += 1;
+        }
+        assert_eq!(counts, [12, 4], "weight-3 tenant should get 3/4 of slots");
+    }
+
+    #[test]
+    fn edf_breaks_ties_inside_a_tenant() {
+        let mut q = Intake::new(16);
+        q.offer(req(0, 0, 0, Some(50)), "t", 0, 99).unwrap();
+        q.offer(req(1, 0, 0, Some(10)), "t", 1, 99).unwrap();
+        q.offer(req(2, 0, 0, None), "t", 2, 99).unwrap();
+        q.offer(req(3, 0, 0, Some(10)), "t", 3, 99).unwrap();
+        let mut pass = vec![1];
+        let strides = vec![1];
+        let order: Vec<u64> = std::iter::from_fn(|| q.take_next(&mut pass, &strides))
+            .map(|r| r.seq)
+            .collect();
+        // Earliest deadline first; equal deadlines by seq; None last.
+        assert_eq!(order, vec![1, 3, 0, 2]);
+    }
+
+    #[test]
+    fn drain_expired_is_exact() {
+        let mut q = Intake::new(16);
+        q.offer(req(0, 0, 0, Some(4)), "t", 0, 99).unwrap();
+        q.offer(req(1, 0, 0, Some(5)), "t", 1, 99).unwrap();
+        q.offer(req(2, 0, 0, None), "t", 2, 99).unwrap();
+        let gone = q.drain_expired(5);
+        assert_eq!(gone.iter().map(|r| r.seq).collect::<Vec<_>>(), vec![0]);
+        assert_eq!(q.len(), 2);
+    }
+}

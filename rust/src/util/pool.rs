@@ -1,4 +1,4 @@
-//! Hand-rolled scoped worker pool (substrate; `rayon` is not vendored).
+//! Hand-rolled worker pools (substrate; `rayon` is not vendored).
 //!
 //! [`run_ordered`] fans a work list out over up to `jobs` OS threads and
 //! collects results **in input order**, whatever order workers finish
@@ -6,9 +6,15 @@
 //! its result into that index's dedicated slot, so the output vector is
 //! a pure function of the input list — never of thread scheduling. This
 //! is the determinism substrate under [`crate::exec`] (DESIGN.md §4).
+//!
+//! [`WorkerPool`] is the persistent counterpart (DESIGN.md §13): the
+//! same claim-a-task/write-a-slot discipline, but over long-lived
+//! threads fed through a shared queue — the serving plane submits many
+//! batches of session work without re-spawning threads per batch.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Worker count when the caller does not pin one: `PALLAS_JOBS` (if set
 /// to a positive integer), else the machine's available parallelism.
@@ -81,6 +87,152 @@ where
         .into_iter()
         .map(|m| m.into_inner().unwrap().expect("pool: worker skipped a slot"))
         .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Persistent worker pool (the serving plane's execution substrate)
+// ---------------------------------------------------------------------------
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct PoolState {
+    queue: VecDeque<Job>,
+    in_flight: usize,
+    shutdown: bool,
+    /// First panic payload raised by a job; re-raised by
+    /// [`WorkerPool::wait_idle`]. Later panics in the same batch are
+    /// dropped — one casualty aborts the batch, mirroring
+    /// [`run_ordered`]'s stop-flag semantics.
+    panic: Option<Box<dyn std::any::Any + Send>>,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    job_ready: Condvar,
+    all_idle: Condvar,
+}
+
+/// Long-lived worker pool: `workers` OS threads spawned once, fed
+/// through a shared FIFO queue. Unlike [`run_ordered`] (scoped, one
+/// shot), a `WorkerPool` outlives any single batch — submit jobs,
+/// [`WorkerPool::wait_idle`], submit more.
+///
+/// Determinism discipline (same as `run_ordered`): the pool guarantees
+/// nothing about *completion order*, so callers that need
+/// thread-count-independent output must have each job write into its
+/// own pre-assigned slot and aggregate in submission order afterwards.
+/// The serving plane (DESIGN.md §13) does exactly that.
+///
+/// A panicking job poisons the current batch: the queue is cleared (no
+/// wall time burned on doomed work), the first payload is stored, and
+/// `wait_idle` re-raises it. The pool itself stays usable afterwards.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn a pool of `workers.max(1)` threads.
+    pub fn new(workers: usize) -> WorkerPool {
+        let workers = workers.max(1);
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState {
+                queue: VecDeque::new(),
+                in_flight: 0,
+                shutdown: false,
+                panic: None,
+            }),
+            job_ready: Condvar::new(),
+            all_idle: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(&shared))
+            })
+            .collect();
+        WorkerPool { shared, handles }
+    }
+
+    /// Thread count the pool was built with.
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Enqueue one job. Never blocks; jobs run in FIFO claim order
+    /// across however many workers are free.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, job: F) {
+        let mut st = self.shared.state.lock().unwrap();
+        st.queue.push_back(Box::new(job));
+        drop(st);
+        self.shared.job_ready.notify_one();
+    }
+
+    /// Block until the queue is empty and every claimed job finished.
+    /// If any job panicked since the last wait, re-raises the first
+    /// payload here (the pool remains usable for new batches).
+    pub fn wait_idle(&self) {
+        let mut st = self.shared.state.lock().unwrap();
+        while !st.queue.is_empty() || st.in_flight > 0 {
+            st = self.shared.all_idle.wait(st).unwrap();
+        }
+        if let Some(payload) = st.panic.take() {
+            drop(st);
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.job_ready.notify_all();
+        for h in self.handles.drain(..) {
+            // A worker thread only panics if a panic payload itself
+            // panics on drop; don't double-panic the destructor.
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &PoolShared) {
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.panic.is_some() {
+                    // Batch is doomed: drop everything still queued so
+                    // wait_idle can report the casualty promptly.
+                    st.queue.clear();
+                }
+                if let Some(j) = st.queue.pop_front() {
+                    st.in_flight += 1;
+                    break j;
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = shared.job_ready.wait(st).unwrap();
+            }
+        };
+        // AssertUnwindSafe: the payload is stored and re-raised in the
+        // caller via wait_idle; jobs own their captured state.
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+        let mut st = shared.state.lock().unwrap();
+        st.in_flight -= 1;
+        if let Err(payload) = res {
+            if st.panic.is_none() {
+                st.panic = Some(payload);
+            }
+            st.queue.clear();
+        }
+        if st.queue.is_empty() && st.in_flight == 0 {
+            shared.all_idle.notify_all();
+        }
+    }
 }
 
 #[cfg(test)]
@@ -195,5 +347,119 @@ mod tests {
             })
         }));
         assert!(res.is_err());
+    }
+
+    // ---- WorkerPool (serving-plane substrate, DESIGN.md §13) ----------
+
+    #[test]
+    fn worker_pool_runs_every_job() {
+        let pool = WorkerPool::new(4);
+        let count = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let count = Arc::clone(&count);
+            pool.submit(move || {
+                count.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(count.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn worker_pool_slot_writes_are_worker_count_independent() {
+        // The serving plane's discipline: each job writes its own slot,
+        // aggregation reads slots in submission order — identical output
+        // for any worker count.
+        let run = |workers: usize| -> Vec<u64> {
+            let pool = WorkerPool::new(workers);
+            let slots: Arc<Vec<Mutex<Option<u64>>>> =
+                Arc::new((0..64).map(|_| Mutex::new(None)).collect());
+            for i in 0..64u64 {
+                let slots = Arc::clone(&slots);
+                pool.submit(move || {
+                    *slots[i as usize].lock().unwrap() = Some(i * 7 + 1);
+                });
+            }
+            pool.wait_idle();
+            slots.iter().map(|m| m.lock().unwrap().expect("slot skipped")).collect()
+        };
+        let seq = run(1);
+        for workers in [2, 3, 8] {
+            assert_eq!(run(workers), seq, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn worker_pool_is_reusable_across_batches() {
+        let pool = WorkerPool::new(2);
+        let count = Arc::new(AtomicUsize::new(0));
+        for batch in 0..3 {
+            for _ in 0..10 {
+                let count = Arc::clone(&count);
+                pool.submit(move || {
+                    count.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            pool.wait_idle();
+            assert_eq!(count.load(Ordering::SeqCst), (batch + 1) * 10);
+        }
+    }
+
+    #[test]
+    fn worker_pool_panic_reraised_at_wait_idle_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        pool.submit(|| panic!("session died"));
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| pool.wait_idle()));
+        assert!(res.is_err(), "wait_idle must re-raise the job panic");
+        // The pool is still serviceable for the next batch.
+        let ok = Arc::new(AtomicBool::new(false));
+        let ok2 = Arc::clone(&ok);
+        pool.submit(move || ok2.store(true, Ordering::SeqCst));
+        pool.wait_idle();
+        assert!(ok.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn worker_pool_panic_clears_queued_jobs() {
+        // One casualty aborts the batch: jobs still queued behind the
+        // panicking one are dropped, not run.
+        let pool = WorkerPool::new(1);
+        let ran_after = Arc::new(AtomicUsize::new(0));
+        pool.submit(|| panic!("first job dies"));
+        for _ in 0..32 {
+            let ran_after = Arc::clone(&ran_after);
+            pool.submit(move || {
+                ran_after.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| pool.wait_idle()));
+        assert!(res.is_err());
+        assert_eq!(ran_after.load(Ordering::SeqCst), 0, "queued jobs ran after the panic");
+    }
+
+    #[test]
+    fn worker_pool_zero_workers_clamps_to_one() {
+        let pool = WorkerPool::new(0);
+        assert_eq!(pool.workers(), 1);
+        let done = Arc::new(AtomicBool::new(false));
+        let done2 = Arc::clone(&done);
+        pool.submit(move || done2.store(true, Ordering::SeqCst));
+        pool.wait_idle();
+        assert!(done.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn worker_pool_drop_joins_cleanly() {
+        let pool = WorkerPool::new(3);
+        let count = Arc::new(AtomicUsize::new(0));
+        for _ in 0..8 {
+            let count = Arc::clone(&count);
+            pool.submit(move || {
+                count.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        drop(pool);
+        assert_eq!(count.load(Ordering::SeqCst), 8);
     }
 }

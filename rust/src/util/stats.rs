@@ -1,14 +1,40 @@
 //! Streaming statistics + fixed-bucket histograms for metrics and the
 //! bench harness (criterion is not vendored; `bench.rs` builds on this).
 
-/// Welford online mean/variance plus min/max.
-#[derive(Debug, Clone, Default)]
+/// Retained-sample budget for [`Summary`]'s quantile sketch. Up to this
+/// many samples the sketch is *exact* (nearest-rank over every sample);
+/// beyond it the sketch switches to bounded-memory streaming mode.
+const QUANTILE_CAP: usize = 512;
+
+/// Welford online mean/variance plus min/max, with streaming quantile
+/// support (p50/p90/p99 for the serving plane's latency report —
+/// DESIGN.md §13).
+///
+/// Quantiles are exact while `n ≤ QUANTILE_CAP`. Past that the sketch
+/// thins systematically: it retains every `stride`-th arrival and
+/// doubles `stride` whenever the buffer fills, so memory stays O(cap)
+/// for any stream length. Estimates are deterministic — a pure function
+/// of the input sequence, never of clocks or randomness — so two
+/// summaries fed the same stream report bit-identical quantiles.
+#[derive(Debug, Clone)]
 pub struct Summary {
     n: u64,
     mean: f64,
     m2: f64,
     min: f64,
     max: f64,
+    /// Retained samples for the quantile sketch, in arrival order:
+    /// exactly the arrivals whose index is ≡ 0 (mod `stride`).
+    qsamples: Vec<f64>,
+    /// Arrivals represented per retained sample (a power of two; 1
+    /// while the sketch is still exact).
+    stride: u64,
+}
+
+impl Default for Summary {
+    fn default() -> Self {
+        Summary::new()
+    }
 }
 
 impl Summary {
@@ -19,6 +45,8 @@ impl Summary {
             m2: 0.0,
             min: f64::INFINITY,
             max: f64::NEG_INFINITY,
+            qsamples: Vec::new(),
+            stride: 1,
         }
     }
 
@@ -29,6 +57,25 @@ impl Summary {
         self.m2 += d * (x - self.mean);
         self.min = self.min.min(x);
         self.max = self.max.max(x);
+        // Quantile sketch: retain arrivals with index ≡ 0 (mod stride).
+        if (self.n - 1) % self.stride == 0 {
+            self.qsamples.push(x);
+            if self.qsamples.len() >= QUANTILE_CAP {
+                self.thin();
+            }
+        }
+    }
+
+    /// Halve the retained set by keeping even positions (in arrival
+    /// order they are exactly the arrivals ≡ 0 mod the doubled stride).
+    fn thin(&mut self) {
+        let mut keep = 0;
+        for i in (0..self.qsamples.len()).step_by(2) {
+            self.qsamples[keep] = self.qsamples[i];
+            keep += 1;
+        }
+        self.qsamples.truncate(keep);
+        self.stride *= 2;
     }
 
     pub fn count(&self) -> u64 {
@@ -75,7 +122,61 @@ impl Summary {
         self.n += other.n;
         self.min = self.min.min(other.min);
         self.max = self.max.max(other.max);
+        // Quantile sketch: bring both sides to the coarser stride (so
+        // every retained sample represents the same number of
+        // arrivals), then concatenate and re-thin under the cap.
+        let stride = self.stride.max(other.stride);
+        thin_to(&mut self.qsamples, self.stride, stride);
+        let mut theirs = other.qsamples.clone();
+        thin_to(&mut theirs, other.stride, stride);
+        self.qsamples.extend(theirs);
+        self.stride = stride;
+        while self.qsamples.len() >= QUANTILE_CAP {
+            self.thin();
+        }
     }
+
+    /// Nearest-rank quantile estimate, `q` in [0, 1]. Exact while the
+    /// stream fit the sketch (`n ≤ QUANTILE_CAP`); past that the
+    /// estimate comes from the thinned retained set (each kept sample
+    /// stands for `stride` arrivals). 0.0 on an empty summary.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.qsamples.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.qsamples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((s.len() as f64 - 1.0) * q.clamp(0.0, 1.0)).floor() as usize;
+        s[idx]
+    }
+
+    /// Median (`quantile(0.5)`).
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p90(&self) -> f64 {
+        self.quantile(0.90)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+}
+
+/// Thin `xs` (retained at `from`-stride, arrival order) down to a
+/// coarser `to`-stride by keeping every `(to/from)`-th position.
+fn thin_to(xs: &mut Vec<f64>, from: u64, to: u64) {
+    if from == to {
+        return;
+    }
+    let k = (to / from) as usize;
+    let mut keep = 0;
+    for i in (0..xs.len()).step_by(k.max(1)) {
+        xs[keep] = xs[i];
+        keep += 1;
+    }
+    xs.truncate(keep);
 }
 
 /// Exact-percentile reservoir: keeps every sample (fine at our scales),
@@ -235,6 +336,95 @@ mod tests {
         assert_eq!(p.quantile(0.0), 1.0);
         assert_eq!(p.quantile(1.0), 100.0);
         assert_eq!(p.p99(), 99.0);
+    }
+
+    #[test]
+    fn summary_quantiles_exact_small_n() {
+        // Below the sketch cap, Summary's quantiles are exact and use
+        // the same nearest-rank rule as Percentiles.
+        let mut s = Summary::new();
+        let mut p = Percentiles::new();
+        for i in 1..=100 {
+            s.add(i as f64);
+            p.add(i as f64);
+        }
+        for q in [0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(s.quantile(q), p.quantile(q), "q={q}");
+        }
+        assert_eq!(s.p50(), 50.0);
+        assert_eq!(s.p90(), 90.0);
+        assert_eq!(s.p99(), 99.0);
+    }
+
+    #[test]
+    fn summary_quantiles_empty_is_zero() {
+        let s = Summary::new();
+        assert_eq!(s.p50(), 0.0);
+        assert_eq!(s.p99(), 0.0);
+    }
+
+    #[test]
+    fn summary_quantiles_streaming_large_n() {
+        // 50k uniform draws: the thinned sketch must stay within a few
+        // percent of the true quantiles while holding ≤ cap samples.
+        let mut rng = crate::util::rng::Pcg64::new(7);
+        let mut s = Summary::new();
+        for _ in 0..50_000 {
+            s.add(rng.f64());
+        }
+        assert!(s.qsamples.len() < 512, "sketch grew past cap: {}", s.qsamples.len());
+        assert!((s.p50() - 0.50).abs() < 0.05, "p50 {}", s.p50());
+        assert!((s.p90() - 0.90).abs() < 0.05, "p90 {}", s.p90());
+        assert!((s.p99() - 0.99).abs() < 0.05, "p99 {}", s.p99());
+    }
+
+    #[test]
+    fn summary_quantiles_deterministic() {
+        // Bit-identical estimates for the same input sequence — the
+        // serving plane byte-diffs reports containing these.
+        let feed = |seed: u64| {
+            let mut rng = crate::util::rng::Pcg64::new(seed);
+            let mut s = Summary::new();
+            for _ in 0..10_000 {
+                s.add(rng.lognormal(0.0, 1.0));
+            }
+            (s.p50().to_bits(), s.p90().to_bits(), s.p99().to_bits())
+        };
+        assert_eq!(feed(42), feed(42));
+        assert_ne!(feed(42), feed(43));
+    }
+
+    #[test]
+    fn summary_quantile_merge_stays_close() {
+        // Merged sketches approximate the combined stream (exact small
+        // merges stay exact; large merges stay within tolerance).
+        let mut a = Summary::new();
+        let mut b = Summary::new();
+        for i in 0..100 {
+            a.add(i as f64);
+            b.add((100 + i) as f64);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 200);
+        assert!((a.p50() - 99.0).abs() <= 2.0, "p50 {}", a.p50());
+
+        let mut big_a = Summary::new();
+        let mut big_b = Summary::new();
+        let mut all = Summary::new();
+        let mut rng = crate::util::rng::Pcg64::new(11);
+        for i in 0..20_000 {
+            let x = rng.f64() * 10.0;
+            if i % 2 == 0 {
+                big_a.add(x);
+            } else {
+                big_b.add(x);
+            }
+            all.add(x);
+        }
+        big_a.merge(&big_b);
+        assert_eq!(big_a.count(), all.count());
+        assert!((big_a.p50() - all.p50()).abs() < 0.5, "{} vs {}", big_a.p50(), all.p50());
+        assert!((big_a.p99() - all.p99()).abs() < 0.5, "{} vs {}", big_a.p99(), all.p99());
     }
 
     #[test]

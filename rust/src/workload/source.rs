@@ -219,6 +219,21 @@ impl TraceSource {
             error: None,
         }
     }
+
+    /// Live-feed constructor: stream JSONL records from any buffered
+    /// reader (stdin pipe, file tail, socket). Header validation and
+    /// the typed truncated-record diagnostics are identical to the
+    /// file path — see [`TraceReader::from_reader`].
+    pub fn from_reader(src: Box<dyn std::io::BufRead + Send>) -> Result<TraceSource, PallasError> {
+        Ok(TraceSource::new(TraceReader::from_reader(src)?))
+    }
+
+    /// Stream records from stdin (`--trace -`): blocks on each pull
+    /// until the writer side of the pipe delivers the next line, so a
+    /// live producer drives the run one step at a time.
+    pub fn stdin() -> Result<TraceSource, PallasError> {
+        Ok(TraceSource::new(TraceReader::open_path("-")?))
+    }
 }
 
 impl WorkloadSource for TraceSource {
@@ -342,6 +357,29 @@ mod tests {
         let reader2 = crate::workload::TraceReader::from_text(&tr2.to_jsonl()).unwrap();
         let mut src2 = TraceSource::new(reader2);
         assert!(src2.fast_forward(3).is_err());
+    }
+
+    #[test]
+    fn trace_source_from_reader_is_the_live_feed_path() {
+        // The serve driver replays line streams from arbitrary readers;
+        // equivalence with the in-memory path and lazy error surfacing
+        // (truncated feed → take_error) are the contract.
+        let tr = Trace::record(&small("diurnal"), 2048, 3).unwrap();
+        let jsonl = tr.to_jsonl();
+        let boxed: Box<dyn std::io::BufRead + Send> =
+            Box::new(std::io::Cursor::new(jsonl.as_bytes().to_vec()));
+        let mut src = TraceSource::from_reader(boxed).unwrap();
+        assert_eq!(src.len_hint(), LenHint::Exact(3));
+        assert_eq!(drain(&mut src), tr.steps);
+        assert!(src.take_error().is_none());
+
+        let cut = jsonl[..jsonl.trim_end().len() - 10].to_string();
+        let boxed: Box<dyn std::io::BufRead + Send> =
+            Box::new(std::io::Cursor::new(cut.into_bytes()));
+        let mut src = TraceSource::from_reader(boxed).unwrap();
+        while src.next_step().is_some() {}
+        let err = src.take_error().expect("truncated feed must surface typed");
+        assert!(err.to_string().contains("truncated final record"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,230 @@
+//! Serving-plane acceptance tests (DESIGN.md §13).
+//!
+//! The contracts pinned here:
+//!
+//! * **Worker-count byte identity** — every per-session JSONL stream
+//!   and the whole load report are byte-identical for workers ∈
+//!   {1, 2, 8}.
+//! * **Standalone equivalence** — a session's captured bytes equal the
+//!   same derived config run standalone through `Experiment` with a
+//!   `JsonlSink`, line for line.
+//! * **Typed admission edges** — queue-full and quota rejections are
+//!   typed `PallasError::Admission` values with byte-stable messages;
+//!   expired deadlines are counted, never silently dropped.
+//! * **Scale** — the default CI mix pushes ≥500 session requests
+//!   through the plane end-to-end.
+
+use flexmarl::error::{AdmissionReject, PallasError};
+use flexmarl::experiment::Experiment;
+use flexmarl::orchestrator::{CaptureBuffer, JsonlSink, SimOptions};
+use flexmarl::serve::sched::{self, Disposition, Request};
+use flexmarl::serve::{ServeConfig, ServeOutcome, ServePlane};
+
+/// A mix small enough to run three times in one test but busy enough
+/// to exercise rejects and queueing.
+fn small_mix(seed: u64) -> ServeConfig {
+    let mut cfg = ServeConfig::mix("mixed", seed).unwrap();
+    cfg.ticks = 12;
+    cfg
+}
+
+fn run(cfg: &ServeConfig, workers: usize) -> ServeOutcome {
+    ServePlane::new(cfg.clone(), workers).unwrap().run().unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// Determinism: worker-count independence
+// ---------------------------------------------------------------------------
+
+#[test]
+fn outputs_are_byte_identical_for_any_worker_count() {
+    let cfg = small_mix(2048);
+    let base = run(&cfg, 1);
+    assert!(base.report.completed > 0, "mix completed nothing");
+    let base_report = base.report.to_json().to_pretty();
+    for workers in [2, 8] {
+        let out = run(&cfg, workers);
+        assert_eq!(
+            out.report.to_json().to_pretty(),
+            base_report,
+            "load report depends on workers={workers}"
+        );
+        assert_eq!(out.sessions.len(), base.sessions.len());
+        for (a, b) in base.sessions.iter().zip(&out.sessions) {
+            assert_eq!(a.seq, b.seq, "session order depends on workers={workers}");
+            assert_eq!(a.jsonl, b.jsonl, "session {} bytes depend on workers={workers}", a.seq);
+        }
+        // The plan itself (every request's fate) is also identical.
+        assert_eq!(out.schedule, base.schedule);
+    }
+}
+
+#[test]
+fn sessions_match_standalone_experiment_runs() {
+    // Every completed session's captured stream must equal the same
+    // derived config run standalone — the plane adds multiplexing, not
+    // semantics.
+    let cfg = small_mix(7);
+    let out = run(&cfg, 4);
+    assert!(!out.sessions.is_empty());
+    let completed: Vec<&sched::Decision> = out
+        .schedule
+        .decisions
+        .iter()
+        .filter(|d| matches!(d.disposition, Disposition::Completed { .. }))
+        .collect();
+    assert_eq!(completed.len(), out.sessions.len());
+    for (d, s) in completed.iter().zip(&out.sessions) {
+        assert_eq!(d.request.seq, s.seq);
+        assert_eq!(d.request.seed, s.seed);
+        let buf = CaptureBuffer::new();
+        Experiment::new(cfg.session_config(&d.request))
+            .options(SimOptions::default())
+            .sink(Box::new(JsonlSink::new(Box::new(buf.clone()))))
+            .build()
+            .unwrap()
+            .try_run()
+            .unwrap();
+        assert_eq!(buf.contents(), s.jsonl, "session {} diverged from its standalone run", s.seq);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Admission edges
+// ---------------------------------------------------------------------------
+
+fn probe(seq: u64) -> Request {
+    Request {
+        seq,
+        tenant: 0,
+        arrival_tick: 0,
+        deadline_tick: None,
+        priority: 0,
+        service_ticks: 1,
+        steps: 1,
+        seed: seq,
+    }
+}
+
+#[test]
+fn queue_full_reject_is_typed_with_stable_message() {
+    let mut intake = sched::Intake::new(2);
+    intake.offer(probe(0), "acme", 0, 10).unwrap();
+    intake.offer(probe(1), "acme", 1, 10).unwrap();
+    let (back, e) = intake.offer(probe(2), "acme", 2, 10).unwrap_err();
+    assert_eq!(back.seq, 2, "the rejected request must ride back");
+    assert!(matches!(
+        e,
+        PallasError::Admission {
+            reject: AdmissionReject::QueueFull,
+            limit: 2,
+            ..
+        }
+    ));
+    assert_eq!(
+        e.to_string(),
+        "serve: request 2 (tenant 'acme') rejected: intake queue full (cap 2)"
+    );
+}
+
+#[test]
+fn quota_reject_is_typed_checked_before_queue_space() {
+    let mut intake = sched::Intake::new(64);
+    let (_, e) = intake.offer(probe(5), "acme", 3, 3).unwrap_err();
+    assert!(matches!(
+        e,
+        PallasError::Admission {
+            reject: AdmissionReject::QuotaExceeded,
+            limit: 3,
+            ..
+        }
+    ));
+    assert_eq!(
+        e.to_string(),
+        "serve: request 5 (tenant 'acme') rejected: tenant quota 3 outstanding sessions reached"
+    );
+    assert!(intake.is_empty(), "a quota reject must not occupy queue space");
+}
+
+#[test]
+fn expired_deadlines_are_counted_not_dropped() {
+    // One slot, immediate deadlines: whatever queues behind the
+    // in-service session must expire — and every arrival still gets
+    // exactly one decision.
+    let mut cfg = ServeConfig::mix("steady", 5).unwrap();
+    cfg.ticks = 10;
+    cfg.slots = 1;
+    cfg.tenants.truncate(1);
+    cfg.tenants[0].deadline_ticks = Some(0);
+    cfg.tenants[0].quota = 100;
+    let plan = sched::plan(&cfg);
+    let expired = plan
+        .decisions
+        .iter()
+        .filter(|d| d.disposition == Disposition::Expired)
+        .count();
+    assert!(expired > 0, "no expiries under an immediate deadline");
+    for (i, d) in plan.decisions.iter().enumerate() {
+        assert_eq!(d.request.seq, i as u64, "an arrival lost its decision");
+    }
+    // Expired sessions are admitted-but-unserved in the report.
+    let report = flexmarl::serve::report::LoadReport::build(&cfg, &plan, &[]);
+    assert_eq!(report.expired, expired as u64);
+    assert_eq!(report.admitted, report.completed + report.expired);
+}
+
+#[test]
+fn quota_binds_under_saturation() {
+    // Quota 1 on a saturated single-tenant plane: rejections must be
+    // quota-typed (the queue itself never fills past the one admitted
+    // outstanding session).
+    let mut cfg = ServeConfig::mix("steady", 3).unwrap();
+    cfg.ticks = 10;
+    cfg.tenants.truncate(1);
+    cfg.tenants[0].quota = 1;
+    let plan = sched::plan(&cfg);
+    let quota = plan
+        .decisions
+        .iter()
+        .filter(|d| d.disposition == Disposition::RejectedQuota)
+        .count();
+    let full = plan
+        .decisions
+        .iter()
+        .filter(|d| d.disposition == Disposition::RejectedQueueFull)
+        .count();
+    assert!(quota > 0, "quota 1 never bound under saturation");
+    assert_eq!(full, 0, "queue can never fill before a quota of 1");
+}
+
+// ---------------------------------------------------------------------------
+// Scale: the CI-gate mix
+// ---------------------------------------------------------------------------
+
+#[test]
+fn default_mix_serves_at_least_500_session_requests() {
+    // The acceptance bar: the default `serve` invocation pushes ≥500
+    // session requests through admission end-to-end. Planning alone is
+    // cheap, so this asserts on the full default window; execution is
+    // covered by the smaller mixes above and the CI serve-smoke job.
+    let cfg = ServeConfig::mix("mixed", 2048).unwrap();
+    let plan = sched::plan(&cfg);
+    assert!(
+        plan.decisions.len() >= 500,
+        "default mix submitted only {} requests",
+        plan.decisions.len()
+    );
+    let completed = plan
+        .decisions
+        .iter()
+        .filter(|d| matches!(d.disposition, Disposition::Completed { .. }))
+        .count();
+    let rejected = plan
+        .decisions
+        .iter()
+        .filter(|d| {
+            matches!(d.disposition, Disposition::RejectedQueueFull | Disposition::RejectedQuota)
+        })
+        .count();
+    assert!(completed > 0 && rejected > 0, "default mix must exercise admission");
+}

@@ -8,8 +8,9 @@ Usage:
 Compares every shared *timing* key (nanosecond values) of `current`
 against `baseline` and fails (exit 1) if any named group regressed by
 more than `threshold` (default +25%). Non-timing bookkeeping keys
-(`speedup`, `grid_runs`, `jobs_n`) are ignored — `speedup` is
-better-is-higher and machine-dependent, the others are run metadata.
+(`speedup`, `grid_runs`, `jobs_n`, `sessions`, `sessions_per_s`) are
+ignored — `speedup` and `sessions_per_s` are better-is-higher and
+machine-dependent, the others are run metadata.
 
 First-run behaviour: if the baseline file does not exist yet, the gate
 prints a warning and exits 0 so the very first CI run can commit the
@@ -27,7 +28,10 @@ import math
 import sys
 
 # Bookkeeping keys that are not nanosecond timings and must not gate.
-NON_TIMING_KEYS = {"speedup", "grid_runs", "jobs_n"}
+# `sessions` is run metadata and `sessions_per_s` is better-is-higher
+# throughput (BENCH_serve.json); gating either as a lower-is-better
+# nanosecond timing would invert their meaning.
+NON_TIMING_KEYS = {"speedup", "grid_runs", "jobs_n", "sessions", "sessions_per_s"}
 
 
 def load(path: str) -> dict:

@@ -13,6 +13,7 @@
 
 use flexmarl::baselines::Framework;
 use flexmarl::config::{ExperimentConfig, WorkloadConfig};
+use flexmarl::dist::{socket::SocketTransport, DistPlan, DistSource};
 use flexmarl::exec::{grid_report, run_specs_or_panic, RunGrid};
 use flexmarl::experiment::Experiment;
 use flexmarl::metrics::StepReport;
@@ -84,6 +85,7 @@ fn main() {
     bench_session(&mut rec, t);
     bench_sweep(smoke);
     bench_serve(smoke);
+    bench_dist(smoke);
     if !smoke {
         bench_pjrt(&mut rec);
     }
@@ -187,6 +189,88 @@ fn bench_serve(smoke: bool) {
     match std::fs::write("BENCH_serve.json", Json::Obj(map).to_pretty()) {
         Ok(()) => println!("wrote BENCH_serve.json"),
         Err(e) => eprintln!("could not write BENCH_serve.json: {e}"),
+    }
+}
+
+/// Dist group (DESIGN.md §14): per-step workload generation through
+/// the distributed plane at both transports vs the single-process
+/// generator. ns/step per transport goes to `BENCH_dist.json`; the
+/// three drains are asserted byte-identical while we're here (the
+/// plane's whole determinism contract). The socket leg spawns real
+/// `dist-worker` child processes of the CLI binary, so its number
+/// includes process start-up and TCP framing.
+fn bench_dist(smoke: bool) {
+    use flexmarl::workload::{scenario, ScenarioSource, StepWorkload, WorkloadSource};
+
+    let mut wl = WorkloadConfig::ma();
+    wl.queries_per_step = if smoke { 2 } else { 8 };
+    wl.group_size = if smoke { 4 } else { 8 };
+    let steps = if smoke { 2 } else { 6 };
+    let seed = 2048;
+    let workers = pool::default_jobs().clamp(2, 4);
+    let resolve = || scenario::resolve(&wl).expect("baseline preset");
+
+    fn drain(src: &mut dyn WorkloadSource) -> Vec<StepWorkload> {
+        let mut v = Vec::new();
+        while let Some(w) = src.next_step() {
+            v.push(w);
+        }
+        if let Some(e) = src.take_error() {
+            panic!("dist bench source failed: {e}");
+        }
+        v
+    }
+
+    let (single, t_single) = time_once(|| {
+        let (shaped, scen) = resolve();
+        drain(&mut ScenarioSource::new(shaped, scen, seed, steps))
+    });
+    let (chan, t_chan) = time_once(|| {
+        let (shaped, scen) = resolve();
+        drain(&mut DistSource::new(
+            shaped,
+            scen,
+            seed,
+            steps,
+            DistPlan::channel(workers),
+        ))
+    });
+    let (sock, t_sock) = time_once(|| {
+        let (shaped, scen) = resolve();
+        drain(&mut DistSource::with_transport(
+            shaped,
+            scen,
+            seed,
+            steps,
+            DistPlan::socket(workers),
+            // current_exe() here would be the bench binary; point the
+            // transport at the real CLI for `dist-worker` children.
+            Box::new(SocketTransport::new(env!("CARGO_BIN_EXE_flexmarl"))),
+        ))
+    });
+    assert_eq!(single, chan, "channel dist output depends on placement");
+    assert_eq!(single, sock, "socket dist output depends on placement");
+
+    let per_step = |t: Duration| t.as_nanos() as f64 / steps as f64;
+    let speedup = t_single.as_secs_f64() / t_chan.as_secs_f64().max(1e-9);
+    println!(
+        "\ndist generation ({steps} steps, {workers} workers): \
+         single {:.2?}   channel {:.2?}   socket {:.2?}   channel speedup {speedup:.2}x",
+        t_single, t_chan, t_sock,
+    );
+    let map: BTreeMap<String, Json> = [
+        ("dist_steps".to_string(), Json::num(steps as f64)),
+        ("dist_workers".to_string(), Json::num(workers as f64)),
+        ("single_ns_per_step".to_string(), Json::num(per_step(t_single))),
+        ("channel_ns_per_step".to_string(), Json::num(per_step(t_chan))),
+        ("socket_ns_per_step".to_string(), Json::num(per_step(t_sock))),
+        ("speedup".to_string(), Json::num(speedup)),
+    ]
+    .into_iter()
+    .collect();
+    match std::fs::write("BENCH_dist.json", Json::Obj(map).to_pretty()) {
+        Ok(()) => println!("wrote BENCH_dist.json"),
+        Err(e) => eprintln!("could not write BENCH_dist.json: {e}"),
     }
 }
 

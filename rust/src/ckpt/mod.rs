@@ -6,9 +6,13 @@
 //! rollout-manager tables, the retiring step window, counters, series,
 //! workload-source position, and every report already yielded — encoded
 //! with the in-tree JSON util (the crate is zero-dependency; no serde).
-//! This module owns the *file format*; the per-subsystem state codecs
-//! live next to the private fields they capture (`sim`, `store`,
-//! `rollout`, `training`, `orchestrator::simloop`).
+//! This module owns the *file vocabulary*; the byte format (two-line
+//! header+checksum framing, lossless integer codecs, atomic writes) is
+//! the shared [`crate::util::codec`] substrate — the same bytes the
+//! distributed plane (DESIGN.md §14) ships across channels and
+//! sockets — and the per-subsystem state codecs live next to the
+//! private fields they capture (`sim`, `store`, `rollout`, `training`,
+//! `orchestrator::simloop`).
 //!
 //! File layout (two lines, both newline-terminated):
 //!
@@ -34,7 +38,12 @@
 //! parse) — the foundation of the byte-identical-resume contract.
 
 use crate::error::PallasError;
-use crate::util::json::{parse, Json};
+use crate::util::codec::{Codec, CodecError};
+use crate::util::json::Json;
+
+// The integer codecs and checksum moved to the shared substrate; the
+// re-exports keep this module's historical API surface intact.
+pub use crate::util::codec::{as_ji64, as_ju128, as_ju64, fnv1a64, ji64, ju128, ju64};
 
 /// Checkpoint format version. Bump on any payload-shape change; old
 /// readers reject newer files (and vice versa) with a typed error.
@@ -43,66 +52,35 @@ pub const FORMAT_VERSION: u64 = 1;
 /// First-line magic distinguishing checkpoints from arbitrary JSON.
 pub const MAGIC: &str = "flexmarl-ckpt";
 
-// ---------------------------------------------------------------------------
-// Integer codecs (JSON numbers are f64 — exact only to 2^53)
-// ---------------------------------------------------------------------------
-
-/// Encode a `u64` losslessly (decimal string).
-pub fn ju64(v: u64) -> Json {
-    Json::Str(v.to_string())
-}
-
-/// Encode a `u128` losslessly (decimal string) — PRNG state words.
-pub fn ju128(v: u128) -> Json {
-    Json::Str(v.to_string())
-}
-
-/// Decode [`ju64`]; tolerates a plain in-range JSON number too.
-pub fn as_ju64(j: &Json) -> Option<u64> {
-    match j {
-        Json::Str(s) => s.parse::<u64>().ok(),
-        _ => j.as_u64(),
-    }
-}
-
-/// Decode [`ju128`].
-pub fn as_ju128(j: &Json) -> Option<u128> {
-    match j {
-        Json::Str(s) => s.parse::<u128>().ok(),
-        _ => None,
-    }
-}
-
-/// Encode an `i64` losslessly (decimal string) — store scalar columns.
-pub fn ji64(v: i64) -> Json {
-    Json::Str(v.to_string())
-}
-
-/// Decode [`ji64`]; tolerates a plain in-range JSON number too.
-pub fn as_ji64(j: &Json) -> Option<i64> {
-    match j {
-        Json::Str(s) => s.parse::<i64>().ok(),
-        Json::Num(n) if n.fract() == 0.0 && n.abs() < 9.007_199_254_740_992e15 => Some(*n as i64),
-        _ => None,
-    }
-}
-
-/// FNV-1a 64-bit over `bytes` — the payload checksum. In-tree (the
-/// image has no hash crates); collision resistance is not the goal,
-/// torn-write and bit-rot *detection* is.
-pub fn fnv1a64(bytes: &[u8]) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x0000_0100_0000_01b3);
-    }
-    h
-}
+/// The checkpoint vocabulary over the shared frame codec.
+const CODEC: Codec = Codec { magic: MAGIC, version: FORMAT_VERSION };
 
 fn reject(path: &str, reason: impl Into<String>) -> PallasError {
     PallasError::Checkpoint {
         path: path.to_string(),
         reason: reason.into(),
+    }
+}
+
+/// Render a structured codec rejection as this module's historical
+/// reason string — pinned byte-for-byte by `tests/ckpt.rs`, so the
+/// codec extraction is invisible to everything that matches on them.
+fn reason(e: CodecError) -> String {
+    match e {
+        CodecError::NoPayload => "truncated file (no payload line)".into(),
+        CodecError::BadHeader(e) => format!("unreadable header: {e}"),
+        CodecError::BadMagic => "not a flexmarl checkpoint (bad magic)".into(),
+        CodecError::BadVersion { got, want } => {
+            format!("unsupported checkpoint format version {got} (want {want})")
+        }
+        CodecError::MissingChecksum => "header missing 'checksum'".into(),
+        CodecError::TornTail => {
+            "truncated file (payload ends mid-line; the write was torn)".into()
+        }
+        CodecError::ChecksumMismatch { want, got } => {
+            format!("checksum mismatch (header {want}, payload {got}) — corrupt or truncated")
+        }
+        CodecError::BadPayload(e) => format!("unreadable payload: {e}"),
     }
 }
 
@@ -112,75 +90,21 @@ fn reject(path: &str, reason: impl Into<String>) -> PallasError {
 
 /// Serialize a payload into the two-line checkpoint text.
 pub fn encode(payload: &Json) -> String {
-    let body = payload.to_string();
-    let header = Json::obj(vec![
-        ("magic", Json::str(MAGIC)),
-        ("version", Json::num(FORMAT_VERSION as f64)),
-        ("checksum", Json::str(format!("{:016x}", fnv1a64(body.as_bytes())))),
-    ]);
-    format!("{}\n{}\n", header.to_string(), body)
+    CODEC.encode(payload)
 }
 
 /// Validate and parse checkpoint text: magic, format version, checksum,
 /// payload JSON. Every rejection is a typed [`PallasError::Checkpoint`]
 /// naming `path` (pass `""` for in-memory text).
 pub fn decode(text: &str, path: &str) -> Result<Json, PallasError> {
-    let Some((header_line, rest)) = text.split_once('\n') else {
-        return Err(reject(path, "truncated file (no payload line)"));
-    };
-    let header = parse(header_line)
-        .map_err(|e| reject(path, format!("unreadable header: {e}")))?;
-    match header.at(&["magic"]).and_then(Json::as_str) {
-        Some(m) if m == MAGIC => {}
-        _ => return Err(reject(path, "not a flexmarl checkpoint (bad magic)")),
-    }
-    let version = header.at(&["version"]).and_then(Json::as_u64).unwrap_or(0);
-    if version != FORMAT_VERSION {
-        return Err(reject(
-            path,
-            format!("unsupported checkpoint format version {version} (want {FORMAT_VERSION})"),
-        ));
-    }
-    let want = header
-        .at(&["checksum"])
-        .and_then(Json::as_str)
-        .ok_or_else(|| reject(path, "header missing 'checksum'"))?
-        .to_string();
-    // The writer always terminates the payload line; a missing final
-    // newline is a torn tail even before the checksum says so.
-    let Some(body) = rest.strip_suffix('\n') else {
-        return Err(reject(
-            path,
-            "truncated file (payload ends mid-line; the write was torn)",
-        ));
-    };
-    let got = format!("{:016x}", fnv1a64(body.as_bytes()));
-    if got != want {
-        return Err(reject(
-            path,
-            format!("checksum mismatch (header {want}, payload {got}) — corrupt or truncated"),
-        ));
-    }
-    parse(body).map_err(|e| reject(path, format!("unreadable payload: {e}")))
+    CODEC.decode(text).map_err(|e| reject(path, reason(e)))
 }
 
 /// Write a checkpoint crash-consistently: temp file in the destination
 /// directory, then atomic rename over `path`. A crash at any instant
 /// leaves either the previous complete checkpoint or the new one.
 pub fn write_file(path: &str, payload: &Json) -> Result<(), PallasError> {
-    let tmp = format!("{path}.tmp.{}", std::process::id());
-    std::fs::write(&tmp, encode(payload)).map_err(|e| PallasError::File {
-        path: tmp.clone(),
-        error: e.to_string(),
-    })?;
-    std::fs::rename(&tmp, path).map_err(|e| {
-        // Never leave the temp file behind on a failed rename.
-        let _ = std::fs::remove_file(&tmp);
-        PallasError::File {
-            path: path.to_string(),
-            error: e.to_string(),
-        }
-    })
+    crate::util::codec::write_atomic(path, &encode(payload))
 }
 
 /// Read and validate a checkpoint file. I/O failures are

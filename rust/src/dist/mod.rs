@@ -1,0 +1,827 @@
+//! Distributed coordinator/worker plane (DESIGN.md §14): agent-shard
+//! claiming over a pluggable, location-agnostic transport.
+//!
+//! The paper's rollout plane spreads query generation over disaggregated
+//! workers while training consumes a single canonical stream. This
+//! module reproduces that split: a *coordinator* owns the canonical
+//! experience-store index, the event clock, and shard assignment; N
+//! *workers* claim `(step, query-slot)` shards, generate them, and ship
+//! results back. The carrier is a [`transport::Transport`] — in-process
+//! channels ([`transport::ChannelTransport`]) or child processes over
+//! localhost TCP ([`socket::SocketTransport`]) — with one wire format
+//! ([`proto`], the checkpoint codec) across both.
+//!
+//! Determinism contract: run output is **byte-identical** to the
+//! single-process scenario path for any worker count and either
+//! transport, because
+//!
+//! 1. a query slot's bits depend only on `(seed, step, slot)`
+//!    ([`crate::workload::Generator::query`]), never on which worker
+//!    generates it or when;
+//! 2. the coordinator assembles slots in slot order, so claim
+//!    interleaving cannot reorder output;
+//! 3. worker-count bookkeeping goes to stderr only.
+//!
+//! Fault contract: a worker disconnect (thread exit, child death, EOF
+//! mid-send) returns its claimed shard to the unclaimed set and the run
+//! completes on the survivors — still byte-identical. Corrupt frames
+//! and protocol violations are run-fatal with typed errors; the
+//! coordinator never panics on peer behavior.
+
+pub mod proto;
+pub mod socket;
+pub mod transport;
+pub mod worker;
+
+use std::collections::{BTreeSet, VecDeque};
+use std::sync::mpsc::{Receiver, Sender};
+
+use crate::config::WorkloadConfig;
+use crate::error::PallasError;
+use crate::workload::{LenHint, Scenario, StepWorkload, TrajectorySpec, WorkloadSource};
+
+use proto::{decode_frame, encode_frame, GenSpec, Msg};
+use transport::{ChannelTransport, FrameTx, Link, Transport};
+
+// ---------------------------------------------------------------------------
+// Plan
+// ---------------------------------------------------------------------------
+
+/// Which carrier moves frames.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransportKind {
+    /// Workers are pool threads; frames cross in-process channels.
+    Channel,
+    /// Workers are child processes; frames cross TCP on localhost.
+    Socket,
+}
+
+impl TransportKind {
+    pub fn parse(s: &str) -> Option<TransportKind> {
+        match s {
+            "channel" => Some(TransportKind::Channel),
+            "socket" => Some(TransportKind::Socket),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TransportKind::Channel => "channel",
+            TransportKind::Socket => "socket",
+        }
+    }
+}
+
+/// Deterministic worker-death injection (the fault plane's dist hook):
+/// worker `worker` dies silently on its `after_assigns`-th (0-based)
+/// shard assignment. Per-worker counting makes the death point
+/// independent of claim interleaving.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkerFault {
+    pub worker: usize,
+    pub after_assigns: u64,
+}
+
+/// How to distribute a run — the dist analogue of a workload plan,
+/// carried by the experiment builder next to `WorkloadPlan`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DistPlan {
+    pub workers: usize,
+    pub transport: TransportKind,
+    pub fail: Option<WorkerFault>,
+}
+
+impl DistPlan {
+    pub fn channel(workers: usize) -> DistPlan {
+        DistPlan {
+            workers,
+            transport: TransportKind::Channel,
+            fail: None,
+        }
+    }
+
+    pub fn socket(workers: usize) -> DistPlan {
+        DistPlan {
+            workers,
+            transport: TransportKind::Socket,
+            fail: None,
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), PallasError> {
+        if self.workers == 0 {
+            return Err(PallasError::InvalidConfig(
+                "dist requires at least one worker (--workers >= 1)".to_string(),
+            ));
+        }
+        if let Some(f) = self.fail {
+            if f.worker >= self.workers {
+                return Err(PallasError::InvalidConfig(format!(
+                    "worker-fail names worker {} but only {} workers are configured",
+                    f.worker, self.workers
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator
+// ---------------------------------------------------------------------------
+
+/// What a pump thread feeds the coordinator: a decoded message from a
+/// worker, a clean disconnect, or a run-fatal frame error.
+enum Event {
+    Msg(usize, Msg),
+    Gone(usize),
+    Fail(PallasError),
+}
+
+/// Live communication state, created lazily on the first pull.
+struct Running {
+    transport: Box<dyn Transport>,
+    /// Sender per worker; `None` once the worker is gone.
+    txs: Vec<Option<Box<dyn FrameTx>>>,
+    inbox: Receiver<Event>,
+    pumps: Vec<std::thread::JoinHandle<()>>,
+    /// Workers still connected.
+    live: usize,
+    dead: Vec<bool>,
+    /// Shard currently assigned to each worker (at most one).
+    claimed: Vec<Option<(u64, u64)>>,
+    /// Workers whose claim arrived when no shard was unclaimed; they
+    /// are dispatched first when work appears (next step, or a shard
+    /// returned by a death).
+    parked: VecDeque<usize>,
+}
+
+/// The coordinator as a [`WorkloadSource`]: the engine pulls steps from
+/// it exactly as it would from a [`crate::workload::ScenarioSource`],
+/// and gets the same bytes — generation just happened elsewhere.
+pub struct DistSource {
+    shaped: WorkloadConfig,
+    scen: Box<dyn Scenario>,
+    seed: u64,
+    total: usize,
+    next: usize,
+    plan: DistPlan,
+    /// Test seam: a pre-built transport (e.g. corrupting wrapper, or a
+    /// socket transport pointing at an explicit binary).
+    override_transport: Option<Box<dyn Transport>>,
+    state: Option<Running>,
+    error: Option<PallasError>,
+    /// Event clock: coordinator-processed events, monotone across the
+    /// run (claims, results, disconnects).
+    clock: u64,
+    /// Canonical per-agent experience-store index `(calls, token_sum)`,
+    /// folded from verified shard results.
+    index: Vec<(u64, f64)>,
+    shards: u64,
+}
+
+impl DistSource {
+    /// `shaped` must already be the scenario-shaped config (the output
+    /// of [`crate::workload::scenario::resolve`]), exactly as
+    /// [`crate::workload::ScenarioSource::new`] expects.
+    pub fn new(
+        shaped: WorkloadConfig,
+        scen: Box<dyn Scenario>,
+        seed: u64,
+        total: usize,
+        plan: DistPlan,
+    ) -> DistSource {
+        let n_agents = shaped.agents.len();
+        DistSource {
+            shaped,
+            scen,
+            seed,
+            total,
+            next: 0,
+            plan,
+            override_transport: None,
+            state: None,
+            error: None,
+            clock: 0,
+            index: vec![(0, 0.0); n_agents],
+            shards: 0,
+        }
+    }
+
+    /// Like [`DistSource::new`] but over an explicit transport instead
+    /// of one built from `plan.transport`.
+    pub fn with_transport(
+        shaped: WorkloadConfig,
+        scen: Box<dyn Scenario>,
+        seed: u64,
+        total: usize,
+        plan: DistPlan,
+        transport: Box<dyn Transport>,
+    ) -> DistSource {
+        let mut src = DistSource::new(shaped, scen, seed, total, plan);
+        src.override_transport = Some(transport);
+        src
+    }
+
+    /// Events processed so far (the coordinator's event clock).
+    pub fn clock(&self) -> u64 {
+        self.clock
+    }
+
+    /// Verified shard results folded into the canonical index.
+    pub fn shards(&self) -> u64 {
+        self.shards
+    }
+
+    /// The canonical per-agent `(calls, token_sum)` experience-store
+    /// index over every verified shard so far.
+    pub fn store_index(&self) -> &[(u64, f64)] {
+        &self.index
+    }
+
+    fn launch(&mut self) -> Result<Running, PallasError> {
+        let mut transport: Box<dyn Transport> = match self.override_transport.take() {
+            Some(t) => t,
+            None => match self.plan.transport {
+                TransportKind::Channel => Box::new(ChannelTransport::new()),
+                TransportKind::Socket => Box::new(socket::SocketTransport::current_exe()?),
+            },
+        };
+        let n = self.plan.workers;
+        let links = transport.launch(n)?;
+        let n_agents = self.shaped.agents.len();
+        let tname = transport.name();
+
+        let (ev_tx, inbox) = std::sync::mpsc::channel::<Event>();
+        let mut txs: Vec<Option<Box<dyn FrameTx>>> = Vec::with_capacity(n);
+        let mut pumps = Vec::with_capacity(n);
+        for link in links {
+            let Link { worker, tx, rx } = link;
+            debug_assert_eq!(worker, txs.len());
+            txs.push(Some(tx));
+            pumps.push(spawn_pump(
+                worker,
+                rx,
+                ev_tx.clone(),
+                format!("worker {worker} ({tname})"),
+                n_agents,
+            ));
+        }
+        drop(ev_tx); // pumps hold the only senders: recv errors once all exit
+
+        let mut run = Running {
+            transport,
+            txs,
+            inbox,
+            pumps,
+            live: n,
+            dead: vec![false; n],
+            claimed: vec![None; n],
+            parked: VecDeque::new(),
+        };
+
+        let spec = GenSpec::from_workload(&self.shaped);
+        for w in 0..n {
+            let init = Msg::Init {
+                worker: w,
+                seed: self.seed,
+                spec: spec.clone(),
+                fail_after: self
+                    .plan
+                    .fail
+                    .filter(|f| f.worker == w)
+                    .map(|f| f.after_assigns),
+            };
+            // An init that cannot be delivered means the worker is
+            // already gone; its pump will also report the disconnect,
+            // and mark_dead is idempotent.
+            let delivered = match run.txs[w].as_mut() {
+                Some(tx) => tx.send(&encode_frame(&init)).is_ok(),
+                None => false,
+            };
+            if !delivered {
+                let mut scratch = BTreeSet::new();
+                mark_dead(&mut run, w, &mut scratch);
+            }
+        }
+        Ok(run)
+    }
+
+    /// Run one step's claim/assign/result round and assemble the
+    /// workload in slot order.
+    fn produce(&mut self, run: &mut Running, step: usize) -> Result<StepWorkload, PallasError> {
+        let n_queries = self.scen.queries(&self.shaped, self.seed, step);
+        let n_agents = self.shaped.agents.len();
+        let group_size = self.shaped.group_size;
+        let mut slots: Vec<Option<Vec<TrajectorySpec>>> = vec![None; n_queries];
+        let mut unclaimed: BTreeSet<u64> = (0..n_queries as u64).collect();
+        let mut done = 0usize;
+
+        // Workers parked since the previous step get first claim.
+        dispatch(run, step, &mut unclaimed);
+
+        while done < n_queries {
+            if run.live == 0 {
+                return Err(all_gone(run, self.plan.workers, n_queries - done, step));
+            }
+            let ev = match run.inbox.recv() {
+                Ok(ev) => ev,
+                // All pumps exited and the buffer is drained — per-link
+                // FIFO means every useful frame was already processed.
+                Err(_) => return Err(all_gone(run, self.plan.workers, n_queries - done, step)),
+            };
+            self.clock += 1;
+            match ev {
+                // A dead worker's leftover frames are stale, not a
+                // violation: per-link FIFO already delivered everything
+                // that mattered before its Gone.
+                Event::Msg(w, _) if run.dead[w] => {}
+                Event::Msg(w, Msg::Claim { worker }) => {
+                    if worker != w {
+                        return Err(PallasError::Protocol {
+                            expected: format!("claim from worker {w} on its own link"),
+                            got: format!("claim from worker {worker}"),
+                        });
+                    }
+                    if let Some((s, q)) = run.claimed[w] {
+                        return Err(PallasError::Protocol {
+                            expected: "claim from an idle worker".to_string(),
+                            got: format!(
+                                "claim from worker {w} with step {s} slot {q} outstanding"
+                            ),
+                        });
+                    }
+                    run.parked.push_back(w);
+                    dispatch(run, step, &mut unclaimed);
+                }
+                Event::Msg(
+                    w,
+                    Msg::Result {
+                        worker,
+                        step: rstep,
+                        slot,
+                        trajectories,
+                        index,
+                    },
+                ) => {
+                    if worker != w {
+                        return Err(PallasError::Protocol {
+                            expected: format!("result from worker {w} on its own link"),
+                            got: format!("result from worker {worker}"),
+                        });
+                    }
+                    if run.claimed[w] != Some((rstep, slot)) {
+                        return Err(PallasError::Protocol {
+                            expected: "result for a claimed shard".to_string(),
+                            got: format!("result for step {rstep} slot {slot} from worker {w}"),
+                        });
+                    }
+                    if trajectories.len() != group_size {
+                        return Err(PallasError::Protocol {
+                            expected: format!("{group_size} trajectories per shard"),
+                            got: format!("{} from worker {w}", trajectories.len()),
+                        });
+                    }
+                    // Verify the shipped index rows against the shipped
+                    // trajectories (same iteration order as the worker,
+                    // hence bitwise f64 equality) before folding them
+                    // into the canonical store index.
+                    if worker::shard_index(&trajectories, n_agents) != index {
+                        return Err(PallasError::Protocol {
+                            expected: "index rows matching the shipped trajectories".to_string(),
+                            got: format!("diverging rows for step {rstep} slot {slot} from worker {w}"),
+                        });
+                    }
+                    for (row, &(calls, tokens)) in self.index.iter_mut().zip(&index) {
+                        row.0 += calls;
+                        row.1 += tokens;
+                    }
+                    run.claimed[w] = None;
+                    slots[slot as usize] = Some(trajectories);
+                    done += 1;
+                    self.shards += 1;
+                }
+                Event::Msg(w, other) => {
+                    return Err(PallasError::Protocol {
+                        expected: "claim or result".to_string(),
+                        got: format!("{} from worker {w}", other.kind()),
+                    });
+                }
+                Event::Gone(w) => {
+                    mark_dead(run, w, &mut unclaimed);
+                    dispatch(run, step, &mut unclaimed);
+                }
+                Event::Fail(e) => return Err(e),
+            }
+        }
+
+        // Slot-ordered assembly: byte-identical to the monolithic
+        // generator whatever the claim interleaving was.
+        let trajectories = slots
+            .into_iter()
+            .flat_map(|s| s.expect("all shards accounted for"))
+            .collect();
+        Ok(StepWorkload { step, trajectories })
+    }
+
+    fn teardown(&mut self) {
+        if let Some(mut run) = self.state.take() {
+            let shutdown = encode_frame(&Msg::Shutdown);
+            for tx in run.txs.iter_mut().flatten() {
+                let _ = tx.send(&shutdown);
+            }
+            run.txs.clear(); // hang up: workers see EOF even if shutdown was lost
+            for p in run.pumps.drain(..) {
+                let _ = p.join();
+            }
+            let mut transport = run.transport;
+            // close() reaps worker threads/children; a panic crossing
+            // Drop would abort, so contain it.
+            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+                transport.close()
+            }));
+        }
+    }
+}
+
+impl WorkloadSource for DistSource {
+    fn next_step(&mut self) -> Option<StepWorkload> {
+        if self.error.is_some() {
+            return None;
+        }
+        if self.next >= self.total {
+            self.teardown();
+            return None;
+        }
+        if self.state.is_none() {
+            match self.launch() {
+                Ok(run) => self.state = Some(run),
+                Err(e) => {
+                    self.error = Some(e);
+                    return None;
+                }
+            }
+        }
+        let mut run = self.state.take().expect("launched above");
+        let step = self.next;
+        let produced = self.produce(&mut run, step);
+        self.state = Some(run);
+        match produced {
+            Ok(w) => {
+                self.next += 1;
+                Some(w)
+            }
+            Err(e) => {
+                self.error = Some(e);
+                self.teardown();
+                None
+            }
+        }
+    }
+
+    fn len_hint(&self) -> LenHint {
+        LenHint::Exact(self.total - self.next)
+    }
+
+    fn take_error(&mut self) -> Option<PallasError> {
+        self.error.take()
+    }
+
+    /// O(1), mirroring [`crate::workload::ScenarioSource`]: shard bits
+    /// depend only on `(seed, step, slot)`, so resuming is a cursor
+    /// assignment — workers are not even launched yet.
+    fn fast_forward(&mut self, n: usize) -> Result<(), PallasError> {
+        if self.next != 0 {
+            return Err(PallasError::InvalidConfig(format!(
+                "fast_forward on a source already at step {}",
+                self.next
+            )));
+        }
+        if n > self.total {
+            return Err(PallasError::InvalidConfig(format!(
+                "cannot resume to step {n}: scenario has {} steps",
+                self.total
+            )));
+        }
+        self.next = n;
+        Ok(())
+    }
+}
+
+impl Drop for DistSource {
+    fn drop(&mut self) {
+        self.teardown();
+    }
+}
+
+/// One pump per link: decode inbound frames into coordinator events.
+/// Exits after reporting a disconnect or a frame error; exits silently
+/// if the coordinator hung up first.
+fn spawn_pump(
+    worker: usize,
+    mut rx: Box<dyn transport::FrameRx>,
+    ev_tx: Sender<Event>,
+    endpoint: String,
+    n_agents: usize,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        let mut frames: u64 = 0;
+        loop {
+            let ev = match rx.recv() {
+                Ok(Some(bytes)) => {
+                    frames += 1;
+                    match decode_frame(&bytes, &endpoint, frames, n_agents) {
+                        Ok(msg) => Event::Msg(worker, msg),
+                        Err(e) => {
+                            let _ = ev_tx.send(Event::Fail(e));
+                            return;
+                        }
+                    }
+                }
+                Ok(None) => {
+                    let _ = ev_tx.send(Event::Gone(worker));
+                    return;
+                }
+                Err(e) => {
+                    let _ = ev_tx.send(Event::Fail(e));
+                    return;
+                }
+            };
+            if ev_tx.send(ev).is_err() {
+                return;
+            }
+        }
+    })
+}
+
+/// Idempotent worker-death bookkeeping: drop its sender, return its
+/// claimed shard (if any) to the unclaimed set, forget its parking.
+fn mark_dead(run: &mut Running, w: usize, unclaimed: &mut BTreeSet<u64>) {
+    if run.dead[w] {
+        return;
+    }
+    run.dead[w] = true;
+    run.live -= 1;
+    run.txs[w] = None;
+    if let Some((_, slot)) = run.claimed[w].take() {
+        unclaimed.insert(slot);
+    }
+    run.parked.retain(|&p| p != w);
+}
+
+/// Hand unclaimed shards (smallest slot first — determinism by
+/// convention, though assembly order never depends on it) to parked
+/// workers. A send failure is a death: the shard goes back and the
+/// loop moves on to the next parked worker.
+fn dispatch(run: &mut Running, step: usize, unclaimed: &mut BTreeSet<u64>) {
+    while !unclaimed.is_empty() {
+        let Some(w) = run.parked.pop_front() else {
+            break;
+        };
+        if run.dead[w] {
+            continue;
+        }
+        let slot = *unclaimed.iter().next().expect("nonempty");
+        unclaimed.remove(&slot);
+        let msg = Msg::Assign {
+            step: step as u64,
+            slot,
+        };
+        let sent = match run.txs[w].as_mut() {
+            Some(tx) => tx.send(&encode_frame(&msg)).is_ok(),
+            None => false,
+        };
+        if sent {
+            run.claimed[w] = Some((step as u64, slot));
+        } else {
+            unclaimed.insert(slot);
+            mark_dead(run, w, unclaimed);
+        }
+    }
+}
+
+/// The no-survivors diagnostic: typed, names the transport and the
+/// stranded work so the operator knows the run (not a worker) failed.
+fn all_gone(run: &Running, workers: usize, missing: usize, step: usize) -> PallasError {
+    PallasError::Transport {
+        endpoint: format!("all {workers} workers ({})", run.transport.name()),
+        reason: format!(
+            "every worker is gone with {missing} query shard(s) unassembled at step {step}; \
+             cannot make progress"
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{scenario, ScenarioSource};
+    use transport::CorruptingTransport;
+
+    fn resolved(name: &str) -> (WorkloadConfig, Box<dyn Scenario>) {
+        let mut wl = WorkloadConfig::ma();
+        wl.scenario = name.to_string();
+        scenario::resolve(&wl).unwrap()
+    }
+
+    fn drain(src: &mut dyn WorkloadSource) -> Vec<StepWorkload> {
+        let mut out = Vec::new();
+        while let Some(w) = src.next_step() {
+            out.push(w);
+        }
+        out
+    }
+
+    fn reference(name: &str, seed: u64, steps: usize) -> Vec<StepWorkload> {
+        let (shaped, scen) = resolved(name);
+        drain(&mut ScenarioSource::new(shaped, scen, seed, steps))
+    }
+
+    #[test]
+    fn channel_dist_is_byte_identical_to_scenario_source() {
+        // The tentpole contract, at the source level: any worker count,
+        // same bytes — including an open-loop preset whose per-step
+        // query count varies.
+        for name in ["baseline", "poisson"] {
+            let golden = reference(name, 2048, 4);
+            for workers in [1usize, 2, 8] {
+                let (shaped, scen) = resolved(name);
+                let mut src =
+                    DistSource::new(shaped, scen, 2048, 4, DistPlan::channel(workers));
+                let got = drain(&mut src);
+                assert!(src.take_error().is_none());
+                // PartialEq on CallSpec is bit-level f64 equality.
+                assert_eq!(got, golden, "{name} with {workers} workers");
+                assert!(src.shards() > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn coordinator_index_matches_the_assembled_workload() {
+        let (shaped, scen) = resolved("baseline");
+        let n_agents = shaped.agents.len();
+        let mut src = DistSource::new(shaped, scen, 2048, 3, DistPlan::channel(2));
+        let steps = drain(&mut src);
+        assert!(src.take_error().is_none());
+        let mut want = vec![(0u64, 0.0f64); n_agents];
+        for w in &steps {
+            for t in &w.trajectories {
+                for c in &t.calls {
+                    want[c.agent].0 += 1;
+                    want[c.agent].1 += c.tokens;
+                }
+            }
+        }
+        // Identical iteration order end-to-end → bitwise equality.
+        assert_eq!(src.store_index(), &want[..]);
+        assert!(src.clock() > 0);
+    }
+
+    #[test]
+    fn dying_worker_returns_shard_and_run_stays_byte_identical() {
+        let golden = reference("baseline", 2048, 4);
+        // Victim 0 dies on its very first assign; victim 1 after two.
+        for fail in [
+            WorkerFault { worker: 0, after_assigns: 0 },
+            WorkerFault { worker: 1, after_assigns: 2 },
+        ] {
+            let (shaped, scen) = resolved("baseline");
+            let mut plan = DistPlan::channel(3);
+            plan.fail = Some(fail);
+            let mut src = DistSource::new(shaped, scen, 2048, 4, plan);
+            let got = drain(&mut src);
+            assert!(src.take_error().is_none(), "fault {fail:?}");
+            assert_eq!(got, golden, "fault {fail:?}");
+        }
+    }
+
+    #[test]
+    fn all_workers_dead_is_a_typed_transport_error() {
+        let (shaped, scen) = resolved("baseline");
+        let mut plan = DistPlan::channel(1);
+        plan.fail = Some(WorkerFault { worker: 0, after_assigns: 0 });
+        let mut src = DistSource::new(shaped, scen, 2048, 2, plan);
+        assert!(src.next_step().is_none());
+        let err = src.take_error().expect("typed error");
+        assert!(matches!(err, PallasError::Transport { .. }), "{err:?}");
+        let msg = err.to_string();
+        assert!(msg.contains("all 1 workers (channel)"), "{msg}");
+        assert!(msg.contains("cannot make progress"), "{msg}");
+        // Idempotent thereafter.
+        assert!(src.next_step().is_none());
+        assert!(src.take_error().is_none());
+    }
+
+    #[test]
+    fn corrupted_frame_surfaces_a_typed_checksum_error() {
+        // Satellite: in-memory corrupting transport proves a flipped
+        // byte in transit becomes a typed frame diagnostic — not a
+        // panic, not silent acceptance. Frame 2 on worker 0's link is
+        // its first result (frame 1 is its claim).
+        let (shaped, scen) = resolved("baseline");
+        let mut src = DistSource::with_transport(
+            shaped,
+            scen,
+            2048,
+            2,
+            DistPlan::channel(1),
+            Box::new(CorruptingTransport::new(ChannelTransport::new(), 2)),
+        );
+        assert!(src.next_step().is_none());
+        let err = src.take_error().expect("typed error");
+        let msg = err.to_string();
+        assert!(msg.contains("transport worker 0 (channel)"), "{msg}");
+        assert!(msg.contains("frame 2:"), "{msg}");
+        assert!(msg.contains("checksum mismatch"), "{msg}");
+    }
+
+    #[test]
+    fn fast_forward_matches_a_skipped_scenario_source() {
+        let golden = reference("bursty", 7, 5);
+        let (shaped, scen) = resolved("bursty");
+        let mut src = DistSource::new(shaped, scen, 7, 5, DistPlan::channel(2));
+        src.fast_forward(3).unwrap();
+        assert_eq!(src.len_hint(), LenHint::Exact(2));
+        let got = drain(&mut src);
+        assert!(src.take_error().is_none());
+        assert_eq!(got, golden[3..]);
+        // And the ScenarioSource guards are mirrored.
+        let (shaped, scen) = resolved("bursty");
+        let mut src = DistSource::new(shaped, scen, 7, 5, DistPlan::channel(1));
+        assert!(src.fast_forward(6).is_err());
+        src.next_step().unwrap();
+        assert!(src.fast_forward(1).is_err());
+    }
+
+    #[test]
+    fn plan_validation_rejects_nonsense() {
+        assert!(DistPlan::channel(0).validate().is_err());
+        let mut p = DistPlan::socket(2);
+        p.fail = Some(WorkerFault { worker: 2, after_assigns: 0 });
+        assert!(p.validate().is_err());
+        assert!(DistPlan::channel(8).validate().is_ok());
+        assert_eq!(TransportKind::parse("socket"), Some(TransportKind::Socket));
+        assert_eq!(TransportKind::parse("carrier-pigeon"), None);
+    }
+
+    #[test]
+    fn misbehaving_worker_trips_protocol_errors() {
+        // A rogue transport whose single "worker" reads init then sends
+        // a claim wearing the wrong worker id.
+        struct RogueTx(std::sync::mpsc::Sender<Vec<u8>>);
+        impl FrameTx for RogueTx {
+            fn send(&mut self, frame: &[u8]) -> Result<(), PallasError> {
+                let _ = self.0.send(frame.to_vec());
+                Ok(())
+            }
+        }
+        struct RogueRx(std::sync::mpsc::Receiver<Vec<u8>>);
+        impl transport::FrameRx for RogueRx {
+            fn recv(&mut self) -> Result<Option<Vec<u8>>, PallasError> {
+                Ok(self.0.recv().ok())
+            }
+        }
+        struct RogueTransport;
+        impl Transport for RogueTransport {
+            fn name(&self) -> &'static str {
+                "rogue"
+            }
+            fn launch(&mut self, n: usize) -> Result<Vec<Link>, PallasError> {
+                assert_eq!(n, 1);
+                let (c2w_tx, c2w_rx) = std::sync::mpsc::channel::<Vec<u8>>();
+                let (w2c_tx, w2c_rx) = std::sync::mpsc::channel::<Vec<u8>>();
+                std::thread::spawn(move || {
+                    let _init = c2w_rx.recv(); // swallow init
+                    let _ = w2c_tx.send(encode_frame(&Msg::Claim { worker: 5 }));
+                    // keep the link open until the coordinator hangs up
+                    while c2w_rx.recv().is_ok() {}
+                });
+                Ok(vec![Link {
+                    worker: 0,
+                    tx: Box::new(RogueTx(c2w_tx)),
+                    rx: Box::new(RogueRx(w2c_rx)),
+                }])
+            }
+        }
+
+        let (shaped, scen) = resolved("baseline");
+        let mut src = DistSource::with_transport(
+            shaped,
+            scen,
+            2048,
+            1,
+            DistPlan::channel(1),
+            Box::new(RogueTransport),
+        );
+        assert!(src.next_step().is_none());
+        let err = src.take_error().expect("typed error");
+        assert!(matches!(err, PallasError::Protocol { .. }), "{err:?}");
+        let msg = err.to_string();
+        assert!(
+            msg.contains("expected claim from worker 0 on its own link, got claim from worker 5"),
+            "{msg}"
+        );
+    }
+}

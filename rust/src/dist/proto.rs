@@ -1,0 +1,532 @@
+//! Wire protocol of the distributed plane (DESIGN.md §14).
+//!
+//! Every message is one *frame*: the two-line [`crate::util::codec`]
+//! text (magic `flexmarl-dist`, version [`PROTO_VERSION`], fnv1a64
+//! checksum) — the same byte format checkpoints use, per the paper's
+//! "unified and location-agnostic communication". A frame is identical
+//! whether it crosses an in-process channel or a socket; only the
+//! carrier differs ([`crate::dist::transport`]).
+//!
+//! Message taxonomy (tabulated in DESIGN.md §14):
+//!
+//! | dir | kind       | payload |
+//! |-----|------------|---------|
+//! | C→W | `init`     | seed, worker id, [`GenSpec`], optional fault plan |
+//! | C→W | `assign`   | (step, slot) shard |
+//! | C→W | `shutdown` | — |
+//! | W→C | `claim`    | worker id |
+//! | W→C | `result`   | (step, slot), trajectories, per-agent index rows |
+//!
+//! Decode failures surface in [`crate::workload::TraceReader`]'s
+//! diagnostic style: a typed [`PallasError::Transport`] whose reason
+//! carries the 1-based frame index on that link plus recovery guidance
+//! — never a panic, pinned by the corrupting-transport tests.
+
+use crate::config::{AgentConfig, ModelScale, WorkloadConfig};
+use crate::error::PallasError;
+use crate::util::codec::{as_ju64, ju64, Codec, CodecError};
+use crate::util::json::Json;
+use crate::workload::{trajectory_from_json, trajectory_to_json, TrajectorySpec};
+
+/// First-line magic distinguishing dist frames from checkpoints (and
+/// anything else sharing the codec substrate).
+pub const MAGIC: &str = "flexmarl-dist";
+
+/// Protocol version. Both ends must speak the same one; a mismatch is
+/// a typed frame rejection, not garbage state.
+pub const PROTO_VERSION: u64 = 1;
+
+/// The dist vocabulary over the shared frame codec.
+pub const CODEC: Codec = Codec {
+    magic: MAGIC,
+    version: PROTO_VERSION,
+};
+
+/// Refuse absurd length prefixes before allocating: no legitimate
+/// frame (one query's trajectory group) comes near this.
+pub const MAX_FRAME_LEN: u32 = 256 * 1024 * 1024;
+
+// ---------------------------------------------------------------------------
+// GenSpec: everything a worker needs to generate query shards
+// ---------------------------------------------------------------------------
+
+/// The generation parameters of a shaped [`WorkloadConfig`], shipped in
+/// `init`. Exactly the fields [`crate::workload::Generator`] reads —
+/// agent names/models are presentation-only there, so a worker
+/// reconstructs a placeholder config around these and produces
+/// bit-identical trajectories (`f64` survives the JSON round-trip
+/// bit-exactly; the byte-identity contract rests on that).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GenSpec {
+    /// Per agent: `(invoke_weight, mean_tokens, token_sigma)`.
+    pub agents: Vec<(f64, f64, f64)>,
+    pub min_turns: usize,
+    pub max_turns: usize,
+    pub group_size: usize,
+    pub max_tokens: f64,
+    pub env_mu: f64,
+    pub env_sigma: f64,
+}
+
+impl GenSpec {
+    /// Capture the generation parameters of an (already-shaped) config.
+    pub fn from_workload(wl: &WorkloadConfig) -> GenSpec {
+        GenSpec {
+            agents: wl
+                .agents
+                .iter()
+                .map(|a| (a.invoke_weight, a.mean_tokens, a.token_sigma))
+                .collect(),
+            min_turns: wl.min_turns,
+            max_turns: wl.max_turns,
+            group_size: wl.group_size,
+            max_tokens: wl.max_tokens,
+            env_mu: wl.env_mu,
+            env_sigma: wl.env_sigma,
+        }
+    }
+
+    /// Rebuild a config a [`crate::workload::Generator`] can run on.
+    /// Names, models, and the step-level fields (`queries_per_step`,
+    /// `inter_query`, scenario, trace) are placeholders: per-query
+    /// generation never reads them.
+    pub fn to_workload(&self) -> WorkloadConfig {
+        WorkloadConfig {
+            name: "dist".to_string(),
+            agents: self
+                .agents
+                .iter()
+                .enumerate()
+                .map(|(i, &(invoke_weight, mean_tokens, token_sigma))| AgentConfig {
+                    name: format!("agent{i}"),
+                    model: ModelScale::B14,
+                    invoke_weight,
+                    mean_tokens,
+                    token_sigma,
+                })
+                .collect(),
+            queries_per_step: 1,
+            min_turns: self.min_turns,
+            max_turns: self.max_turns,
+            group_size: self.group_size,
+            inter_query: 1,
+            max_tokens: self.max_tokens,
+            env_mu: self.env_mu,
+            env_sigma: self.env_sigma,
+            scenario: "baseline".to_string(),
+            trace: None,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "agents",
+                Json::arr(self.agents.iter().map(|&(w, m, s)| {
+                    Json::arr([Json::num(w), Json::num(m), Json::num(s)])
+                })),
+            ),
+            ("min_turns", Json::num(self.min_turns as f64)),
+            ("max_turns", Json::num(self.max_turns as f64)),
+            ("group_size", Json::num(self.group_size as f64)),
+            ("max_tokens", Json::num(self.max_tokens)),
+            ("env_mu", Json::num(self.env_mu)),
+            ("env_sigma", Json::num(self.env_sigma)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<GenSpec, String> {
+        let agents_j = j
+            .at(&["agents"])
+            .and_then(Json::as_arr)
+            .ok_or_else(|| "init spec missing 'agents'".to_string())?;
+        let mut agents = Vec::with_capacity(agents_j.len());
+        for a in agents_j {
+            let triple = a
+                .as_arr()
+                .filter(|t| t.len() == 3)
+                .ok_or_else(|| "init spec agent is not [weight,mean,sigma]".to_string())?;
+            let mut vals = [0.0f64; 3];
+            for (i, v) in triple.iter().enumerate() {
+                vals[i] = v
+                    .as_f64()
+                    .ok_or_else(|| "init spec agent field is not a number".to_string())?;
+            }
+            agents.push((vals[0], vals[1], vals[2]));
+        }
+        let us = |key: &str| -> Result<usize, String> {
+            j.at(&[key])
+                .and_then(Json::as_usize)
+                .ok_or_else(|| format!("init spec missing '{key}'"))
+        };
+        let fl = |key: &str| -> Result<f64, String> {
+            j.at(&[key])
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("init spec missing '{key}'"))
+        };
+        Ok(GenSpec {
+            agents,
+            min_turns: us("min_turns")?,
+            max_turns: us("max_turns")?,
+            group_size: us("group_size")?,
+            max_tokens: fl("max_tokens")?,
+            env_mu: fl("env_mu")?,
+            env_sigma: fl("env_sigma")?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Messages
+// ---------------------------------------------------------------------------
+
+/// One protocol message (see the module-level taxonomy table).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    /// C→W: identity, seed, generation parameters, and (fault-plane)
+    /// an optional deterministic death plan: die silently on assign
+    /// number `fail_after` (0-based).
+    Init {
+        worker: usize,
+        seed: u64,
+        spec: GenSpec,
+        fail_after: Option<u64>,
+    },
+    /// C→W: generate query shard `(step, slot)` and ship the result.
+    Assign { step: u64, slot: u64 },
+    /// C→W: the run is over; exit cleanly.
+    Shutdown,
+    /// W→C: idle, ready for a shard.
+    Claim { worker: usize },
+    /// W→C: shard `(step, slot)` done. `index` is the worker's
+    /// per-agent `(calls, token_sum)` rows for this shard — the
+    /// coordinator verifies them against the shipped trajectories
+    /// before folding them into its canonical experience-store index.
+    Result {
+        worker: usize,
+        step: u64,
+        slot: u64,
+        trajectories: Vec<TrajectorySpec>,
+        index: Vec<(u64, f64)>,
+    },
+}
+
+impl Msg {
+    /// Message kind tag — the Protocol-error vocabulary.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Msg::Init { .. } => "init",
+            Msg::Assign { .. } => "assign",
+            Msg::Shutdown => "shutdown",
+            Msg::Claim { .. } => "claim",
+            Msg::Result { .. } => "result",
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            Msg::Init {
+                worker,
+                seed,
+                spec,
+                fail_after,
+            } => {
+                let mut fields = vec![
+                    ("kind", Json::str("init")),
+                    ("worker", Json::num(*worker as f64)),
+                    ("seed", ju64(*seed)),
+                    ("spec", spec.to_json()),
+                ];
+                if let Some(k) = fail_after {
+                    fields.push(("fail_after", ju64(*k)));
+                }
+                Json::obj(fields)
+            }
+            Msg::Assign { step, slot } => Json::obj(vec![
+                ("kind", Json::str("assign")),
+                ("step", ju64(*step)),
+                ("slot", ju64(*slot)),
+            ]),
+            Msg::Shutdown => Json::obj(vec![("kind", Json::str("shutdown"))]),
+            Msg::Claim { worker } => Json::obj(vec![
+                ("kind", Json::str("claim")),
+                ("worker", Json::num(*worker as f64)),
+            ]),
+            Msg::Result {
+                worker,
+                step,
+                slot,
+                trajectories,
+                index,
+            } => Json::obj(vec![
+                ("kind", Json::str("result")),
+                ("worker", Json::num(*worker as f64)),
+                ("step", ju64(*step)),
+                ("slot", ju64(*slot)),
+                (
+                    "trajectories",
+                    Json::arr(trajectories.iter().map(trajectory_to_json)),
+                ),
+                (
+                    "index",
+                    Json::arr(index.iter().map(|&(calls, tokens)| {
+                        Json::arr([ju64(calls), Json::num(tokens)])
+                    })),
+                ),
+            ]),
+        }
+    }
+
+    fn from_json(j: &Json, n_agents: usize) -> Result<Msg, String> {
+        let kind = j
+            .at(&["kind"])
+            .and_then(Json::as_str)
+            .ok_or_else(|| "message missing 'kind'".to_string())?;
+        let worker = |j: &Json| -> Result<usize, String> {
+            j.at(&["worker"])
+                .and_then(Json::as_usize)
+                .ok_or_else(|| format!("{kind} missing 'worker'"))
+        };
+        let u64_field = |key: &str| -> Result<u64, String> {
+            j.at(&[key])
+                .and_then(as_ju64)
+                .ok_or_else(|| format!("{kind} missing '{key}'"))
+        };
+        match kind {
+            "init" => Ok(Msg::Init {
+                worker: worker(j)?,
+                seed: u64_field("seed")?,
+                spec: GenSpec::from_json(
+                    j.at(&["spec"]).ok_or_else(|| "init missing 'spec'".to_string())?,
+                )?,
+                fail_after: j.at(&["fail_after"]).and_then(as_ju64),
+            }),
+            "assign" => Ok(Msg::Assign {
+                step: u64_field("step")?,
+                slot: u64_field("slot")?,
+            }),
+            "shutdown" => Ok(Msg::Shutdown),
+            "claim" => Ok(Msg::Claim { worker: worker(j)? }),
+            "result" => {
+                let trajs_j = j
+                    .at(&["trajectories"])
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| "result missing 'trajectories'".to_string())?;
+                let mut trajectories = Vec::with_capacity(trajs_j.len());
+                for t in trajs_j {
+                    trajectories.push(trajectory_from_json(t, n_agents)?);
+                }
+                let index_j = j
+                    .at(&["index"])
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| "result missing 'index'".to_string())?;
+                let mut index = Vec::with_capacity(index_j.len());
+                for row in index_j {
+                    let pair = row
+                        .as_arr()
+                        .filter(|p| p.len() == 2)
+                        .ok_or_else(|| "result index row is not [calls,tokens]".to_string())?;
+                    index.push((
+                        as_ju64(&pair[0]).ok_or_else(|| "result index: bad calls".to_string())?,
+                        pair[1]
+                            .as_f64()
+                            .ok_or_else(|| "result index: bad tokens".to_string())?,
+                    ));
+                }
+                Ok(Msg::Result {
+                    worker: worker(j)?,
+                    step: u64_field("step")?,
+                    slot: u64_field("slot")?,
+                    trajectories,
+                    index,
+                })
+            }
+            other => Err(format!("unknown message kind '{other}'")),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Frame encode / decode
+// ---------------------------------------------------------------------------
+
+/// Serialize a message into frame bytes (codec text, UTF-8).
+pub fn encode_frame(msg: &Msg) -> Vec<u8> {
+    CODEC.encode(&msg.to_json()).into_bytes()
+}
+
+/// Build the typed frame diagnostic: 1-based frame index on this link
+/// plus a preformatted reason — the [`crate::workload::TraceReader`]
+/// line-diagnostic style, for streams.
+pub fn frame_error(endpoint: &str, frame: u64, reason: impl Into<String>) -> PallasError {
+    PallasError::Transport {
+        endpoint: endpoint.to_string(),
+        reason: format!("frame {frame}: {}", reason.into()),
+    }
+}
+
+/// Render a structured codec rejection with dist-plane guidance.
+fn codec_reason(e: &CodecError) -> String {
+    match e {
+        CodecError::NoPayload | CodecError::TornTail => {
+            "truncated frame (the stream was cut mid-frame); the peer likely died mid-send".into()
+        }
+        CodecError::BadHeader(e) => format!(
+            "unreadable frame header: {e} — framing desynchronized or the peer \
+             speaks another protocol"
+        ),
+        CodecError::BadMagic => {
+            "not a flexmarl-dist frame (bad magic) — the peer is not a dist worker/coordinator"
+                .into()
+        }
+        CodecError::BadVersion { got, want } => format!(
+            "unsupported dist protocol version {got} (want {want}) — both ends must \
+             run the same build"
+        ),
+        CodecError::MissingChecksum => "frame header missing 'checksum'".into(),
+        CodecError::ChecksumMismatch { want, got } => format!(
+            "checksum mismatch (header {want}, payload {got}) — the frame was \
+             corrupted in transit"
+        ),
+        CodecError::BadPayload(e) => format!("unreadable frame payload: {e}"),
+    }
+}
+
+/// Validate and parse one received frame. `frame` is the 1-based count
+/// of frames received on this link so far; every rejection is a typed
+/// [`PallasError::Transport`] naming the link, the frame index, and
+/// recovery guidance — never a panic.
+pub fn decode_frame(
+    bytes: &[u8],
+    endpoint: &str,
+    frame: u64,
+    n_agents: usize,
+) -> Result<Msg, PallasError> {
+    let text = std::str::from_utf8(bytes).map_err(|_| {
+        frame_error(
+            endpoint,
+            frame,
+            "frame is not UTF-8 — the stream is corrupt or framing desynchronized",
+        )
+    })?;
+    let j = CODEC
+        .decode(text)
+        .map_err(|e| frame_error(endpoint, frame, codec_reason(&e)))?;
+    Msg::from_json(&j, n_agents).map_err(|e| frame_error(endpoint, frame, e))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Generator;
+
+    fn spec() -> GenSpec {
+        GenSpec::from_workload(&WorkloadConfig::ma())
+    }
+
+    #[test]
+    fn every_message_roundtrips_through_frame_bytes() {
+        let wl = WorkloadConfig::ma();
+        let trajectories = Generator::new(&wl, 2048).query(1, 0);
+        let index = crate::dist::worker::shard_index(&trajectories, wl.agents.len());
+        let msgs = vec![
+            Msg::Init {
+                worker: 3,
+                seed: u64::MAX - 5,
+                spec: spec(),
+                fail_after: Some(2),
+            },
+            Msg::Init {
+                worker: 0,
+                seed: 2048,
+                spec: spec(),
+                fail_after: None,
+            },
+            Msg::Assign { step: 7, slot: 2 },
+            Msg::Shutdown,
+            Msg::Claim { worker: 1 },
+            Msg::Result {
+                worker: 1,
+                step: 7,
+                slot: 2,
+                trajectories,
+                index,
+            },
+        ];
+        for m in msgs {
+            let bytes = encode_frame(&m);
+            let back = decode_frame(&bytes, "worker 1 (test)", 1, wl.agents.len()).unwrap();
+            // PartialEq on TrajectorySpec is bit-level f64 equality —
+            // the wire round-trip must be exact.
+            assert_eq!(back, m);
+        }
+    }
+
+    #[test]
+    fn genspec_reconstructs_a_generator_equivalent_config() {
+        // The byte-identity keystone: a worker generating from the
+        // reconstructed placeholder config produces the same bits as
+        // the coordinator would from the real one.
+        for wl in [WorkloadConfig::ma(), WorkloadConfig::ca()] {
+            let rebuilt = GenSpec::from_workload(&wl).to_workload();
+            let a = Generator::new(&wl, 2048);
+            let b = Generator::new(&rebuilt, 2048);
+            for (step, q) in [(0, 0), (0, 3), (5, 1)] {
+                assert_eq!(a.query(step, q), b.query(step, q), "{} {step}/{q}", wl.name);
+            }
+        }
+    }
+
+    #[test]
+    fn corrupt_frames_are_typed_with_frame_index_and_guidance() {
+        let n = WorkloadConfig::ma().agents.len();
+        let good = encode_frame(&Msg::Claim { worker: 0 });
+
+        // Flipped payload byte → checksum mismatch.
+        let mut flipped = good.clone();
+        let nl = flipped.iter().position(|&b| b == b'\n').unwrap();
+        flipped[nl + 1] ^= 0x01;
+        let err = decode_frame(&flipped, "worker 0 (channel)", 3, n).unwrap_err();
+        assert!(matches!(err, PallasError::Transport { .. }), "{err:?}");
+        let msg = err.to_string();
+        assert!(msg.contains("transport worker 0 (channel)"), "{msg}");
+        assert!(msg.contains("frame 3:"), "{msg}");
+        assert!(msg.contains("checksum mismatch"), "{msg}");
+        assert!(msg.contains("corrupted in transit"), "{msg}");
+
+        // Truncated frame.
+        let cut = &good[..good.len() - 4];
+        let err = decode_frame(cut, "worker 2 (socket)", 1, n).unwrap_err();
+        assert!(err.to_string().contains("truncated frame"), "{err}");
+
+        // A checkpoint blob is not a dist frame.
+        let ckpt = crate::ckpt::encode(&Json::obj(vec![("x", Json::num(1.0))]));
+        let err = decode_frame(ckpt.as_bytes(), "worker 0 (channel)", 2, n).unwrap_err();
+        assert!(err.to_string().contains("bad magic"), "{err}");
+
+        // Invalid UTF-8.
+        let err = decode_frame(&[0xff, 0xfe, 0x0a, 0x0a], "worker 0 (channel)", 9, n).unwrap_err();
+        assert!(err.to_string().contains("not UTF-8"), "{err}");
+
+        // Well-formed frame, unknown message kind.
+        let alien = CODEC
+            .encode(&Json::obj(vec![("kind", Json::str("gossip"))]))
+            .into_bytes();
+        let err = decode_frame(&alien, "worker 0 (channel)", 4, n).unwrap_err();
+        assert!(err.to_string().contains("unknown message kind 'gossip'"), "{err}");
+    }
+
+    #[test]
+    fn seed_and_counters_survive_above_2_pow_53() {
+        // Seeds are string-encoded (ju64), so the full u64 range
+        // round-trips — unlike the trace header's plain JSON number.
+        let m = Msg::Init {
+            worker: 0,
+            seed: (1 << 53) + 1,
+            spec: spec(),
+            fail_after: None,
+        };
+        let back = decode_frame(&encode_frame(&m), "w", 1, 8).unwrap();
+        assert_eq!(back, m);
+    }
+}

@@ -1,0 +1,215 @@
+//! Socket transport: workers are child processes, frames cross TCP on
+//! localhost (DESIGN.md §14).
+//!
+//! Framing is a `u32` big-endian length prefix followed by the frame
+//! bytes — the frame *content* is byte-identical to the channel
+//! transport's (the codec text carries its own magic/version/checksum,
+//! so content integrity never depends on the carrier). An unexpected
+//! EOF anywhere in a read is a clean disconnect (`Ok(None)`): a worker
+//! killed mid-send looks exactly like a worker that hung up, and the
+//! coordinator's fault plane reclaims its shard either way.
+//!
+//! Worker identity is assigned by accept order — arrival order is
+//! nondeterministic, but identity flows from the `init` frame and
+//! shard assembly is slot-ordered, so run output is unaffected.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+
+use crate::error::PallasError;
+
+use super::proto::MAX_FRAME_LEN;
+use super::transport::{FrameRx, FrameTx, Link, Transport};
+use super::worker;
+
+fn io_err(endpoint: &str, what: &str, e: &std::io::Error) -> PallasError {
+    PallasError::Transport {
+        endpoint: endpoint.to_string(),
+        reason: format!("{what}: {e}"),
+    }
+}
+
+struct SockTx {
+    stream: TcpStream,
+    endpoint: String,
+}
+
+impl FrameTx for SockTx {
+    fn send(&mut self, frame: &[u8]) -> Result<(), PallasError> {
+        let len = u32::try_from(frame.len()).map_err(|_| PallasError::Transport {
+            endpoint: self.endpoint.clone(),
+            reason: format!("frame of {} bytes exceeds the u32 length prefix", frame.len()),
+        })?;
+        self.stream
+            .write_all(&len.to_be_bytes())
+            .and_then(|_| self.stream.write_all(frame))
+            .and_then(|_| self.stream.flush())
+            .map_err(|e| io_err(&self.endpoint, "send failed", &e))
+    }
+}
+
+struct SockRx {
+    stream: TcpStream,
+    endpoint: String,
+}
+
+impl FrameRx for SockRx {
+    fn recv(&mut self) -> Result<Option<Vec<u8>>, PallasError> {
+        let mut len_buf = [0u8; 4];
+        if let Err(e) = self.stream.read_exact(&mut len_buf) {
+            return if e.kind() == std::io::ErrorKind::UnexpectedEof {
+                Ok(None) // peer hung up (or died) between frames
+            } else {
+                Err(io_err(&self.endpoint, "recv failed", &e))
+            };
+        }
+        let len = u32::from_be_bytes(len_buf);
+        if len > MAX_FRAME_LEN {
+            return Err(PallasError::Transport {
+                endpoint: self.endpoint.clone(),
+                reason: format!(
+                    "frame length {len} exceeds the {MAX_FRAME_LEN}-byte cap — framing \
+                     desynchronized or the peer speaks another protocol"
+                ),
+            });
+        }
+        let mut buf = vec![0u8; len as usize];
+        if let Err(e) = self.stream.read_exact(&mut buf) {
+            return if e.kind() == std::io::ErrorKind::UnexpectedEof {
+                Ok(None) // peer died mid-send; treat as disconnect
+            } else {
+                Err(io_err(&self.endpoint, "recv failed", &e))
+            };
+        }
+        Ok(Some(buf))
+    }
+}
+
+/// Transport whose workers are child processes of this binary
+/// (`flexmarl dist-worker --connect ADDR`), connected over TCP on
+/// 127.0.0.1. The multi-host shape of the paper's disaggregated
+/// rollout plane, scoped to one machine.
+pub struct SocketTransport {
+    exe: PathBuf,
+    children: Vec<Child>,
+}
+
+impl SocketTransport {
+    /// Spawn workers from an explicit binary path (tests pass
+    /// `env!("CARGO_BIN_EXE_flexmarl")`).
+    pub fn new(exe: impl Into<PathBuf>) -> SocketTransport {
+        SocketTransport {
+            exe: exe.into(),
+            children: Vec::new(),
+        }
+    }
+
+    /// Spawn workers from the currently running binary — the CLI path.
+    pub fn current_exe() -> Result<SocketTransport, PallasError> {
+        let exe = std::env::current_exe().map_err(|e| PallasError::Transport {
+            endpoint: "socket".to_string(),
+            reason: format!("cannot resolve own binary path for worker spawn: {e}"),
+        })?;
+        Ok(SocketTransport::new(exe))
+    }
+}
+
+impl Transport for SocketTransport {
+    fn name(&self) -> &'static str {
+        "socket"
+    }
+
+    fn launch(&mut self, n: usize) -> Result<Vec<Link>, PallasError> {
+        let listener = TcpListener::bind("127.0.0.1:0")
+            .map_err(|e| io_err("socket", "cannot bind localhost listener", &e))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| io_err("socket", "cannot read listener address", &e))?;
+
+        for _ in 0..n {
+            let spawned = Command::new(&self.exe)
+                .arg("dist-worker")
+                .arg("--connect")
+                .arg(addr.to_string())
+                .stdin(Stdio::null())
+                .stdout(Stdio::null()) // run output is the coordinator's alone
+                .stderr(Stdio::inherit())
+                .spawn();
+            match spawned {
+                Ok(child) => self.children.push(child),
+                Err(e) => {
+                    self.close(); // reap the siblings already spawned
+                    return Err(io_err("socket", "cannot spawn dist-worker child", &e));
+                }
+            }
+        }
+
+        let mut links = Vec::with_capacity(n);
+        for worker in 0..n {
+            let (stream, _) = listener
+                .accept()
+                .map_err(|e| io_err("socket", "accept failed", &e))?;
+            stream.set_nodelay(true).ok();
+            let endpoint = format!("worker {worker} (socket)");
+            let rx_stream = stream
+                .try_clone()
+                .map_err(|e| io_err(&endpoint, "cannot clone stream", &e))?;
+            links.push(Link {
+                worker,
+                tx: Box::new(SockTx {
+                    stream,
+                    endpoint: endpoint.clone(),
+                }),
+                rx: Box::new(SockRx {
+                    stream: rx_stream,
+                    endpoint,
+                }),
+            });
+        }
+        Ok(links)
+    }
+
+    fn close(&mut self) {
+        // Links are dropped first, so children see EOF and exit; wait()
+        // reaps them. kill() first covers the error paths where a child
+        // never got (or will never honor) a shutdown.
+        for mut child in self.children.drain(..) {
+            match child.try_wait() {
+                Ok(Some(_)) => {}
+                _ => {
+                    child.kill().ok();
+                }
+            }
+            child.wait().ok();
+        }
+    }
+}
+
+impl Drop for SocketTransport {
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+/// Entry point of the `dist-worker` subcommand: connect back to the
+/// coordinator and run the worker loop until shutdown or disconnect.
+pub fn run_connected(addr: &str) -> Result<(), PallasError> {
+    let endpoint = format!("coordinator (socket {addr})");
+    let stream = TcpStream::connect(addr)
+        .map_err(|e| io_err(&endpoint, "cannot connect to coordinator", &e))?;
+    stream.set_nodelay(true).ok();
+    let rx_stream = stream
+        .try_clone()
+        .map_err(|e| io_err(&endpoint, "cannot clone stream", &e))?;
+    let mut tx = SockTx {
+        stream,
+        endpoint: endpoint.clone(),
+    };
+    let mut rx = SockRx {
+        stream: rx_stream,
+        endpoint: endpoint.clone(),
+    };
+    worker::run(&mut tx, &mut rx, &endpoint)
+}

@@ -1,0 +1,216 @@
+//! Location-agnostic frame carriers (DESIGN.md §14).
+//!
+//! The coordinator talks to workers through [`FrameTx`]/[`FrameRx`]
+//! pairs and never learns where the peer lives: the same byte frames
+//! ([`crate::dist::proto`]) flow over an in-process channel
+//! ([`ChannelTransport`]) or a localhost socket
+//! ([`crate::dist::socket::SocketTransport`]). A [`Transport`] owns
+//! worker placement — it launches N workers and hands back one
+//! [`Link`] per worker.
+//!
+//! Error vocabulary: a broken carrier is `Ok(None)` on receive (clean
+//! disconnect — the coordinator's fault plane handles it) and
+//! `Err(Transport)` on send; corrupt *content* inside an intact
+//! carrier is detected one layer up by frame decoding. The
+//! [`CorruptingTransport`] test wrapper flips a payload byte to prove
+//! that path stays typed end-to-end.
+
+use std::sync::mpsc::{Receiver, Sender};
+
+use crate::error::PallasError;
+use crate::util::pool::WorkerPool;
+
+/// Sending half of a link. `send` failing means the peer is gone —
+/// callers treat it like a disconnect, not a crash.
+pub trait FrameTx: Send {
+    fn send(&mut self, frame: &[u8]) -> Result<(), PallasError>;
+}
+
+/// Receiving half of a link. `Ok(None)` is a clean end-of-stream
+/// (peer exited or dropped its sender); `Err` is a carrier-level
+/// failure with a typed diagnostic.
+pub trait FrameRx: Send {
+    fn recv(&mut self) -> Result<Option<Vec<u8>>, PallasError>;
+}
+
+/// One coordinator⇄worker connection.
+pub struct Link {
+    pub worker: usize,
+    pub tx: Box<dyn FrameTx>,
+    pub rx: Box<dyn FrameRx>,
+}
+
+/// Worker placement: launch N workers, return their links. The
+/// coordinator's protocol logic is identical across implementations —
+/// that is the "pluggable, location-agnostic" contract.
+pub trait Transport: Send {
+    /// Short tag used in endpoint diagnostics ("channel", "socket").
+    fn name(&self) -> &'static str;
+
+    /// Start `n` workers and return one link per worker, indexed
+    /// `0..n`. Workers send nothing until they receive `init`.
+    fn launch(&mut self, n: usize) -> Result<Vec<Link>, PallasError>;
+
+    /// Reap worker resources after the links are dropped (join
+    /// threads, wait on children). Must be safe to call twice.
+    fn close(&mut self) {}
+}
+
+// ---------------------------------------------------------------------------
+// ChannelTransport: workers are threads, frames cross std::sync::mpsc
+// ---------------------------------------------------------------------------
+
+struct ChanTx(Sender<Vec<u8>>);
+
+impl FrameTx for ChanTx {
+    fn send(&mut self, frame: &[u8]) -> Result<(), PallasError> {
+        self.0.send(frame.to_vec()).map_err(|_| PallasError::Transport {
+            endpoint: "channel".to_string(),
+            reason: "peer hung up (receiver dropped)".to_string(),
+        })
+    }
+}
+
+struct ChanRx(Receiver<Vec<u8>>);
+
+impl FrameRx for ChanRx {
+    fn recv(&mut self) -> Result<Option<Vec<u8>>, PallasError> {
+        // RecvError means every sender is gone: a clean disconnect.
+        Ok(self.0.recv().ok())
+    }
+}
+
+/// In-process transport: each worker is a [`WorkerPool`] job running
+/// the ordinary worker loop; frames cross paired mpsc channels. The
+/// degenerate placement that keeps the whole protocol testable without
+/// processes — and the reference the socket transport must match
+/// byte-for-byte.
+pub struct ChannelTransport {
+    pool: Option<WorkerPool>,
+}
+
+impl ChannelTransport {
+    pub fn new() -> ChannelTransport {
+        ChannelTransport { pool: None }
+    }
+}
+
+impl Default for ChannelTransport {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Transport for ChannelTransport {
+    fn name(&self) -> &'static str {
+        "channel"
+    }
+
+    fn launch(&mut self, n: usize) -> Result<Vec<Link>, PallasError> {
+        let pool = WorkerPool::new(n);
+        let mut links = Vec::with_capacity(n);
+        for worker in 0..n {
+            // Coordinator→worker and worker→coordinator directions.
+            let (c2w_tx, c2w_rx) = std::sync::mpsc::channel::<Vec<u8>>();
+            let (w2c_tx, w2c_rx) = std::sync::mpsc::channel::<Vec<u8>>();
+            pool.submit(move || {
+                let mut tx = ChanTx(w2c_tx);
+                let mut rx = ChanRx(c2w_rx);
+                // A worker failure must not poison the pool (panics
+                // would); it is reported on stderr and surfaces to the
+                // coordinator as a disconnect when the endpoints drop.
+                if let Err(e) = crate::dist::worker::run(&mut tx, &mut rx, "coordinator (channel)")
+                {
+                    eprintln!("dist worker thread failed: {e}");
+                }
+            });
+            links.push(Link {
+                worker,
+                tx: Box::new(ChanTx(c2w_tx)),
+                rx: Box::new(ChanRx(w2c_rx)),
+            });
+        }
+        self.pool = Some(pool);
+        Ok(links)
+    }
+
+    fn close(&mut self) {
+        // Links are dropped by now, so worker loops see EOF and their
+        // jobs finish; shutdown() drains any submit still in flight
+        // and joins (the util::pool shutdown contract).
+        if let Some(pool) = self.pool.take() {
+            pool.shutdown();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CorruptingTransport: test wrapper proving corrupt frames stay typed
+// ---------------------------------------------------------------------------
+
+/// Wraps another transport and flips one payload byte of the Nth
+/// (1-based) worker→coordinator frame on worker 0's link — an
+/// in-memory bit-rot injector. The coordinator must surface a typed
+/// checksum-mismatch [`PallasError::Transport`], never a panic.
+pub struct CorruptingTransport<T: Transport> {
+    inner: T,
+    nth: u64,
+}
+
+struct CorruptingRx {
+    inner: Box<dyn FrameRx>,
+    nth: u64,
+    seen: u64,
+}
+
+impl FrameRx for CorruptingRx {
+    fn recv(&mut self) -> Result<Option<Vec<u8>>, PallasError> {
+        let frame = self.inner.recv()?;
+        Ok(frame.map(|mut bytes| {
+            self.seen += 1;
+            if self.seen == self.nth {
+                // Flip the first payload byte (just past the header
+                // line) so the header parses but the checksum fails.
+                if let Some(nl) = bytes.iter().position(|&b| b == b'\n') {
+                    if nl + 1 < bytes.len() {
+                        bytes[nl + 1] ^= 0x01;
+                    }
+                }
+            }
+            bytes
+        }))
+    }
+}
+
+impl<T: Transport> CorruptingTransport<T> {
+    /// Corrupt the `nth` (1-based) inbound frame from worker 0.
+    pub fn new(inner: T, nth: u64) -> CorruptingTransport<T> {
+        CorruptingTransport { inner, nth }
+    }
+}
+
+impl<T: Transport> Transport for CorruptingTransport<T> {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn launch(&mut self, n: usize) -> Result<Vec<Link>, PallasError> {
+        let mut links = self.inner.launch(n)?;
+        if let Some(link) = links.iter_mut().find(|l| l.worker == 0) {
+            let inner_rx = std::mem::replace(
+                &mut link.rx,
+                Box::new(ChanRx(std::sync::mpsc::channel().1)),
+            );
+            link.rx = Box::new(CorruptingRx {
+                inner: inner_rx,
+                nth: self.nth,
+                seen: 0,
+            });
+        }
+        Ok(links)
+    }
+
+    fn close(&mut self) {
+        self.inner.close();
+    }
+}

@@ -1,0 +1,117 @@
+//! The worker side of the distributed plane: claim shards, generate
+//! them, ship results (DESIGN.md §14).
+//!
+//! A worker is stateless beyond its `init` frame. It runs the same
+//! loop whether it lives on a pool thread (channel transport) or in a
+//! child process (socket transport):
+//!
+//! 1. wait for `init` (identity, seed, [`crate::dist::proto::GenSpec`]);
+//! 2. send `claim`, wait for `assign`/`shutdown`;
+//! 3. on `assign (step, slot)`: generate the query shard, compute its
+//!    per-agent index rows, send `result`; goto 2.
+//!
+//! Disconnects (EOF, send failure) mean the coordinator is gone — the
+//! worker exits cleanly rather than erroring, since the coordinator
+//! owns run-level failure reporting. Protocol violations and corrupt
+//! frames return typed errors; a worker never panics on peer input.
+
+use crate::error::PallasError;
+use crate::workload::{Generator, TrajectorySpec};
+
+use super::proto::{decode_frame, encode_frame, Msg};
+use super::transport::{FrameRx, FrameTx};
+
+/// Per-agent `(calls, token_sum)` rows for one shard — the worker's
+/// contribution to the coordinator's canonical experience-store index.
+/// Iteration order (trajectory-major, call order within) matches the
+/// coordinator's verification pass exactly, so the f64 sums are
+/// bitwise-reproducible on both ends.
+pub fn shard_index(trajectories: &[TrajectorySpec], n_agents: usize) -> Vec<(u64, f64)> {
+    let mut rows = vec![(0u64, 0.0f64); n_agents];
+    for t in trajectories {
+        for c in &t.calls {
+            rows[c.agent].0 += 1;
+            rows[c.agent].1 += c.tokens;
+        }
+    }
+    rows
+}
+
+/// Run the worker loop until shutdown, disconnect, or a typed error.
+/// `endpoint` names the coordinator link in frame diagnostics.
+pub fn run(
+    tx: &mut dyn FrameTx,
+    rx: &mut dyn FrameRx,
+    endpoint: &str,
+) -> Result<(), PallasError> {
+    let mut frames: u64 = 0;
+    let mut next = |rx: &mut dyn FrameRx, n_agents: usize| -> Result<Option<Msg>, PallasError> {
+        match rx.recv()? {
+            None => Ok(None),
+            Some(bytes) => {
+                frames += 1;
+                decode_frame(&bytes, endpoint, frames, n_agents).map(Some)
+            }
+        }
+    };
+
+    // First frame must be init. Dying before it is a clean exit (the
+    // coordinator aborted launch); any other message is a violation.
+    let (worker, seed, spec, fail_after) = match next(rx, 0)? {
+        None => return Ok(()),
+        Some(Msg::Init {
+            worker,
+            seed,
+            spec,
+            fail_after,
+        }) => (worker, seed, spec, fail_after),
+        Some(other) => {
+            return Err(PallasError::Protocol {
+                expected: "init as the first message".to_string(),
+                got: format!("{} before init", other.kind()),
+            })
+        }
+    };
+
+    let wl = spec.to_workload();
+    let n_agents = wl.agents.len();
+    let generator = Generator::new(&wl, seed);
+    let mut assigns: u64 = 0;
+
+    loop {
+        if tx.send(&encode_frame(&Msg::Claim { worker })).is_err() {
+            return Ok(()); // coordinator gone
+        }
+        match next(rx, n_agents)? {
+            None | Some(Msg::Shutdown) => return Ok(()),
+            Some(Msg::Assign { step, slot }) => {
+                // Deterministic fault plane: die silently on the
+                // configured assign ordinal, exactly like a crash
+                // mid-claim — the shard ships nothing and the
+                // disconnect returns it to the unclaimed set.
+                if fail_after == Some(assigns) {
+                    return Ok(());
+                }
+                assigns += 1;
+                let trajectories = generator.query(step as usize, slot as usize);
+                let index = shard_index(&trajectories, n_agents);
+                let result = Msg::Result {
+                    worker,
+                    step,
+                    slot,
+                    trajectories,
+                    index,
+                };
+                if tx.send(&encode_frame(&result)).is_err() {
+                    return Ok(()); // coordinator gone
+                }
+            }
+            Some(other) => {
+                return Err(PallasError::Protocol {
+                    expected: "assign or shutdown".to_string(),
+                    got: format!("{} after claim", other.kind()),
+                })
+            }
+        }
+    }
+}

@@ -126,6 +126,30 @@ pub enum PallasError {
     /// [`crate::orchestrator::SimOutcome::evaluate`] to handle partial
     /// outcomes without this error.
     EmptyRun,
+    /// A distributed-plane link failed (DESIGN.md §14): a worker
+    /// process/thread died, a socket broke, or a frame arrived
+    /// malformed. `endpoint` names the link ("worker 2 (socket)",
+    /// "127.0.0.1:4471"); `reason` is preformatted at the detection
+    /// site and, for frame-level failures, carries the 1-based frame
+    /// index plus recovery guidance — the
+    /// [`crate::workload::TraceReader`] diagnostic style.
+    Transport {
+        /// The link involved.
+        endpoint: String,
+        /// What went wrong, preformatted at the detection site.
+        reason: String,
+    },
+    /// A well-formed frame that violates the coordinator/worker
+    /// protocol (DESIGN.md §14): an unexpected message kind, a result
+    /// for a shard the sender never claimed, or a shard index summary
+    /// that disagrees with the shipped trajectories. Always a bug or a
+    /// tampered peer — typed, never a panic.
+    Protocol {
+        /// What the state machine was waiting for.
+        expected: String,
+        /// What actually arrived.
+        got: String,
+    },
     /// The serving plane refused a session request at admission
     /// (DESIGN.md §13). Overload is an *expected* outcome there, so the
     /// rejection is typed — callers branch on [`AdmissionReject`], the
@@ -204,6 +228,12 @@ impl fmt::Display for PallasError {
                 "run completed no steps to evaluate (zero-step experiment, or \
                  stopped before the first step boundary)"
             ),
+            PallasError::Transport { endpoint, reason } => {
+                write!(f, "transport {endpoint}: {reason}")
+            }
+            PallasError::Protocol { expected, got } => {
+                write!(f, "protocol violation: expected {expected}, got {got}")
+            }
             PallasError::Admission {
                 tenant,
                 request,
@@ -374,6 +404,30 @@ mod tests {
             reason: "snapshot missing 'engine'".into(),
         };
         assert_eq!(e.to_string(), "checkpoint: snapshot missing 'engine'");
+    }
+
+    #[test]
+    fn transport_and_protocol_rejections_are_pinned() {
+        // Distributed-plane contract (DESIGN.md §14): link failures and
+        // protocol violations are typed, and the dist-equivalence CI
+        // job's kill-a-worker smoke greps these strings.
+        let e = PallasError::Transport {
+            endpoint: "worker 2 (socket)".into(),
+            reason: "frame 3: checksum mismatch — corrupt or truncated".into(),
+        };
+        assert_eq!(
+            e.to_string(),
+            "transport worker 2 (socket): frame 3: checksum mismatch — corrupt or truncated"
+        );
+        let e = PallasError::Protocol {
+            expected: "result for a claimed shard".into(),
+            got: "result for step 4 slot 1 from worker 0".into(),
+        };
+        assert_eq!(
+            e.to_string(),
+            "protocol violation: expected result for a claimed shard, \
+             got result for step 4 slot 1 from worker 0"
+        );
     }
 
     #[test]

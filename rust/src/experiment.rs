@@ -38,13 +38,14 @@
 //! over a session, bit-identical to stepping it by hand.
 
 use crate::config::{ExperimentConfig, Framework, WorkloadMode};
+use crate::dist::{DistPlan, DistSource};
 use crate::error::PallasError;
 use crate::metrics::StepReport;
 use crate::orchestrator::{
     resolve_workload, resolve_workload_source, EventSink, Session, SimOptions, SimOutcome,
 };
 use crate::policy::PolicyBundle;
-use crate::workload::{LenHint, StepWorkload, VecSource, WorkloadSource};
+use crate::workload::{scenario, LenHint, StepWorkload, VecSource, WorkloadSource};
 
 /// The resolved workload, in whichever shape `cfg.workload_mode`
 /// selected: a materialized vector (eager — the golden reference) or a
@@ -54,6 +55,10 @@ use crate::workload::{LenHint, StepWorkload, VecSource, WorkloadSource};
 enum WorkloadPlan {
     Eager(Vec<StepWorkload>),
     Lazy(Box<dyn WorkloadSource>),
+    /// Distributed generation (DESIGN.md §14): the coordinator is the
+    /// source; shard workers generate behind it, byte-identically to
+    /// the single-process paths.
+    Dist(Box<DistSource>),
 }
 
 impl WorkloadPlan {
@@ -61,6 +66,7 @@ impl WorkloadPlan {
         match self {
             WorkloadPlan::Eager(v) => LenHint::Exact(v.len()),
             WorkloadPlan::Lazy(src) => src.len_hint(),
+            WorkloadPlan::Dist(src) => src.len_hint(),
         }
     }
 }
@@ -83,6 +89,7 @@ pub struct ExperimentBuilder {
     opts: SimOptions,
     policies: Option<PolicyBundle>,
     sinks: Vec<Box<dyn EventSink>>,
+    dist: Option<DistPlan>,
 }
 
 impl Experiment {
@@ -98,6 +105,7 @@ impl Experiment {
             opts: SimOptions::default(),
             policies: None,
             sinks: Vec::new(),
+            dist: None,
         }
     }
 
@@ -125,7 +133,7 @@ impl Experiment {
     pub fn step_workloads(&self) -> &[StepWorkload] {
         match &self.plan {
             WorkloadPlan::Eager(v) => v,
-            WorkloadPlan::Lazy(_) => &[],
+            WorkloadPlan::Lazy(_) | WorkloadPlan::Dist(_) => &[],
         }
     }
 
@@ -138,15 +146,17 @@ impl Experiment {
     /// Attached sinks are dropped: there is no engine for them to
     /// observe.
     pub fn into_workloads(self) -> (ExperimentConfig, Vec<StepWorkload>) {
+        fn drain(mut src: Box<dyn WorkloadSource>) -> Vec<StepWorkload> {
+            let mut v = Vec::new();
+            while let Some(w) = src.next_step() {
+                v.push(w);
+            }
+            v
+        }
         let wls = match self.plan {
             WorkloadPlan::Eager(v) => v,
-            WorkloadPlan::Lazy(mut src) => {
-                let mut v = Vec::new();
-                while let Some(w) = src.next_step() {
-                    v.push(w);
-                }
-                v
-            }
+            WorkloadPlan::Lazy(src) => drain(src),
+            WorkloadPlan::Dist(src) => drain(src),
         };
         (self.cfg, wls)
     }
@@ -183,6 +193,7 @@ impl Experiment {
         let source: Box<dyn WorkloadSource> = match self.plan {
             WorkloadPlan::Eager(v) => Box::new(VecSource::new(v)),
             WorkloadPlan::Lazy(src) => src,
+            WorkloadPlan::Dist(src) => src,
         };
         let engine = crate::orchestrator::simloop::Engine::new(
             self.cfg,
@@ -315,6 +326,19 @@ impl ExperimentBuilder {
         self
     }
 
+    /// Distribute per-step workload generation over claim-based shard
+    /// workers (DESIGN.md §14): a coordinator owns the canonical
+    /// experience-store index and shard assignment; `plan.workers`
+    /// workers generate query shards over `plan.transport`. Run output
+    /// is byte-identical to the single-process paths for any worker
+    /// count and either transport. Incompatible with trace replay
+    /// (workers *generate*; a trace is already generated) and
+    /// overrides `workload_mode`.
+    pub fn dist(mut self, plan: DistPlan) -> Self {
+        self.dist = Some(plan);
+        self
+    }
+
     /// Engine knobs (instance counts, poll period, queue backend, …).
     pub fn options(mut self, opts: SimOptions) -> Self {
         self.opts = opts;
@@ -356,14 +380,38 @@ impl ExperimentBuilder {
     /// trace *steps* (the header is still validated here) surface
     /// mid-run instead.
     pub fn build(self) -> Result<Experiment, PallasError> {
-        let (cfg, plan) = match self.cfg.workload_mode {
-            WorkloadMode::Eager => {
-                let (cfg, wls) = resolve_workload(&self.cfg)?;
-                (cfg, WorkloadPlan::Eager(wls))
+        let (cfg, plan) = if let Some(dplan) = self.dist {
+            dplan.validate()?;
+            if self.cfg.workload.trace.is_some() {
+                return Err(PallasError::InvalidConfig(
+                    "dist generates workloads on workers; it cannot replay a trace \
+                     (drop the trace or run single-process simulate)"
+                        .to_string(),
+                ));
             }
-            WorkloadMode::Lazy => {
-                let (cfg, src) = resolve_workload_source(&self.cfg)?;
-                (cfg, WorkloadPlan::Lazy(src))
+            // Same shaping as the single-process paths — the shaped
+            // config is what byte-identity is defined against.
+            let (shaped, scen) = scenario::resolve(&self.cfg.workload)?;
+            let mut resolved = self.cfg.clone();
+            resolved.workload = shaped;
+            let src = DistSource::new(
+                resolved.workload.clone(),
+                scen,
+                resolved.seed,
+                resolved.steps,
+                dplan,
+            );
+            (resolved, WorkloadPlan::Dist(Box::new(src)))
+        } else {
+            match self.cfg.workload_mode {
+                WorkloadMode::Eager => {
+                    let (cfg, wls) = resolve_workload(&self.cfg)?;
+                    (cfg, WorkloadPlan::Eager(wls))
+                }
+                WorkloadMode::Lazy => {
+                    let (cfg, src) = resolve_workload_source(&self.cfg)?;
+                    (cfg, WorkloadPlan::Lazy(src))
+                }
             }
         };
         let policies = self
@@ -461,6 +509,42 @@ mod tests {
             .build()
             .unwrap();
         assert_eq!(eager.step_workloads(), &wls[..], "drained lazy == eager materialization");
+    }
+
+    #[test]
+    fn dist_runs_byte_identical_to_eager_for_any_worker_count() {
+        // The tentpole contract at the engine level: full runs through
+        // the distributed plane produce the same report bytes as eager
+        // single-process resolution.
+        let cfg = small_cfg(Framework::flexmarl());
+        let eager = Experiment::new(cfg.clone()).build().unwrap().run();
+        for workers in [1usize, 3] {
+            let dist = Experiment::new(cfg.clone())
+                .dist(DistPlan::channel(workers))
+                .build()
+                .unwrap()
+                .run();
+            assert_eq!(eager.total_s, dist.total_s, "{workers} workers");
+            assert_eq!(eager.reports.len(), dist.reports.len());
+            for (a, b) in eager.reports.iter().zip(&dist.reports) {
+                assert_eq!(a.to_json().to_pretty(), b.to_json().to_pretty());
+            }
+        }
+    }
+
+    #[test]
+    fn dist_refuses_traces_and_zero_workers() {
+        let err = Experiment::new(small_cfg(Framework::flexmarl()))
+            .trace("whatever.jsonl")
+            .dist(DistPlan::channel(2))
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("cannot replay a trace"), "{err}");
+        let err = Experiment::new(small_cfg(Framework::flexmarl()))
+            .dist(DistPlan::channel(0))
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("at least one worker"), "{err}");
     }
 
     #[test]

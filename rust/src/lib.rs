@@ -11,6 +11,8 @@
 //!   heterogeneous object store, baselines, a discrete-event cluster
 //!   simulator for paper-scale experiments, a multi-tenant
 //!   Rollout-as-a-Service serving plane ([`serve`], DESIGN.md §13),
+//!   a distributed coordinator/worker plane over pluggable transports
+//!   ([`dist`], DESIGN.md §14),
 //!   and a PJRT runtime that executes the AOT-compiled policy models
 //!   for the real end-to-end run.
 //!
@@ -34,6 +36,7 @@ pub mod baselines;
 pub mod ckpt;
 pub mod cluster;
 pub mod config;
+pub mod dist;
 pub mod error;
 pub mod exec;
 pub mod experiment;

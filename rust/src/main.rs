@@ -20,6 +20,13 @@
 //!                control, priority/fair/EDF queueing, per-session
 //!                JSONL streams; byte-identical for any --workers
 //!                (DESIGN.md §13)
+//!   dist       — distributed run: a coordinator assigns query shards
+//!                to claim-based workers over an in-process channel or
+//!                localhost sockets; stdout/--json/--emit jsonl are
+//!                byte-identical to `simulate` for any --workers and
+//!                either --transport (DESIGN.md §14)
+//!   dist-worker — internal: shard worker spawned by `dist
+//!                --transport socket`; connects back with --connect
 //!   inspect    — summarize the AOT artifact manifest
 //!   train      — real end-to-end MARL training via PJRT (see also
 //!                rust/examples/marl_train.rs)
@@ -65,6 +72,8 @@ fn main() {
         "record" => cmd_record(&args),
         "replay" => cmd_replay(&args),
         "serve" => cmd_serve(&args),
+        "dist" => cmd_dist(&args),
+        "dist-worker" => cmd_dist_worker(&args),
         "inspect" => cmd_inspect(&args),
         "train" => cmd_train(&args),
         _ => {
@@ -77,7 +86,7 @@ fn main() {
 }
 
 const HELP: &str = "flexmarl — rollout-training co-design for LLM-based MARL
-usage: flexmarl <simulate|table2|table3|table4|fig1|fig8|fig10|fig11|sweep|scenarios|record|replay|serve|inspect|train> [options]
+usage: flexmarl <simulate|table2|table3|table4|fig1|fig8|fig10|fig11|sweep|scenarios|record|replay|serve|dist|inspect|train> [options]
 options: --workload MA|CA  --framework <name>  --steps N  --seed N
          --micro-batch N  --delta N  --instances N  --json <path>  --quiet
          --scenario <preset>  (see `flexmarl scenarios`)
@@ -109,7 +118,15 @@ serve:   multi-tenant serving plane (DESIGN.md §13):
          --seed N  --workers N     (workers change wall time only)
          --out-dir D               (one session-<seq>.jsonl per session)
          --json <path>             (deterministic load report —
-                                    byte-identical for any --workers)";
+                                    byte-identical for any --workers)
+dist:    distributed coordinator/worker run (DESIGN.md §14):
+         --workers N               (shard workers; default 2)
+         --transport channel|socket (in-process threads, or child
+                                    processes over localhost TCP)
+         accepts simulate's config flags plus --emit jsonl/--progress;
+         stdout, --json and --emit jsonl are byte-identical to
+         `simulate` for any --workers and either --transport
+         (worker bookkeeping goes to stderr only)";
 
 fn build_cfg(args: &Args) -> ExperimentConfig {
     let wl = match args.get_or("workload", "MA").to_ascii_uppercase().as_str() {
@@ -866,6 +883,130 @@ fn cmd_serve(args: &Args) {
         eprintln!("wrote {} session streams to {dir}/", out.sessions.len());
     }
     emit_json(args, &r.to_json());
+}
+
+/// Distributed run (DESIGN.md §14): per-step workload generation is
+/// spread over claim-based shard workers behind a coordinator; the
+/// engine itself runs here, pulling byte-identical steps. Everything on
+/// stdout, in `--json` and under `--emit jsonl` is a pure function of
+/// the config — CI byte-diffs it against `simulate` across worker
+/// counts and transports. Worker bookkeeping goes to stderr.
+fn cmd_dist(args: &Args) {
+    use flexmarl::dist::{DistPlan, TransportKind, WorkerFault};
+    // These planes assume single-process resolution; refusing beats
+    // silently diverging from the `simulate` reference bytes.
+    for flag in ["trace", "workload-mode", "resume", "checkpoint-every", "checkpoint-dir"] {
+        if args.get(flag).is_some() {
+            eprintln!("dist does not support --{flag}; run single-process `simulate` for that");
+            std::process::exit(2);
+        }
+    }
+    let cfg = build_cfg(args);
+    let transport_name = args.get_or("transport", "channel");
+    let transport = TransportKind::parse(&transport_name).unwrap_or_else(|| {
+        eprintln!("unknown --transport '{transport_name}' (channel | socket)");
+        std::process::exit(2)
+    });
+    let mut plan = DistPlan {
+        workers: args.get_usize("workers", 2),
+        transport,
+        fail: None,
+    };
+    // Undocumented fault hook for the chaos CI smoke: worker W dies
+    // silently on its K-th (0-based) shard assignment.
+    if let Some(spec) = args.get("worker-fail") {
+        plan.fail = spec
+            .split_once(':')
+            .and_then(|(w, k)| {
+                Some(WorkerFault {
+                    worker: w.parse().ok()?,
+                    after_assigns: k.parse().ok()?,
+                })
+            })
+            .map(Some)
+            .unwrap_or_else(|| {
+                eprintln!("--worker-fail needs W:K (worker index, assign ordinal); got '{spec}'");
+                std::process::exit(2)
+            });
+    }
+    if let Err(e) = plan.validate() {
+        eprintln!("invalid dist plan: {e}");
+        std::process::exit(2);
+    }
+    let emit = args.get("emit");
+    match emit {
+        None | Some("jsonl") => {}
+        Some(other) => {
+            eprintln!("unknown --emit mode '{other}' for dist (jsonl)");
+            std::process::exit(2);
+        }
+    }
+    // Worker count and transport are wall-clock-only state — stderr,
+    // like sweep's jobs and serve's workers.
+    eprintln!(
+        "dist: {} workers over {} transport",
+        plan.workers,
+        plan.transport.name()
+    );
+    let exp = Experiment::new(cfg)
+        .options(build_opts(args))
+        .dist(plan)
+        .build()
+        .unwrap_or_else(|e| {
+            eprintln!("invalid workload: {e}");
+            std::process::exit(2)
+        });
+    let total_steps = exp.config().steps;
+    let overlaps = exp.policies().pipeline.overlaps_steps();
+    let mut session = exp.session().unwrap_or_else(|e| {
+        eprintln!("invalid workload: {e}");
+        std::process::exit(2)
+    });
+    if args.has_flag("progress") {
+        session.add_sink(Box::new(ProgressSink::stderr(total_steps)));
+    }
+    if emit == Some("jsonl") {
+        session.add_sink(Box::new(JsonlSink::stdout()));
+    }
+    loop {
+        match session.step() {
+            Ok(Some(_)) => {}
+            Ok(None) => break,
+            // Typed runtime failures — every worker gone, a corrupt
+            // frame, a protocol violation — exit 1, never a panic.
+            Err(e) => {
+                eprintln!("simulation failed: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+    let out = session.finish();
+    match out.evaluate(overlaps) {
+        Some(rep) => {
+            if emit.is_none() {
+                print_report(&rep);
+            }
+            emit_json(args, &rep.to_json());
+        }
+        None => {
+            eprintln!("no steps completed before the stop");
+            std::process::exit(1);
+        }
+    }
+}
+
+/// Internal: the child-process end of `dist --transport socket`. Exits
+/// 0 on shutdown or coordinator disconnect, 1 with the typed error on
+/// protocol violations or corrupt frames.
+fn cmd_dist_worker(args: &Args) {
+    let addr = args.get("connect").unwrap_or_else(|| {
+        eprintln!("dist-worker needs --connect <addr> (spawned by `dist --transport socket`)");
+        std::process::exit(2)
+    });
+    if let Err(e) = flexmarl::dist::socket::run_connected(addr) {
+        eprintln!("worker failed: {e}");
+        std::process::exit(1);
+    }
 }
 
 fn cmd_inspect(args: &Args) {

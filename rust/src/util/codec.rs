@@ -1,0 +1,269 @@
+//! Shared state codec: versioned, checksummed, two-line JSON framing
+//! (substrate under [`crate::ckpt`] and [`crate::dist`]).
+//!
+//! The checkpoint plane (DESIGN.md §12) and the distributed plane
+//! (DESIGN.md §14) serialize the *same* kinds of state — PRNG words,
+//! store rows, trajectory specs — and the paper's "unified and
+//! location-agnostic communication" framing is taken literally: a blob
+//! encoded here is the same bytes whether it lands in a checkpoint
+//! file, crosses an in-process channel, or crosses a socket. This
+//! module owns the byte format; callers own the *vocabulary* (magic
+//! string, version number, and how a rejection reads to a human).
+//!
+//! Frame layout (two lines, both newline-terminated):
+//!
+//! ```text
+//! {"magic":"<magic>","version":<v>,"checksum":"<fnv1a64 hex>"}
+//! {...payload...}
+//! ```
+//!
+//! * **Versioned** — a reader rejects any version it does not speak
+//!   ([`CodecError::BadVersion`]); stale frames never deserialize into
+//!   garbage state.
+//! * **Checksummed** — FNV-1a 64 over the exact payload bytes; a
+//!   flipped bit or a torn tail is a typed rejection, not a panic.
+//! * **Integer encoding** — JSON numbers are f64, exact only to 2^53,
+//!   so u64 ids/sequence counters and the PRNG's u128 state are
+//!   string-encoded ([`ju64`]/[`ju128`]). `f64` values round-trip
+//!   bit-exactly through the in-tree JSON (shortest-round-trip
+//!   formatting, correctly rounded parse).
+//!
+//! Every rejection is a structured [`CodecError`]; [`crate::ckpt`]
+//! renders them as its historical `PallasError::Checkpoint` reason
+//! strings (pinned byte-for-byte by `tests/ckpt.rs`), while the
+//! distributed plane renders them frame-indexed in the style of
+//! [`crate::workload::TraceReader`]'s line diagnostics.
+
+use crate::error::PallasError;
+use crate::util::json::{parse, Json};
+
+// ---------------------------------------------------------------------------
+// Integer codecs (JSON numbers are f64 — exact only to 2^53)
+// ---------------------------------------------------------------------------
+
+/// Encode a `u64` losslessly (decimal string).
+pub fn ju64(v: u64) -> Json {
+    Json::Str(v.to_string())
+}
+
+/// Encode a `u128` losslessly (decimal string) — PRNG state words.
+pub fn ju128(v: u128) -> Json {
+    Json::Str(v.to_string())
+}
+
+/// Decode [`ju64`]; tolerates a plain in-range JSON number too.
+pub fn as_ju64(j: &Json) -> Option<u64> {
+    match j {
+        Json::Str(s) => s.parse::<u64>().ok(),
+        _ => j.as_u64(),
+    }
+}
+
+/// Decode [`ju128`].
+pub fn as_ju128(j: &Json) -> Option<u128> {
+    match j {
+        Json::Str(s) => s.parse::<u128>().ok(),
+        _ => None,
+    }
+}
+
+/// Encode an `i64` losslessly (decimal string) — store scalar columns.
+pub fn ji64(v: i64) -> Json {
+    Json::Str(v.to_string())
+}
+
+/// Decode [`ji64`]; tolerates a plain in-range JSON number too.
+pub fn as_ji64(j: &Json) -> Option<i64> {
+    match j {
+        Json::Str(s) => s.parse::<i64>().ok(),
+        Json::Num(n) if n.fract() == 0.0 && n.abs() < 9.007_199_254_740_992e15 => Some(*n as i64),
+        _ => None,
+    }
+}
+
+/// FNV-1a 64-bit over `bytes` — the payload checksum. In-tree (the
+/// image has no hash crates); collision resistance is not the goal,
+/// torn-write and bit-rot *detection* is.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+// ---------------------------------------------------------------------------
+// Structured rejections
+// ---------------------------------------------------------------------------
+
+/// Why a frame failed to decode. Structured so each consumer can render
+/// its own diagnostic vocabulary without re-parsing message strings:
+/// `ckpt` maps these onto its pinned legacy reason strings, `dist`
+/// prefixes them with a 1-based frame index and recovery guidance.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CodecError {
+    /// No `\n` at all: the header line is the whole text.
+    NoPayload,
+    /// The header line is not valid JSON; carries the parse error.
+    BadHeader(String),
+    /// The header's magic is absent or not the expected string.
+    BadMagic,
+    /// Version mismatch: frame says `got`, reader speaks `want`.
+    BadVersion { got: u64, want: u64 },
+    /// Header has no `checksum` field.
+    MissingChecksum,
+    /// The payload line lacks its terminating newline — the write (or
+    /// the stream) was cut mid-line.
+    TornTail,
+    /// FNV-1a over the payload bytes disagrees with the header.
+    ChecksumMismatch { want: String, got: String },
+    /// Checksum passed but the payload is not valid JSON; carries the
+    /// parse error.
+    BadPayload(String),
+}
+
+// ---------------------------------------------------------------------------
+// Encode / decode
+// ---------------------------------------------------------------------------
+
+/// A frame vocabulary: the magic string naming the format and the one
+/// version this reader/writer speaks. Consts — e.g.
+/// [`crate::ckpt::MAGIC`]/[`crate::ckpt::FORMAT_VERSION`] — plug in
+/// directly.
+#[derive(Debug, Clone, Copy)]
+pub struct Codec {
+    pub magic: &'static str,
+    pub version: u64,
+}
+
+impl Codec {
+    /// Serialize a payload into the two-line frame text.
+    pub fn encode(&self, payload: &Json) -> String {
+        let body = payload.to_string();
+        let header = Json::obj(vec![
+            ("magic", Json::str(self.magic)),
+            ("version", Json::num(self.version as f64)),
+            ("checksum", Json::str(format!("{:016x}", fnv1a64(body.as_bytes())))),
+        ]);
+        format!("{}\n{}\n", header.to_string(), body)
+    }
+
+    /// Validate and parse frame text: magic, version, checksum, payload
+    /// JSON. Every rejection is a structured [`CodecError`].
+    pub fn decode(&self, text: &str) -> Result<Json, CodecError> {
+        let Some((header_line, rest)) = text.split_once('\n') else {
+            return Err(CodecError::NoPayload);
+        };
+        let header =
+            parse(header_line).map_err(|e| CodecError::BadHeader(e.to_string()))?;
+        match header.at(&["magic"]).and_then(Json::as_str) {
+            Some(m) if m == self.magic => {}
+            _ => return Err(CodecError::BadMagic),
+        }
+        let got = header.at(&["version"]).and_then(Json::as_u64).unwrap_or(0);
+        if got != self.version {
+            return Err(CodecError::BadVersion { got, want: self.version });
+        }
+        let want = header
+            .at(&["checksum"])
+            .and_then(Json::as_str)
+            .ok_or(CodecError::MissingChecksum)?
+            .to_string();
+        // The writer always terminates the payload line; a missing
+        // final newline is a torn tail even before the checksum says so.
+        let Some(body) = rest.strip_suffix('\n') else {
+            return Err(CodecError::TornTail);
+        };
+        let got = format!("{:016x}", fnv1a64(body.as_bytes()));
+        if got != want {
+            return Err(CodecError::ChecksumMismatch { want, got });
+        }
+        parse(body).map_err(|e| CodecError::BadPayload(e.to_string()))
+    }
+}
+
+/// Write frame text crash-consistently: temp file in the destination
+/// directory, then atomic rename over `path`. A crash at any instant
+/// leaves either the previous complete file or the new one.
+pub fn write_atomic(path: &str, text: &str) -> Result<(), PallasError> {
+    let tmp = format!("{path}.tmp.{}", std::process::id());
+    std::fs::write(&tmp, text).map_err(|e| PallasError::File {
+        path: tmp.clone(),
+        error: e.to_string(),
+    })?;
+    std::fs::rename(&tmp, path).map_err(|e| {
+        // Never leave the temp file behind on a failed rename.
+        let _ = std::fs::remove_file(&tmp);
+        PallasError::File {
+            path: path.to_string(),
+            error: e.to_string(),
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const C: Codec = Codec { magic: "codec-test", version: 3 };
+
+    fn payload() -> Json {
+        Json::obj(vec![
+            ("seq", ju64(u64::MAX)),
+            ("state", ju128(u128::MAX - 7)),
+            ("t", Json::num(0.1 + 0.2)), // not exactly representable — must round-trip
+        ])
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact() {
+        let text = C.encode(&payload());
+        let back = C.decode(&text).unwrap();
+        assert_eq!(back.to_string(), payload().to_string());
+        assert_eq!(as_ju64(back.at(&["seq"]).unwrap()), Some(u64::MAX));
+        assert_eq!(as_ju128(back.at(&["state"]).unwrap()), Some(u128::MAX - 7));
+        assert_eq!(
+            back.at(&["t"]).and_then(Json::as_f64).unwrap().to_bits(),
+            (0.1f64 + 0.2).to_bits()
+        );
+    }
+
+    #[test]
+    fn every_rejection_is_structured() {
+        let text = C.encode(&payload());
+        assert_eq!(C.decode("no newline here"), Err(CodecError::NoPayload));
+        assert_eq!(
+            C.decode(&text[..text.len() - 5]),
+            Err(CodecError::TornTail),
+            "cut payload must read as torn, not as a checksum failure"
+        );
+        let wrong_magic = Codec { magic: "other", version: 3 };
+        assert_eq!(wrong_magic.decode(&text), Err(CodecError::BadMagic));
+        let newer = Codec { magic: "codec-test", version: 4 };
+        assert_eq!(newer.decode(&text), Err(CodecError::BadVersion { got: 3, want: 4 }));
+        assert!(matches!(
+            C.decode("not json\n{}\n"),
+            Err(CodecError::BadHeader(_))
+        ));
+        let flipped = text.replacen("\"seq\"", "\"sEq\"", 1);
+        assert!(matches!(
+            C.decode(&flipped),
+            Err(CodecError::ChecksumMismatch { .. })
+        ));
+        let no_sum = "{\"magic\":\"codec-test\",\"version\":3}\n{}\n";
+        assert_eq!(C.decode(no_sum), Err(CodecError::MissingChecksum));
+    }
+
+    #[test]
+    fn distinct_magics_do_not_cross_decode() {
+        // The ckpt/dist separation: a checkpoint blob must never decode
+        // as a dist frame (and vice versa), even though the byte format
+        // is shared.
+        let a = Codec { magic: "plane-a", version: 1 };
+        let b = Codec { magic: "plane-b", version: 1 };
+        let frame = a.encode(&payload());
+        assert_eq!(b.decode(&frame), Err(CodecError::BadMagic));
+        assert!(a.decode(&frame).is_ok());
+    }
+}

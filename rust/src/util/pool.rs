@@ -126,9 +126,17 @@ struct PoolShared {
 /// A panicking job poisons the current batch: the queue is cleared (no
 /// wall time burned on doomed work), the first payload is stored, and
 /// `wait_idle` re-raises it. The pool itself stays usable afterwards.
+///
+/// Shutdown (the coordinator use, DESIGN.md §14): [`WorkerPool::shutdown`]
+/// takes `&self`, so it can race concurrent [`WorkerPool::submit`]s.
+/// The contract is *no job is ever lost*: the shutdown flag and the
+/// queue live under one mutex, the worker loop drains the queue before
+/// honoring the flag, and a submit that observes the flag already set
+/// runs its job inline on the calling thread.
 pub struct WorkerPool {
     shared: Arc<PoolShared>,
-    handles: Vec<std::thread::JoinHandle<()>>,
+    workers: usize,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
 
 impl WorkerPool {
@@ -151,21 +159,58 @@ impl WorkerPool {
                 std::thread::spawn(move || worker_loop(&shared))
             })
             .collect();
-        WorkerPool { shared, handles }
+        WorkerPool {
+            shared,
+            workers,
+            handles: Mutex::new(handles),
+        }
     }
 
-    /// Thread count the pool was built with.
+    /// Thread count the pool was built with (stable across shutdown).
     pub fn workers(&self) -> usize {
-        self.handles.len()
+        self.workers
     }
 
     /// Enqueue one job. Never blocks; jobs run in FIFO claim order
-    /// across however many workers are free.
+    /// across however many workers are free. A submit that races
+    /// [`WorkerPool::shutdown`] and loses runs the job *inline* on the
+    /// calling thread instead — submitted work is never silently
+    /// dropped (a panic then propagates in the caller, like any
+    /// directly-invoked closure).
     pub fn submit<F: FnOnce() + Send + 'static>(&self, job: F) {
         let mut st = self.shared.state.lock().unwrap();
+        if st.shutdown {
+            drop(st);
+            job();
+            return;
+        }
         st.queue.push_back(Box::new(job));
         drop(st);
         self.shared.job_ready.notify_one();
+    }
+
+    /// Orderly teardown: raise the shutdown flag, wake every worker,
+    /// join them all, then re-raise the first stored job panic (if
+    /// any) in the caller. The flag and the queue share one mutex and
+    /// the worker loop drains the queue before honoring the flag, so
+    /// every job enqueued before the flag went up still runs; submits
+    /// that arrive after it run inline in *their* caller (see
+    /// [`WorkerPool::submit`]). Idempotent — later calls (and the
+    /// eventual Drop) find nothing left to join.
+    pub fn shutdown(&self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.job_ready.notify_all();
+        let handles: Vec<_> = self.handles.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+        let payload = self.shared.state.lock().unwrap().panic.take();
+        if let Some(p) = payload {
+            std::panic::resume_unwind(p);
+        }
     }
 
     /// Block until the queue is empty and every claimed job finished.
@@ -190,9 +235,10 @@ impl Drop for WorkerPool {
             st.shutdown = true;
         }
         self.shared.job_ready.notify_all();
-        for h in self.handles.drain(..) {
+        for h in self.handles.get_mut().unwrap().drain(..) {
             // A worker thread only panics if a panic payload itself
-            // panics on drop; don't double-panic the destructor.
+            // panics on drop; don't double-panic the destructor (and
+            // unlike shutdown(), never re-raise a stored payload here).
             let _ = h.join();
         }
     }
@@ -446,6 +492,72 @@ mod tests {
         pool.submit(move || done2.store(true, Ordering::SeqCst));
         pool.wait_idle();
         assert!(done.load(Ordering::SeqCst));
+    }
+
+    /// Satellite (dist PR): submits racing shutdown never lose jobs.
+    /// A submitter thread fires 200 jobs while the main thread calls
+    /// `shutdown()` mid-stream; every job must run — either drained by
+    /// the workers before they exit, or inline in the submitter after
+    /// it observes the flag.
+    #[test]
+    fn worker_pool_submit_racing_shutdown_loses_no_jobs() {
+        for trial in 0..8 {
+            let pool = WorkerPool::new(2);
+            let ran = Arc::new(AtomicUsize::new(0));
+            std::thread::scope(|s| {
+                let ran = Arc::clone(&ran);
+                let pool = &pool;
+                s.spawn(move || {
+                    for i in 0..200 {
+                        let ran = Arc::clone(&ran);
+                        pool.submit(move || {
+                            ran.fetch_add(1, Ordering::SeqCst);
+                        });
+                        if i % 16 == 0 {
+                            std::thread::yield_now();
+                        }
+                    }
+                });
+                // Vary the interleaving a little across trials.
+                for _ in 0..trial * 7 {
+                    std::thread::yield_now();
+                }
+                pool.shutdown();
+            });
+            // After the scope, the submitter is done and shutdown has
+            // joined all workers: every submit must have executed.
+            assert_eq!(ran.load(Ordering::SeqCst), 200, "trial {trial} lost jobs");
+        }
+    }
+
+    #[test]
+    fn worker_pool_shutdown_reraises_pending_panic() {
+        let pool = WorkerPool::new(1);
+        pool.submit(|| panic!("job died before shutdown"));
+        // Give the worker a chance to run (not required for
+        // correctness: shutdown drains the queue before joining).
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| pool.shutdown()));
+        assert!(res.is_err(), "shutdown must surface the stored panic");
+        // Second shutdown (and the eventual Drop) are clean no-ops.
+        pool.shutdown();
+    }
+
+    #[test]
+    fn worker_pool_submit_after_shutdown_runs_inline() {
+        let pool = WorkerPool::new(2);
+        pool.shutdown();
+        assert_eq!(pool.workers(), 2, "workers() must survive shutdown");
+        let tid = std::thread::current().id();
+        let ran_on = Arc::new(Mutex::new(None));
+        let ran_on2 = Arc::clone(&ran_on);
+        pool.submit(move || {
+            *ran_on2.lock().unwrap() = Some(std::thread::current().id());
+        });
+        assert_eq!(
+            *ran_on.lock().unwrap(),
+            Some(tid),
+            "post-shutdown submit must run inline on the caller"
+        );
     }
 
     #[test]

@@ -21,7 +21,7 @@ pub mod trace;
 pub use arrival::{ArrivalProcess, Arrivals};
 pub use scenario::Scenario;
 pub use source::{LenHint, ScenarioSource, TraceSource, VecSource, WorkloadSource};
-pub use trace::{Trace, TraceReader};
+pub use trace::{trajectory_from_json, trajectory_to_json, Trace, TraceReader};
 
 use crate::config::WorkloadConfig;
 use crate::util::rng::Pcg64;
@@ -107,56 +107,70 @@ impl<'a> Generator<'a> {
         Generator { wl, seed }
     }
 
-    /// Deterministic workload for `step`.
+    /// Deterministic workload for `step`: queries `0..queries_per_step`
+    /// expanded in slot order. Exactly `(0..qps).flat_map(|q| query(step, q))`
+    /// — the distributed plane (DESIGN.md §14) relies on that identity
+    /// to generate queries on remote workers and reassemble the step
+    /// byte-identically.
     pub fn step(&self, step: usize) -> StepWorkload {
+        let trajectories = (0..self.wl.queries_per_step)
+            .flat_map(|q| self.query(step, q))
+            .collect();
+        StepWorkload { step, trajectories }
+    }
+
+    /// Deterministic trajectory group (all GRPO candidates) for one
+    /// query slot. Each query draws from its own PRNG streams keyed by
+    /// `(seed, step, q)` — independent of `queries_per_step` and of
+    /// every other slot, so a query can be generated anywhere (another
+    /// thread, another process) and yield the same bits.
+    pub fn query(&self, step: usize, q: usize) -> Vec<TrajectorySpec> {
         let wl = self.wl;
         let weights: Vec<f64> = wl.agents.iter().map(|a| a.invoke_weight).collect();
-        let mut trajectories = Vec::new();
-        for q in 0..wl.queries_per_step {
-            // The workflow *skeleton* (agent sequence, turn count) is per
-            // query: all GRPO candidates answer the same user query, so
-            // they traverse the same agents; token counts differ per
-            // candidate (sampling temperature).
-            let mut qrng = Pcg64::with_stream(
-                self.seed ^ 0x5157_u64,
-                (step as u64) << 32 | q as u64,
-            );
-            let turns = wl.min_turns
-                + qrng.below((wl.max_turns - wl.min_turns + 1) as u64) as usize;
-            let skeleton: Vec<usize> =
-                (0..turns).map(|_| qrng.categorical(&weights)).collect();
+        // The workflow *skeleton* (agent sequence, turn count) is per
+        // query: all GRPO candidates answer the same user query, so
+        // they traverse the same agents; token counts differ per
+        // candidate (sampling temperature).
+        let mut qrng = Pcg64::with_stream(
+            self.seed ^ 0x5157_u64,
+            (step as u64) << 32 | q as u64,
+        );
+        let turns = wl.min_turns
+            + qrng.below((wl.max_turns - wl.min_turns + 1) as u64) as usize;
+        let skeleton: Vec<usize> =
+            (0..turns).map(|_| qrng.categorical(&weights)).collect();
 
-            for cand in 0..wl.group_size {
-                let mut crng = Pcg64::with_stream(
-                    self.seed ^ 0xca4d_u64,
-                    ((step as u64) << 40) | ((q as u64) << 20) | cand as u64,
-                );
-                let calls = skeleton
-                    .iter()
-                    .map(|&agent| {
-                        let a = &wl.agents[agent];
-                        // Upper bound floored at 8.0 so a degenerate
-                        // max_tokens < 8 yields 8.0 (as the historical
-                        // min/max chain did) instead of panicking.
-                        let tokens = crng
-                            .lognormal(a.mean_tokens.ln(), a.token_sigma)
-                            .clamp(8.0, wl.max_tokens.max(8.0));
-                        let env_s = crng.lognormal(wl.env_mu.ln().max(-3.0), wl.env_sigma);
-                        CallSpec {
-                            agent,
-                            tokens,
-                            env_s: env_s.min(30.0),
-                        }
-                    })
-                    .collect();
-                trajectories.push(TrajectorySpec {
-                    query: q,
-                    candidate: cand,
-                    calls,
-                });
-            }
+        let mut trajectories = Vec::with_capacity(wl.group_size);
+        for cand in 0..wl.group_size {
+            let mut crng = Pcg64::with_stream(
+                self.seed ^ 0xca4d_u64,
+                ((step as u64) << 40) | ((q as u64) << 20) | cand as u64,
+            );
+            let calls = skeleton
+                .iter()
+                .map(|&agent| {
+                    let a = &wl.agents[agent];
+                    // Upper bound floored at 8.0 so a degenerate
+                    // max_tokens < 8 yields 8.0 (as the historical
+                    // min/max chain did) instead of panicking.
+                    let tokens = crng
+                        .lognormal(a.mean_tokens.ln(), a.token_sigma)
+                        .clamp(8.0, wl.max_tokens.max(8.0));
+                    let env_s = crng.lognormal(wl.env_mu.ln().max(-3.0), wl.env_sigma);
+                    CallSpec {
+                        agent,
+                        tokens,
+                        env_s: env_s.min(30.0),
+                    }
+                })
+                .collect();
+            trajectories.push(TrajectorySpec {
+                query: q,
+                candidate: cand,
+                calls,
+            });
         }
-        StepWorkload { step, trajectories }
+        trajectories
     }
 }
 
@@ -204,6 +218,29 @@ mod tests {
             // but token counts differ across candidates
         }
         assert!(q0[0].calls[0].tokens != q0[1].calls[0].tokens);
+    }
+
+    #[test]
+    fn step_is_flat_map_of_per_query_groups() {
+        // The dist plane's foundational identity: generating each query
+        // slot independently and concatenating in slot order must be
+        // bit-identical to the monolithic step (PartialEq on CallSpec
+        // is bit-level f64 equality).
+        let wl = WorkloadConfig::ma();
+        let g = Generator::new(&wl, 2048);
+        for step in [0usize, 3, 17] {
+            let whole = g.step(step);
+            let stitched: Vec<TrajectorySpec> = (0..wl.queries_per_step)
+                .flat_map(|q| g.query(step, q))
+                .collect();
+            assert_eq!(whole.trajectories, stitched, "step {step}");
+        }
+        // And a slot's bits do not depend on how many slots the step
+        // has (the prefix property that makes resizing scenarios safe).
+        let mut wider = wl.clone();
+        wider.queries_per_step += 5;
+        let gw = Generator::new(&wider, 2048);
+        assert_eq!(g.query(2, 1), gw.query(2, 1));
     }
 
     #[test]

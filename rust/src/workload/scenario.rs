@@ -46,21 +46,39 @@ pub trait Scenario: Send {
         1.0
     }
 
-    /// Deterministic workload for `(seed, step)` over an already-shaped
-    /// config.
-    fn step(&self, wl: &WorkloadConfig, seed: u64, step: usize) -> StepWorkload {
+    /// Deterministic query count for `(seed, step)`: how many query
+    /// slots this step has. The default derives it from
+    /// [`Scenario::arrival_mult`]; open-loop presets override it with a
+    /// seeded arrival draw. Split out from [`Scenario::step`] so the
+    /// distributed coordinator (DESIGN.md §14) can enumerate a step's
+    /// shards without generating any trajectory bytes itself — the
+    /// invariant `step(wl, seed, s).trajectories.len() ==
+    /// queries(wl, seed, s) * wl.group_size` is pinned by tests.
+    fn queries(&self, wl: &WorkloadConfig, seed: u64, step: usize) -> usize {
+        let _ = seed;
         let mult = self.arrival_mult(step);
         if mult == 1.0 {
+            wl.queries_per_step
+        } else {
+            ((wl.queries_per_step as f64 * mult).round() as usize).max(1)
+        }
+    }
+
+    /// Deterministic workload for `(seed, step)` over an already-shaped
+    /// config: [`Scenario::queries`] slots expanded by the standard
+    /// [`Generator`].
+    fn step(&self, wl: &WorkloadConfig, seed: u64, step: usize) -> StepWorkload {
+        let n = self.queries(wl, seed, step);
+        if n == wl.queries_per_step {
             return Generator::new(wl, seed).step(step);
         }
         // Arrival modulation scales the query count; per-query RNG
         // streams are keyed by (seed, step, q), so a step's first K
-        // queries are identical whatever the multiplier — shrinking a
+        // queries are identical whatever the count — shrinking a
         // burst is a prefix, not a reshuffle.
-        let mut burst = wl.clone();
-        burst.queries_per_step =
-            ((wl.queries_per_step as f64 * mult).round() as usize).max(1);
-        Generator::new(&burst, seed).step(step)
+        let mut resized = wl.clone();
+        resized.queries_per_step = n;
+        Generator::new(&resized, seed).step(step)
     }
 }
 
@@ -299,17 +317,13 @@ impl Scenario for OpenLoop {
     fn shape(&self, base: &WorkloadConfig) -> WorkloadConfig {
         base.clone()
     }
-    fn step(&self, wl: &WorkloadConfig, seed: u64, step: usize) -> StepWorkload {
-        let n = self.process(wl).arrivals(seed, step).total;
-        if n == wl.queries_per_step {
-            return Generator::new(wl, seed).step(step);
-        }
-        // Same prefix property as `arrival_mult` modulation: per-query
-        // streams are keyed by (seed, step, q), so the drawn count only
-        // truncates or extends the step, never reshuffles it.
-        let mut open = wl.clone();
-        open.queries_per_step = n;
-        Generator::new(&open, seed).step(step)
+    /// The seeded arrival draw *is* the query count; the default
+    /// [`Scenario::step`] then resizes around it — same prefix property
+    /// as `arrival_mult` modulation: per-query streams are keyed by
+    /// `(seed, step, q)`, so the drawn count only truncates or extends
+    /// the step, never reshuffles it.
+    fn queries(&self, wl: &WorkloadConfig, seed: u64, step: usize) -> usize {
+        self.process(wl).arrivals(seed, step).total
     }
 }
 
@@ -576,6 +590,32 @@ mod tests {
                 queries.iter().all(|&q| (1..=cap).contains(&q)),
                 "{name} broke the per-step budget: {queries:?}"
             );
+        }
+    }
+
+    #[test]
+    fn queries_count_agrees_with_step_for_every_preset() {
+        // The dist coordinator plans shard assignment from
+        // `Scenario::queries` alone; if a preset's `step` ever disagreed
+        // with it, workers would generate the wrong slots.
+        for scen in all() {
+            let shaped = scen.shape(&base());
+            for step in 0..12 {
+                let n = scen.queries(&shaped, 2048, step);
+                let w = scen.step(&shaped, 2048, step);
+                assert_eq!(
+                    w.trajectories.len(),
+                    n * shaped.group_size,
+                    "{} step {step}: queries() says {n}",
+                    scen.name()
+                );
+                // And the step is exactly those slots, stitched in order.
+                let mut resized = shaped.clone();
+                resized.queries_per_step = n;
+                let g = Generator::new(&resized, 2048);
+                let stitched: Vec<_> = (0..n).flat_map(|q| g.query(step, q)).collect();
+                assert_eq!(w.trajectories, stitched, "{} step {step}", scen.name());
+            }
         }
     }
 

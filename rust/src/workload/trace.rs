@@ -86,22 +86,7 @@ impl Trace {
         out.push_str(&header.to_string());
         out.push('\n');
         for w in &self.steps {
-            let trajs = Json::arr(w.trajectories.iter().map(|t| {
-                Json::obj(vec![
-                    ("query", Json::num(t.query as f64)),
-                    ("candidate", Json::num(t.candidate as f64)),
-                    (
-                        "calls",
-                        Json::arr(t.calls.iter().map(|c| {
-                            Json::arr([
-                                Json::num(c.agent as f64),
-                                Json::num(c.tokens),
-                                Json::num(c.env_s),
-                            ])
-                        })),
-                    ),
-                ])
-            }));
+            let trajs = Json::arr(w.trajectories.iter().map(trajectory_to_json));
             let line = Json::obj(vec![
                 ("kind", Json::str("step")),
                 ("step", Json::num(w.step as f64)),
@@ -275,6 +260,72 @@ fn req_u64(j: &Json, key: &str, lineno: usize) -> Result<u64, PallasError> {
         .ok_or_else(|| PallasError::Trace(format!("trace line {}: missing '{key}'", lineno + 1)))
 }
 
+/// Encode one trajectory as the canonical JSON record —
+/// `{"query":q,"candidate":c,"calls":[[agent,tokens,env_s],...]}` —
+/// the exact shape trace step lines have always carried. Also the
+/// distributed plane's result payload (DESIGN.md §14): a trajectory is
+/// the same bytes in a trace file and on the wire.
+pub fn trajectory_to_json(t: &TrajectorySpec) -> Json {
+    Json::obj(vec![
+        ("query", Json::num(t.query as f64)),
+        ("candidate", Json::num(t.candidate as f64)),
+        (
+            "calls",
+            Json::arr(t.calls.iter().map(|c| {
+                Json::arr([
+                    Json::num(c.agent as f64),
+                    Json::num(c.tokens),
+                    Json::num(c.env_s),
+                ])
+            })),
+        ),
+    ])
+}
+
+/// Decode one [`trajectory_to_json`] record, bounds-checking agents
+/// against `n_agents`. Errors are bare reasons ("bad agent",
+/// "agent 9 out of range (n_agents 8)") — the caller prefixes its own
+/// location vocabulary (trace line number, dist frame index).
+pub fn trajectory_from_json(t: &Json, n_agents: usize) -> Result<TrajectorySpec, String> {
+    let field = |key: &str| -> Result<usize, String> {
+        t.at(&[key])
+            .and_then(Json::as_u64)
+            .map(|v| v as usize)
+            .ok_or_else(|| format!("missing '{key}'"))
+    };
+    let query = field("query")?;
+    let candidate = field("candidate")?;
+    let calls_j = t
+        .at(&["calls"])
+        .and_then(Json::as_arr)
+        .ok_or_else(|| "trajectory missing 'calls'".to_string())?;
+    let mut calls = Vec::with_capacity(calls_j.len());
+    for c in calls_j {
+        let triple = c
+            .as_arr()
+            .filter(|a| a.len() == 3)
+            .ok_or_else(|| "call is not [agent,tokens,env_s]".to_string())?;
+        let agent = triple[0].as_u64().ok_or_else(|| "bad agent".to_string())? as usize;
+        // Bound here so a corrupted record fails as a parse error,
+        // not an index panic deep inside the engine.
+        if agent >= n_agents {
+            return Err(format!(
+                "agent {agent} out of range (n_agents {n_agents})"
+            ));
+        }
+        calls.push(CallSpec {
+            agent,
+            tokens: triple[1].as_f64().ok_or_else(|| "bad tokens".to_string())?,
+            env_s: triple[2].as_f64().ok_or_else(|| "bad env_s".to_string())?,
+        });
+    }
+    Ok(TrajectorySpec {
+        query,
+        candidate,
+        calls,
+    })
+}
+
 fn parse_step(j: &Json, n_agents: usize, lineno: usize) -> Result<StepWorkload, PallasError> {
     let step = req_u64(j, "step", lineno)? as usize;
     let trajs = j
@@ -285,51 +336,9 @@ fn parse_step(j: &Json, n_agents: usize, lineno: usize) -> Result<StepWorkload, 
         })?;
     let mut trajectories = Vec::with_capacity(trajs.len());
     for t in trajs {
-        let query = req_u64(t, "query", lineno)? as usize;
-        let candidate = req_u64(t, "candidate", lineno)? as usize;
-        let calls_j = t
-            .at(&["calls"])
-            .and_then(Json::as_arr)
-            .ok_or_else(|| {
-                PallasError::Trace(format!(
-                    "trace line {}: trajectory missing 'calls'",
-                    lineno + 1
-                ))
-            })?;
-        let mut calls = Vec::with_capacity(calls_j.len());
-        for c in calls_j {
-            let triple = c.as_arr().filter(|a| a.len() == 3).ok_or_else(|| {
-                PallasError::Trace(format!(
-                    "trace line {}: call is not [agent,tokens,env_s]",
-                    lineno + 1
-                ))
-            })?;
-            let agent = triple[0].as_u64().ok_or_else(|| {
-                PallasError::Trace(format!("trace line {}: bad agent", lineno + 1))
-            })? as usize;
-            // Bound here so a corrupted trace fails as a parse error,
-            // not an index panic deep inside the engine.
-            if agent >= n_agents {
-                return Err(PallasError::Trace(format!(
-                    "trace line {}: agent {agent} out of range (n_agents {n_agents})",
-                    lineno + 1
-                )));
-            }
-            calls.push(CallSpec {
-                agent,
-                tokens: triple[1].as_f64().ok_or_else(|| {
-                    PallasError::Trace(format!("trace line {}: bad tokens", lineno + 1))
-                })?,
-                env_s: triple[2].as_f64().ok_or_else(|| {
-                    PallasError::Trace(format!("trace line {}: bad env_s", lineno + 1))
-                })?,
-            });
-        }
-        trajectories.push(TrajectorySpec {
-            query,
-            candidate,
-            calls,
-        });
+        let traj = trajectory_from_json(t, n_agents)
+            .map_err(|e| PallasError::Trace(format!("trace line {}: {e}", lineno + 1)))?;
+        trajectories.push(traj);
     }
     Ok(StepWorkload { step, trajectories })
 }

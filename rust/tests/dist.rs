@@ -1,0 +1,230 @@
+//! Distributed-plane acceptance tests (ISSUE 10, DESIGN.md §14).
+//!
+//! Contracts pinned here, driving the real binary end-to-end:
+//!
+//! * **Byte-identity across placement** — `dist` stdout, `--json` and
+//!   `--emit jsonl` match single-process `simulate` byte-for-byte for
+//!   workers ∈ {1, 2, 8} on BOTH transports, including an open-loop
+//!   preset whose per-step query count varies.
+//! * **Worker death is survivable and invisible** — killing a worker
+//!   mid-claim (socket child exits, channel thread returns) returns its
+//!   shard to the unclaimed set; survivors finish the run with the
+//!   exact same bytes. Losing *every* worker is a typed transport
+//!   error and exit 1 — never a panic.
+//! * **CLI hygiene** — `dist` refuses the single-process-only planes
+//!   (`--trace`, `--resume`, …) with exit 2; `dist-worker` demands
+//!   `--connect`.
+
+use std::process::Command;
+
+fn flexmarl(args: &[&str]) -> std::process::Output {
+    Command::new(env!("CARGO_BIN_EXE_flexmarl"))
+        .args(args)
+        .output()
+        .expect("spawn flexmarl")
+}
+
+fn stdout_of(out: &std::process::Output) -> &str {
+    std::str::from_utf8(&out.stdout).expect("utf8 stdout")
+}
+
+fn stderr_of(out: &std::process::Output) -> &str {
+    std::str::from_utf8(&out.stderr).expect("utf8 stderr")
+}
+
+fn tmp(name: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("flexmarl_dist_{name}_{}", std::process::id()))
+        .to_str()
+        .unwrap()
+        .to_string()
+}
+
+/// `simulate` vs `dist` with the same config flags: stdout and --json
+/// must be byte-equal.
+fn assert_dist_matches_simulate(cfg_flags: &[&str], transport: &str, workers: &str) {
+    let ref_json = tmp(&format!("ref_{transport}_{workers}"));
+    let dist_json = tmp(&format!("dist_{transport}_{workers}"));
+
+    let mut sim_args = vec!["simulate"];
+    sim_args.extend_from_slice(cfg_flags);
+    sim_args.extend_from_slice(&["--json", &ref_json]);
+    let sim = flexmarl(&sim_args);
+    assert!(sim.status.success(), "simulate failed: {}", stderr_of(&sim));
+
+    let mut dist_args = vec!["dist", "--transport", transport, "--workers", workers];
+    dist_args.extend_from_slice(cfg_flags);
+    dist_args.extend_from_slice(&["--json", &dist_json]);
+    let dist = flexmarl(&dist_args);
+    assert!(
+        dist.status.success(),
+        "dist {transport}/{workers} failed: {}",
+        stderr_of(&dist)
+    );
+
+    assert_eq!(
+        stdout_of(&sim),
+        stdout_of(&dist),
+        "stdout diverged ({transport}, {workers} workers)"
+    );
+    let ref_bytes = std::fs::read(&ref_json).expect("reference json");
+    let dist_bytes = std::fs::read(&dist_json).expect("dist json");
+    assert_eq!(
+        ref_bytes, dist_bytes,
+        "--json diverged ({transport}, {workers} workers)"
+    );
+    let _ = std::fs::remove_file(&ref_json);
+    let _ = std::fs::remove_file(&dist_json);
+}
+
+const SMALL: &[&str] = &["--steps", "2", "--seed", "2048"];
+
+#[test]
+fn channel_dist_matches_simulate_for_every_worker_count() {
+    for workers in ["1", "2", "8"] {
+        assert_dist_matches_simulate(SMALL, "channel", workers);
+    }
+}
+
+#[test]
+fn socket_dist_matches_simulate_for_every_worker_count() {
+    for workers in ["1", "2", "8"] {
+        assert_dist_matches_simulate(SMALL, "socket", workers);
+    }
+}
+
+#[test]
+fn open_loop_preset_matches_on_both_transports() {
+    // Per-step query counts vary under an arrival process; the
+    // coordinator must size each step's shard set from the scenario.
+    let flags = &["--steps", "2", "--seed", "7", "--scenario", "poisson"];
+    assert_dist_matches_simulate(flags, "channel", "2");
+    assert_dist_matches_simulate(flags, "socket", "2");
+}
+
+#[test]
+fn emit_jsonl_streams_identically_through_the_dist_plane() {
+    let mut sim_args = vec!["simulate", "--emit", "jsonl"];
+    sim_args.extend_from_slice(SMALL);
+    let sim = flexmarl(&sim_args);
+    assert!(sim.status.success(), "{}", stderr_of(&sim));
+    assert_eq!(stdout_of(&sim).lines().count(), 2, "one line per step");
+
+    for transport in ["channel", "socket"] {
+        let mut dist_args = vec![
+            "dist",
+            "--transport",
+            transport,
+            "--workers",
+            "2",
+            "--emit",
+            "jsonl",
+        ];
+        dist_args.extend_from_slice(SMALL);
+        let dist = flexmarl(&dist_args);
+        assert!(dist.status.success(), "{}", stderr_of(&dist));
+        assert_eq!(stdout_of(&sim), stdout_of(&dist), "{transport}");
+    }
+}
+
+#[test]
+fn killed_worker_is_invisible_in_the_output() {
+    // Worker 0 dies on its first assignment; worker 1 carries the run.
+    // Both transports, same bytes as the unharmed single-process run.
+    let ref_out = flexmarl(&["simulate", "--steps", "2", "--seed", "2048"]);
+    assert!(ref_out.status.success());
+    for transport in ["channel", "socket"] {
+        let out = flexmarl(&[
+            "dist",
+            "--transport",
+            transport,
+            "--workers",
+            "2",
+            "--worker-fail",
+            "0:0",
+            "--steps",
+            "2",
+            "--seed",
+            "2048",
+        ]);
+        assert!(
+            out.status.success(),
+            "{transport}: {}",
+            stderr_of(&out)
+        );
+        assert_eq!(stdout_of(&ref_out), stdout_of(&out), "{transport}");
+    }
+}
+
+#[test]
+fn losing_every_worker_is_a_typed_error_not_a_panic() {
+    for transport in ["channel", "socket"] {
+        let out = flexmarl(&[
+            "dist",
+            "--transport",
+            transport,
+            "--workers",
+            "1",
+            "--worker-fail",
+            "0:0",
+            "--steps",
+            "2",
+        ]);
+        assert_eq!(out.status.code(), Some(1), "{transport}");
+        let err = stderr_of(&out);
+        assert!(err.contains("simulation failed"), "{transport}: {err}");
+        assert!(err.contains("transport"), "{transport}: {err}");
+        assert!(err.contains("cannot make progress"), "{transport}: {err}");
+        assert!(!err.contains("panicked"), "{transport}: {err}");
+    }
+}
+
+#[test]
+fn dist_refuses_single_process_planes_with_exit_2() {
+    for flag in [
+        ["--trace", "t.jsonl"],
+        ["--workload-mode", "lazy"],
+        ["--resume", "ckpt.json"],
+        ["--checkpoint-every", "1"],
+    ] {
+        let out = flexmarl(&["dist", flag[0], flag[1]]);
+        assert_eq!(out.status.code(), Some(2), "{}", flag[0]);
+        assert!(
+            stderr_of(&out).contains("does not support"),
+            "{}: {}",
+            flag[0],
+            stderr_of(&out)
+        );
+    }
+    let out = flexmarl(&["dist", "--transport", "pigeon"]);
+    assert_eq!(out.status.code(), Some(2));
+    let out = flexmarl(&["dist", "--workers", "0"]);
+    assert_eq!(out.status.code(), Some(2));
+    let out = flexmarl(&["dist", "--workers", "2", "--worker-fail", "bogus"]);
+    assert_eq!(out.status.code(), Some(2));
+}
+
+#[test]
+fn dist_worker_requires_connect() {
+    let out = flexmarl(&["dist-worker"]);
+    assert_eq!(out.status.code(), Some(2));
+    assert!(stderr_of(&out).contains("--connect"), "{}", stderr_of(&out));
+}
+
+#[test]
+fn worker_bookkeeping_stays_on_stderr() {
+    let mut args = vec!["dist", "--workers", "3"];
+    args.extend_from_slice(SMALL);
+    let out = flexmarl(&args);
+    assert!(out.status.success(), "{}", stderr_of(&out));
+    assert!(
+        stderr_of(&out).contains("dist: 3 workers over channel transport"),
+        "{}",
+        stderr_of(&out)
+    );
+    assert!(
+        !stdout_of(&out).contains("workers"),
+        "worker count leaked onto stdout: {}",
+        stdout_of(&out)
+    );
+}

@@ -30,8 +30,17 @@ import sys
 # Bookkeeping keys that are not nanosecond timings and must not gate.
 # `sessions` is run metadata and `sessions_per_s` is better-is-higher
 # throughput (BENCH_serve.json); gating either as a lower-is-better
-# nanosecond timing would invert their meaning.
-NON_TIMING_KEYS = {"speedup", "grid_runs", "jobs_n", "sessions", "sessions_per_s"}
+# nanosecond timing would invert their meaning. `dist_steps` and
+# `dist_workers` are run metadata from BENCH_dist.json.
+NON_TIMING_KEYS = {
+    "speedup",
+    "grid_runs",
+    "jobs_n",
+    "sessions",
+    "sessions_per_s",
+    "dist_steps",
+    "dist_workers",
+}
 
 
 def load(path: str) -> dict:
